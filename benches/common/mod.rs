@@ -1,0 +1,22 @@
+//! Shared bench scaffolding: scale selection via `PMLP_BENCH_SCALE`
+//! (smoke|small|paper; default small) and a wall-clock banner.
+
+use printed_mlp::bench::Scale;
+
+pub fn scale() -> Scale {
+    std::env::var("PMLP_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Small)
+}
+
+pub fn timed(name: &str, f: impl FnOnce() -> String) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    println!("{out}");
+    println!(
+        "[bench {name}] wall time: {:.2}s (scale: {:?})",
+        t0.elapsed().as_secs_f64(),
+        scale()
+    );
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Fig. 4: accuracy-vs-area Pareto fronts of the
+//! genetic accumulation approximation, normalized to the QAT-only design.
+mod common;
+use printed_mlp::bench::Study;
+use printed_mlp::coordinator::EvalBackend;
+
+fn main() {
+    let mut study = Study::new(common::scale(), EvalBackend::Auto);
+    common::timed("fig4", || printed_mlp::bench::fig4(&mut study));
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Fig. 5: ours vs [7] (truncation), [10] (pruning +
+//! VOS), [14] (stochastic computing), normalized to the exact baseline.
+mod common;
+use printed_mlp::bench::Study;
+use printed_mlp::coordinator::EvalBackend;
+
+fn main() {
+    let mut study = Study::new(common::scale(), EvalBackend::Auto);
+    common::timed("fig5", || printed_mlp::bench::fig5(&mut study));
+}

@@ -1,0 +1,13 @@
+//! Perf: GA-evaluator throughput (chromosomes/s), native vs PJRT, per
+//! dataset — the framework's hot path (EXPERIMENTS.md §Perf).
+mod common;
+
+fn main() {
+    common::timed("perf_evaluators", || {
+        let mut out = String::new();
+        for name in ["cardio", "pendigits", "arrhythmia"] {
+            out.push_str(&printed_mlp::bench::ablation_evaluators(name, 64));
+        }
+        out
+    });
+}

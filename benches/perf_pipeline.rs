@@ -1,0 +1,34 @@
+//! Perf: end-to-end pipeline wall time per dataset (the paper reports
+//! <=3h worst case on a 48-core EPYC at population 1000 x 30
+//! generations; our scaled runs must be minutes at most).
+mod common;
+use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
+
+fn main() {
+    common::timed("perf_pipeline", || {
+        let mut rows = Vec::new();
+        let study = printed_mlp::bench::Study::new(common::scale(), EvalBackend::Auto);
+        for name in ["tiny", "cardio", "arrhythmia"] {
+            let cfg = study.cfg(name);
+            let t0 = std::time::Instant::now();
+            let result = Pipeline::new(
+                cfg,
+                PipelineOpts { backend: EvalBackend::Auto, ..Default::default() },
+            )
+            .run()
+            .expect("pipeline");
+            rows.push(vec![
+                name.to_string(),
+                result.backend_used.to_string(),
+                format!("{}", result.cfg.ga.population),
+                format!("{}", result.cfg.ga.generations),
+                format!("{:.2}s", t0.elapsed().as_secs_f64()),
+            ]);
+        }
+        printed_mlp::report::render_table(
+            "end-to-end pipeline wall time",
+            &["dataset", "backend", "pop", "gens", "wall"],
+            &rows,
+        )
+    });
+}

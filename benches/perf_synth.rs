@@ -1,0 +1,47 @@
+//! Perf: netlist generation + synthesis + analysis throughput on the
+//! exact baseline circuits (the Table II sweep's inner loop).
+mod common;
+use printed_mlp::baselines::Int8Mlp;
+use printed_mlp::config::builtin;
+use printed_mlp::datasets;
+use printed_mlp::egfet::{analyze, Library};
+use printed_mlp::model::float_mlp::TrainOpts;
+use printed_mlp::model::FloatMlp;
+use printed_mlp::netlist::mlp::ArgmaxMode;
+use printed_mlp::synth::optimize;
+
+fn main() {
+    common::timed("perf_synth", || {
+        let mut rows = Vec::new();
+        for name in ["cardio", "pendigits", "arrhythmia"] {
+            let cfg = builtin::by_name(name).unwrap();
+            let (split, _, _) = datasets::load(&cfg.dataset);
+            let mut mlp = FloatMlp::init(cfg.topology, 1);
+            mlp.train(&split.train, &TrainOpts { epochs: 10, ..Default::default() });
+            let int8 = Int8Mlp::from_float(&mlp);
+            let t0 = std::time::Instant::now();
+            let nl = int8.build_circuit(ArgmaxMode::Exact);
+            let t_build = t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            let (opt, stats) = optimize(&nl);
+            let t_synth = t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            let hw = analyze(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+            let t_analyze = t0.elapsed().as_secs_f64();
+            rows.push(vec![
+                name.to_string(),
+                format!("{}", stats.cells_in),
+                format!("{}", stats.cells_out),
+                format!("{t_build:.3}s"),
+                format!("{t_synth:.3}s"),
+                format!("{t_analyze:.4}s"),
+                format!("{:.0}", hw.area_cm2),
+            ]);
+        }
+        printed_mlp::report::render_table(
+            "synthesis throughput (exact baseline circuits)",
+            &["dataset", "gates in", "cells out", "build", "synth", "analyze", "area cm2"],
+            &rows,
+        )
+    });
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Table II: Spearman rank correlation of the FA-count
+//! area surrogate vs synthesized area (paper: >=0.96 per dataset).
+//! `PMLP_BENCH_SCALE=paper` runs the paper's 1000 chromosomes/dataset.
+mod common;
+
+fn main() {
+    let scale = common::scale();
+    common::timed("table2", || printed_mlp::bench::table2(scale));
+}

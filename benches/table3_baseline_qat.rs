@@ -1,0 +1,10 @@
+//! Regenerates paper Table III: exact bespoke baseline [8] vs QAT-only
+//! (po2 + QRelu) accuracy/area/power for all six printed MLPs.
+mod common;
+use printed_mlp::bench::Study;
+use printed_mlp::coordinator::EvalBackend;
+
+fn main() {
+    let mut study = Study::new(common::scale(), EvalBackend::Auto);
+    common::timed("table3", || printed_mlp::bench::table3(&mut study));
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table IV: accuracy/area/comparator-size impact of
+//! the approximate Argmax on the accumulation-approximated designs.
+mod common;
+use printed_mlp::bench::Study;
+use printed_mlp::coordinator::EvalBackend;
+
+fn main() {
+    let mut study = Study::new(common::scale(), EvalBackend::Auto);
+    common::timed("table4", || printed_mlp::bench::table4(&mut study));
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table V: battery operation of the approximate MLPs
+//! at the 0.6 V corner (Molex 30mW / Blue Spark 3mW / energy harvester).
+mod common;
+use printed_mlp::bench::Study;
+use printed_mlp::coordinator::EvalBackend;
+
+fn main() {
+    let mut study = Study::new(common::scale(), EvalBackend::Auto);
+    common::timed("table5", || printed_mlp::bench::table5(&mut study));
+}

@@ -1,0 +1,55 @@
+//! Ablation: what the approximate Argmax contributes on top of the
+//! accumulation approximation (the design choice behind paper Table IV).
+//!
+//!     cargo run --release --example argmax_ablation
+
+use printed_mlp::argmax::{build_plan, ArgmaxPlan, ArgmaxSearchOpts};
+use printed_mlp::config::builtin;
+use printed_mlp::datasets;
+use printed_mlp::egfet::{analyze, Library};
+use printed_mlp::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
+use printed_mlp::synth::optimize;
+use printed_mlp::train;
+
+fn main() {
+    for name in ["breastcancer", "cardio", "pendigits"] {
+        let cfg = builtin::by_name(name).unwrap();
+        let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+        let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
+        let qmlp = &tm.qmlp;
+        let width = qmlp.output_width();
+
+        // Exact argmax.
+        let nl = build_mlp_circuit(qmlp, &MlpCircuitOpts::default());
+        let (opt, _) = optimize(&nl);
+        let hw_exact = analyze(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+        let exact_plan = ArgmaxPlan::exact(qmlp.topo.n_out, width);
+
+        // Approximate argmax (greedy bit subsets + Hungarian pairing).
+        let preacts = qmlp.output_preacts(&qtrain, None);
+        let plan = build_plan(&preacts, &qtrain.y, width, &ArgmaxSearchOpts::default());
+        let nl2 = build_mlp_circuit(
+            qmlp,
+            &MlpCircuitOpts { masks: None, argmax: ArgmaxMode::Plan(plan.clone()) },
+        );
+        let (opt2, _) = optimize(&nl2);
+        let hw_approx = analyze(&opt2, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+
+        let test_preacts = qmlp.output_preacts(&qtest, None);
+        let acc_exact = exact_plan.accuracy(&test_preacts, &qtest.y);
+        let acc_approx = plan.accuracy(&test_preacts, &qtest.y);
+        let (avg_bits, reduction) = plan.comparator_stats();
+        println!(
+            "{name:>13}: area {:.3} -> {:.3} cm2 ({:.0}% cut), acc {:.3} -> {:.3}, \
+             comparators {}b -> {:.1}b avg ({:.1}x)",
+            hw_exact.area_cm2,
+            hw_approx.area_cm2,
+            100.0 * (1.0 - hw_approx.area_cm2 / hw_exact.area_cm2),
+            acc_exact,
+            acc_approx,
+            width,
+            avg_bits,
+            reduction
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Using the public API on your own classification task: define a
+//! dataset spec + topology, run the framework, inspect the trade-off.
+//!
+//!     cargo run --release --example custom_dataset
+
+use printed_mlp::config::{DatasetSpec, GaSpec, HwSpec, RunConfig, Topology, TrainSpec};
+use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
+
+fn main() -> anyhow::Result<()> {
+    // A hypothetical smart-bandage sensor: 8 analog channels, 4 classes
+    // (normal / infection / ischemia / sensor-fault), imbalanced.
+    let cfg = RunConfig {
+        dataset: DatasetSpec {
+            name: "smart-bandage".into(),
+            n_features: 8,
+            n_classes: 4,
+            n_samples: 1200,
+            class_weights: vec![0.70, 0.12, 0.10, 0.08],
+            separation: 3.5,
+            noise: 0.13,
+            clusters_per_class: 1,
+            nuisance_frac: 0.1,
+            seed: 2024,
+        },
+        topology: Topology::new(8, 4, 4),
+        train: TrainSpec { epochs: 60, batch_size: 64, lr: 0.02, seed: 2024 },
+        ga: GaSpec {
+            population: 60,
+            generations: 8,
+            mutation_rate: 0.01,
+            crossover_rate: 0.9,
+            acc_loss_bound: 0.15,
+            init_keep_prob: 0.92,
+            seed: 2024,
+        },
+        hw: HwSpec { clock_ms: 200.0, vdd: 1.0 },
+    };
+
+    let result = Pipeline::new(
+        cfg,
+        PipelineOpts { backend: EvalBackend::Native, verbose: true, ..Default::default() },
+    )
+    .run()?;
+
+    let base = result.baseline_hw.as_ref().unwrap();
+    println!("\nsmart-bandage MLP (8,4,4):");
+    println!("  exact baseline: {:.2} cm2 / {:.2} mW, acc {:.3}", base.area_cm2, base.power_mw, result.baseline_acc_test);
+    for d in &result.designs {
+        println!(
+            "  approx design:  {:.2} cm2 / {:.2} mW, acc {:.3}, battery: {}",
+            d.hw_full.area_cm2,
+            d.hw_full.power_mw,
+            d.acc_test_full,
+            d.power_source.label()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end driver (DESIGN.md: the full-system validation example).
+//!
+//! Exercises all three layers on the Cardiotocography MLP:
+//!   * Layer-2/Layer-1: QAT training runs through the AOT-compiled
+//!     `train_step_cardio` program (JAX fwd+bwd+Adam with the Pallas
+//!     masked-MAC kernel lowered inside) — the loss curve is logged;
+//!   * Layer-3: the genetic accumulation approximation evaluates every
+//!     chromosome through `masked_acc_cardio` via PJRT, then the
+//!     approximate-Argmax search, gate-level synthesis, and the EGFET
+//!     battery analysis run natively.
+//!
+//! Requires `make artifacts`. Writes `runs/e2e_cardio.json`.
+//!
+//!     cargo run --release --example e2e_cardio
+
+use printed_mlp::config::builtin;
+use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
+use printed_mlp::datasets;
+use printed_mlp::model::float_mlp::TrainOpts;
+use printed_mlp::model::FloatMlp;
+use printed_mlp::report;
+use printed_mlp::runtime::Runtime;
+use printed_mlp::train::PjrtTrainer;
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    let mut cfg = builtin::cardio();
+    cfg.ga.population = 80;
+    cfg.ga.generations = 10;
+
+    // --- explicit L2 training-loop demo with loss logging --------------
+    let rt = Runtime::new(&Runtime::default_dir())
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    let (split, _qtrain, _qtest) = datasets::load(&cfg.dataset);
+    let mut float = FloatMlp::init(cfg.topology, cfg.train.seed);
+    float.train(
+        &split.train,
+        &TrainOpts { epochs: cfg.train.epochs, lr: cfg.train.lr, ..Default::default() },
+    );
+    println!("float model: test acc {:.3}", float.accuracy(&split.test, false));
+    let trainer = PjrtTrainer::new(&rt, "cardio");
+    println!("QAT via AOT train_step (PJRT), loss curve:");
+    for round in 0..5 {
+        let (qat, loss) = trainer.finetune(&float, &split.train, 4, 0.008, 7 + round)?;
+        println!("  epoch {:>2}: loss {:.4}", (round + 1) * 4, loss);
+        float = qat;
+    }
+
+    // --- the full pipeline (PJRT GA evaluator) --------------------------
+    let opts = PipelineOpts {
+        backend: EvalBackend::Pjrt,
+        max_hw_points: 4,
+        synth_baseline: true,
+        approx_argmax: true,
+        verbose: true,
+    };
+    let result = Pipeline::new(cfg, opts).run()?;
+
+    let baseline = result.baseline_hw.as_ref().unwrap();
+    println!("\n=== E2E result (cardio) ===");
+    println!("backend: {}", result.backend_used);
+    println!("baseline [8]: acc {:.3}, {}", result.baseline_acc_test, report::hw_cell(baseline));
+    println!(
+        "QAT-only:     acc {:.3}, {}",
+        result.trained.acc_q_test,
+        report::hw_cell(&result.qat_hw)
+    );
+    let best = result
+        .best_within_loss(0.05)
+        .ok_or_else(|| anyhow::anyhow!("no <=5% design found"))?;
+    println!(
+        "ours (holistic, <=5% loss): acc {:.3}, {} | 0.6V: {:.3} mW -> {}",
+        best.acc_test_full,
+        report::hw_cell(&best.hw_full),
+        best.hw_0p6v.power_mw,
+        best.power_source.label()
+    );
+    println!(
+        "headline: {:.0}x area / {:.0}x power vs exact baseline at 0.6V",
+        baseline.area_cm2 / best.hw_0p6v.area_cm2,
+        baseline.power_mw / best.hw_0p6v.power_mw
+    );
+    println!("total wall time: {:.1}s", t_start.elapsed().as_secs_f64());
+
+    std::fs::create_dir_all("runs")?;
+    std::fs::write(
+        "runs/e2e_cardio.json",
+        report::result_to_json(&result).to_string_pretty(),
+    )?;
+    println!("wrote runs/e2e_cardio.json");
+    Ok(())
+}

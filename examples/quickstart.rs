@@ -1,0 +1,50 @@
+//! Quickstart: the whole framework on the built-in `tiny` dataset in a
+//! few seconds, no artifacts required (native evaluator fallback).
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks the paper's Fig. 1 flow: train -> po2+QRelu QAT -> genetic
+//! accumulation approximation -> approximate Argmax -> gate-level
+//! synthesis -> EGFET hardware report -> battery classification.
+
+use printed_mlp::config::builtin;
+use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
+use printed_mlp::report;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = builtin::tiny();
+    cfg.ga.population = 60;
+    cfg.ga.generations = 8;
+
+    let opts = PipelineOpts {
+        backend: EvalBackend::Auto,
+        max_hw_points: 3,
+        synth_baseline: true,
+        approx_argmax: true,
+        verbose: true,
+    };
+    let result = Pipeline::new(cfg, opts).run()?;
+
+    let baseline = result.baseline_hw.as_ref().unwrap();
+    println!("\nexact bespoke baseline [8]: {}", report::hw_cell(baseline));
+    println!("QAT-only (po2 + QRelu):     {}", report::hw_cell(&result.qat_hw));
+    for d in &result.designs {
+        println!(
+            "holistic approx (FA {:>4}): {}  acc {:.3}  @0.6V {:.3} mW -> {}",
+            d.area_fa,
+            report::hw_cell(&d.hw_full),
+            d.acc_test_full,
+            d.hw_0p6v.power_mw,
+            d.power_source.label()
+        );
+    }
+    if let Some(best) = result.best_within_loss(0.05) {
+        println!(
+            "\nbest <=5% design: {:.1}x area / {:.1}x power vs baseline (backend: {})",
+            baseline.area_cm2 / best.hw_full.area_cm2,
+            baseline.power_mw / best.hw_full.power_mw,
+            result.backend_used,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,184 @@
+"""AOT compilation: lower the Layer-2 JAX programs (which embed the
+Layer-1 Pallas kernel) to HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per MLP topology (names match `rust/src/config.rs` builtins):
+  masked_acc_<name>.hlo.txt    — GA accuracy counting, population tile P
+  masked_preacts_<name>.hlo.txt — per-chromosome output pre-activations
+  train_step_<name>.hlo.txt    — one QAT Adam step (fwd+bwd)
+plus `manifest.json` recording every artifact's shapes so the Rust side
+can marshal literals without guessing.
+
+`python -m compile.aot --out ../artifacts` is idempotent: artifacts are
+skipped when the source hash recorded in the manifest is unchanged.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (name, n_in, n_hidden, n_out, eval_batch) — eval_batch is the padded
+# train-set size the GA evaluates accuracy on (next multiple of 64 above
+# the 70% stratified split).
+TOPOLOGIES = [
+    ("arrhythmia", 274, 5, 16, 320),
+    ("breastcancer", 10, 3, 2, 512),
+    ("cardio", 21, 3, 3, 1536),
+    ("pendigits", 16, 5, 10, 5248),
+    ("redwine", 11, 2, 6, 1152),
+    ("whitewine", 11, 4, 7, 3456),
+    ("tiny", 6, 3, 3, 256),
+]
+
+# Population tile of the GA evaluator (chromosomes per PJRT dispatch).
+P_TILE = 16
+# Population tile of the pre-activation artifact (analysis path).
+P_PRE = 4
+# Training minibatch.
+BT = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_masked_acc(n0, h, o, b, p=P_TILE):
+    """Lower `masked_accuracy_counts` for one topology."""
+
+    def fn(x, labels, w1_sign, w1_shift, b1, mb1, w2_sign, w2_shift, b2, mb2, m1, m2, act_shift):
+        return (
+            model.masked_accuracy_counts(
+                x, labels, w1_sign, w1_shift, b1, mb1,
+                w2_sign, w2_shift, b2, mb2, m1, m2, act_shift,
+            ),
+        )
+
+    return jax.jit(fn).lower(
+        i32(b, n0), i32(b),
+        i32(h, n0), i32(h, n0), i32(h), i32(p, h),
+        i32(o, h), i32(o, h), i32(o), i32(p, o),
+        i32(p, h, n0), i32(p, o, h), i32(),
+    )
+
+
+def lower_masked_preacts(n0, h, o, b, p=P_PRE):
+    def fn(x, w1_sign, w1_shift, b1, mb1, w2_sign, w2_shift, b2, mb2, m1, m2, act_shift):
+        return (
+            model.masked_preacts(
+                x, w1_sign, w1_shift, b1, mb1,
+                w2_sign, w2_shift, b2, mb2, m1, m2, act_shift,
+            ),
+        )
+
+    return jax.jit(fn).lower(
+        i32(b, n0),
+        i32(h, n0), i32(h, n0), i32(h), i32(p, h),
+        i32(o, h), i32(o, h), i32(o), i32(p, o),
+        i32(p, h, n0), i32(p, o, h), i32(),
+    )
+
+
+def lower_train_step(n0, h, o, bt=BT):
+    def fn(*args):
+        return model.train_step_flat(*args)
+
+    w1, b1, w2, b2 = f32(h, n0), f32(h), f32(o, h), f32(o)
+    return jax.jit(fn).lower(
+        w1, b1, w2, b2,          # params
+        w1, b1, w2, b2,          # adam m
+        w1, b1, w2, b2,          # adam v
+        i32(),                   # step
+        f32(bt, n0), i32(bt),    # batch
+        f32(bt),                 # sample weights
+        f32(),                   # lr
+        f32(),                   # act_max (calibrated QRelu range)
+    )
+
+
+def source_hash() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    hasher = hashlib.sha256()
+    for rel in ("model.py", "aot.py", "kernels/masked_mac.py", "kernels/ref.py"):
+        with open(os.path.join(here, rel), "rb") as fh:
+            hasher.update(fh.read())
+    return hasher.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated topology names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+
+    src = source_hash()
+    manifest = {"source_hash": src, "p_tile": P_TILE, "p_pre": P_PRE, "bt": BT, "entries": {}}
+    old = None
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as fh:
+            old = json.load(fh)
+        if old.get("source_hash") == src and not args.only:
+            expected = {
+                f"{kind}_{name}.hlo.txt"
+                for (name, *_ ) in TOPOLOGIES
+                for kind in ("masked_acc", "masked_preacts", "train_step")
+            }
+            have = set(os.listdir(args.out))
+            if expected <= have:
+                print(f"artifacts up to date (hash {src}); skipping")
+                return 0
+
+    only = set(args.only.split(",")) if args.only else None
+    for name, n0, h, o, b in TOPOLOGIES:
+        if only and name not in only:
+            continue
+        jobs = [
+            (f"masked_acc_{name}.hlo.txt", lower_masked_acc(n0, h, o, b)),
+            (f"masked_preacts_{name}.hlo.txt", lower_masked_preacts(n0, h, o, b)),
+            (f"train_step_{name}.hlo.txt", lower_train_step(n0, h, o)),
+        ]
+        for fname, lowered in jobs:
+            text = to_hlo_text(lowered)
+            with open(os.path.join(args.out, fname), "w") as fh:
+                fh.write(text)
+            print(f"wrote {fname}: {len(text)} chars")
+        manifest["entries"][name] = {
+            "n_in": n0, "n_hidden": h, "n_out": o, "eval_batch": b,
+        }
+    if only and old:
+        # Merge previously written entries.
+        for k, v in old.get("entries", {}).items():
+            manifest["entries"].setdefault(k, v)
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+    print(f"manifest -> {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: the masked shifted multiply-accumulate.
+
+This is the compute hot-spot of the paper's framework: the genetic
+optimizer must evaluate thousands of accumulation-approximation
+chromosomes per generation, and each evaluation is a full MLP forward
+pass where every summand is ``(activation & mask) << shift`` with the
+positive/negative weight split of the bespoke circuit (paper §III-A,
+§III-D2: "a bitwise AND between each mask and summand is performed and
+then addition is just computed on the masked summands").
+
+The kernel is gridded over the chromosome (population) dimension: each
+program instance evaluates one chromosome's masks over the whole
+evaluation batch. ``interpret=True`` everywhere — the CPU PJRT client
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md); on a
+real TPU the same BlockSpec tiles the mask tile + activation tile into
+VMEM (DESIGN.md §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_mac_kernel(x_ref, sign_ref, shift_ref, mask_ref, bias_ref, bkeep_ref, o_ref):
+    """One chromosome:
+    ``o[b, n] = Σ_j sign[n,j]·((x[b,j] & mask[n,j]) << shift[n,j])
+                + bkeep[n]·bias[n]``.
+
+    Block shapes inside the kernel:
+      x:     (B, J)    int32 — layer inputs (shared across the grid)
+      sign:  (N, J)    int32 — weight signs in {-1, 0, +1}
+      shift: (N, J)    int32 — power-of-2 shifts in [0, 7]
+      mask:  (1, N, J) int32 — this chromosome's summand-bit masks
+      bias:  (1, N)    int32 — signed integer bias values
+      bkeep: (1, N)    int32 — this chromosome's bias keep flags (0/1)
+      o:     (1, B, N) int32 — pre-activations
+    """
+    x = x_ref[...]
+    sign = sign_ref[...]
+    shift = shift_ref[...]
+    mask = mask_ref[0]
+    bias = bias_ref[0]
+    bkeep = bkeep_ref[0]
+    # (B, 1, J) & (1, N, J) -> (B, N, J): mask the summand bits, apply the
+    # power-of-2 shift (wiring in the bespoke circuit), apply the pos/neg
+    # tree sign, reduce over the fan-in.
+    masked = jnp.bitwise_and(x[:, None, :], mask[None, :, :])
+    shifted = jnp.left_shift(masked, shift[None, :, :])
+    signed = shifted * sign[None, :, :]
+    acc = jnp.sum(signed, axis=-1)
+    o_ref[0] = acc + (bias * bkeep)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_mac(x, sign, shift, mask, bias, bkeep, *, interpret=True):
+    """Population-batched masked MAC.
+
+    Args:
+      x:     (B, J) int32 — layer inputs.
+      sign:  (N, J) int32 — weight signs.
+      shift: (N, J) int32 — weight shifts.
+      mask:  (P, N, J) int32 — per-chromosome summand-bit masks.
+      bias:  (N,) int32 — signed bias integer values.
+      bkeep: (P, N) int32 — per-chromosome bias keep flags.
+
+    Returns:
+      (P, B, N) int32 pre-activations.
+    """
+    p, n, j = mask.shape
+    b = x.shape[0]
+    assert x.shape == (b, j), (x.shape, (b, j))
+    assert sign.shape == (n, j) and shift.shape == (n, j)
+    assert bias.shape == (n,) and bkeep.shape == (p, n)
+    return pl.pallas_call(
+        _masked_mac_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((b, j), lambda i: (0, 0)),        # x shared
+            pl.BlockSpec((n, j), lambda i: (0, 0)),        # sign shared
+            pl.BlockSpec((n, j), lambda i: (0, 0)),        # shift shared
+            pl.BlockSpec((1, n, j), lambda i: (i, 0, 0)),  # mask per-chromosome
+            pl.BlockSpec((1, n), lambda i: (0, 0)),        # bias shared
+            pl.BlockSpec((1, n), lambda i: (i, 0)),        # bkeep per-chromosome
+        ],
+        out_specs=pl.BlockSpec((1, b, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, b, n), jnp.int32),
+        interpret=interpret,
+    )(x, sign, shift, mask, bias[None, :], bkeep)
+
+
+def qrelu(z, act_shift, act_bits=8):
+    """QRelu: clamp(z >> t, 0, 2^act_bits - 1) on int32 (paper §III-C1)."""
+    shifted = jnp.right_shift(jnp.maximum(z, 0), act_shift)
+    return jnp.clip(shifted, 0, (1 << act_bits) - 1)

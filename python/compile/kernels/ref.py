@@ -1,0 +1,76 @@
+"""Pure-jnp/numpy correctness oracles for the Layer-1 Pallas kernel and
+the Layer-2 quantized forward pass.
+
+These mirror, operation for operation, the golden integer semantics of
+the Rust model (`rust/src/model/quantized.rs`): the pytest suite checks
+`pallas kernel == jnp ref == numpy ref` exactly (integer arithmetic --
+no tolerance), and the Rust integration tests close the chain with
+`HLO-via-PJRT == native model`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_mac_ref(x, sign, shift, mask, bias, bkeep):
+    """jnp reference of `masked_mac` (shapes as in the kernel)."""
+    masked = jnp.bitwise_and(x[None, :, None, :], mask[:, None, :, :])
+    shifted = jnp.left_shift(masked, shift[None, None, :, :])
+    signed = shifted * sign[None, None, :, :]
+    acc = jnp.sum(signed, axis=-1)  # (P, B, N)
+    return acc + (bias[None, :] * bkeep)[:, None, :]
+
+
+def masked_mac_np(x, sign, shift, mask, bias, bkeep):
+    """numpy scalar-loop reference (deliberately naive -- the oracle)."""
+    p, n, j = mask.shape
+    b = x.shape[0]
+    out = np.zeros((p, b, n), dtype=np.int64)
+    for pi in range(p):
+        for bi in range(b):
+            for ni in range(n):
+                acc = 0
+                for ji in range(j):
+                    if sign[ni, ji] == 0:
+                        continue
+                    a = int(x[bi, ji]) & int(mask[pi, ni, ji])
+                    acc += int(sign[ni, ji]) * (a << int(shift[ni, ji]))
+                acc += int(bkeep[pi, ni]) * int(bias[ni])
+                out[pi, bi, ni] = acc
+    return out
+
+
+def qrelu_np(z, act_shift, act_bits=8):
+    """numpy reference of QRelu."""
+    z = np.asarray(z)
+    shifted = np.right_shift(np.maximum(z, 0), act_shift)
+    return np.clip(shifted, 0, (1 << act_bits) - 1)
+
+
+def quant_forward_np(x, l1, l2, act_shift):
+    """Full integer forward pass of the quantized MLP, numpy loops.
+
+    `l1`/`l2` are dicts with keys sign (N,J), shift (N,J), bias (N,),
+    and optional mask (N,J) / bkeep (N,).
+    """
+
+    def layer(a, lay):
+        n, j = lay["sign"].shape
+        mask = lay.get("mask", np.full((n, j), (1 << 30) - 1, dtype=np.int64))
+        bkeep = lay.get("bkeep", np.ones(n, dtype=np.int64))
+        out = np.zeros(n, dtype=np.int64)
+        for ni in range(n):
+            acc = 0
+            for ji in range(j):
+                if lay["sign"][ni, ji] == 0:
+                    continue
+                av = (int(a[ji]) & int(mask[ni, ji])) << int(lay["shift"][ni, ji])
+                acc += int(lay["sign"][ni, ji]) * av
+            acc += int(bkeep[ni]) * int(lay["bias"][ni])
+            out[ni] = acc
+        return out
+
+    z1 = layer(x, l1)
+    h = qrelu_np(z1, act_shift)
+    z2 = layer(h, l2)
+    return h, z2

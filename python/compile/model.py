@@ -1,0 +1,195 @@
+"""Layer-2 JAX model: the quantized masked MLP forward (GA evaluation
+path) and the QAT training step (fwd + bwd + Adam), both lowered once by
+`aot.py` to HLO text and driven from the Rust coordinator via PJRT.
+Python never runs on the optimization hot path.
+
+Integer semantics match `rust/src/model/quantized.rs` bit for bit:
+4-bit inputs, power-of-2 weights as (sign, shift) pairs, positive and
+negative accumulators subtracted once, QRelu(8) with a static truncation
+shift, argmax with ties to the lowest index.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.masked_mac import masked_mac, qrelu
+
+# ---------------------------------------------------------------------------
+# GA evaluation path (integer domain)
+# ---------------------------------------------------------------------------
+
+
+def masked_accuracy_counts(
+    x, labels,
+    w1_sign, w1_shift, b1, mb1,
+    w2_sign, w2_shift, b2, mb2,
+    m1, m2, act_shift,
+):
+    """Count correct predictions per chromosome.
+
+    Args:
+      x:        (B, N0) int32 — 4-bit quantized inputs (padded rows ok).
+      labels:   (B,)    int32 — class labels; use -1 for padding rows.
+      w1_sign/w1_shift: (H, N0) int32 — hidden-layer po2 weights.
+      b1:       (H,) int32 — hidden bias integer values.
+      mb1:      (P, H) int32 — per-chromosome hidden bias keep flags.
+      w2_sign/w2_shift: (O, H) int32.
+      b2:       (O,) int32.
+      mb2:      (P, O) int32.
+      m1:       (P, H, N0) int32 — hidden summand-bit masks.
+      m2:       (P, O, H) int32 — output summand-bit masks.
+      act_shift: () int32 — QRelu truncation.
+
+    Returns:
+      (P,) int32 — number of samples whose argmax equals the label.
+    """
+    z1 = masked_mac(x, w1_sign, w1_shift, m1, b1, mb1)       # (P, B, H)
+    h = qrelu(z1, act_shift)                                  # (P, B, H)
+    # Layer 2 is evaluated per chromosome on its own hidden activations:
+    # vmap the kernel over the population axis with a singleton P.
+    def layer2(h_p, m2_p, mb2_p):
+        return masked_mac(h_p, w2_sign, w2_shift, m2_p[None], b2, mb2_p[None])[0]
+
+    z2 = jax.vmap(layer2)(h, m2, mb2)                         # (P, B, O)
+    pred = jnp.argmax(z2, axis=-1).astype(jnp.int32)          # ties -> lowest
+    correct = (pred == labels[None, :]).astype(jnp.int32)
+    return jnp.sum(correct, axis=-1)
+
+
+def masked_preacts(
+    x,
+    w1_sign, w1_shift, b1, mb1,
+    w2_sign, w2_shift, b2, mb2,
+    m1, m2, act_shift,
+):
+    """Output-layer pre-activations per chromosome: (P, B, O) int32."""
+    z1 = masked_mac(x, w1_sign, w1_shift, m1, b1, mb1)
+    h = qrelu(z1, act_shift)
+
+    def layer2(h_p, m2_p, mb2_p):
+        return masked_mac(h_p, w2_sign, w2_shift, m2_p[None], b2, mb2_p[None])[0]
+
+    return jax.vmap(layer2)(h, m2, mb2)
+
+
+# ---------------------------------------------------------------------------
+# QAT training path (float domain with straight-through quantizers)
+# ---------------------------------------------------------------------------
+
+MAX_SHIFT = 15
+
+
+def po2_ste(w):
+    """Straight-through power-of-2 quantizer (QKeras quantized_po2 style).
+
+    Forward: sign(w) * 2^clip(round(log2|w|), a-7, a) with a = per-tensor
+    ceil(log2 max|w|); magnitudes below the window flush to zero.
+    Backward: identity (STE).
+    """
+    maxabs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
+    a = jnp.ceil(jnp.log2(maxabs))
+    log2w = jnp.log2(jnp.maximum(jnp.abs(w), 1e-12))
+    e = jnp.clip(jnp.round(log2w), a - MAX_SHIFT, a)
+    wq = jnp.sign(w) * jnp.exp2(e)
+    # Flush-to-zero below the representable window (match rust
+    # `quantize_po2`: log2|w| + 0.5 < a - 7).
+    wq = jnp.where(log2w + 0.5 < a - MAX_SHIFT, 0.0, wq)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def qrelu_ste(h, act_max):
+    """Straight-through QRelu(8): 8-bit grid on the calibrated
+    [0, act_max) range (act_max is the Rust-side power-of-2 calibration of
+    the maximum hidden pre-activation; matches the integer truncation
+    shift of the hardware)."""
+    step = act_max / 256.0
+    hr = jnp.maximum(h, 0.0)
+    hq = jnp.clip(jnp.floor(hr / step) * step, 0.0, act_max - step)
+    return hr + jax.lax.stop_gradient(hq - hr)
+
+
+def qat_forward(params, x, act_max):
+    """QAT forward pass: po2 weights, QRelu(8) hidden activations."""
+    w1q = po2_ste(params["w1"])
+    w2q = po2_ste(params["w2"])
+    h = qrelu_ste(x @ w1q.T + params["b1"], act_max)
+    return h @ w2q.T + params["b2"]
+
+
+def _loss(params, x, y, sample_w, act_max, n_out):
+    logits = qat_forward(params, x, act_max)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, n_out)
+    ce = -jnp.sum(onehot * logp, axis=-1)
+    return jnp.sum(ce * sample_w) / jnp.maximum(jnp.sum(sample_w), 1e-9)
+
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def train_step(params, adam_m, adam_v, step, x, y, sample_w, lr, act_max, n_out):
+    """One QAT Adam step. All state in/out — the Rust trainer owns the loop.
+
+    Args:
+      params: dict w1 (H,N0), b1 (H,), w2 (O,H), b2 (O,) — f32.
+      adam_m/adam_v: same structure.
+      step: () int32 — 1-based after this update.
+      x: (Bt, N0) f32 — inputs already scaled to [0,1] 4-bit grid.
+      y: (Bt,) int32.
+      sample_w: (Bt,) f32 — per-sample (class-balance) weights.
+      lr: () f32.
+      act_max: () f32 — calibrated QRelu range (power of two).
+
+    Returns: (params, adam_m, adam_v, step, loss).
+    """
+    loss, grads = jax.value_and_grad(_loss)(params, x, y, sample_w, act_max, n_out)
+    step = step + 1
+    bc1 = 1.0 - ADAM_B1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - ADAM_B2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        p = p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + ADAM_EPS)
+        return p, m, v
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k in ("w1", "b1", "w2", "b2"):
+        new_p[k], new_m[k], new_v[k] = upd(params[k], grads[k], adam_m[k], adam_v[k])
+    return new_p, new_m, new_v, step, loss
+
+
+def train_step_flat(
+    w1, b1, w2, b2,
+    m_w1, m_b1, m_w2, m_b2,
+    v_w1, v_b1, v_w2, v_b2,
+    step, x, y, sample_w, lr, act_max,
+):
+    """Flat-argument wrapper of `train_step` for AOT lowering (the PJRT
+    runtime passes positional literals). Returns a flat 14-tuple:
+    (w1, b1, w2, b2, m_w1..m_b2, v_w1..v_b2, step, loss)."""
+    n_out = w2.shape[0]
+    params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+    adam_m = {"w1": m_w1, "b1": m_b1, "w2": m_w2, "b2": m_b2}
+    adam_v = {"w1": v_w1, "b1": v_b1, "w2": v_w2, "b2": v_b2}
+    p, m, v, step, loss = train_step(
+        params, adam_m, adam_v, step, x, y, sample_w, lr, act_max, n_out
+    )
+    return (
+        p["w1"], p["b1"], p["w2"], p["b2"],
+        m["w1"], m["b1"], m["w2"], m["b2"],
+        v["w1"], v["b1"], v["w2"], v["b2"],
+        step, loss,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_out",))
+def qat_eval(params, x, n_out, act_max=8.0):
+    """QAT-forward predictions (used by build-time self-tests)."""
+    logits = qat_forward(params, x, act_max)
+    del n_out
+    return jnp.argmax(logits, axis=-1)

@@ -1,0 +1,109 @@
+"""L1 correctness: the Pallas masked-MAC kernel against the jnp and
+numpy oracles — the core correctness signal of the compile path.
+Integer arithmetic: comparisons are exact (assert_array_equal)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.masked_mac import masked_mac, qrelu
+from compile.kernels import ref
+
+
+def make_case(rng, p, b, n, j, in_bits):
+    amax = (1 << in_bits) - 1
+    x = rng.integers(0, amax + 1, size=(b, j), dtype=np.int32)
+    sign = rng.integers(-1, 2, size=(n, j)).astype(np.int32)
+    shift = rng.integers(0, 8, size=(n, j), dtype=np.int32)
+    mask = rng.integers(0, amax + 1, size=(p, n, j), dtype=np.int32)
+    bias = (rng.integers(-1, 2, size=n) * (1 << rng.integers(0, 10, size=n))).astype(np.int32)
+    bkeep = rng.integers(0, 2, size=(p, n), dtype=np.int32)
+    return x, sign, shift, mask, bias, bkeep
+
+
+def test_kernel_matches_numpy_oracle_small():
+    rng = np.random.default_rng(0)
+    args = make_case(rng, p=3, b=5, n=4, j=6, in_bits=4)
+    got = np.asarray(masked_mac(*[jnp.asarray(a) for a in args]))
+    want = ref.masked_mac_np(*args)
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+def test_kernel_matches_jnp_ref():
+    rng = np.random.default_rng(1)
+    args = make_case(rng, p=4, b=16, n=5, j=11, in_bits=8)
+    jargs = [jnp.asarray(a) for a in args]
+    got = np.asarray(masked_mac(*jargs))
+    want = np.asarray(ref.masked_mac_ref(*jargs))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(1, 6),
+    b=st.integers(1, 24),
+    n=st.integers(1, 8),
+    j=st.integers(1, 16),
+    in_bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_hypothesis_sweep(p, b, n, j, in_bits, seed):
+    """Hypothesis sweep over shapes/bit-widths: pallas == jnp oracle."""
+    rng = np.random.default_rng(seed)
+    args = make_case(rng, p, b, n, j, in_bits)
+    jargs = [jnp.asarray(a) for a in args]
+    got = np.asarray(masked_mac(*jargs))
+    want = np.asarray(ref.masked_mac_ref(*jargs))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_full_mask_equals_unmasked_matmul():
+    """With all-ones masks the kernel is an ordinary po2 MAC."""
+    rng = np.random.default_rng(2)
+    p, b, n, j = 2, 8, 3, 5
+    x, sign, shift, _, bias, _ = make_case(rng, p, b, n, j, 4)
+    mask = np.full((p, n, j), 15, dtype=np.int32)
+    bkeep = np.ones((p, n), dtype=np.int32)
+    got = np.asarray(masked_mac(*[jnp.asarray(a) for a in (x, sign, shift, mask, bias, bkeep)]))
+    w = sign.astype(np.int64) * (1 << shift.astype(np.int64))
+    want = x.astype(np.int64) @ w.T + bias[None, :]
+    for pi in range(p):
+        np.testing.assert_array_equal(got[pi], want.astype(np.int32))
+
+
+def test_zero_mask_kills_everything():
+    rng = np.random.default_rng(3)
+    p, b, n, j = 1, 4, 2, 3
+    x, sign, shift, _, bias, _ = make_case(rng, p, b, n, j, 4)
+    mask = np.zeros((p, n, j), dtype=np.int32)
+    bkeep = np.zeros((p, n), dtype=np.int32)
+    got = np.asarray(masked_mac(*[jnp.asarray(a) for a in (x, sign, shift, mask, bias, bkeep)]))
+    np.testing.assert_array_equal(got, np.zeros((p, b, n), dtype=np.int32))
+
+
+@pytest.mark.parametrize(
+    "z,t,expect",
+    [
+        (-5, 0, 0),
+        (0, 0, 0),
+        (255, 0, 255),
+        (256, 0, 255),
+        (256, 1, 128),
+        (511, 1, 255),
+        (1 << 20, 4, 255),
+    ],
+)
+def test_qrelu_matches_rust_cases(z, t, expect):
+    """Same cases as rust/src/model/quantized.rs::qrelu_behaviour."""
+    got = int(qrelu(jnp.asarray([z], dtype=jnp.int32), jnp.int32(t))[0])
+    assert got == expect
+
+
+def test_qrelu_matches_numpy_ref():
+    rng = np.random.default_rng(4)
+    z = rng.integers(-(1 << 20), 1 << 20, size=200).astype(np.int32)
+    for t in (0, 2, 5):
+        got = np.asarray(qrelu(jnp.asarray(z), jnp.int32(t)))
+        want = ref.qrelu_np(z, t)
+        np.testing.assert_array_equal(got, want)

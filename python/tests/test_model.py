@@ -1,0 +1,165 @@
+"""L2 correctness: masked forward vs oracle, QAT quantizers, and the
+training step's learning behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def random_mlp_int(rng, n0, h, o):
+    l1 = {
+        "sign": rng.integers(-1, 2, size=(h, n0)).astype(np.int32),
+        "shift": rng.integers(0, 8, size=(h, n0)).astype(np.int32),
+        "bias": (rng.integers(-1, 2, size=h) * (1 << rng.integers(0, 8, size=h))).astype(np.int32),
+    }
+    l2 = {
+        "sign": rng.integers(-1, 2, size=(o, h)).astype(np.int32),
+        "shift": rng.integers(0, 8, size=(o, h)).astype(np.int32),
+        "bias": (rng.integers(-1, 2, size=o) * (1 << rng.integers(0, 8, size=o))).astype(np.int32),
+    }
+    return l1, l2
+
+
+def test_masked_accuracy_counts_vs_oracle():
+    rng = np.random.default_rng(0)
+    n0, h, o, b, p = 6, 3, 3, 12, 4
+    l1, l2 = random_mlp_int(rng, n0, h, o)
+    x = rng.integers(0, 16, size=(b, n0), dtype=np.int32)
+    labels = rng.integers(0, o, size=b).astype(np.int32)
+    m1 = rng.integers(0, 16, size=(p, h, n0), dtype=np.int32)
+    m2 = rng.integers(0, 256, size=(p, o, h), dtype=np.int32)
+    mb1 = rng.integers(0, 2, size=(p, h), dtype=np.int32)
+    mb2 = rng.integers(0, 2, size=(p, o), dtype=np.int32)
+    act_shift = 3
+
+    counts = np.asarray(
+        model.masked_accuracy_counts(
+            jnp.asarray(x), jnp.asarray(labels),
+            jnp.asarray(l1["sign"]), jnp.asarray(l1["shift"]), jnp.asarray(l1["bias"]), jnp.asarray(mb1),
+            jnp.asarray(l2["sign"]), jnp.asarray(l2["shift"]), jnp.asarray(l2["bias"]), jnp.asarray(mb2),
+            jnp.asarray(m1), jnp.asarray(m2), jnp.int32(act_shift),
+        )
+    )
+    # Oracle: numpy loops.
+    for pi in range(p):
+        correct = 0
+        for bi in range(b):
+            l1m = dict(l1, mask=m1[pi], bkeep=mb1[pi])
+            l2m = dict(l2, mask=m2[pi], bkeep=mb2[pi])
+            _, z2 = ref.quant_forward_np(x[bi], l1m, l2m, act_shift)
+            if int(np.argmax(z2)) == labels[bi]:
+                correct += 1
+        assert counts[pi] == correct, f"chromosome {pi}"
+
+
+def test_padding_labels_never_count():
+    rng = np.random.default_rng(1)
+    n0, h, o, b, p = 4, 2, 2, 8, 2
+    l1, l2 = random_mlp_int(rng, n0, h, o)
+    x = rng.integers(0, 16, size=(b, n0), dtype=np.int32)
+    labels = np.full(b, -1, dtype=np.int32)  # all padding
+    m1 = np.full((p, h, n0), 15, dtype=np.int32)
+    m2 = np.full((p, o, h), 255, dtype=np.int32)
+    mb = np.ones((p, h), dtype=np.int32)
+    mb2 = np.ones((p, o), dtype=np.int32)
+    counts = np.asarray(
+        model.masked_accuracy_counts(
+            jnp.asarray(x), jnp.asarray(labels),
+            jnp.asarray(l1["sign"]), jnp.asarray(l1["shift"]), jnp.asarray(l1["bias"]), jnp.asarray(mb),
+            jnp.asarray(l2["sign"]), jnp.asarray(l2["shift"]), jnp.asarray(l2["bias"]), jnp.asarray(mb2),
+            jnp.asarray(m1), jnp.asarray(m2), jnp.int32(2),
+        )
+    )
+    assert (counts == 0).all()
+
+
+def test_po2_ste_forward_is_po2_grid():
+    w = jnp.asarray([[0.3, -0.7, 0.0, 1.6, 0.001, -0.09]])
+    wq = np.asarray(model.po2_ste(w))
+    for v in wq.flatten():
+        if v == 0.0:
+            continue
+        assert abs(np.log2(abs(v)) - round(np.log2(abs(v)))) < 1e-6, v
+
+
+def test_po2_ste_gradient_is_identity():
+    f = lambda w: jnp.sum(model.po2_ste(w) * 2.0)
+    g = jax.grad(f)(jnp.asarray([0.3, -0.7, 1.1]))
+    np.testing.assert_allclose(np.asarray(g), [2.0, 2.0, 2.0], atol=1e-6)
+
+
+def test_qrelu_ste_range_and_grid():
+    act_max = 8.0
+    step = act_max / 256.0
+    h = jnp.linspace(-2.0, 10.0, 97)
+    hq = np.asarray(model.qrelu_ste(h, act_max))
+    assert hq.min() >= 0.0
+    assert hq.max() <= act_max - step + 1e-9
+    steps = hq / step
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-5)
+
+
+def _toy_problem(rng, n0=4, h=6, o=3, n=256):
+    x = rng.uniform(0, 1, size=(n, n0)).astype(np.float32)
+    w_true = rng.normal(size=(o, n0))
+    y = np.argmax(x @ w_true.T, axis=1).astype(np.int32)
+    return x, y
+
+
+def test_train_step_learns_toy_problem():
+    rng = np.random.default_rng(7)
+    n0, h, o = 4, 6, 3
+    x, y = _toy_problem(rng, n0, h, o)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(h, n0)) * 0.5, dtype=jnp.float32),
+        "b1": jnp.zeros(h, dtype=jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(o, h)) * 0.5, dtype=jnp.float32),
+        "b2": jnp.zeros(o, dtype=jnp.float32),
+    }
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    m, v = dict(zeros), dict(zeros)
+    step = jnp.int32(0)
+    sw = jnp.ones(64, dtype=jnp.float32)
+    losses = []
+    jit_step = jax.jit(
+        lambda p, m, v, s, xb, yb: model.train_step(p, m, v, s, xb, yb, sw, 0.02, 8.0, o)
+    )
+    for epoch in range(30):
+        for k in range(0, 256, 64):
+            xb = jnp.asarray(x[k:k+64])
+            yb = jnp.asarray(y[k:k+64])
+            params, m, v, step, loss = jit_step(params, m, v, step, xb, yb)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.6, losses[::10]
+    pred = np.asarray(model.qat_eval(params, jnp.asarray(x), o))
+    acc = (pred == y).mean()
+    assert acc > 0.8, acc
+
+
+def test_train_step_flat_matches_dict_version():
+    rng = np.random.default_rng(9)
+    n0, h, o = 3, 2, 2
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), dtype=jnp.float32)
+    w1, b1, w2, b2 = mk(h, n0), mk(h), mk(o, h), mk(o)
+    z = lambda t: jnp.zeros_like(t)
+    x = mk(8, n0)
+    y = jnp.asarray(rng.integers(0, o, size=8), dtype=jnp.int32)
+    sw = jnp.ones(8, dtype=jnp.float32)
+    flat = model.train_step_flat(
+        w1, b1, w2, b2,
+        z(w1), z(b1), z(w2), z(b2),
+        z(w1), z(b1), z(w2), z(b2),
+        jnp.int32(0), x, y, sw, jnp.float32(0.01), jnp.float32(8.0),
+    )
+    params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+    zeros = {k: z(v) for k, v in params.items()}
+    p2, _, _, step2, loss2 = model.train_step(
+        params, dict(zeros), dict(zeros), jnp.int32(0), x, y, sw, 0.01, 8.0, o
+    )
+    np.testing.assert_allclose(np.asarray(flat[0]), np.asarray(p2["w1"]), rtol=1e-6)
+    np.testing.assert_allclose(float(flat[13]), float(loss2), rtol=1e-6)
+    assert int(flat[12]) == int(step2) == 1

@@ -1,0 +1,313 @@
+//! Accumulation approximation: the chromosome encoding of paper §III-D.
+//!
+//! A chromosome assigns one bit to every *summand bit* of every adder
+//! tree in the MLP (eq. 1): `1` keeps the bit, `0` removes it (constant
+//! zero in the circuit). This module owns the canonical summand-bit
+//! enumeration shared by the genetic optimizer, the area surrogate, the
+//! native and PJRT evaluators, and the netlist generator — everyone must
+//! agree on which genome bit means which summand bit.
+//!
+//! Canonical order: layer 1 then layer 2; within a layer, neuron by
+//! neuron; within a neuron, inputs `j = 0..n_in` with a non-zero weight,
+//! each contributing `in_bits` bits LSB→MSB; the bias bit (if the neuron
+//! has one) comes last. Positive- and negative-tree summands interleave
+//! naturally in input order — the (tree, column) coordinates are derived
+//! from the weight sign and shift.
+
+use crate::config::Topology;
+use crate::model::{MaskSet, QuantMlp};
+use crate::util::{BitVec, Rng};
+
+/// Where one genome bit lands in the circuit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SummandBit {
+    /// 0 = hidden layer, 1 = output layer.
+    pub layer: u8,
+    /// Neuron index within the layer.
+    pub neuron: u16,
+    /// Input index within the neuron, or `BIAS` for the bias bit.
+    pub input: u16,
+    /// Bit position within the (unshifted) input (0 = LSB). 0 for bias.
+    pub bit: u8,
+    /// Adder-tree column the bit occupies (`shift + bit`).
+    pub column: u8,
+    /// true → positive tree, false → negative tree.
+    pub pos_tree: bool,
+}
+
+/// Sentinel input index marking a bias summand.
+pub const BIAS: u16 = u16::MAX;
+
+/// Domain-informed GA seeds: LSB-truncated genomes. For every depth pair
+/// `(d1, d2)` the seed removes all layer-1 summand bits in adder-tree
+/// columns `< d1` and all layer-2 bits in columns `< d2` — the classic
+/// coarse truncation the paper's related work applies, which the genetic
+/// search then refines per bit. Seeding these gives NSGA-II immediate
+/// deep-area anchors without waiting generations for them to emerge.
+pub fn truncation_seeds(map: &GenomeMap, depths1: &[u8], depths2: &[u8]) -> Vec<crate::util::BitVec> {
+    let mut out = Vec::new();
+    for &d1 in depths1 {
+        for &d2 in depths2 {
+            let mut g = map.exact_genome();
+            for (i, sb) in map.bits.iter().enumerate() {
+                let depth = if sb.layer == 0 { d1 } else { d2 };
+                if sb.column < depth {
+                    g.set(i, false);
+                }
+            }
+            out.push(g);
+        }
+    }
+    out
+}
+
+/// The genome ⇄ mask mapping for one quantized MLP.
+#[derive(Clone, Debug)]
+pub struct GenomeMap {
+    pub topo: Topology,
+    pub bits: Vec<SummandBit>,
+    in_bits1: u32,
+    in_bits2: u32,
+}
+
+impl GenomeMap {
+    /// Build the canonical map for a quantized MLP.
+    pub fn new(mlp: &QuantMlp) -> GenomeMap {
+        let mut bits = Vec::new();
+        for (layer_idx, layer) in [&mlp.l1, &mlp.l2].into_iter().enumerate() {
+            for n in 0..layer.n_out {
+                for j in 0..layer.n_in {
+                    let w = layer.weight(n, j);
+                    if w.sign == 0 {
+                        continue;
+                    }
+                    for b in 0..layer.in_bits {
+                        bits.push(SummandBit {
+                            layer: layer_idx as u8,
+                            neuron: n as u16,
+                            input: j as u16,
+                            bit: b as u8,
+                            column: w.shift + b as u8,
+                            pos_tree: w.sign > 0,
+                        });
+                    }
+                }
+                let bias = layer.bias[n];
+                if bias.is_nonzero() {
+                    bits.push(SummandBit {
+                        layer: layer_idx as u8,
+                        neuron: n as u16,
+                        input: BIAS,
+                        bit: 0,
+                        column: bias.shift,
+                        pos_tree: bias.sign > 0,
+                    });
+                }
+            }
+        }
+        GenomeMap {
+            topo: mlp.topo,
+            bits,
+            in_bits1: mlp.l1.in_bits,
+            in_bits2: mlp.l2.in_bits,
+        }
+    }
+
+    /// Genome length (number of summand bits in the whole MLP).
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// The exact genome (all bits kept).
+    pub fn exact_genome(&self) -> BitVec {
+        BitVec::ones(self.len())
+    }
+
+    /// Random genome with keep-probability `p` (biased initial population,
+    /// paper §III-D1).
+    pub fn random_genome(&self, rng: &mut Rng, keep_prob: f64) -> BitVec {
+        let bools: Vec<bool> = (0..self.len()).map(|_| rng.chance(keep_prob)).collect();
+        BitVec::from_bools(&bools)
+    }
+
+    /// Expand a genome into the dense [`MaskSet`] consumed by the
+    /// evaluators. Bits of zero weights stay fully masked-in (all-ones) —
+    /// they contribute nothing either way.
+    pub fn to_masks(&self, genome: &BitVec) -> MaskSet {
+        assert_eq!(genome.len(), self.len(), "genome length mismatch");
+        let t = &self.topo;
+        let mut m = MaskSet {
+            m1: vec![(1u32 << self.in_bits1) - 1; t.n_hidden * t.n_in],
+            mb1: vec![true; t.n_hidden],
+            m2: vec![(1u32 << self.in_bits2) - 1; t.n_out * t.n_hidden],
+            mb2: vec![true; t.n_out],
+        };
+        for (i, sb) in self.bits.iter().enumerate() {
+            if genome.get(i) {
+                continue; // kept -> mask bit stays 1
+            }
+            let n = sb.neuron as usize;
+            if sb.input == BIAS {
+                if sb.layer == 0 {
+                    m.mb1[n] = false;
+                } else {
+                    m.mb2[n] = false;
+                }
+            } else {
+                let j = sb.input as usize;
+                if sb.layer == 0 {
+                    m.m1[n * t.n_in + j] &= !(1u32 << sb.bit);
+                } else {
+                    m.m2[n * t.n_hidden + j] &= !(1u32 << sb.bit);
+                }
+            }
+        }
+        m
+    }
+
+    /// Inverse of [`to_masks`] (used by tests and by importing external
+    /// mask configurations).
+    pub fn from_masks(&self, masks: &MaskSet) -> BitVec {
+        let t = &self.topo;
+        let mut g = BitVec::zeros(self.len());
+        for (i, sb) in self.bits.iter().enumerate() {
+            let n = sb.neuron as usize;
+            let kept = if sb.input == BIAS {
+                if sb.layer == 0 { masks.mb1[n] } else { masks.mb2[n] }
+            } else {
+                let j = sb.input as usize;
+                let m = if sb.layer == 0 {
+                    masks.m1[n * t.n_in + j]
+                } else {
+                    masks.m2[n * t.n_hidden + j]
+                };
+                (m >> sb.bit) & 1 == 1
+            };
+            if kept {
+                g.set(i, true);
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::datasets;
+    use crate::model::float_mlp::TrainOpts;
+    use crate::model::FloatMlp;
+    use crate::util::prop;
+
+    fn tiny_qmlp() -> (QuantMlp, crate::datasets::QuantDataset) {
+        let cfg = builtin::tiny();
+        let (split, qtrain, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 25, ..Default::default() });
+        (QuantMlp::from_float(&mlp, &qtrain), qtrain)
+    }
+
+    #[test]
+    fn genome_length_counts_nonzero_summands() {
+        let (qmlp, _) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let mut expect = 0;
+        for layer in [&qmlp.l1, &qmlp.l2] {
+            for n in 0..layer.n_out {
+                for j in 0..layer.n_in {
+                    if layer.weight(n, j).sign != 0 {
+                        expect += layer.in_bits as usize;
+                    }
+                }
+                if layer.bias[n].is_nonzero() {
+                    expect += 1;
+                }
+            }
+        }
+        assert_eq!(map.len(), expect);
+        assert!(map.len() > 0);
+    }
+
+    #[test]
+    fn exact_genome_is_exact_masks() {
+        let (qmlp, _) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let masks = map.to_masks(&map.exact_genome());
+        // Exact genome must behave identically to no masks at all.
+        let exact = MaskSet::exact(&qmlp.topo);
+        // Zero-weight mask entries are all-ones in both.
+        assert_eq!(masks, exact);
+    }
+
+    #[test]
+    fn prop_masks_roundtrip() {
+        let (qmlp, _) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        prop::check("genome->masks->genome roundtrip", |rng, _| {
+            let g = map.random_genome(rng, 0.7);
+            let back = map.from_masks(&map.to_masks(&g));
+            if back != g {
+                return Err("roundtrip mismatch".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn removed_bit_changes_one_mask_bit() {
+        let (qmlp, _) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let mut g = map.exact_genome();
+        // Remove the very first summand bit.
+        g.set(0, false);
+        let masks = map.to_masks(&g);
+        let exact = map.to_masks(&map.exact_genome());
+        let diff: u32 = masks
+            .m1
+            .iter()
+            .zip(&exact.m1)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        let sb = map.bits[0];
+        if sb.input != BIAS && sb.layer == 0 {
+            assert_eq!(diff, 1);
+        }
+    }
+
+    #[test]
+    fn column_is_shift_plus_bit() {
+        let (qmlp, _) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        for sb in &map.bits {
+            if sb.input == BIAS {
+                continue;
+            }
+            let layer = if sb.layer == 0 { &qmlp.l1 } else { &qmlp.l2 };
+            let w = layer.weight(sb.neuron as usize, sb.input as usize);
+            assert_eq!(sb.column, w.shift + sb.bit);
+            assert_eq!(sb.pos_tree, w.sign > 0);
+        }
+    }
+
+    #[test]
+    fn masked_eval_consistent_with_genome_semantics() {
+        // Clearing all genome bits of one neuron's inputs zeroes that
+        // neuron's contribution.
+        let (qmlp, qtrain) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let mut g = map.exact_genome();
+        for (i, sb) in map.bits.iter().enumerate() {
+            if sb.layer == 0 && sb.neuron == 0 {
+                g.set(i, false);
+            }
+        }
+        let masks = map.to_masks(&g);
+        let (h, _) = qmlp.forward_masked(&qtrain.x[0], Some(&masks));
+        assert_eq!(h[0], 0, "fully-masked neuron must output 0");
+    }
+}

@@ -1,0 +1,448 @@
+//! Approximate Argmax (paper §III-C2).
+//!
+//! The output layer's activation is an argmax implemented as a tree of
+//! comparators. The approximation (a) selects, per comparison, the
+//! minimum *subset of bits* that keeps train accuracy within 0.5%
+//! (greedy, MSB first), and (b) chooses *which* neurons meet at each
+//! comparator with the Hungarian algorithm on the bits-kept cost matrix,
+//! exploiting correlations between neuron outputs. The procedure repeats
+//! stage by stage down the tree.
+//!
+//! Comparators operate on the biased (offset-binary) form of the signed
+//! pre-activations — `u = z + 2^(W-1)` — so an unsigned masked compare is
+//! hardware-exact. Ties keep the lower-index operand, which makes the
+//! exact tree equivalent to `argmax` with ties-to-lowest.
+
+use crate::hungarian;
+use crate::util::stats::mean;
+
+/// One comparator: compares previous-stage slots `a` and `b` (slot
+/// indices) using only the bits set in `mask` (full width = exact).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CmpNode {
+    pub a: usize,
+    pub b: usize,
+    pub mask: u64,
+}
+
+/// A full (possibly approximate) argmax comparator tree.
+#[derive(Clone, Debug)]
+pub struct ArgmaxPlan {
+    /// Number of competitors (output neurons).
+    pub n: usize,
+    /// Comparator bit width (two's-complement width of the inputs).
+    pub width: u32,
+    /// Stages of comparators. Stage `s` consumes the slot list of stage
+    /// `s-1` (stage 0 consumes the neurons); a slot not referenced by any
+    /// comparator in a stage gets a bye into the next stage, in order.
+    pub stages: Vec<Vec<CmpNode>>,
+}
+
+impl ArgmaxPlan {
+    /// The exact tree: adjacent pairing `(0,1), (2,3)…`, full-width masks.
+    pub fn exact(n: usize, width: u32) -> ArgmaxPlan {
+        let full = full_mask(width);
+        let mut stages = Vec::new();
+        let mut slots = n;
+        while slots > 1 {
+            let stage: Vec<CmpNode> = (0..slots / 2)
+                .map(|k| CmpNode { a: 2 * k, b: 2 * k + 1, mask: full })
+                .collect();
+            let next = stage.len() + slots % 2;
+            stages.push(stage);
+            slots = next;
+        }
+        ArgmaxPlan { n, width, stages }
+    }
+
+    /// Winner (original neuron index) for one vector of pre-activations.
+    pub fn predict(&self, z: &[i64]) -> usize {
+        debug_assert_eq!(z.len(), self.n);
+        let bias = 1i64 << (self.width - 1);
+        // Slots carry (neuron id, biased value).
+        let mut slots: Vec<(usize, u64)> = z
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (i, (v + bias) as u64))
+            .collect();
+        for stage in &self.stages {
+            let mut used = vec![false; slots.len()];
+            let mut next = Vec::with_capacity(stage.len() + 1);
+            for cmp in stage {
+                let (ia, va) = slots[cmp.a];
+                let (ib, vb) = slots[cmp.b];
+                used[cmp.a] = true;
+                used[cmp.b] = true;
+                // Masked compare; ties keep the lower slot (a).
+                if (vb & cmp.mask) > (va & cmp.mask) {
+                    next.push((ib, vb));
+                } else {
+                    next.push((ia, va));
+                }
+            }
+            for (k, slot) in slots.iter().enumerate() {
+                if !used[k] {
+                    next.push(*slot); // bye
+                }
+            }
+            slots = next;
+        }
+        slots[0].0
+    }
+
+    /// Accuracy of the plan over precomputed output pre-activations.
+    pub fn accuracy(&self, preacts: &[Vec<i64>], labels: &[usize]) -> f64 {
+        if labels.is_empty() {
+            return 0.0;
+        }
+        let correct = preacts
+            .iter()
+            .zip(labels)
+            .filter(|(z, &y)| self.predict(z) == y)
+            .count();
+        correct as f64 / labels.len() as f64
+    }
+
+    /// Total number of compared bits across all comparators.
+    pub fn total_bits(&self) -> u64 {
+        self.stages
+            .iter()
+            .flatten()
+            .map(|c| c.mask.count_ones() as u64)
+            .sum()
+    }
+
+    /// Number of comparators.
+    pub fn n_comparators(&self) -> usize {
+        self.stages.iter().map(Vec::len).sum()
+    }
+
+    /// Average comparator size (bits), and the reduction factor vs the
+    /// full width (Table IV's "Avg. Comparator Size Reduction").
+    pub fn comparator_stats(&self) -> (f64, f64) {
+        let sizes: Vec<f64> = self
+            .stages
+            .iter()
+            .flatten()
+            .map(|c| c.mask.count_ones() as f64)
+            .collect();
+        if sizes.is_empty() {
+            return (0.0, 1.0);
+        }
+        let avg = mean(&sizes);
+        (avg, self.width as f64 / avg.max(1.0))
+    }
+}
+
+fn full_mask(width: u32) -> u64 {
+    if width >= 64 {
+        !0u64
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct ArgmaxSearchOpts {
+    /// Maximum train-accuracy drop tolerated while discarding a bit
+    /// (paper: 0.5%).
+    pub acc_guard: f64,
+}
+
+impl Default for ArgmaxSearchOpts {
+    fn default() -> Self {
+        ArgmaxSearchOpts { acc_guard: 0.005 }
+    }
+}
+
+/// Build an approximate argmax plan from the train-set output
+/// pre-activations (paper §III-C2, run after the accumulation
+/// approximation because it depends on the output distribution).
+pub fn build_plan(
+    preacts: &[Vec<i64>],
+    labels: &[usize],
+    width: u32,
+    opts: &ArgmaxSearchOpts,
+) -> ArgmaxPlan {
+    let n = preacts.first().map(Vec::len).unwrap_or(0);
+    let mut plan = ArgmaxPlan::exact(n, width);
+    if n < 2 {
+        return plan;
+    }
+    let base_acc = plan.accuracy(preacts, labels);
+
+    // Stage by stage: choose pairing + per-pair masks.
+    for stage_idx in 0..plan.stages.len() {
+        let n_slots = stage_slot_count(&plan, stage_idx);
+        // --- 1. per-ordered-pair greedy minimum bit subsets
+        // cost[i][j] = bits kept when slots i and j are compared
+        // approximately (everything else exact).
+        let mut masks = vec![vec![full_mask(width); n_slots]; n_slots];
+        let mut cost = vec![vec![f64::INFINITY; n_slots]; n_slots];
+        for i in 0..n_slots {
+            for j in (i + 1)..n_slots {
+                let mask = greedy_mask(
+                    &plan, stage_idx, i, j, width, preacts, labels, base_acc, opts,
+                );
+                masks[i][j] = mask;
+                masks[j][i] = mask;
+                let bits = mask.count_ones() as f64;
+                cost[i][j] = bits;
+                cost[j][i] = bits;
+            }
+        }
+        // Self-assignment is forbidden.
+        for (i, row) in cost.iter_mut().enumerate() {
+            row[i] = 1e9;
+        }
+        // --- 2. Hungarian assignment -> minimum-cost pairing
+        let (assignment, _) = hungarian::solve(&cost);
+        let pairs = assignment_to_pairs(&assignment);
+        // --- 3. rewrite this stage with the chosen pairs + masks
+        let mut stage: Vec<CmpNode> = pairs
+            .iter()
+            .take(n_slots / 2)
+            .map(|&(a, b)| CmpNode { a, b, mask: masks[a][b] })
+            .collect();
+        stage.sort_by_key(|c| c.a);
+        plan.stages[stage_idx] = stage;
+    }
+    plan
+}
+
+/// Number of input slots of stage `stage_idx`.
+fn stage_slot_count(plan: &ArgmaxPlan, stage_idx: usize) -> usize {
+    let mut slots = plan.n;
+    for s in 0..stage_idx {
+        slots = plan.stages[s].len() + (slots - 2 * plan.stages[s].len());
+    }
+    slots
+}
+
+/// Greedy MSB-first bit discarding for the comparison of slots `i`,`j`
+/// at stage `stage_idx`, keeping all other comparisons as currently
+/// planned (paper: "the rest comparisons are performed accurately").
+#[allow(clippy::too_many_arguments)]
+fn greedy_mask(
+    plan: &ArgmaxPlan,
+    stage_idx: usize,
+    i: usize,
+    j: usize,
+    width: u32,
+    preacts: &[Vec<i64>],
+    labels: &[usize],
+    base_acc: f64,
+    opts: &ArgmaxSearchOpts,
+) -> u64 {
+    // Trial plan: current plan with stage `stage_idx` re-paired so that
+    // (i, j) meet; remaining slots pair adjacently (exact masks).
+    let mut trial = plan.clone();
+    let n_slots = stage_slot_count(plan, stage_idx);
+    let mut rest: Vec<usize> = (0..n_slots).filter(|&s| s != i && s != j).collect();
+    let mut stage = vec![CmpNode { a: i.min(j), b: i.max(j), mask: full_mask(width) }];
+    while rest.len() >= 2 {
+        let a = rest.remove(0);
+        let b = rest.remove(0);
+        stage.push(CmpNode { a, b, mask: full_mask(width) });
+    }
+    stage.sort_by_key(|c| c.a);
+    // Later stages revert to exact adjacent pairing of the right size.
+    let tail = ArgmaxPlan::exact(stage.len() + n_slots % 2, width).stages;
+    trial.stages.truncate(stage_idx);
+    trial.stages.push(stage);
+    trial.stages.extend(tail);
+
+    let target_idx = trial.stages[stage_idx]
+        .iter()
+        .position(|c| c.a == i.min(j) && c.b == i.max(j))
+        .expect("pair present");
+
+    let mut mask = full_mask(width);
+    for bit in (0..width).rev() {
+        let candidate = mask & !(1u64 << bit);
+        trial.stages[stage_idx][target_idx].mask = candidate;
+        let acc = trial.accuracy(preacts, labels);
+        if acc >= base_acc - opts.acc_guard {
+            mask = candidate;
+        }
+    }
+    // Never return an empty mask: a 0-bit comparator is a constant, keep
+    // at least one bit so the node remains a comparator.
+    if mask == 0 {
+        mask = 1;
+    }
+    mask
+}
+
+/// Turn a Hungarian assignment (a permutation) into disjoint pairs:
+/// mutual assignments pair directly; longer cycles pair consecutive
+/// members. Each slot appears in at most one pair.
+fn assignment_to_pairs(assignment: &[usize]) -> Vec<(usize, usize)> {
+    let n = assignment.len();
+    let mut visited = vec![false; n];
+    let mut pairs = Vec::new();
+    for start in 0..n {
+        if visited[start] {
+            continue;
+        }
+        // Walk the cycle containing `start`.
+        let mut cycle = Vec::new();
+        let mut cur = start;
+        while !visited[cur] {
+            visited[cur] = true;
+            cycle.push(cur);
+            cur = assignment[cur];
+        }
+        // Pair consecutive members of the cycle.
+        let mut k = 0;
+        while k + 1 < cycle.len() {
+            pairs.push((cycle[k].min(cycle[k + 1]), cycle[k].max(cycle[k + 1])));
+            k += 2;
+        }
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_preacts(rng: &mut Rng, n_samples: usize, n: usize, width: u32) -> Vec<Vec<i64>> {
+        let span = 1i64 << (width - 1);
+        (0..n_samples)
+            .map(|_| (0..n).map(|_| rng.range(-span + 1, span)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn exact_plan_matches_argmax() {
+        let mut rng = Rng::new(1);
+        let width = 12;
+        let plan = ArgmaxPlan::exact(5, width);
+        for _ in 0..500 {
+            let z: Vec<i64> = (0..5).map(|_| rng.range(-2000, 2000)).collect();
+            assert_eq!(plan.predict(&z), crate::model::quantized::argmax_i(&z));
+        }
+    }
+
+    #[test]
+    fn exact_plan_handles_ties_like_argmax() {
+        let plan = ArgmaxPlan::exact(4, 8);
+        assert_eq!(plan.predict(&[5, 5, 5, 5]), 0);
+        assert_eq!(plan.predict(&[1, 7, 7, 2]), 1);
+        assert_eq!(plan.predict(&[-1, -1, 0, 0]), 2);
+    }
+
+    #[test]
+    fn exact_plan_structure() {
+        let plan = ArgmaxPlan::exact(10, 8);
+        // 10 -> 5 -> (2 cmps + bye) 3 -> (1 + bye) 2 -> 1.
+        let sizes: Vec<usize> = plan.stages.iter().map(Vec::len).collect();
+        assert_eq!(sizes, vec![5, 2, 1, 1]);
+        assert_eq!(plan.n_comparators(), 9); // n-1 comparators always
+    }
+
+    #[test]
+    fn n_comparators_is_n_minus_1() {
+        for n in 2..=16 {
+            let plan = ArgmaxPlan::exact(n, 8);
+            assert_eq!(plan.n_comparators(), n - 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn single_class_trivial() {
+        let plan = ArgmaxPlan::exact(1, 8);
+        assert_eq!(plan.predict(&[42]), 0);
+        assert!(plan.stages.is_empty());
+    }
+
+    #[test]
+    fn build_plan_keeps_accuracy_within_guard() {
+        // Synthetic task: neuron y has the max for label y, with margins
+        // drawn wide so many LSBs are discardable.
+        let mut rng = Rng::new(7);
+        let n = 4;
+        let width = 14;
+        let n_samples = 400;
+        let mut preacts = Vec::new();
+        let mut labels = Vec::new();
+        for _ in 0..n_samples {
+            let y = rng.below(n);
+            let mut z: Vec<i64> = (0..n).map(|_| rng.range(-2000, 1000)).collect();
+            z[y] = rng.range(2500, 6000); // clear winner
+            preacts.push(z);
+            labels.push(y);
+        }
+        let exact = ArgmaxPlan::exact(n, width);
+        let base = exact.accuracy(&preacts, &labels);
+        assert!(base > 0.99);
+        let plan = build_plan(&preacts, &labels, width, &ArgmaxSearchOpts::default());
+        let acc = plan.accuracy(&preacts, &labels);
+        assert!(acc >= base - 0.03, "acc {acc} vs base {base}");
+        // With wide margins the comparators must have shrunk a lot.
+        assert!(
+            plan.total_bits() < exact.total_bits() / 2,
+            "bits {} vs exact {}",
+            plan.total_bits(),
+            exact.total_bits()
+        );
+    }
+
+    #[test]
+    fn build_plan_structure_valid() {
+        let mut rng = Rng::new(3);
+        let preacts = random_preacts(&mut rng, 200, 6, 10);
+        let labels: Vec<usize> = (0..200).map(|_| rng.below(6)).collect();
+        let plan = build_plan(&preacts, &labels, 10, &ArgmaxSearchOpts::default());
+        assert_eq!(plan.n_comparators(), 5);
+        // Every comparator mask is non-empty.
+        for stage in &plan.stages {
+            for cmp in stage {
+                assert!(cmp.mask != 0);
+                assert!(cmp.a < cmp.b);
+            }
+        }
+        // Predictions stay in range.
+        for z in preacts.iter().take(20) {
+            assert!(plan.predict(z) < 6);
+        }
+    }
+
+    #[test]
+    fn assignment_to_pairs_mutual_and_cycles() {
+        // Permutation (0<->1)(2<->3): mutual pairs.
+        assert_eq!(assignment_to_pairs(&[1, 0, 3, 2]), vec![(0, 1), (2, 3)]);
+        // 3-cycle 0->1->2->0: pairs (0,1), 2 left over.
+        assert_eq!(assignment_to_pairs(&[1, 2, 0]), vec![(0, 1)]);
+        // 4-cycle 0->1->2->3->0: pairs (0,1),(2,3).
+        assert_eq!(assignment_to_pairs(&[1, 2, 3, 0]), vec![(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn comparator_stats_reduction() {
+        let mut plan = ArgmaxPlan::exact(4, 16);
+        // Shrink all masks to 4 bits -> reduction 4x.
+        for stage in plan.stages.iter_mut() {
+            for c in stage.iter_mut() {
+                c.mask = 0xF;
+            }
+        }
+        let (avg, red) = plan.comparator_stats();
+        assert_eq!(avg, 4.0);
+        assert_eq!(red, 4.0);
+    }
+
+    #[test]
+    fn masked_compare_uses_only_masked_bits() {
+        let mut plan = ArgmaxPlan::exact(2, 8);
+        plan.stages[0][0].mask = 0b1100_0000; // top 2 bits of biased form
+        // z = [3, 5]: biased 131 vs 133 -> both 0b1000_00xx -> masked equal
+        // -> tie keeps slot 0.
+        assert_eq!(plan.predict(&[3, 5]), 0);
+        // Large difference visible in the top bits.
+        assert_eq!(plan.predict(&[-100, 100]), 1);
+    }
+}

@@ -1,0 +1,345 @@
+//! The exact bespoke baseline [8] (Mubarik et al., MICRO'20): 8-bit
+//! fixed-point weights hardwired into bespoke constant-coefficient
+//! multipliers, 4-bit inputs, two unsigned accumulators per neuron
+//! (positive/negative weights), full-precision Relu in the hidden layer,
+//! exact argmax at the output. This is the normalization baseline of
+//! every table and figure in the paper.
+
+use crate::config::Topology;
+use crate::datasets::QuantDataset;
+use crate::fixedpoint::{bits_for, INPUT_BITS};
+use crate::model::FloatMlp;
+use crate::netlist::build::{const_mul, csa_tree, resize, sign_extend, subtractor};
+use crate::netlist::mlp::ArgmaxMode;
+use crate::netlist::{Bus, Netlist};
+
+/// 8-bit fixed-point quantized MLP (the baseline's arithmetic model).
+#[derive(Clone, Debug)]
+pub struct Int8Mlp {
+    pub topo: Topology,
+    /// `(n_hidden, n_in)` flat, values in `[-127, 127]`.
+    pub w1: Vec<i32>,
+    pub b1: Vec<i64>,
+    /// `(n_out, n_hidden)` flat.
+    pub w2: Vec<i32>,
+    pub b2: Vec<i64>,
+}
+
+/// Quantize a float weight matrix to symmetric 8-bit integers with a
+/// power-of-2 scale (so the circuit needs no rescaling logic).
+fn quantize_w8(w: &[Vec<f64>]) -> (Vec<i32>, f64) {
+    let maxabs = w
+        .iter()
+        .flatten()
+        .fold(0.0f64, |m, &v| m.max(v.abs()))
+        .max(1e-9);
+    // Power-of-2 scale covering maxabs at 7 magnitude bits.
+    let scale = (2f64).powi((maxabs / 127.0).log2().ceil() as i32);
+    let q = w
+        .iter()
+        .flatten()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i32)
+        .collect();
+    (q, scale)
+}
+
+impl Int8Mlp {
+    /// Quantize a trained float MLP to the baseline's 8-bit format.
+    pub fn from_float(float: &FloatMlp) -> Int8Mlp {
+        let topo = float.topo;
+        let (w1, s1) = quantize_w8(&float.w1);
+        let (w2, s2) = quantize_w8(&float.w2);
+        // Bias in layer-1 accumulator units: input scale 2^-4, weight
+        // scale s1 -> column scale s1 / 16.
+        let c1 = s1 / (1u64 << INPUT_BITS) as f64;
+        let b1 = float.b1.iter().map(|&b| (b / c1).round() as i64).collect();
+        // Hidden activations stay in layer-1 accumulator units (full
+        // precision Relu), so layer-2 columns scale by s2 on top.
+        let c2 = c1 * s2;
+        let b2 = float.b2.iter().map(|&b| (b / c2).round() as i64).collect();
+        Int8Mlp { topo, w1, b1, w2, b2 }
+    }
+
+    /// Integer forward pass; returns (hidden Relu outputs, logits).
+    pub fn forward(&self, x: &[u32]) -> (Vec<i64>, Vec<i64>) {
+        let t = self.topo;
+        let mut h = vec![0i64; t.n_hidden];
+        for (n, hn) in h.iter_mut().enumerate() {
+            let mut acc = self.b1[n];
+            for (j, &xj) in x.iter().enumerate() {
+                acc += self.w1[n * t.n_in + j] as i64 * xj as i64;
+            }
+            *hn = acc.max(0); // full-precision Relu
+        }
+        let mut z = vec![0i64; t.n_out];
+        for (m, zm) in z.iter_mut().enumerate() {
+            let mut acc = self.b2[m];
+            for (n, &hn) in h.iter().enumerate() {
+                acc += self.w2[m * t.n_hidden + n] as i64 * hn;
+            }
+            *zm = acc;
+        }
+        (h, z)
+    }
+
+    pub fn predict(&self, x: &[u32]) -> usize {
+        crate::model::quantized::argmax_i(&self.forward(x).1)
+    }
+
+    pub fn accuracy(&self, ds: &QuantDataset) -> f64 {
+        if ds.y.is_empty() {
+            return 0.0;
+        }
+        let ok = ds.x.iter().zip(&ds.y).filter(|(x, &y)| self.predict(x) == y).count();
+        ok as f64 / ds.y.len() as f64
+    }
+
+    /// Worst-case hidden activation magnitude (determines bus widths).
+    pub fn hidden_max(&self) -> u64 {
+        let t = self.topo;
+        let amax = ((1u32 << INPUT_BITS) - 1) as i64;
+        (0..t.n_hidden)
+            .map(|n| {
+                let mut pos = self.b1[n].max(0);
+                for j in 0..t.n_in {
+                    let w = self.w1[n * t.n_in + j] as i64;
+                    if w > 0 {
+                        pos += w * amax;
+                    }
+                }
+                pos as u64
+            })
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// Build the bespoke gate-level circuit of the baseline.
+    ///
+    /// Weight magnitudes instantiate shift-add constant multipliers, the
+    /// products accumulate in pos/neg carry-save trees, hidden Relu is a
+    /// sign-controlled AND mask, and the output is an exact argmax tree
+    /// (or the raw logits in [`ArgmaxMode::Raw`]).
+    pub fn build_circuit(&self, argmax: ArgmaxMode) -> Netlist {
+        let t = self.topo;
+        let mut nl = Netlist::new();
+        let x: Vec<Bus> = (0..t.n_in).map(|_| nl.input_bus(INPUT_BITS)).collect();
+
+        // Hidden layer.
+        let hwidth = bits_for(self.hidden_max());
+        let mut h: Vec<Bus> = Vec::with_capacity(t.n_hidden);
+        for n in 0..t.n_hidden {
+            let z = self.neuron_bus(&mut nl, &x, &self.w1, self.b1[n], n, t.n_in);
+            // Relu: AND every magnitude bit with ~sign.
+            let sign = *z.last().unwrap();
+            let not_sign = nl.not(sign);
+            let relu: Bus =
+                z[..z.len() - 1].iter().map(|&bit| nl.and(not_sign, bit)).collect();
+            h.push(resize(&mut nl, &relu, hwidth));
+        }
+
+        // Output layer.
+        let mut z2: Vec<Bus> = Vec::with_capacity(t.n_out);
+        let mut zwidth = 2;
+        for m in 0..t.n_out {
+            let z = self.neuron_bus(&mut nl, &h, &self.w2, self.b2[m], m, t.n_hidden);
+            zwidth = zwidth.max(z.len() as u32);
+            z2.push(z);
+        }
+        let z2: Vec<Bus> = z2.iter().map(|z| sign_extend(&mut nl, z, zwidth)).collect();
+
+        match argmax {
+            ArgmaxMode::Raw => {
+                for (m, z) in z2.iter().enumerate() {
+                    nl.output(&format!("z{m}"), z.clone());
+                }
+            }
+            _ => {
+                let plan = crate::argmax::ArgmaxPlan::exact(t.n_out, zwidth);
+                let class = exact_argmax_tree(&mut nl, &z2, &plan);
+                nl.output("class", class);
+            }
+        }
+        nl
+    }
+
+    /// One baseline neuron: constant multipliers + pos/neg trees + sub.
+    fn neuron_bus(
+        &self,
+        nl: &mut Netlist,
+        inputs: &[Bus],
+        w: &[i32],
+        bias: i64,
+        n: usize,
+        n_in: usize,
+    ) -> Bus {
+        let mut pos: Vec<Bus> = Vec::new();
+        let mut neg: Vec<Bus> = Vec::new();
+        for (j, input) in inputs.iter().enumerate() {
+            let wv = w[n * n_in + j];
+            if wv == 0 {
+                continue;
+            }
+            let product = const_mul(nl, input, wv.unsigned_abs() as u64);
+            if wv > 0 {
+                pos.push(product);
+            } else {
+                neg.push(product);
+            }
+        }
+        if bias != 0 {
+            let mag = bias.unsigned_abs();
+            let bus = crate::netlist::build::const_bus(nl, mag, bits_for(mag));
+            if bias > 0 {
+                pos.push(bus);
+            } else {
+                neg.push(bus);
+            }
+        }
+        let psum = csa_tree(nl, &pos);
+        let nsum = csa_tree(nl, &neg);
+        let w = psum.len().max(nsum.len()) as u32;
+        let psum = resize(nl, &psum, w);
+        let nsum = resize(nl, &nsum, w);
+        subtractor(nl, &psum, &nsum)
+    }
+}
+
+/// Exact/approximate argmax comparator tree over raw logits buses
+/// (shared by the baseline generators).
+pub fn exact_argmax_tree(
+    nl: &mut Netlist,
+    z: &[Bus],
+    plan: &crate::argmax::ArgmaxPlan,
+) -> Bus {
+    use crate::netlist::build::{bias_signed, const_bus, masked_gt, mux_bus};
+    let idx_width = bits_for((z.len().max(2) - 1) as u64);
+    let mut slots: Vec<(Bus, Bus)> = z
+        .iter()
+        .enumerate()
+        .map(|(i, bus)| {
+            let biased = bias_signed(nl, bus);
+            (biased, const_bus(nl, i as u64, idx_width))
+        })
+        .collect();
+    for stage in &plan.stages {
+        let mut used = vec![false; slots.len()];
+        let mut next = Vec::with_capacity(stage.len() + 1);
+        for cmp in stage {
+            let (va, ia) = slots[cmp.a].clone();
+            let (vb, ib) = slots[cmp.b].clone();
+            used[cmp.a] = true;
+            used[cmp.b] = true;
+            let sel = masked_gt(nl, &va, &vb, cmp.mask);
+            next.push((mux_bus(nl, sel, &va, &vb), mux_bus(nl, sel, &ia, &ib)));
+        }
+        for (k, s) in slots.iter().enumerate() {
+            if !used[k] {
+                next.push(s.clone());
+            }
+        }
+        slots = next;
+    }
+    slots[0].1.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::datasets;
+    use crate::model::float_mlp::TrainOpts;
+    use crate::sim::{bus_to_i64, bus_to_u64, eval, u64_to_bits};
+    use crate::synth::optimize;
+
+    fn trained() -> (Int8Mlp, crate::datasets::QuantDataset) {
+        let cfg = builtin::tiny();
+        let (split, qtrain, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 25, ..Default::default() });
+        (Int8Mlp::from_float(&mlp), qtrain)
+    }
+
+    #[test]
+    fn baseline_keeps_float_accuracy() {
+        let cfg = builtin::tiny();
+        let (split, _, qtest) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 25, ..Default::default() });
+        let float_acc = mlp.accuracy(&split.test, false);
+        let int8 = Int8Mlp::from_float(&mlp);
+        let int_acc = int8.accuracy(&qtest);
+        assert!(
+            int_acc > float_acc - 0.08,
+            "8-bit baseline collapsed: {int_acc} vs {float_acc}"
+        );
+    }
+
+    #[test]
+    fn circuit_matches_model_raw() {
+        let (int8, qtrain) = trained();
+        let nl = int8.build_circuit(ArgmaxMode::Raw);
+        let (opt, _) = optimize(&nl);
+        for row in qtrain.x.iter().take(25) {
+            let (_, z) = int8.forward(row);
+            let mut bits = Vec::new();
+            for &xi in row {
+                bits.extend(u64_to_bits(xi as u64, INPUT_BITS));
+            }
+            let out = eval(&opt, &bits);
+            for (m, &zm) in z.iter().enumerate() {
+                assert_eq!(bus_to_i64(&out[&format!("z{m}")]), zm, "neuron {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn circuit_matches_model_class() {
+        let (int8, qtrain) = trained();
+        let nl = int8.build_circuit(ArgmaxMode::Exact);
+        let (opt, _) = optimize(&nl);
+        for row in qtrain.x.iter().take(25) {
+            let expect = int8.predict(row);
+            let mut bits = Vec::new();
+            for &xi in row {
+                bits.extend(u64_to_bits(xi as u64, INPUT_BITS));
+            }
+            let out = eval(&opt, &bits);
+            assert_eq!(bus_to_u64(&out["class"]) as usize, expect);
+        }
+    }
+
+    #[test]
+    fn baseline_is_much_larger_than_po2() {
+        // Table III's story: po2 + QRelu cuts the baseline area by
+        // 2.5-5x. Check the direction on the tiny config.
+        let cfg = builtin::tiny();
+        let (split, qtrain, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 25, ..Default::default() });
+        let int8 = Int8Mlp::from_float(&mlp);
+        let (base_nl, _) = optimize(&int8.build_circuit(ArgmaxMode::Exact));
+        let qmlp = crate::model::QuantMlp::from_float(&mlp, &qtrain);
+        let po2_nl = crate::netlist::mlp::build_mlp_circuit(
+            &qmlp,
+            &crate::netlist::mlp::MlpCircuitOpts::default(),
+        );
+        let (po2_opt, _) = optimize(&po2_nl);
+        assert!(
+            base_nl.cell_count() as f64 > 1.5 * po2_opt.cell_count() as f64,
+            "baseline {} vs po2 {}",
+            base_nl.cell_count(),
+            po2_opt.cell_count()
+        );
+    }
+
+    #[test]
+    fn quantize_w8_range() {
+        let w = vec![vec![0.5, -1.0, 0.124], vec![0.0, 2.0, -0.3]];
+        let (q, scale) = quantize_w8(&w);
+        assert!(q.iter().all(|&v| (-127..=127).contains(&v)));
+        // Max magnitude must map near the top of the range.
+        let maxq = q.iter().map(|v| v.abs()).max().unwrap();
+        assert!(maxq >= 64, "scale wastes range: maxq={maxq} scale={scale}");
+    }
+}

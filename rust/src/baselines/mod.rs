@@ -1,0 +1,21 @@
+//! The comparison systems of the paper's evaluation (Table I / Fig. 5):
+//!
+//! * [`exact`] — the exact bespoke baseline of Mubarik et al. [8]:
+//!   8-bit fixed-point weights, 4-bit inputs, real multipliers,
+//!   full-precision Relu. Every number in the paper is normalized
+//!   against this design.
+//! * [`truncation`] — Armeniakos et al. [7]: multiplier approximation
+//!   (hardware-friendly weight replacement) plus *coarse-grain* LSB
+//!   truncation of the accumulators.
+//! * [`prune`] — Armeniakos et al. [10]: model-to-circuit
+//!   cross-approximation — multiplier approximation plus gate-level
+//!   pruning of near-constant gates (with a voltage-overscaling power
+//!   bonus).
+//! * [`crate::sc`] — Weller et al. [14]: stochastic-computing MLP with
+//!   1024-bit bitstreams.
+
+pub mod exact;
+pub mod truncation;
+pub mod prune;
+
+pub use exact::Int8Mlp;

@@ -1,0 +1,300 @@
+//! The [7] baseline (Armeniakos et al., IEEE TC 2023): co-designed
+//! approximate MLPs with (a) *multiplier approximation* — weights are
+//! replaced by hardware-friendly values whose bespoke multipliers are
+//! cheap (we round each 8-bit magnitude to its nearest ≤2-set-bit
+//! value), and (b) *coarse-grain truncation* of the accumulators — the
+//! bottom `T` columns of every adder tree are dropped wholesale (the
+//! paper contrasts this coarse approach with our per-bit removal:
+//! "[7] applied only coarse-grain truncation on the accumulators,
+//! limiting thus the potential gains").
+//!
+//! The sweep over `T` produces this baseline's accuracy/area trade-off
+//! curve for Fig. 5.
+
+use crate::baselines::exact::{exact_argmax_tree, Int8Mlp};
+use crate::datasets::QuantDataset;
+use crate::fixedpoint::bits_for;
+use crate::model::quantized::argmax_i;
+use crate::netlist::build::{const_bus, const_mul, csa_tree, resize, sign_extend, shl, subtractor};
+use crate::netlist::mlp::ArgmaxMode;
+use crate::netlist::{Bus, Netlist};
+
+/// Round an 8-bit magnitude to the nearest value with at most two set
+/// bits (the class of cheap bespoke multipliers [7] retains).
+pub fn round_to_2set_bits(v: u32) -> u32 {
+    if v.count_ones() <= 2 {
+        return v;
+    }
+    let mut best = 0u32;
+    let mut best_err = i64::MAX;
+    for hi in 0..12u32 {
+        // single power
+        let c = 1u32 << hi;
+        let err = (c as i64 - v as i64).abs();
+        if err < best_err {
+            best_err = err;
+            best = c;
+        }
+        for lo in 0..hi {
+            let c = (1u32 << hi) | (1u32 << lo);
+            let err = (c as i64 - v as i64).abs();
+            if err < best_err {
+                best_err = err;
+                best = c;
+            }
+        }
+    }
+    best
+}
+
+/// The [7]-style approximate MLP: 8-bit weights rounded to ≤2-set-bit
+/// magnitudes + accumulator truncation depth `t1`/`t2` per layer.
+#[derive(Clone, Debug)]
+pub struct TruncMlp {
+    pub base: Int8Mlp,
+    /// Truncated LSB columns of the hidden-layer accumulators.
+    pub t1: u32,
+    /// Truncated LSB columns of the output-layer accumulators.
+    pub t2: u32,
+}
+
+impl TruncMlp {
+    /// Apply the multiplier approximation to an [`Int8Mlp`] and set the
+    /// truncation depths.
+    pub fn new(mut base: Int8Mlp, t1: u32, t2: u32) -> TruncMlp {
+        for w in base.w1.iter_mut().chain(base.w2.iter_mut()) {
+            let mag = round_to_2set_bits(w.unsigned_abs());
+            *w = if *w < 0 { -(mag as i32) } else { mag as i32 };
+        }
+        TruncMlp { base, t1, t2 }
+    }
+
+    /// Integer forward with truncated accumulation: every summand drops
+    /// its bottom `t` bits (coarse column truncation).
+    pub fn forward(&self, x: &[u32]) -> Vec<i64> {
+        let t = self.base.topo;
+        let m1 = !0i64 << self.t1;
+        let m2 = !0i64 << self.t2;
+        // Truncation acts on magnitudes (the circuit zeroes the bottom
+        // columns of each unsigned summand before the pos/neg trees).
+        let trunc = |v: i64, m: i64| if v >= 0 { v & m } else { -((-v) & m) };
+        let mut h = vec![0i64; t.n_hidden];
+        for (n, hn) in h.iter_mut().enumerate() {
+            let mut acc = trunc(self.base.b1[n], m1);
+            for (j, &xj) in x.iter().enumerate() {
+                let p = self.base.w1[n * t.n_in + j] as i64 * xj as i64;
+                // Truncate the product magnitude's low columns.
+                acc += trunc(p, m1);
+            }
+            *hn = acc.max(0);
+        }
+        let mut z = vec![0i64; t.n_out];
+        for (m, zm) in z.iter_mut().enumerate() {
+            let mut acc = trunc(self.base.b2[m], m2);
+            for (n, &hn) in h.iter().enumerate() {
+                let p = self.base.w2[m * t.n_hidden + n] as i64 * hn;
+                acc += trunc(p, m2);
+            }
+            *zm = acc;
+        }
+        z
+    }
+
+    pub fn predict(&self, x: &[u32]) -> usize {
+        argmax_i(&self.forward(x))
+    }
+
+    pub fn accuracy(&self, ds: &QuantDataset) -> f64 {
+        if ds.y.is_empty() {
+            return 0.0;
+        }
+        let ok = ds.x.iter().zip(&ds.y).filter(|(x, &y)| self.predict(x) == y).count();
+        ok as f64 / ds.y.len() as f64
+    }
+
+    /// Bespoke circuit: cheap 2-set-bit multipliers; truncated columns
+    /// become constant zeros for synthesis to sweep.
+    pub fn build_circuit(&self, argmax: ArgmaxMode) -> Netlist {
+        let t = self.base.topo;
+        let mut nl = Netlist::new();
+        let x: Vec<Bus> =
+            (0..t.n_in).map(|_| nl.input_bus(crate::fixedpoint::INPUT_BITS)).collect();
+        let hwidth = bits_for(self.base.hidden_max());
+        let mut h: Vec<Bus> = Vec::with_capacity(t.n_hidden);
+        for n in 0..t.n_hidden {
+            let z = self.neuron_bus(&mut nl, &x, true, n);
+            let sign = *z.last().unwrap();
+            let not_sign = nl.not(sign);
+            let relu: Bus =
+                z[..z.len() - 1].iter().map(|&b| nl.and(not_sign, b)).collect();
+            h.push(resize(&mut nl, &relu, hwidth));
+        }
+        let mut z2: Vec<Bus> = Vec::new();
+        let mut zwidth = 2;
+        for m in 0..t.n_out {
+            let z = self.neuron_bus(&mut nl, &h, false, m);
+            zwidth = zwidth.max(z.len() as u32);
+            z2.push(z);
+        }
+        let z2: Vec<Bus> = z2.iter().map(|z| sign_extend(&mut nl, z, zwidth)).collect();
+        match argmax {
+            ArgmaxMode::Raw => {
+                for (m, z) in z2.iter().enumerate() {
+                    nl.output(&format!("z{m}"), z.clone());
+                }
+            }
+            _ => {
+                let plan = crate::argmax::ArgmaxPlan::exact(t.n_out, zwidth);
+                let class = exact_argmax_tree(&mut nl, &z2, &plan);
+                nl.output("class", class);
+            }
+        }
+        nl
+    }
+
+    fn neuron_bus(&self, nl: &mut Netlist, inputs: &[Bus], layer1: bool, n: usize) -> Bus {
+        let t = self.base.topo;
+        let (w, bias, n_in, trunc) = if layer1 {
+            (&self.base.w1, self.base.b1[n], t.n_in, self.t1)
+        } else {
+            (&self.base.w2, self.base.b2[n], t.n_hidden, self.t2)
+        };
+        let mut pos: Vec<Bus> = Vec::new();
+        let mut neg: Vec<Bus> = Vec::new();
+        let mut push = |nl: &mut Netlist, bus: Bus, positive: bool| {
+            // Coarse truncation: zero the bottom `trunc` columns.
+            let mut tb = bus;
+            for b in tb.iter_mut().take(trunc as usize) {
+                *b = nl.constant(false);
+            }
+            if positive {
+                pos.push(tb);
+            } else {
+                neg.push(tb);
+            }
+        };
+        for (j, input) in inputs.iter().enumerate() {
+            let wv = w[n * n_in + j];
+            if wv == 0 {
+                continue;
+            }
+            // ≤2-set-bit magnitude -> at most one adder per product.
+            let mag = wv.unsigned_abs() as u64;
+            let product = if mag.count_ones() == 1 {
+                shl(nl, input, mag.trailing_zeros())
+            } else {
+                const_mul(nl, input, mag)
+            };
+            push(nl, product, wv > 0);
+        }
+        if bias != 0 {
+            let magb = bias.unsigned_abs();
+            let bus = const_bus(nl, magb, bits_for(magb));
+            push(nl, bus, bias > 0);
+        }
+        let psum = csa_tree(nl, &pos);
+        let nsum = csa_tree(nl, &neg);
+        let w = psum.len().max(nsum.len()) as u32;
+        let psum = resize(nl, &psum, w);
+        let nsum = resize(nl, &nsum, w);
+        subtractor(nl, &psum, &nsum)
+    }
+}
+
+/// Sweep truncation depths and return `(t1, t2, accuracy)` candidates
+/// sorted by aggressiveness — the baseline's design space for Fig. 5.
+pub fn sweep(base: &Int8Mlp, ds: &QuantDataset, max_t: u32) -> Vec<(u32, u32, f64)> {
+    let mut out = Vec::new();
+    for t1 in 0..=max_t {
+        for t2 in 0..=max_t {
+            let m = TruncMlp::new(base.clone(), t1, t2);
+            out.push((t1, t2, m.accuracy(ds)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::datasets;
+    use crate::model::float_mlp::TrainOpts;
+    use crate::model::FloatMlp;
+    use crate::sim::{bus_to_i64, eval, u64_to_bits};
+    use crate::synth::optimize;
+
+    fn trained() -> (Int8Mlp, crate::datasets::QuantDataset) {
+        let cfg = builtin::tiny();
+        let (split, qtrain, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 25, ..Default::default() });
+        (Int8Mlp::from_float(&mlp), qtrain)
+    }
+
+    #[test]
+    fn round_to_2set_bits_cases() {
+        assert_eq!(round_to_2set_bits(0), 0);
+        assert_eq!(round_to_2set_bits(5), 5); // 101 already 2 bits
+        assert_eq!(round_to_2set_bits(7), 6); // 111 -> 110 (or 1000; 6 closer)
+        assert_eq!(round_to_2set_bits(127), 128); // 1111111 -> 10000000
+        assert_eq!(round_to_2set_bits(100), 96); // 1100100 -> 1100000
+        for v in 0..=255u32 {
+            assert!(round_to_2set_bits(v).count_ones() <= 2);
+        }
+    }
+
+    #[test]
+    fn zero_truncation_close_to_base() {
+        let (base, qtrain) = trained();
+        let t = TruncMlp::new(base.clone(), 0, 0);
+        // Only the weight rounding differs; accuracy should stay close.
+        let a_base = base.accuracy(&qtrain);
+        let a_t = t.accuracy(&qtrain);
+        assert!(a_t > a_base - 0.15, "rounding destroyed accuracy: {a_t} vs {a_base}");
+    }
+
+    #[test]
+    fn deeper_truncation_smaller_circuit() {
+        let (base, _) = trained();
+        let shallow = TruncMlp::new(base.clone(), 0, 0);
+        let deep = TruncMlp::new(base, 4, 4);
+        let (s, _) = optimize(&shallow.build_circuit(ArgmaxMode::Exact));
+        let (d, _) = optimize(&deep.build_circuit(ArgmaxMode::Exact));
+        assert!(
+            d.cell_count() < s.cell_count(),
+            "deep {} !< shallow {}",
+            d.cell_count(),
+            s.cell_count()
+        );
+    }
+
+    #[test]
+    fn circuit_matches_model() {
+        let (base, qtrain) = trained();
+        let t = TruncMlp::new(base, 2, 1);
+        let nl = t.build_circuit(ArgmaxMode::Raw);
+        let (opt, _) = optimize(&nl);
+        for row in qtrain.x.iter().take(20) {
+            let z = t.forward(row);
+            let mut bits = Vec::new();
+            for &xi in row {
+                bits.extend(u64_to_bits(xi as u64, 4));
+            }
+            let out = eval(&opt, &bits);
+            for (m, &zm) in z.iter().enumerate() {
+                assert_eq!(bus_to_i64(&out[&format!("z{m}")]), zm, "neuron {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_accuracy_trends_down() {
+        let (base, qtrain) = trained();
+        let sw = sweep(&base, &qtrain, 3);
+        let a00 = sw.iter().find(|&&(a, b, _)| a == 0 && b == 0).unwrap().2;
+        let a33 = sw.iter().find(|&&(a, b, _)| a == 3 && b == 3).unwrap().2;
+        assert!(a33 <= a00 + 0.05, "truncation should not help: {a33} vs {a00}");
+        assert_eq!(sw.len(), 16);
+    }
+}

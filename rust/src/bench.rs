@@ -1,0 +1,549 @@
+//! Experiment harnesses: one function per table/figure of the paper's
+//! evaluation section, shared by the `pmlp repro` CLI and the
+//! `benches/*.rs` targets (criterion is not vendored; benches are
+//! `harness = false` binaries that call into this module and self-time).
+//!
+//! Every harness prints the same rows the paper reports, next to the
+//! paper's reference numbers where they exist, so shape comparisons are
+//! immediate (EXPERIMENTS.md records paper-vs-measured for each).
+
+use crate::accum::GenomeMap;
+use crate::area::AreaModel;
+use crate::baselines::exact::Int8Mlp;
+use crate::baselines::prune;
+use crate::baselines::truncation::TruncMlp;
+use crate::config::{builtin, RunConfig};
+use crate::coordinator::{EvalBackend, Pipeline, PipelineOpts, PipelineResult};
+use crate::datasets;
+use crate::egfet::{analyze, Library};
+use crate::model::QuantMlp;
+use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
+use crate::report::render_table;
+use crate::sc::ScMlp;
+use crate::synth::optimize;
+use crate::train;
+use crate::util::stats::{mean, spearman};
+use crate::util::{threads, Rng};
+use std::collections::HashMap;
+
+/// Experiment scale: how close to the paper's settings a run is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized (tiny dataset only, minimal GA) — seconds.
+    Smoke,
+    /// All six MLPs with a scaled-down GA — minutes. The default.
+    Small,
+    /// The paper's settings (population 1000, 30 generations).
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_lowercase().as_str() {
+            "smoke" => Some(Scale::Smoke),
+            "small" => Some(Scale::Small),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    pub fn dataset_names(self) -> Vec<&'static str> {
+        match self {
+            Scale::Smoke => vec!["tiny"],
+            _ => builtin::paper_names(),
+        }
+    }
+
+    fn ga_population(self) -> usize {
+        match self {
+            Scale::Smoke => 24,
+            Scale::Small => 120,
+            Scale::Paper => 1000,
+        }
+    }
+
+    fn ga_generations(self) -> usize {
+        match self {
+            Scale::Smoke => 3,
+            Scale::Small => 16,
+            Scale::Paper => 30,
+        }
+    }
+
+    fn table2_chromosomes(self) -> usize {
+        match self {
+            Scale::Smoke => 24,
+            Scale::Small => 150,
+            Scale::Paper => 1000,
+        }
+    }
+}
+
+/// Paper reference numbers (Table III) for side-by-side printing.
+fn paper_table3(name: &str) -> Option<(f64, f64, f64, f64, f64, f64)> {
+    // (base_acc, base_area, base_power, qat_acc, qat_area, qat_power)
+    match name {
+        "arrhythmia" => Some((0.620, 266.0, 998.0, 0.610, 92.5, 258.0)),
+        "breastcancer" => Some((0.980, 12.0, 40.0, 0.965, 4.6, 16.6)),
+        "cardio" => Some((0.881, 33.4, 124.0, 0.884, 8.8, 34.1)),
+        "pendigits" => Some((0.937, 67.0, 213.0, 0.893, 19.5, 77.3)),
+        "redwine" => Some((0.564, 17.6, 73.5, 0.568, 3.4, 13.7)),
+        "whitewine" => Some((0.537, 31.2, 126.0, 0.524, 8.1, 31.3)),
+        _ => None,
+    }
+}
+
+/// A study caches pipeline results across experiments in one process.
+pub struct Study {
+    pub scale: Scale,
+    pub backend: EvalBackend,
+    results: HashMap<String, PipelineResult>,
+}
+
+impl Study {
+    pub fn new(scale: Scale, backend: EvalBackend) -> Study {
+        Study { scale, backend, results: HashMap::new() }
+    }
+
+    /// Scaled run config for a dataset.
+    pub fn cfg(&self, name: &str) -> RunConfig {
+        let mut cfg = builtin::by_name(name).expect("unknown dataset");
+        cfg.ga.population = self.scale.ga_population();
+        cfg.ga.generations = self.scale.ga_generations();
+        cfg
+    }
+
+    /// Run (or fetch) the full pipeline for a dataset.
+    pub fn pipeline(&mut self, name: &str) -> &PipelineResult {
+        if !self.results.contains_key(name) {
+            let cfg = self.cfg(name);
+            let opts = PipelineOpts {
+                backend: self.backend,
+                max_hw_points: 4,
+                synth_baseline: true,
+                approx_argmax: true,
+                verbose: std::env::var("PMLP_VERBOSE").is_ok(),
+            };
+            let result = Pipeline::new(cfg, opts).run().expect("pipeline");
+            self.results.insert(name.to_string(), result);
+        }
+        &self.results[name]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table II — Spearman rank correlation of the area surrogate
+// ---------------------------------------------------------------------------
+
+/// Regenerate Table II: FA-count estimate vs synthesized area over N
+/// random chromosomes per MLP. The paper reports ≥0.96 per dataset.
+pub fn table2(scale: Scale) -> String {
+    let mut rows = Vec::new();
+    let mut all_corr = Vec::new();
+    for name in scale.dataset_names() {
+        let cfg = builtin::by_name(name).unwrap();
+        let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+        let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
+        let qmlp = &tm.qmlp;
+        let map = GenomeMap::new(qmlp);
+        let area_model = AreaModel::new(&map);
+        let n = scale.table2_chromosomes();
+        let mut rng = Rng::new(0xA0EA ^ cfg.dataset.seed);
+        let genomes: Vec<_> = (0..n)
+            .map(|_| {
+                let keep = 0.35 + 0.6 * rng.f64();
+                map.random_genome(&mut rng, keep)
+            })
+            .collect();
+        // Estimate + synthesize in parallel.
+        let qmlp_ref = &qmlp;
+        let map_ref = &map;
+        let pairs = threads::par_map(n, threads::default_threads(), |i| {
+            let est = area_model.estimate(&genomes[i]) as f64;
+            let masks = map_ref.to_masks(&genomes[i]);
+            let nl = build_mlp_circuit(
+                qmlp_ref,
+                &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Raw },
+            );
+            let (opt, _) = optimize(&nl);
+            let hw = analyze(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+            (est, hw.area_cm2)
+        });
+        let ests: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        let areas: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+        let corr = spearman(&ests, &areas);
+        all_corr.push(corr);
+        rows.push(vec![
+            name.to_string(),
+            format!("{corr:.3}"),
+            "0.96-0.99".to_string(),
+            format!("{n}"),
+        ]);
+    }
+    rows.push(vec![
+        "AVERAGE".to_string(),
+        format!("{:.3}", mean(&all_corr)),
+        "0.97".to_string(),
+        String::new(),
+    ]);
+    render_table(
+        "Table II — Spearman rank correlation of the area surrogate",
+        &["dataset", "spearman (ours)", "paper", "designs"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table III — baseline vs QAT-only
+// ---------------------------------------------------------------------------
+
+/// Regenerate Table III: exact bespoke baseline [8] vs power-of-2 +
+/// QRelu (QAT only), accuracy / area / power per MLP.
+pub fn table3(study: &mut Study) -> String {
+    let mut rows = Vec::new();
+    for name in study.scale.dataset_names() {
+        let r = study.pipeline(name);
+        let base_hw = r.baseline_hw.as_ref().expect("baseline synthesized");
+        let paper = paper_table3(name);
+        let paper_cell = |f: fn((f64, f64, f64, f64, f64, f64)) -> f64| -> String {
+            paper.map(|p| format!("{:.3}", f(p))).unwrap_or_default()
+        };
+        rows.push(vec![
+            name.to_string(),
+            format!(
+                "({},{},{})",
+                r.cfg.topology.n_in, r.cfg.topology.n_hidden, r.cfg.topology.n_out
+            ),
+            format!("{:.3}", r.baseline_acc_test),
+            paper_cell(|p| p.0),
+            format!("{:.1}", base_hw.area_cm2),
+            paper_cell(|p| p.1),
+            format!("{:.0}", base_hw.power_mw),
+            paper_cell(|p| p.2),
+            format!("{:.3}", r.trained.acc_q_test),
+            paper_cell(|p| p.3),
+            format!("{:.2}", r.qat_hw.area_cm2),
+            paper_cell(|p| p.4),
+            format!("{:.1}", r.qat_hw.power_mw),
+            paper_cell(|p| p.5),
+        ]);
+    }
+    render_table(
+        "Table III — baseline [8] vs QAT-only (po2 + QRelu)",
+        &[
+            "dataset", "topology", "acc", "(paper)", "area cm2", "(paper)", "power mW",
+            "(paper)", "QAT acc", "(paper)", "QAT area", "(paper)", "QAT mW", "(paper)",
+        ],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — accumulation-approximation Pareto fronts
+// ---------------------------------------------------------------------------
+
+/// Regenerate Fig. 4: Pareto points (accuracy loss vs area normalized to
+/// the QAT-only design), up to 5% loss. The paper reports ~2.4x average
+/// area reduction at <2% extra loss.
+pub fn fig4(study: &mut Study) -> String {
+    let mut out = String::new();
+    let mut avg_red_2pct = Vec::new();
+    for name in study.scale.dataset_names() {
+        let r = study.pipeline(name);
+        let qat_area = r.qat_hw.area_cm2;
+        let qat_acc = r.trained.acc_q_test;
+        let mut rows = Vec::new();
+        for d in &r.designs {
+            let loss = qat_acc - d.acc_test_accum;
+            if loss > 0.05 {
+                continue;
+            }
+            let norm = d.hw_exact_argmax.area_cm2 / qat_area;
+            // The exact-genome fallback (norm == 1) is not an
+            // approximated design; exclude it from the average.
+            if loss <= 0.02 && norm > 0.0 && norm < 0.999 {
+                avg_red_2pct.push(1.0 / norm);
+            }
+            rows.push(vec![
+                format!("{:.3}", d.acc_test_accum),
+                format!("{:+.3}", -loss),
+                format!("{:.3}", norm),
+                format!("{}", d.area_fa),
+            ]);
+        }
+        out.push_str(&render_table(
+            &format!("Fig. 4 [{name}] — accuracy vs area (normalized to QAT-only)"),
+            &["test acc", "Δacc vs QAT", "area/QAT", "FA est"],
+            &rows,
+        ));
+    }
+    if !avg_red_2pct.is_empty() {
+        out.push_str(&format!(
+            "\naverage area reduction at <=2% extra loss: {:.1}x (paper: ~2.4x avg, worst 1.3x)\n",
+            mean(&avg_red_2pct)
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table IV — Argmax approximation
+// ---------------------------------------------------------------------------
+
+/// Regenerate Table IV: impact of the approximate Argmax on the
+/// (QAT + approximate-accumulation) designs.
+pub fn table4(study: &mut Study) -> String {
+    let mut rows = Vec::new();
+    for name in study.scale.dataset_names() {
+        let r = study.pipeline(name);
+        let mut acc_losses = Vec::new();
+        let mut area_reds = Vec::new();
+        let mut cmp_reds = Vec::new();
+        for d in &r.designs {
+            acc_losses.push(d.acc_test_accum - d.acc_test_full);
+            if d.hw_exact_argmax.area_cm2 > 0.0 {
+                area_reds.push(1.0 - d.hw_full.area_cm2 / d.hw_exact_argmax.area_cm2);
+            }
+            cmp_reds.push(d.argmax_plan.comparator_stats().1);
+        }
+        rows.push(vec![
+            name.to_string(),
+            format!("{:+.3}", mean(&acc_losses)),
+            format!("{:.0}%", 100.0 * mean(&area_reds)),
+            format!("{:.1}x", mean(&cmp_reds)),
+        ]);
+    }
+    rows.push(vec![
+        "(paper avg)".to_string(),
+        "~0.001".to_string(),
+        "14%".to_string(),
+        "7.6x".to_string(),
+    ]);
+    render_table(
+        "Table IV — Argmax approximation (vs QAT + approx accumulation)",
+        &["dataset", "avg acc loss", "avg area reduction", "avg comparator size cut"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — comparison against the state of the art
+// ---------------------------------------------------------------------------
+
+/// Regenerate Fig. 5: area and power of ours vs [7] (truncation), [10]
+/// (pruning + VOS), [14] (stochastic), all normalized to the exact
+/// baseline [8], at <=5% accuracy loss.
+pub fn fig5(study: &mut Study) -> String {
+    let mut rows = Vec::new();
+    let names: Vec<&str> = study
+        .scale
+        .dataset_names()
+        .into_iter()
+        .filter(|n| *n != "arrhythmia") // the paper's SOTA rows exclude it
+        .collect();
+    for name in &names {
+        let scale = study.scale;
+        let r = study.pipeline(name);
+        let cfg = r.cfg.clone();
+        let base_hw = r.baseline_hw.clone().expect("baseline");
+        let base_acc = r.baseline_acc_test;
+        let float = r.trained.float.clone();
+        let ours = r.best_within_loss(0.05).map(|d| {
+            (d.hw_full.area_cm2 / base_hw.area_cm2, d.hw_full.power_mw / base_hw.power_mw)
+        });
+
+        // Rebuild the shared substrate for the baselines.
+        let (_, qtrain, qtest) = datasets::load(&cfg.dataset);
+        let int8 = Int8Mlp::from_float(&float);
+
+        // --- [7]: multiplier approx + coarse truncation sweep.
+        let mut best7: Option<(f64, f64)> = None;
+        for t in 0..8u32 {
+            let m = TruncMlp::new(int8.clone(), t, t);
+            if m.accuracy(&qtest) < base_acc - 0.05 {
+                continue;
+            }
+            let (opt, _) = optimize(&m.build_circuit(ArgmaxMode::Exact));
+            let hw = analyze(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+            let cand = (hw.area_cm2 / base_hw.area_cm2, hw.power_mw / base_hw.power_mw);
+            if best7.map(|b| cand.0 < b.0).unwrap_or(true) {
+                best7 = Some(cand);
+            }
+        }
+
+        // --- [10]: pruning sweep on the multiplier-approximated design
+        // (the paper's [10] rows skip Pendigits; so do we — gate-level
+        // simulation over its test set would dominate the harness).
+        let best10: Option<(f64, f64)> = if *name != "pendigits" && scale != Scale::Smoke {
+            let m = TruncMlp::new(int8.clone(), 1, 1);
+            let sweep = prune::run_sweep(&m, &qtrain, &[0.02, 0.08, 0.15]);
+            sweep
+                .iter()
+                .filter(|p| p.accuracy >= base_acc - 0.05)
+                .map(|p| {
+                    let hw = analyze(&p.netlist, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+                    (
+                        hw.area_cm2 / base_hw.area_cm2,
+                        hw.power_mw * prune::VOS_POWER_FACTOR / base_hw.power_mw,
+                    )
+                })
+                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        } else {
+            None
+        };
+
+        // --- [14]: stochastic computing.
+        let sc = ScMlp::from_float(&float, cfg.dataset.seed);
+        let sc_acc = sc.accuracy(&qtest, 150);
+        let sc_hw = sc.hardware(&Library::egfet_1v(), cfg.hw.clock_ms);
+        let sc_norm =
+            (sc_hw.area_cm2 / base_hw.area_cm2, sc_hw.power_mw / base_hw.power_mw);
+
+        let cell = |v: Option<(f64, f64)>| -> (String, String) {
+            match v {
+                Some((a, p)) => (format!("{a:.4}"), format!("{p:.4}")),
+                None => ("-".to_string(), "-".to_string()),
+            }
+        };
+        let (oa, op) = cell(ours);
+        let (a7, p7) = cell(best7);
+        let (a10, p10) = cell(best10);
+        rows.push(vec![
+            name.to_string(),
+            oa,
+            op,
+            a7,
+            p7,
+            a10,
+            p10,
+            format!("{:.4}", sc_norm.0),
+            format!("{:.4}", sc_norm.1),
+            format!("{sc_acc:.2}"),
+        ]);
+    }
+    let mut out = render_table(
+        "Fig. 5 — area/power normalized to the exact baseline [8] (<=5% acc loss)",
+        &[
+            "dataset", "ours A", "ours P", "[7] A", "[7] P", "[10] A", "[10] P",
+            "[14] A", "[14] P", "[14] acc",
+        ],
+        &rows,
+    );
+    out.push_str(
+        "\npaper: ours ~10x/12.5x better than [7], ~96x/86x than [10], ~9x/11x than [14];\n[14]'s accuracy collapses (paper: 35% avg loss).\n",
+    );
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table V — battery operation at 0.6 V
+// ---------------------------------------------------------------------------
+
+/// Regenerate Table V: the best <=5%-loss design per MLP at the 0.6 V
+/// corner, with area/power reductions vs the baseline and the printed
+/// power source able to drive it.
+pub fn table5(study: &mut Study) -> String {
+    let mut rows = Vec::new();
+    for name in study.scale.dataset_names() {
+        let r = study.pipeline(name);
+        let base_hw = r.baseline_hw.as_ref().expect("baseline");
+        // The paper's own Table V rows sit at up to ~5.2% loss
+        // (Arrhythmia: 0.588 vs baseline 0.620); designs between 5% and
+        // 8% are reported with a '*' rather than dropped.
+        let min_loss_design = r
+            .designs
+            .iter()
+            .filter(|d| d.area_fa > 0)
+            .max_by(|a, b| a.acc_test_full.partial_cmp(&b.acc_test_full).unwrap());
+        let (d, flag) = match r.best_within_loss(0.05) {
+            Some(d) => (d, ""),
+            None => match r.best_within_loss(0.08) {
+                Some(d) => (d, "*"),
+                // On substitutes whose QAT gap alone exceeds the budget
+                // (synthetic-arrhythmia artifact, see EXPERIMENTS.md),
+                // report the best approximated design transparently.
+                None => match min_loss_design {
+                    Some(d) => (d, "**"),
+                    None => {
+                        rows.push(vec![name.to_string(), "no design".to_string()]);
+                        continue;
+                    }
+                },
+            },
+        };
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}{flag}", d.acc_test_full),
+            format!("{:.3}", d.hw_0p6v.area_cm2),
+            format!("{:.3}", d.hw_0p6v.power_mw),
+            crate::report::factor(base_hw.area_cm2, d.hw_0p6v.area_cm2),
+            crate::report::factor(base_hw.power_mw, d.hw_0p6v.power_mw),
+            d.power_source.label().to_string(),
+            d.hw_0p6v.library.clone(),
+        ]);
+    }
+    let mut out = render_table(
+        "Table V — battery operation at 0.6 V (<=5% accuracy loss)",
+        &[
+            "dataset", "accuracy", "area cm2", "power mW", "area cut", "power cut",
+            "power source", "corner",
+        ],
+        &rows,
+    );
+    out.push_str("\n'*' = loss in (5%, 8%] of baseline; '**' = best approximated design (loss above 8%; the synthetic-dataset QAT gap exceeds the budget).\npaper: avg 151x area / 808x power vs [8]; Arrhythmia (1450 params) battery-powered -> 20x larger than SOTA's largest (72 params).\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Ablation — PJRT vs native evaluator (design-choice bench)
+// ---------------------------------------------------------------------------
+
+/// Throughput of the two GA evaluators on one dataset (chromosomes/s).
+pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
+    use crate::ga::Evaluator;
+    let cfg = builtin::by_name(name).expect("dataset");
+    let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+    let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
+    let qmlp: &QuantMlp = &tm.qmlp;
+    let base = tm.acc_q_train;
+    let native = crate::runtime::evaluator::NativeEvaluator::new(qmlp, &qtrain, base);
+    let mut rng = Rng::new(1);
+    let genomes: Vec<_> =
+        (0..n_genomes).map(|_| native.map.random_genome(&mut rng, 0.8)).collect();
+
+    let t0 = std::time::Instant::now();
+    let objs_native = native.evaluate(&genomes);
+    let native_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+
+    let mut rows = vec![vec![
+        "native".to_string(),
+        format!("{native_rate:.0}"),
+        format!("{}", objs_native.len()),
+    ]];
+
+    if let Ok(rt) = crate::runtime::Runtime::new(&crate::runtime::Runtime::default_dir()) {
+        if rt.manifest.entries.contains_key(name) {
+            if let Ok(pjrt) = crate::runtime::PjrtEvaluator::new(&rt, name, qmlp, &qtrain, base) {
+                // Warm up the executable cache before timing.
+                let _ = pjrt.evaluate(&genomes[..genomes.len().min(16)]);
+                let t0 = std::time::Instant::now();
+                let objs_pjrt = pjrt.evaluate(&genomes);
+                let rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+                let agree = objs_native
+                    .iter()
+                    .zip(&objs_pjrt)
+                    .all(|(a, b)| (a[0] - b[0]).abs() < 1e-9 && a[1] == b[1]);
+                rows.push(vec![
+                    "pjrt".to_string(),
+                    format!("{rate:.0}"),
+                    format!("bit-equal: {agree}"),
+                ]);
+            }
+        }
+    }
+    render_table(
+        &format!("Evaluator ablation [{name}] ({n_genomes} chromosomes)"),
+        &["backend", "chromosomes/s", "notes"],
+        &rows,
+    )
+}

@@ -1,0 +1,509 @@
+//! Configuration system.
+//!
+//! Every pipeline run is described by a [`RunConfig`]: dataset synthesis
+//! parameters, MLP topology, quantization, training hyper-parameters,
+//! genetic-optimization settings, and hardware constraints (clock period,
+//! supply voltage). Configs serialize to/from JSON (`configs/*.json`) and
+//! the six paper MLPs ship as built-ins ([`builtin`]).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Synthetic-dataset specification (see DESIGN.md §3 — substitutes the
+/// UCI datasets with generators matched in dimensionality, class
+/// structure and baseline accuracy).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub n_samples: usize,
+    /// Relative class frequencies (normalized internally).
+    pub class_weights: Vec<f64>,
+    /// Distance between class centroids in feature space, in units of the
+    /// per-cluster noise — the knob that sets achievable accuracy.
+    pub separation: f64,
+    /// Per-feature Gaussian noise std.
+    pub noise: f64,
+    /// Sub-clusters per class (multi-modal classes, as in Pendigits).
+    pub clusters_per_class: usize,
+    /// Fraction of features that carry no class signal (nuisance dims,
+    /// as in Arrhythmia's many near-constant channels).
+    pub nuisance_frac: f64,
+    pub seed: u64,
+}
+
+/// MLP topology `(n_in, n_hidden, n_out)` — single hidden layer, as all
+/// printed MLPs in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+}
+
+impl Topology {
+    pub fn new(n_in: usize, n_hidden: usize, n_out: usize) -> Self {
+        Topology { n_in, n_hidden, n_out }
+    }
+    /// Total weight count (the paper's "parameters" metric for Table V).
+    pub fn n_params(&self) -> usize {
+        self.n_in * self.n_hidden + self.n_hidden * self.n_out
+    }
+}
+
+/// Training hyper-parameters for the QAT phase (driven from Rust over the
+/// AOT `train_step` artifact).
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+/// Genetic-optimization settings (paper §III-D1: NSGA-II, population
+/// 1000, 30 generations, 15% accuracy-loss bound, init biased toward
+/// non-approximated bits).
+#[derive(Clone, Debug)]
+pub struct GaSpec {
+    pub population: usize,
+    pub generations: usize,
+    /// Per-bit flip probability during mutation.
+    pub mutation_rate: f64,
+    pub crossover_rate: f64,
+    /// Hard bound on accuracy loss vs the QAT model (paper: 15%).
+    pub acc_loss_bound: f64,
+    /// Probability that a bit starts as kept (=1) in the initial
+    /// population (biased toward exact, paper §III-D1).
+    pub init_keep_prob: f64,
+    pub seed: u64,
+}
+
+/// Hardware constraints for synthesis/analysis.
+#[derive(Clone, Debug)]
+pub struct HwSpec {
+    /// Target clock period in milliseconds (paper: 200 except Pendigits
+    /// 250 and Arrhythmia 320).
+    pub clock_ms: f64,
+    /// Supply voltage in volts (1.0 for the main evaluation, 0.6 for the
+    /// battery study of Table V).
+    pub vdd: f64,
+}
+
+/// A complete pipeline run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetSpec,
+    pub topology: Topology,
+    pub train: TrainSpec,
+    pub ga: GaSpec,
+    pub hw: HwSpec,
+}
+
+impl RunConfig {
+    // ----- JSON ----------------------------------------------------------
+    pub fn to_json(&self) -> Json {
+        let d = &self.dataset;
+        Json::obj(vec![
+            (
+                "dataset",
+                Json::obj(vec![
+                    ("name", Json::str(&d.name)),
+                    ("n_features", Json::num(d.n_features as f64)),
+                    ("n_classes", Json::num(d.n_classes as f64)),
+                    ("n_samples", Json::num(d.n_samples as f64)),
+                    (
+                        "class_weights",
+                        Json::arr(d.class_weights.iter().map(|&w| Json::num(w)).collect()),
+                    ),
+                    ("separation", Json::num(d.separation)),
+                    ("noise", Json::num(d.noise)),
+                    ("clusters_per_class", Json::num(d.clusters_per_class as f64)),
+                    ("nuisance_frac", Json::num(d.nuisance_frac)),
+                    ("seed", Json::num(d.seed as f64)),
+                ]),
+            ),
+            (
+                "topology",
+                Json::arr(vec![
+                    Json::num(self.topology.n_in as f64),
+                    Json::num(self.topology.n_hidden as f64),
+                    Json::num(self.topology.n_out as f64),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("epochs", Json::num(self.train.epochs as f64)),
+                    ("batch_size", Json::num(self.train.batch_size as f64)),
+                    ("lr", Json::num(self.train.lr)),
+                    ("seed", Json::num(self.train.seed as f64)),
+                ]),
+            ),
+            (
+                "ga",
+                Json::obj(vec![
+                    ("population", Json::num(self.ga.population as f64)),
+                    ("generations", Json::num(self.ga.generations as f64)),
+                    ("mutation_rate", Json::num(self.ga.mutation_rate)),
+                    ("crossover_rate", Json::num(self.ga.crossover_rate)),
+                    ("acc_loss_bound", Json::num(self.ga.acc_loss_bound)),
+                    ("init_keep_prob", Json::num(self.ga.init_keep_prob)),
+                    ("seed", Json::num(self.ga.seed as f64)),
+                ]),
+            ),
+            (
+                "hw",
+                Json::obj(vec![
+                    ("clock_ms", Json::num(self.hw.clock_ms)),
+                    ("vdd", Json::num(self.hw.vdd)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let d = j.get("dataset").ok_or_else(|| anyhow!("missing 'dataset'"))?;
+        let topo = j
+            .get("topology")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing 'topology'"))?;
+        if topo.len() != 3 {
+            return Err(anyhow!("topology must be [in, hidden, out]"));
+        }
+        let t = j.get("train").cloned().unwrap_or(Json::obj(vec![]));
+        let g = j.get("ga").cloned().unwrap_or(Json::obj(vec![]));
+        let h = j.get("hw").cloned().unwrap_or(Json::obj(vec![]));
+        let class_weights = d
+            .get("class_weights")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).collect())
+            .unwrap_or_default();
+        Ok(RunConfig {
+            dataset: DatasetSpec {
+                name: d.str_or("name", "unnamed").to_string(),
+                n_features: d.usize_or("n_features", 8),
+                n_classes: d.usize_or("n_classes", 2),
+                n_samples: d.usize_or("n_samples", 1000),
+                class_weights,
+                separation: d.f64_or("separation", 3.0),
+                noise: d.f64_or("noise", 0.12),
+                clusters_per_class: d.usize_or("clusters_per_class", 1),
+                nuisance_frac: d.f64_or("nuisance_frac", 0.0),
+                seed: d.usize_or("seed", 1) as u64,
+            },
+            topology: Topology::new(
+                topo[0].as_usize().unwrap_or(0),
+                topo[1].as_usize().unwrap_or(0),
+                topo[2].as_usize().unwrap_or(0),
+            ),
+            train: TrainSpec {
+                epochs: t.usize_or("epochs", 60),
+                batch_size: t.usize_or("batch_size", 64),
+                lr: t.f64_or("lr", 0.01),
+                seed: t.usize_or("seed", 7) as u64,
+            },
+            ga: GaSpec {
+                population: g.usize_or("population", 100),
+                generations: g.usize_or("generations", 10),
+                mutation_rate: g.f64_or("mutation_rate", 0.01),
+                crossover_rate: g.f64_or("crossover_rate", 0.9),
+                acc_loss_bound: g.f64_or("acc_loss_bound", 0.15),
+                init_keep_prob: g.f64_or("init_keep_prob", 0.9),
+                seed: g.usize_or("seed", 42) as u64,
+            },
+            hw: HwSpec { clock_ms: h.f64_or("clock_ms", 200.0), vdd: h.f64_or("vdd", 1.0) },
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        RunConfig::from_json(&j)
+    }
+}
+
+/// The six paper MLPs (+ a tiny CI config) as built-in run configs.
+pub mod builtin {
+    use super::*;
+
+    /// Look a built-in config up by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<RunConfig> {
+        let n = name.to_lowercase();
+        all().into_iter().find(|c| c.dataset.name.to_lowercase() == n)
+    }
+
+    /// Names of the six paper datasets in the paper's table order.
+    pub fn paper_names() -> Vec<&'static str> {
+        vec!["arrhythmia", "breastcancer", "cardio", "pendigits", "redwine", "whitewine"]
+    }
+
+    /// All built-in configs (six paper MLPs + `tiny`).
+    pub fn all() -> Vec<RunConfig> {
+        vec![
+            arrhythmia(),
+            breastcancer(),
+            cardio(),
+            pendigits(),
+            redwine(),
+            whitewine(),
+            tiny(),
+        ]
+    }
+
+    fn base_ga(seed: u64) -> GaSpec {
+        GaSpec {
+            population: 100,
+            generations: 12,
+            mutation_rate: 0.008,
+            crossover_rate: 0.9,
+            acc_loss_bound: 0.15,
+            init_keep_prob: 0.92,
+            seed,
+        }
+    }
+
+    fn base_train(seed: u64) -> TrainSpec {
+        TrainSpec { epochs: 80, batch_size: 64, lr: 0.02, seed }
+    }
+
+    /// Arrhythmia — (274, 5, 16), the paper's largest MLP (1,450 weights;
+    /// its battery-powered operation is the headline claim).
+    pub fn arrhythmia() -> RunConfig {
+        // UCI Arrhythmia: 452 samples, 16 highly imbalanced classes
+        // (class 1 = normal dominates), many uninformative channels.
+        let mut cw = vec![0.54, 0.10, 0.033, 0.033, 0.03, 0.055, 0.007, 0.005];
+        cw.extend(vec![0.02, 0.011, 0.0, 0.0, 0.002, 0.01, 0.05, 0.10]);
+        RunConfig {
+            dataset: DatasetSpec {
+                name: "arrhythmia".into(),
+                n_features: 274,
+                n_classes: 16,
+                n_samples: 452,
+                class_weights: cw,
+                separation: 5.8,
+                noise: 0.17,
+                clusters_per_class: 1,
+                // UCI Arrhythmia is dominated by near-constant /
+                // redundant channels: ~90% of its 274 features carry no
+                // class signal — which is exactly what makes the paper's
+                // deep accumulation pruning possible on this MLP.
+                nuisance_frac: 0.8,
+                seed: 101,
+            },
+            topology: Topology::new(274, 5, 16),
+            train: base_train(101),
+            ga: base_ga(101),
+            hw: HwSpec { clock_ms: 320.0, vdd: 1.0 },
+        }
+    }
+
+    /// Breast Cancer (Wisconsin original) — (10, 3, 2).
+    pub fn breastcancer() -> RunConfig {
+        RunConfig {
+            dataset: DatasetSpec {
+                name: "breastcancer".into(),
+                n_features: 10,
+                n_classes: 2,
+                n_samples: 699,
+                class_weights: vec![0.655, 0.345],
+                separation: 3.4,
+                noise: 0.16,
+                clusters_per_class: 1,
+                nuisance_frac: 0.0,
+                seed: 102,
+            },
+            topology: Topology::new(10, 3, 2),
+            train: base_train(102),
+            ga: base_ga(102),
+            hw: HwSpec { clock_ms: 200.0, vdd: 1.0 },
+        }
+    }
+
+    /// Cardiotocography — (21, 3, 3).
+    pub fn cardio() -> RunConfig {
+        RunConfig {
+            dataset: DatasetSpec {
+                name: "cardio".into(),
+                n_features: 21,
+                n_classes: 3,
+                n_samples: 2126,
+                class_weights: vec![0.78, 0.14, 0.08],
+                separation: 3.4,
+                noise: 0.15,
+                clusters_per_class: 2,
+                nuisance_frac: 0.2,
+                seed: 103,
+            },
+            topology: Topology::new(21, 3, 3),
+            train: base_train(103),
+            ga: base_ga(103),
+            hw: HwSpec { clock_ms: 200.0, vdd: 1.0 },
+        }
+    }
+
+    /// Pendigits — (16, 5, 10).
+    pub fn pendigits() -> RunConfig {
+        RunConfig {
+            dataset: DatasetSpec {
+                name: "pendigits".into(),
+                n_features: 16,
+                n_classes: 10,
+                n_samples: 7494,
+                class_weights: vec![0.1; 10],
+                separation: 4.6,
+                noise: 0.13,
+                clusters_per_class: 1,
+                nuisance_frac: 0.0,
+                seed: 104,
+            },
+            topology: Topology::new(16, 5, 10),
+            train: base_train(104),
+            ga: base_ga(104),
+            hw: HwSpec { clock_ms: 250.0, vdd: 1.0 },
+        }
+    }
+
+    /// Red Wine quality — (11, 2, 6). Low-separability regression-ish
+    /// labels; the paper's baseline accuracy is only 0.564.
+    pub fn redwine() -> RunConfig {
+        RunConfig {
+            dataset: DatasetSpec {
+                name: "redwine".into(),
+                n_features: 11,
+                n_classes: 6,
+                n_samples: 1599,
+                class_weights: vec![0.006, 0.033, 0.426, 0.399, 0.124, 0.012],
+                separation: 1.08,
+                noise: 0.16,
+                clusters_per_class: 1,
+                nuisance_frac: 0.2,
+                seed: 105,
+            },
+            topology: Topology::new(11, 2, 6),
+            train: base_train(105),
+            ga: base_ga(105),
+            hw: HwSpec { clock_ms: 200.0, vdd: 1.0 },
+        }
+    }
+
+    /// White Wine quality — (11, 4, 7).
+    pub fn whitewine() -> RunConfig {
+        RunConfig {
+            dataset: DatasetSpec {
+                name: "whitewine".into(),
+                n_features: 11,
+                n_classes: 7,
+                n_samples: 4898,
+                class_weights: vec![0.004, 0.033, 0.297, 0.449, 0.180, 0.036, 0.001],
+                separation: 0.92,
+                noise: 0.16,
+                clusters_per_class: 1,
+                nuisance_frac: 0.2,
+                seed: 106,
+            },
+            topology: Topology::new(11, 4, 7),
+            train: base_train(106),
+            ga: base_ga(106),
+            hw: HwSpec { clock_ms: 200.0, vdd: 1.0 },
+        }
+    }
+
+    /// Tiny config for CI, quickstart, and property tests.
+    pub fn tiny() -> RunConfig {
+        RunConfig {
+            dataset: DatasetSpec {
+                name: "tiny".into(),
+                n_features: 6,
+                n_classes: 3,
+                n_samples: 300,
+                class_weights: vec![0.4, 0.35, 0.25],
+                separation: 4.0,
+                noise: 0.12,
+                clusters_per_class: 1,
+                nuisance_frac: 0.0,
+                seed: 100,
+            },
+            topology: Topology::new(6, 3, 3),
+            train: TrainSpec { epochs: 40, batch_size: 32, lr: 0.03, seed: 100 },
+            ga: GaSpec {
+                population: 40,
+                generations: 6,
+                mutation_rate: 0.02,
+                crossover_rate: 0.9,
+                acc_loss_bound: 0.15,
+                init_keep_prob: 0.9,
+                seed: 100,
+            },
+            hw: HwSpec { clock_ms: 200.0, vdd: 1.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_topologies_match_paper_table3() {
+        let t = |n: &str| builtin::by_name(n).unwrap().topology;
+        assert_eq!(t("arrhythmia"), Topology::new(274, 5, 16));
+        assert_eq!(t("breastcancer"), Topology::new(10, 3, 2));
+        assert_eq!(t("cardio"), Topology::new(21, 3, 3));
+        assert_eq!(t("pendigits"), Topology::new(16, 5, 10));
+        assert_eq!(t("redwine"), Topology::new(11, 2, 6));
+        assert_eq!(t("whitewine"), Topology::new(11, 4, 7));
+    }
+
+    #[test]
+    fn arrhythmia_param_count_is_1450() {
+        // Paper §IV-C: "battery operation of a printed MLP that features
+        // 1,450 parameters (weights)".
+        assert_eq!(builtin::arrhythmia().topology.n_params(), 1450);
+    }
+
+    #[test]
+    fn clock_periods_match_paper() {
+        assert_eq!(builtin::arrhythmia().hw.clock_ms, 320.0);
+        assert_eq!(builtin::pendigits().hw.clock_ms, 250.0);
+        assert_eq!(builtin::cardio().hw.clock_ms, 200.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in builtin::all() {
+            let j = cfg.to_json();
+            let back = RunConfig::from_json(&j).unwrap();
+            assert_eq!(back.dataset.name, cfg.dataset.name);
+            assert_eq!(back.topology, cfg.topology);
+            assert_eq!(back.ga.population, cfg.ga.population);
+            assert_eq!(back.hw.clock_ms, cfg.hw.clock_ms);
+            assert_eq!(back.dataset.class_weights.len(), cfg.dataset.class_weights.len());
+        }
+    }
+
+    #[test]
+    fn by_name_case_insensitive() {
+        assert!(builtin::by_name("Cardio").is_some());
+        assert!(builtin::by_name("CARDIO").is_some());
+        assert!(builtin::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn save_load_file() {
+        let cfg = builtin::tiny();
+        let dir = std::env::temp_dir().join("pmlp_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.json");
+        cfg.save(&path).unwrap();
+        let back = RunConfig::load(&path).unwrap();
+        assert_eq!(back.dataset.name, "tiny");
+        assert_eq!(back.topology, cfg.topology);
+    }
+}

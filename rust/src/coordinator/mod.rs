@@ -1,0 +1,380 @@
+//! The Layer-3 coordinator: the paper's automated framework end to end
+//! (Fig. 1).
+//!
+//! Pipeline: synthesize dataset → train float MLP → po2 + QRelu QAT →
+//! NSGA-II accumulation approximation (accuracy × area surrogate) →
+//! Pareto set → approximate Argmax per design → gate-level synthesis →
+//! EGFET hardware analysis (1 V and 0.6 V) → final Pareto report.
+//!
+//! The GA accuracy evaluator is pluggable: the PJRT path (AOT-compiled
+//! Layer-2/Layer-1 programs) when artifacts are present, the native
+//! integer model otherwise — both verified bit-equivalent in
+//! `rust/tests/pjrt_integration.rs`.
+
+use crate::accum::GenomeMap;
+use crate::argmax::{build_plan, ArgmaxPlan, ArgmaxSearchOpts};
+use crate::baselines::Int8Mlp;
+use crate::config::RunConfig;
+use crate::datasets;
+use crate::egfet::{analyze, analyze_0p6v, classify_power_source, HwReport, Library, PowerSource};
+use crate::ga::{self, Nsga2};
+use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
+use crate::runtime::evaluator::NativeEvaluator;
+use crate::runtime::{PjrtEvaluator, Runtime};
+use crate::synth::optimize;
+use crate::train::{self, TrainedModel};
+use crate::util::BitVec;
+use anyhow::Result;
+
+/// Which GA evaluator the pipeline uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalBackend {
+    /// PJRT if artifacts exist, native otherwise.
+    Auto,
+    Pjrt,
+    Native,
+}
+
+/// Pipeline options.
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub backend: EvalBackend,
+    /// Synthesize + analyze at most this many Pareto designs (the
+    /// hardware step dominates runtime for large MLPs).
+    pub max_hw_points: usize,
+    /// Skip the (expensive) exact-baseline synthesis when false.
+    pub synth_baseline: bool,
+    /// Apply the approximate-Argmax step (paper: yes).
+    pub approx_argmax: bool,
+    pub verbose: bool,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts {
+            backend: EvalBackend::Auto,
+            max_hw_points: 4,
+            synth_baseline: true,
+            approx_argmax: true,
+            verbose: false,
+        }
+    }
+}
+
+/// A fully analyzed final design.
+#[derive(Clone, Debug)]
+pub struct FinalDesign {
+    pub genome: BitVec,
+    /// Test accuracy with accumulation approximation only.
+    pub acc_test_accum: f64,
+    /// Test accuracy with accumulation + argmax approximation.
+    pub acc_test_full: f64,
+    /// Train accuracy (the GA's objective view).
+    pub acc_train: f64,
+    /// FA-surrogate estimate (the GA's area view).
+    pub area_fa: u64,
+    pub argmax_plan: ArgmaxPlan,
+    /// Synthesized hardware without the argmax approximation (exact
+    /// comparator tree) — Table IV's reference point.
+    pub hw_exact_argmax: HwReport,
+    /// Synthesized hardware with the full holistic approximation, 1 V.
+    pub hw_full: HwReport,
+    /// Same netlist at the 0.6 V battery corner (Table V policy).
+    pub hw_0p6v: HwReport,
+    pub power_source: PowerSource,
+}
+
+/// Everything a pipeline run produces.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    pub cfg: RunConfig,
+    pub trained: TrainedModel,
+    pub baseline_acc_test: f64,
+    /// Exact bespoke baseline [8] hardware (1 V).
+    pub baseline_hw: Option<HwReport>,
+    /// QAT-only (po2 + QRelu, exact accumulation/argmax) hardware (1 V).
+    pub qat_hw: HwReport,
+    /// GA Pareto front as (accuracy-loss vs QAT train, FA estimate).
+    pub front: Vec<ga::Individual>,
+    pub designs: Vec<FinalDesign>,
+    /// Which evaluator actually ran.
+    pub backend_used: &'static str,
+}
+
+/// The coordinator.
+pub struct Pipeline {
+    pub cfg: RunConfig,
+    pub opts: PipelineOpts,
+}
+
+impl Pipeline {
+    pub fn new(cfg: RunConfig, opts: PipelineOpts) -> Pipeline {
+        Pipeline { cfg, opts }
+    }
+
+    /// Run the full framework.
+    pub fn run(&self) -> Result<PipelineResult> {
+        let cfg = &self.cfg;
+        let name = cfg.dataset.name.clone();
+        let log = |msg: &str| {
+            if self.opts.verbose {
+                eprintln!("[{name}] {msg}");
+            }
+        };
+
+        // ---- 1. dataset ------------------------------------------------
+        let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+        log(&format!(
+            "dataset: {} train / {} test samples, {} features, {} classes",
+            qtrain.n_samples(),
+            qtest.n_samples(),
+            qtrain.n_features(),
+            qtrain.n_classes
+        ));
+
+        // ---- 2. training + QAT -----------------------------------------
+        let runtime = match self.opts.backend {
+            EvalBackend::Native => None,
+            _ => Runtime::new(&Runtime::default_dir()).ok(),
+        };
+        let have_artifact = runtime
+            .as_ref()
+            .map(|rt| rt.manifest.entries.contains_key(&cfg.dataset.name))
+            .unwrap_or(false);
+        if matches!(self.opts.backend, EvalBackend::Pjrt) && !have_artifact {
+            anyhow::bail!("PJRT backend requested but artifacts missing (run `make artifacts`)");
+        }
+
+        let trained = if have_artifact {
+            // Float pre-train natively with the same restart search as
+            // the native path, QAT via the AOT train_step (Layer-2
+            // fwd/bwd through PJRT). The native QAT engine joins the
+            // learning-rate/seed search as one more candidate; the best
+            // integer model (train accuracy) wins — on the fragile
+            // 2-neuron MLPs the engines land in different basins.
+            let float = train::train_float_search(cfg, &split);
+            let rt = runtime.as_ref().unwrap();
+            let pjrt_tm = crate::train::PjrtTrainer::new(rt, &cfg.dataset.name)
+                .train(cfg, &float, &split, &qtrain, &qtest)?;
+            let native_tm = train::train_native(cfg, &split, &qtrain, &qtest);
+            if native_tm.acc_q_train > pjrt_tm.acc_q_train {
+                native_tm
+            } else {
+                pjrt_tm
+            }
+        } else {
+            train::train_native(cfg, &split, &qtrain, &qtest)
+        };
+        log(&format!(
+            "trained: float test acc {:.3}, QAT test acc {:.3}",
+            trained.acc_float_test, trained.acc_q_test
+        ));
+
+        // ---- 3. baseline + QAT-only hardware ----------------------------
+        let int8 = Int8Mlp::from_float(&trained.float);
+        let baseline_acc_test = int8.accuracy(&qtest);
+        let baseline_hw = if self.opts.synth_baseline {
+            let nl = int8.build_circuit(ArgmaxMode::Exact);
+            let (opt, _) = optimize(&nl);
+            Some(analyze(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25))
+        } else {
+            None
+        };
+        let qmlp = &trained.qmlp;
+        let qat_nl = build_mlp_circuit(qmlp, &MlpCircuitOpts::default());
+        let (qat_opt, _) = optimize(&qat_nl);
+        let qat_hw = analyze(&qat_opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+        if let Some(hw) = &baseline_hw {
+            log(&format!(
+                "baseline: {:.1} cm2 / {:.1} mW; QAT-only: {:.2} cm2 / {:.2} mW",
+                hw.area_cm2, hw.power_mw, qat_hw.area_cm2, qat_hw.power_mw
+            ));
+        }
+
+        // ---- 4. genetic accumulation approximation ----------------------
+        let base_acc_train = trained.acc_q_train;
+        let map = GenomeMap::new(qmlp);
+        // LSB-truncation seeds: column depths spanning the QRelu shift
+        // for layer 1 and the low columns of layer 2.
+        let t = qmlp.act_shift as u8;
+        let depths1: Vec<u8> = vec![t / 2, t, t.saturating_add(2), t.saturating_add(4)];
+        let depths2: Vec<u8> = vec![0, 2, 4, 6];
+        let seeds = crate::accum::truncation_seeds(&map, &depths1, &depths2);
+        let (front, population, backend_used) = if have_artifact {
+            let rt = runtime.as_ref().unwrap();
+            let ev = PjrtEvaluator::new(rt, &cfg.dataset.name, qmlp, &qtrain, base_acc_train)?;
+            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
+            let result = ga.run(|generation, snap| {
+                if self.opts.verbose {
+                    let (b2, b5) = snap.history.last().copied().unwrap_or((0.0, 0.0));
+                    eprintln!(
+                        "[{name}] gen {generation}: best area @2% loss = {b2:.0} FA, @5% = {b5:.0} FA"
+                    );
+                }
+            });
+            (result.front, result.population, "pjrt")
+        } else {
+            let ev = NativeEvaluator::new(qmlp, &qtrain, base_acc_train);
+            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
+            let result = ga.run(|_, _| {});
+            (result.front, result.population, "native")
+        };
+        log(&format!(
+            "GA: front size {} (population {})",
+            front.len(),
+            population.len()
+        ));
+
+        // ---- 5. argmax approximation + synthesis of selected designs ----
+        let mut selected = select_designs(&front, self.opts.max_hw_points);
+        // Always include the exact (QAT-only accumulation) genome as a
+        // zero-approximation fallback so a <=5%-vs-baseline design exists
+        // whenever QAT itself is within budget.
+        let exact = map.exact_genome();
+        if !selected.iter().any(|i| i.genome == exact) {
+            let exact_area = crate::area::AreaModel::new(&map).exact_estimate() as f64;
+            selected.push(ga::Individual { genome: exact, objs: [0.0, exact_area] });
+        }
+        let mut designs = Vec::new();
+        for ind in selected {
+            let masks = map.to_masks(&ind.genome);
+            let acc_test_accum = qmlp.accuracy(&qtest, Some(&masks));
+            // Argmax approximation on the *train* outputs of this design
+            // (paper: performed last, depends on the output distribution).
+            let width = qmlp.output_width();
+            let plan = if self.opts.approx_argmax && qmlp.topo.n_out >= 2 {
+                let preacts = qmlp.output_preacts(&qtrain, Some(&masks));
+                build_plan(&preacts, &qtrain.y, width, &ArgmaxSearchOpts::default())
+            } else {
+                ArgmaxPlan::exact(qmlp.topo.n_out, width)
+            };
+            // Test accuracy with the full holistic approximation.
+            let test_preacts = qmlp.output_preacts(&qtest, Some(&masks));
+            let acc_test_full = plan.accuracy(&test_preacts, &qtest.y);
+
+            // Hardware: exact-argmax reference and full design.
+            let nl_exact = build_mlp_circuit(
+                qmlp,
+                &MlpCircuitOpts { masks: Some(masks.clone()), argmax: ArgmaxMode::Exact },
+            );
+            let (opt_exact, _) = optimize(&nl_exact);
+            let hw_exact_argmax =
+                analyze(&opt_exact, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+            let nl_full = build_mlp_circuit(
+                qmlp,
+                &MlpCircuitOpts {
+                    masks: Some(masks.clone()),
+                    argmax: ArgmaxMode::Plan(plan.clone()),
+                },
+            );
+            let (opt_full, _) = optimize(&nl_full);
+            let hw_full = analyze(&opt_full, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+            let hw_0p6v = analyze_0p6v(&opt_full, cfg.hw.clock_ms, 0.25);
+            let power_source = classify_power_source(hw_0p6v.power_mw);
+
+            designs.push(FinalDesign {
+                genome: ind.genome.clone(),
+                acc_test_accum,
+                acc_test_full,
+                acc_train: base_acc_train - ind.objs[0],
+                area_fa: ind.objs[1] as u64,
+                argmax_plan: plan,
+                hw_exact_argmax,
+                hw_full,
+                hw_0p6v,
+                power_source,
+            });
+        }
+        log(&format!("synthesized {} final designs", designs.len()));
+
+        Ok(PipelineResult {
+            cfg: cfg.clone(),
+            trained,
+            baseline_acc_test,
+            baseline_hw,
+            qat_hw,
+            front,
+            designs,
+            backend_used,
+        })
+    }
+}
+
+/// Pick a spread of designs along the front for hardware synthesis:
+/// always the best-area feasible point, plus evenly spaced others.
+fn select_designs(front: &[ga::Individual], max_points: usize) -> Vec<ga::Individual> {
+    if front.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted: Vec<ga::Individual> = front.to_vec();
+    sorted.sort_by(|a, b| a.objs[1].partial_cmp(&b.objs[1]).unwrap());
+    if sorted.len() <= max_points {
+        return sorted;
+    }
+    let mut out = Vec::with_capacity(max_points);
+    for k in 0..max_points {
+        let idx = k * (sorted.len() - 1) / (max_points - 1).max(1);
+        out.push(sorted[idx].clone());
+    }
+    out.dedup_by(|a, b| a.objs == b.objs);
+    out
+}
+
+impl PipelineResult {
+    /// The best design within `loss` of the baseline test accuracy
+    /// (the paper's 5% selection rule), by full-circuit area.
+    pub fn best_within_loss(&self, loss: f64) -> Option<&FinalDesign> {
+        self.designs
+            .iter()
+            .filter(|d| d.acc_test_full >= self.baseline_acc_test - loss)
+            .min_by(|a, b| a.hw_full.area_cm2.partial_cmp(&b.hw_full.area_cm2).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+
+    #[test]
+    fn pipeline_tiny_native_end_to_end() {
+        let mut cfg = builtin::tiny();
+        cfg.ga.population = 24;
+        cfg.ga.generations = 4;
+        let opts = PipelineOpts {
+            backend: EvalBackend::Native,
+            max_hw_points: 2,
+            synth_baseline: true,
+            approx_argmax: true,
+            verbose: false,
+        };
+        let result = Pipeline::new(cfg, opts).run().expect("pipeline");
+        assert!(result.trained.acc_q_test > 0.6);
+        assert!(!result.front.is_empty());
+        assert!(!result.designs.is_empty());
+        let baseline = result.baseline_hw.as_ref().unwrap();
+        for d in &result.designs {
+            // Holistic approximation must beat the exact baseline.
+            assert!(d.hw_full.area_cm2 < baseline.area_cm2);
+            assert!(d.hw_full.power_mw < baseline.power_mw);
+            // 0.6V corner saves power over 1V.
+            assert!(d.hw_0p6v.power_mw < d.hw_full.power_mw);
+            assert!(d.hw_full.meets_timing);
+        }
+        assert_eq!(result.backend_used, "native");
+    }
+
+    #[test]
+    fn select_designs_spreads() {
+        let mk = |a: f64, ar: f64| ga::Individual {
+            genome: crate::util::BitVec::zeros(4),
+            objs: [a, ar],
+        };
+        let front: Vec<_> = (0..10).map(|i| mk(i as f64 * 0.01, 100.0 - i as f64)).collect();
+        let sel = select_designs(&front, 3);
+        assert_eq!(sel.len(), 3);
+        // Sorted by area: first is the smallest-area point.
+        assert_eq!(sel[0].objs[1], 91.0);
+        assert_eq!(sel[2].objs[1], 100.0);
+    }
+}

@@ -1,0 +1,364 @@
+//! Synthetic dataset substrate.
+//!
+//! The paper evaluates on six UCI datasets; this environment has no
+//! network access, so we synthesize datasets matched to each UCI set in
+//! dimensionality, class count, sample count, class imbalance, and —
+//! through the `separation`/`noise`/`nuisance_frac` knobs — achievable
+//! classifier accuracy (tuned against the paper's Table III baseline
+//! accuracies; see DESIGN.md §3).
+//!
+//! Generator model: each class owns `clusters_per_class` Gaussian
+//! centroids placed on a scaled simplex-like arrangement in the subspace
+//! of informative features; samples draw a centroid, add isotropic noise,
+//! and are min-max normalized to `[0,1]` exactly like the paper
+//! normalizes the UCI features. The split is 70/30 train/test
+//! (paper §III-A), stratified, deterministic in the config seed.
+
+use crate::config::DatasetSpec;
+use crate::fixedpoint::{quantize_input, INPUT_BITS};
+use crate::util::Rng;
+
+/// A dataset in normalized float form.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major `(n_samples, n_features)`, values in `[0,1]`.
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+}
+
+/// Train/test split of a [`Dataset`].
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// A dataset quantized to unsigned `bits`-bit integer features — the form
+/// every hardware model consumes.
+#[derive(Clone, Debug)]
+pub struct QuantDataset {
+    pub x: Vec<Vec<u32>>,
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+    pub bits: u32,
+}
+
+impl Dataset {
+    pub fn n_samples(&self) -> usize {
+        self.y.len()
+    }
+    pub fn n_features(&self) -> usize {
+        self.x.first().map(|r| r.len()).unwrap_or(0)
+    }
+
+    /// Quantize features to `bits`-bit unsigned integers (paper: 4).
+    pub fn quantize(&self, bits: u32) -> QuantDataset {
+        QuantDataset {
+            x: self
+                .x
+                .iter()
+                .map(|row| row.iter().map(|&v| quantize_input(v, bits)).collect())
+                .collect(),
+            y: self.y.clone(),
+            n_classes: self.n_classes,
+            bits,
+        }
+    }
+
+    /// Default 4-bit quantization.
+    pub fn quantize4(&self) -> QuantDataset {
+        self.quantize(INPUT_BITS)
+    }
+}
+
+impl QuantDataset {
+    pub fn n_samples(&self) -> usize {
+        self.y.len()
+    }
+    pub fn n_features(&self) -> usize {
+        self.x.first().map(|r| r.len()).unwrap_or(0)
+    }
+}
+
+/// Generate the synthetic dataset described by `spec`.
+pub fn generate(spec: &DatasetSpec) -> Dataset {
+    let mut rng = Rng::new(spec.seed.wrapping_mul(0x9E37_79B9).wrapping_add(17));
+    let d = spec.n_features;
+    let c = spec.n_classes;
+    let k = spec.clusters_per_class.max(1);
+
+    // Normalize class weights; zero-weight classes get no samples (the
+    // UCI Arrhythmia set genuinely has empty classes).
+    let mut weights: Vec<f64> = if spec.class_weights.len() == c {
+        spec.class_weights.clone()
+    } else {
+        vec![1.0; c]
+    };
+    let wsum: f64 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= wsum;
+    }
+
+    // Informative vs nuisance features.
+    let n_nuisance = ((d as f64) * spec.nuisance_frac).round() as usize;
+    let n_info = d - n_nuisance;
+
+    // Class-cluster centroids in the informative subspace: random unit
+    // directions scaled by separation * noise, around a shared origin.
+    // The same RNG stream makes the geometry deterministic per seed.
+    let radius = spec.separation * spec.noise;
+    let mut centroids = vec![vec![vec![0.0f64; n_info]; k]; c];
+    for class in centroids.iter_mut() {
+        for cluster in class.iter_mut() {
+            // Random direction.
+            let mut norm = 0.0;
+            for v in cluster.iter_mut() {
+                *v = rng.normal();
+                norm += *v * *v;
+            }
+            let norm = norm.sqrt().max(1e-9);
+            for v in cluster.iter_mut() {
+                *v = *v / norm * radius * (0.75 + 0.5 * rng.f64());
+            }
+        }
+    }
+
+    // Per-class sample counts (largest remainder keeps totals exact).
+    let mut counts: Vec<usize> = weights
+        .iter()
+        .map(|&w| (w * spec.n_samples as f64).floor() as usize)
+        .collect();
+    let mut assigned: usize = counts.iter().sum();
+    let mut i = 0;
+    while assigned < spec.n_samples {
+        if weights[i % c] > 0.0 {
+            counts[i % c] += 1;
+            assigned += 1;
+        }
+        i += 1;
+    }
+
+    let mut x = Vec::with_capacity(spec.n_samples);
+    let mut y = Vec::with_capacity(spec.n_samples);
+    for (class, &n) in counts.iter().enumerate() {
+        for _ in 0..n {
+            let cluster = &centroids[class][rng.below(k)];
+            let mut row = Vec::with_capacity(d);
+            for f in 0..d {
+                let base = if f < n_info { cluster[f] } else { 0.0 };
+                row.push(base + spec.noise * rng.normal());
+            }
+            x.push(row);
+            y.push(class);
+        }
+    }
+
+    // Shuffle sample order.
+    let mut order: Vec<usize> = (0..x.len()).collect();
+    rng.shuffle(&mut order);
+    let x: Vec<Vec<f64>> = order.iter().map(|&i| x[i].clone()).collect();
+    let y: Vec<usize> = order.iter().map(|&i| y[i]).collect();
+
+    // Min-max normalize each feature to [0,1] (paper §III-A).
+    let mut x = x;
+    normalize_minmax(&mut x);
+
+    Dataset { name: spec.name.clone(), x, y, n_classes: c }
+}
+
+/// In-place per-feature min-max normalization to `[0,1]`.
+pub fn normalize_minmax(x: &mut [Vec<f64>]) {
+    if x.is_empty() {
+        return;
+    }
+    let d = x[0].len();
+    for f in 0..d {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for row in x.iter() {
+            lo = lo.min(row[f]);
+            hi = hi.max(row[f]);
+        }
+        let span = (hi - lo).max(1e-12);
+        for row in x.iter_mut() {
+            row[f] = (row[f] - lo) / span;
+        }
+    }
+}
+
+/// Stratified 70/30 train/test split, deterministic in `seed`.
+pub fn split_70_30(ds: &Dataset, seed: u64) -> Split {
+    let mut rng = Rng::new(seed ^ 0x5357_4F52);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.n_classes];
+    for (i, &label) in ds.y.iter().enumerate() {
+        by_class[label].push(i);
+    }
+    let mut train_idx = Vec::new();
+    let mut test_idx = Vec::new();
+    for idxs in by_class.iter_mut() {
+        rng.shuffle(idxs);
+        let n_train = (idxs.len() as f64 * 0.7).round() as usize;
+        train_idx.extend_from_slice(&idxs[..n_train]);
+        test_idx.extend_from_slice(&idxs[n_train..]);
+    }
+    rng.shuffle(&mut train_idx);
+    rng.shuffle(&mut test_idx);
+    let take = |idx: &[usize]| Dataset {
+        name: ds.name.clone(),
+        x: idx.iter().map(|&i| ds.x[i].clone()).collect(),
+        y: idx.iter().map(|&i| ds.y[i]).collect(),
+        n_classes: ds.n_classes,
+    };
+    Split { train: take(&train_idx), test: take(&test_idx) }
+}
+
+/// Convenience: generate + split + quantize in one call.
+pub fn load(spec: &DatasetSpec) -> (Split, QuantDataset, QuantDataset) {
+    let ds = generate(spec);
+    let split = split_70_30(&ds, spec.seed);
+    let qtrain = split.train.quantize4();
+    let qtest = split.test.quantize4();
+    (split, qtrain, qtest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+
+    #[test]
+    fn shapes_match_spec() {
+        let cfg = builtin::cardio();
+        let ds = generate(&cfg.dataset);
+        assert_eq!(ds.n_samples(), 2126);
+        assert_eq!(ds.n_features(), 21);
+        assert_eq!(ds.n_classes, 3);
+    }
+
+    #[test]
+    fn values_normalized() {
+        let ds = generate(&builtin::tiny().dataset);
+        for row in &ds.x {
+            for &v in row {
+                assert!((0.0..=1.0).contains(&v), "v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let spec = builtin::tiny().dataset;
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let mut spec = builtin::tiny().dataset;
+        let a = generate(&spec);
+        spec.seed += 1;
+        let b = generate(&spec);
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn class_imbalance_respected() {
+        let spec = builtin::cardio().dataset; // 78/14/8
+        let ds = generate(&spec);
+        let mut counts = vec![0usize; 3];
+        for &label in &ds.y {
+            counts[label] += 1;
+        }
+        let frac0 = counts[0] as f64 / ds.n_samples() as f64;
+        assert!((frac0 - 0.78).abs() < 0.02, "frac0={frac0}");
+    }
+
+    #[test]
+    fn split_is_70_30_and_stratified() {
+        let ds = generate(&builtin::pendigits().dataset);
+        let split = split_70_30(&ds, 1);
+        let total = ds.n_samples() as f64;
+        let tf = split.train.n_samples() as f64 / total;
+        assert!((tf - 0.7).abs() < 0.02, "train frac {tf}");
+        // Stratification: every class present in both splits.
+        for class in 0..ds.n_classes {
+            assert!(split.train.y.iter().any(|&y| y == class));
+            assert!(split.test.y.iter().any(|&y| y == class));
+        }
+        // No overlap in size bookkeeping.
+        assert_eq!(split.train.n_samples() + split.test.n_samples(), ds.n_samples());
+    }
+
+    #[test]
+    fn quantization_is_4bit() {
+        let ds = generate(&builtin::tiny().dataset);
+        let q = ds.quantize4();
+        assert_eq!(q.bits, 4);
+        for row in &q.x {
+            for &v in row {
+                assert!(v <= 15);
+            }
+        }
+    }
+
+    #[test]
+    fn arrhythmia_scale() {
+        let spec = builtin::arrhythmia().dataset;
+        let ds = generate(&spec);
+        assert_eq!(ds.n_features(), 274);
+        assert_eq!(ds.n_classes, 16);
+        assert_eq!(ds.n_samples(), 452);
+        // Empty classes allowed (class weights include zeros).
+        let mut counts = vec![0usize; 16];
+        for &label in &ds.y {
+            counts[label] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 452);
+        assert!(counts[0] > 200, "dominant class should dominate: {counts:?}");
+    }
+
+    #[test]
+    fn separable_dataset_is_linearly_separable_enough() {
+        // With high separation a nearest-centroid rule on the train split
+        // should beat 85% on tiny — guards the generator's signal path.
+        let (split, _, _) = load(&builtin::tiny().dataset);
+        let train = &split.train;
+        let d = train.n_features();
+        let mut centroids = vec![vec![0.0; d]; train.n_classes];
+        let mut counts = vec![0usize; train.n_classes];
+        for (row, &label) in train.x.iter().zip(&train.y) {
+            for f in 0..d {
+                centroids[label][f] += row[f];
+            }
+            counts[label] += 1;
+        }
+        for (cent, &n) in centroids.iter_mut().zip(&counts) {
+            for v in cent.iter_mut() {
+                *v /= n.max(1) as f64;
+            }
+        }
+        let test = &split.test;
+        let mut correct = 0;
+        for (row, &label) in test.x.iter().zip(&test.y) {
+            let mut best = 0;
+            let mut bestd = f64::INFINITY;
+            for (cl, cent) in centroids.iter().enumerate() {
+                let dist: f64 =
+                    row.iter().zip(cent).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < bestd {
+                    bestd = dist;
+                    best = cl;
+                }
+            }
+            if best == label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.n_samples() as f64;
+        assert!(acc > 0.85, "nearest-centroid acc {acc}");
+    }
+}

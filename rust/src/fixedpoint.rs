@@ -1,0 +1,217 @@
+//! Fixed-point and power-of-2 quantization utilities.
+//!
+//! The whole hardware flow works in a pure-integer domain (the bespoke
+//! circuit has no floats); this module defines the exact mapping between
+//! the float model produced by QAT and the integer model that the genetic
+//! optimizer, the netlist generator, and the PJRT evaluator all share.
+//!
+//! ## Value semantics (the numeric contract of DESIGN.md §2)
+//!
+//! * A layer input is an unsigned integer `a ∈ [0, 2^A)` representing the
+//!   real value `a · 2^in_scale_log2`.
+//! * A power-of-2 weight is `sign · 2^e` with `e ∈ [a_exp-7, a_exp]` where
+//!   `2^a_exp ≥ max|w|` over the layer (8-bit po2 container: sign + 3-bit
+//!   normalized shift + zero flag). Its integer form is the shift
+//!   `k = e - (a_exp - 7) ∈ [0, 7]`.
+//! * A product is `a << k` — pure wiring in the bespoke circuit — with
+//!   real scale `2^(in_scale_log2 + a_exp - 7)` (the *column scale* of the
+//!   layer's adder trees).
+//! * QRelu(8) truncates `t` LSBs then clips to `[0, 255]`.
+
+/// Maximum normalized shift of a po2 weight. The paper's 8-bit po2
+/// container (QKeras `quantized_po2(8)`) leaves ample exponent range; a
+/// 4-bit exponent window (sign + 4-bit shift, zero flag) is the
+/// hardware-sane equivalent: weights below `2^(a_exp-15)` of the layer
+/// maximum flush to zero.
+pub const MAX_SHIFT: u32 = 15;
+
+/// Number of input bits fed to the first layer (paper §III-A: 4-bit).
+pub const INPUT_BITS: u32 = 4;
+
+/// Activation bits out of QRelu (paper §III-C1: 8-bit).
+pub const ACT_BITS: u32 = 8;
+
+/// A quantized power-of-2 weight: `sign * 2^(a_exp - 7 + shift)`.
+///
+/// `sign == 0` encodes a zero weight (no summand at all).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QWeight {
+    pub sign: i8,
+    pub shift: u8,
+}
+
+impl QWeight {
+    pub const ZERO: QWeight = QWeight { sign: 0, shift: 0 };
+
+    /// True if this weight contributes a summand.
+    #[inline]
+    pub fn is_nonzero(&self) -> bool {
+        self.sign != 0
+    }
+
+    /// Signed integer multiplier value `sign << shift` (column-scale units).
+    #[inline]
+    pub fn int_value(&self) -> i64 {
+        self.sign as i64 * (1i64 << self.shift)
+    }
+}
+
+/// Quantize a float weight to the nearest power of two within the layer's
+/// normalized exponent window `[a_exp-MAX_SHIFT, a_exp]`.
+///
+/// Rounding is done in log-domain (`round(log2|w|)`), matching the QKeras
+/// `quantized_po2` behaviour; magnitudes below half the smallest
+/// representable power flush to zero.
+pub fn quantize_po2(w: f64, a_exp: i32) -> QWeight {
+    if w == 0.0 || !w.is_finite() {
+        return QWeight::ZERO;
+    }
+    let sign = if w > 0.0 { 1i8 } else { -1i8 };
+    let e = w.abs().log2().round() as i32;
+    let e_min = a_exp - MAX_SHIFT as i32;
+    // Flush-to-zero below the representable window.
+    if (w.abs().log2() + 0.5) < e_min as f64 {
+        return QWeight::ZERO;
+    }
+    let e_clipped = e.clamp(e_min, a_exp);
+    QWeight { sign, shift: (e_clipped - e_min) as u8 }
+}
+
+/// Per-layer exponent scale: smallest `a_exp` with `2^a_exp >= max|w|`.
+pub fn layer_a_exp(weights: &[f64]) -> i32 {
+    let maxabs = weights.iter().fold(0.0f64, |m, &w| m.max(w.abs()));
+    if maxabs == 0.0 {
+        0
+    } else {
+        maxabs.log2().ceil() as i32
+    }
+}
+
+/// Reconstruct the real value of a [`QWeight`] under a layer scale.
+pub fn dequantize_po2(q: QWeight, a_exp: i32) -> f64 {
+    q.sign as f64 * (2f64).powi(a_exp - MAX_SHIFT as i32 + q.shift as i32)
+}
+
+/// Quantize a normalized feature in `[0,1]` to an unsigned integer of
+/// `bits` bits (floor — truncation, per paper §III-A).
+pub fn quantize_input(x: f64, bits: u32) -> u32 {
+    let max = (1u32 << bits) - 1;
+    let v = (x * (1u32 << bits) as f64).floor() as i64;
+    v.clamp(0, max as i64) as u32
+}
+
+/// Number of bits needed to represent the non-negative integer `v`.
+pub fn bits_for(v: u64) -> u32 {
+    if v == 0 {
+        1
+    } else {
+        64 - v.leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn quantize_po2_exact_powers() {
+        // a_exp = 0 -> representable exponents [-MAX_SHIFT, 0].
+        for e in -(MAX_SHIFT as i32)..=0 {
+            let w = (2f64).powi(e);
+            let q = quantize_po2(w, 0);
+            assert_eq!(q.sign, 1);
+            assert_eq!(q.shift as i32, e + MAX_SHIFT as i32);
+            assert_eq!(dequantize_po2(q, 0), w);
+            let qn = quantize_po2(-w, 0);
+            assert_eq!(qn.sign, -1);
+        }
+    }
+
+    #[test]
+    fn quantize_po2_zero_and_flush() {
+        assert_eq!(quantize_po2(0.0, 0), QWeight::ZERO);
+        // Far below 2^-15 flushes to zero.
+        assert_eq!(quantize_po2(1e-9, 0), QWeight::ZERO);
+        assert_eq!(quantize_po2(-1e-9, 0), QWeight::ZERO);
+    }
+
+    #[test]
+    fn quantize_po2_clips_above() {
+        // 10.0 with a_exp=2 clips to 2^2 = 4.
+        let q = quantize_po2(10.0, 2);
+        assert_eq!(dequantize_po2(q, 2), 4.0);
+    }
+
+    #[test]
+    fn quantize_po2_rounds_log_domain() {
+        // 3.0: log2(3)=1.585 -> rounds to e=2.
+        let q = quantize_po2(3.0, 3);
+        assert_eq!(dequantize_po2(q, 3), 4.0);
+        // 2.5: log2=1.32 -> e=1 -> 2.0
+        let q = quantize_po2(2.5, 3);
+        assert_eq!(dequantize_po2(q, 3), 2.0);
+    }
+
+    #[test]
+    fn layer_a_exp_covers_max() {
+        assert_eq!(layer_a_exp(&[0.3, -0.9, 0.5]), 0);
+        assert_eq!(layer_a_exp(&[1.5, -0.2]), 1);
+        assert_eq!(layer_a_exp(&[]), 0);
+        assert_eq!(layer_a_exp(&[0.0]), 0);
+    }
+
+    #[test]
+    fn quantize_input_truncates() {
+        assert_eq!(quantize_input(0.0, 4), 0);
+        assert_eq!(quantize_input(0.999, 4), 15);
+        assert_eq!(quantize_input(1.0, 4), 15); // clamp
+        assert_eq!(quantize_input(0.5, 4), 8);
+        assert_eq!(quantize_input(0.49, 4), 7);
+    }
+
+    #[test]
+    fn bits_for_basics() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 2);
+        assert_eq!(bits_for(255), 8);
+        assert_eq!(bits_for(256), 9);
+    }
+
+    #[test]
+    fn prop_quantization_error_bounded() {
+        // Relative error of po2 quantization within the representable
+        // window is at most sqrt(2) (log-domain rounding to nearest).
+        prop::check("po2 relative error", |rng, _| {
+            let w = (rng.f64() * 2.0 - 1.0) * 4.0;
+            if w.abs() < 0.05 {
+                return Ok(());
+            }
+            let a = layer_a_exp(&[w]);
+            let q = quantize_po2(w, a);
+            let back = dequantize_po2(q, a);
+            let ratio = (back / w).abs();
+            if !(0.70..=1.42).contains(&ratio) {
+                return Err(format!("w={w} back={back} ratio={ratio}"));
+            }
+            if (back > 0.0) != (w > 0.0) {
+                return Err(format!("sign flip w={w} back={back}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_input_quant_monotone() {
+        prop::check("input quant monotone", |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            if quantize_input(lo, 4) > quantize_input(hi, 4) {
+                return Err(format!("non-monotone at {lo},{hi}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,509 @@
+//! NSGA-II multi-objective genetic optimizer (paper §III-D1).
+//!
+//! Optimizes accumulation-approximation chromosomes (bit vectors over all
+//! summand bits) against two objectives, both minimized:
+//!
+//! 1. classification accuracy *loss* w.r.t. the QAT model (train set);
+//! 2. estimated area (full-adder surrogate, [`crate::area::AreaModel`]).
+//!
+//! Per the paper: the initial population is biased toward
+//! non-approximated bits, candidates whose accuracy loss exceeds 15% are
+//! discouraged (constrained domination à la Deb), random bit-flip
+//! mutation and uniform crossover traverse the space, and the outcome is
+//! the non-dominated accuracy/area front.
+
+use crate::config::GaSpec;
+use crate::util::{BitVec, Rng};
+
+/// Batch evaluator of chromosomes → objective pairs
+/// `[accuracy_loss, area_estimate]` (both minimized).
+///
+/// Implemented by the native integer-model evaluator and by the PJRT
+/// evaluator that runs the AOT-compiled Layer-2/Layer-1 program.
+/// Parallelism lives *inside* `evaluate` (thread pool or XLA), so the
+/// trait itself needs no `Sync` bound — PJRT handles are not `Sync`.
+pub trait Evaluator {
+    /// Evaluate a batch of genomes. Must return one `[f64; 2]` per input.
+    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]>;
+}
+
+/// One individual of the population.
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub genome: BitVec,
+    /// `[accuracy_loss, area]`, minimized.
+    pub objs: [f64; 2],
+}
+
+/// Result of a GA run.
+#[derive(Clone, Debug)]
+pub struct GaResult {
+    /// Final population (rank-sorted).
+    pub population: Vec<Individual>,
+    /// Non-dominated feasible front.
+    pub front: Vec<Individual>,
+    /// Objective history: per generation, best feasible area at <=2% and
+    /// <=5% accuracy loss (for convergence logging).
+    pub history: Vec<(f64, f64)>,
+}
+
+/// Non-dominated sorting: returns the front index of every individual
+/// (0 = best front). Uses the constrained-domination rule with the
+/// accuracy-loss bound: feasible dominates infeasible; among infeasible,
+/// lower violation dominates.
+pub fn non_dominated_sort(objs: &[[f64; 2]], bound: f64) -> Vec<usize> {
+    let n = objs.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if dominates_constrained(&objs[i], &objs[j], bound) {
+                dominates[i].push(j);
+            } else if dominates_constrained(&objs[j], &objs[i], bound) {
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut rank = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut r = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            rank[i] = r;
+            for &j in &dominates[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        r += 1;
+    }
+    rank
+}
+
+/// Deb's constrained-domination: feasibility first, Pareto second.
+fn dominates_constrained(a: &[f64; 2], b: &[f64; 2], bound: f64) -> bool {
+    let va = (a[0] - bound).max(0.0);
+    let vb = (b[0] - bound).max(0.0);
+    if va == 0.0 && vb > 0.0 {
+        return true;
+    }
+    if va > 0.0 && vb == 0.0 {
+        return false;
+    }
+    if va > 0.0 && vb > 0.0 {
+        return va < vb;
+    }
+    dominates(a, b)
+}
+
+/// Plain Pareto dominance (both objectives minimized).
+pub fn dominates(a: &[f64; 2], b: &[f64; 2]) -> bool {
+    (a[0] <= b[0] && a[1] <= b[1]) && (a[0] < b[0] || a[1] < b[1])
+}
+
+/// Crowding distance within one front (NSGA-II diversity measure).
+pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    for obj in 0..2 {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][obj].partial_cmp(&objs[front[b]][obj]).unwrap()
+        });
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = objs[front[order[m - 1]]][obj] - objs[front[order[0]]][obj];
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let prev = objs[front[order[w - 1]]][obj];
+            let next = objs[front[order[w + 1]]][obj];
+            dist[order[w]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// Extract the feasible non-dominated front from a set of individuals.
+pub fn pareto_front(pop: &[Individual], bound: f64) -> Vec<Individual> {
+    let mut front: Vec<Individual> = Vec::new();
+    for ind in pop {
+        if ind.objs[0] > bound {
+            continue;
+        }
+        if pop.iter().any(|o| o.objs[0] <= bound && dominates(&o.objs, &ind.objs)) {
+            continue;
+        }
+        // Dedup identical objective points.
+        if front.iter().any(|f| f.objs == ind.objs) {
+            continue;
+        }
+        front.push(ind.clone());
+    }
+    front.sort_by(|a, b| a.objs[0].partial_cmp(&b.objs[0]).unwrap());
+    front
+}
+
+/// The optimizer.
+pub struct Nsga2<'a> {
+    pub spec: GaSpec,
+    pub genome_len: usize,
+    pub evaluator: &'a dyn Evaluator,
+    /// Extra domain-informed individuals injected into the initial
+    /// population (e.g. [`crate::accum::truncation_seeds`]).
+    pub seeds: Vec<BitVec>,
+}
+
+impl<'a> Nsga2<'a> {
+    pub fn new(spec: GaSpec, genome_len: usize, evaluator: &'a dyn Evaluator) -> Self {
+        Nsga2 { spec, genome_len, evaluator, seeds: Vec::new() }
+    }
+
+    /// Builder-style seed injection.
+    pub fn with_seeds(mut self, seeds: Vec<BitVec>) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    /// Run the optimization; `log` receives one line per generation.
+    pub fn run(&self, mut log: impl FnMut(usize, &GaResult)) -> GaResult {
+        let mut rng = Rng::new(self.spec.seed ^ 0x4E53_4741);
+        let pop_size = self.spec.population.max(4);
+
+        // Biased initial population (paper: semi-random chromosomes biased
+        // toward non-approximated summand bits) + the exact chromosome as
+        // an anchor so accuracy loss 0 is always reachable.
+        let mut genomes: Vec<BitVec> = Vec::with_capacity(pop_size);
+        genomes.push(BitVec::ones(self.genome_len));
+        for seed in self.seeds.iter().take(pop_size.saturating_sub(1)) {
+            assert_eq!(seed.len(), self.genome_len, "seed length mismatch");
+            genomes.push(seed.clone());
+        }
+        while genomes.len() < pop_size {
+            // Mostly biased toward keeping bits (paper §III-D1), with a
+            // diverse low-keep tail for exploration.
+            let keep = if rng.chance(0.7) {
+                self.spec.init_keep_prob - 0.1 * rng.f64()
+            } else {
+                0.45 + 0.5 * rng.f64()
+            };
+            let bools: Vec<bool> =
+                (0..self.genome_len).map(|_| rng.chance(keep)).collect();
+            genomes.push(BitVec::from_bools(&bools));
+        }
+        let objs = self.evaluator.evaluate(&genomes);
+        let mut pop: Vec<Individual> = genomes
+            .into_iter()
+            .zip(objs)
+            .map(|(genome, objs)| Individual { genome, objs })
+            .collect();
+
+        let mut history = Vec::new();
+        for generation in 0..self.spec.generations {
+            // --- variation: binary tournament -> crossover -> mutation
+            let ranks = non_dominated_sort(
+                &pop.iter().map(|i| i.objs).collect::<Vec<_>>(),
+                self.spec.acc_loss_bound,
+            );
+            let crowd = full_crowding(&pop, &ranks);
+            let mut offspring_genomes = Vec::with_capacity(pop_size);
+            while offspring_genomes.len() < pop_size {
+                let p1 = tournament(&mut rng, &ranks, &crowd);
+                let p2 = tournament(&mut rng, &ranks, &crowd);
+                let (mut c1, mut c2) = if rng.chance(self.spec.crossover_rate) {
+                    uniform_crossover(&mut rng, &pop[p1].genome, &pop[p2].genome)
+                } else {
+                    (pop[p1].genome.clone(), pop[p2].genome.clone())
+                };
+                mutate(&mut rng, &mut c1, self.spec.mutation_rate);
+                mutate(&mut rng, &mut c2, self.spec.mutation_rate);
+                offspring_genomes.push(c1);
+                if offspring_genomes.len() < pop_size {
+                    offspring_genomes.push(c2);
+                }
+            }
+            let off_objs = self.evaluator.evaluate(&offspring_genomes);
+            let offspring: Vec<Individual> = offspring_genomes
+                .into_iter()
+                .zip(off_objs)
+                .map(|(genome, objs)| Individual { genome, objs })
+                .collect();
+
+            // --- environmental selection on the merged population
+            pop.extend(offspring);
+            pop = select(pop, pop_size, self.spec.acc_loss_bound);
+
+            // --- logging
+            let best2 = best_area_at(&pop, 0.02);
+            let best5 = best_area_at(&pop, 0.05);
+            history.push((best2, best5));
+            let snapshot = GaResult {
+                front: pareto_front(&pop, self.spec.acc_loss_bound),
+                population: Vec::new(),
+                history: history.clone(),
+            };
+            log(generation, &snapshot);
+        }
+
+        let front = pareto_front(&pop, self.spec.acc_loss_bound);
+        GaResult { population: pop, front, history }
+    }
+}
+
+fn full_crowding(pop: &[Individual], ranks: &[usize]) -> Vec<f64> {
+    let objs: Vec<[f64; 2]> = pop.iter().map(|i| i.objs).collect();
+    let max_rank = ranks.iter().copied().max().unwrap_or(0);
+    let mut crowd = vec![0.0; pop.len()];
+    for r in 0..=max_rank {
+        let front: Vec<usize> = (0..pop.len()).filter(|&i| ranks[i] == r).collect();
+        let d = crowding_distance(&objs, &front);
+        for (k, &i) in front.iter().enumerate() {
+            crowd[i] = d[k];
+        }
+    }
+    crowd
+}
+
+fn tournament(rng: &mut Rng, ranks: &[usize], crowd: &[f64]) -> usize {
+    let a = rng.below(ranks.len());
+    let b = rng.below(ranks.len());
+    if ranks[a] < ranks[b] || (ranks[a] == ranks[b] && crowd[a] > crowd[b]) {
+        a
+    } else {
+        b
+    }
+}
+
+fn uniform_crossover(rng: &mut Rng, a: &BitVec, b: &BitVec) -> (BitVec, BitVec) {
+    let mut c1 = a.clone();
+    let mut c2 = b.clone();
+    for i in 0..a.len() {
+        if rng.chance(0.5) {
+            let (va, vb) = (a.get(i), b.get(i));
+            c1.set(i, vb);
+            c2.set(i, va);
+        }
+    }
+    (c1, c2)
+}
+
+fn mutate(rng: &mut Rng, g: &mut BitVec, rate: f64) {
+    // Expected flips = rate * len; sample count then positions (fast for
+    // the low rates the paper uses).
+    let expected = rate * g.len() as f64;
+    let n_flips = {
+        // Poisson-ish: floor + bernoulli remainder.
+        let base = expected.floor() as usize;
+        base + usize::from(rng.chance(expected - base as f64))
+    };
+    for _ in 0..n_flips {
+        let i = rng.below(g.len());
+        g.flip(i);
+    }
+}
+
+/// NSGA-II environmental selection: fill by fronts, break the last front
+/// by crowding distance.
+fn select(pop: Vec<Individual>, target: usize, bound: f64) -> Vec<Individual> {
+    let objs: Vec<[f64; 2]> = pop.iter().map(|i| i.objs).collect();
+    let ranks = non_dominated_sort(&objs, bound);
+    let max_rank = ranks.iter().copied().max().unwrap_or(0);
+    let mut out: Vec<Individual> = Vec::with_capacity(target);
+    for r in 0..=max_rank {
+        let front: Vec<usize> = (0..pop.len()).filter(|&i| ranks[i] == r).collect();
+        if out.len() + front.len() <= target {
+            for &i in &front {
+                out.push(pop[i].clone());
+            }
+        } else {
+            let d = crowding_distance(&objs, &front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+            for &k in order.iter().take(target - out.len()) {
+                out.push(pop[front[k]].clone());
+            }
+            break;
+        }
+        if out.len() == target {
+            break;
+        }
+    }
+    out
+}
+
+/// Smallest area among individuals with accuracy loss <= `loss`.
+pub fn best_area_at(pop: &[Individual], loss: f64) -> f64 {
+    pop.iter()
+        .filter(|i| i.objs[0] <= loss)
+        .map(|i| i.objs[1])
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaSpec;
+    use crate::util::prop;
+
+    /// Toy evaluator: loss = fraction of zero bits in the first half
+    /// (removing early bits hurts "accuracy"), area = count of ones
+    /// (keeping bits costs area). True Pareto front: remove only
+    /// second-half bits.
+    struct Toy {
+        len: usize,
+    }
+    impl Evaluator for Toy {
+        fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
+            genomes
+                .iter()
+                .map(|g| {
+                    let half = self.len / 2;
+                    let zeros_front =
+                        (0..half).filter(|&i| !g.get(i)).count() as f64 / half as f64;
+                    [0.3 * zeros_front, g.count_ones() as f64]
+                })
+                .collect()
+        }
+    }
+
+    fn spec() -> GaSpec {
+        GaSpec {
+            population: 40,
+            generations: 25,
+            mutation_rate: 0.02,
+            crossover_rate: 0.9,
+            acc_loss_bound: 0.15,
+            init_keep_prob: 0.9,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn toy_converges_to_second_half_removal() {
+        let toy = Toy { len: 40 };
+        let ga = Nsga2::new(spec(), 40, &toy);
+        let result = ga.run(|_, _| {});
+        // Expect a zero-loss solution with area close to 20 (only first
+        // half kept).
+        let best = result
+            .front
+            .iter()
+            .filter(|i| i.objs[0] == 0.0)
+            .map(|i| i.objs[1])
+            .fold(f64::INFINITY, f64::min);
+        // Ideal is 20 (only the first half kept); anything well below the
+        // 40-bit exact genome demonstrates convergence.
+        assert!(best <= 27.0, "best zero-loss area {best}");
+    }
+
+    #[test]
+    fn front_is_mutually_non_dominating() {
+        let toy = Toy { len: 30 };
+        let ga = Nsga2::new(spec(), 30, &toy);
+        let result = ga.run(|_, _| {});
+        for a in &result.front {
+            for b in &result.front {
+                assert!(
+                    !dominates(&a.objs, &b.objs),
+                    "front contains dominated point {:?} < {:?}",
+                    a.objs,
+                    b.objs
+                );
+            }
+        }
+        assert!(!result.front.is_empty());
+    }
+
+    #[test]
+    fn respects_accuracy_bound_in_front() {
+        let toy = Toy { len: 30 };
+        let ga = Nsga2::new(spec(), 30, &toy);
+        let result = ga.run(|_, _| {});
+        for ind in &result.front {
+            assert!(ind.objs[0] <= 0.15 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn non_dominated_sort_ranks() {
+        // Three points: A dominates B; C incomparable to both on a
+        // different trade-off.
+        let objs = vec![[0.0, 1.0], [0.1, 2.0], [0.05, 0.5]];
+        let ranks = non_dominated_sort(&objs, 1.0);
+        assert_eq!(ranks[0], 0);
+        assert_eq!(ranks[2], 0);
+        assert_eq!(ranks[1], 1);
+    }
+
+    #[test]
+    fn constrained_domination_feasible_first() {
+        // Infeasible (loss 0.5 > bound 0.15) loses to any feasible point.
+        let objs = vec![[0.5, 0.0], [0.1, 100.0]];
+        let ranks = non_dominated_sort(&objs, 0.15);
+        assert_eq!(ranks[1], 0);
+        assert_eq!(ranks[0], 1);
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let objs = vec![[0.0, 3.0], [0.1, 2.0], [0.2, 1.0]];
+        let front = vec![0, 1, 2];
+        let d = crowding_distance(&objs, &front);
+        assert!(d[0].is_infinite());
+        assert!(d[2].is_infinite());
+        assert!(d[1].is_finite());
+    }
+
+    #[test]
+    fn prop_sort_rank0_is_nondominated() {
+        prop::check("rank0 non-dominated", |rng, _| {
+            let n = 3 + rng.below(20);
+            let objs: Vec<[f64; 2]> =
+                (0..n).map(|_| [rng.f64(), rng.f64() * 100.0]).collect();
+            let ranks = non_dominated_sort(&objs, 2.0); // everything feasible
+            for i in 0..n {
+                if ranks[i] == 0 {
+                    for j in 0..n {
+                        if dominates(&objs[j], &objs[i]) {
+                            return Err(format!("rank0 point {i} dominated by {j}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn history_tracks_generations() {
+        let toy = Toy { len: 20 };
+        let mut gens_seen = 0;
+        let ga = Nsga2::new(spec(), 20, &toy);
+        let result = ga.run(|g, _| {
+            gens_seen = g + 1;
+        });
+        assert_eq!(gens_seen, 25);
+        assert_eq!(result.history.len(), 25);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let toy = Toy { len: 24 };
+        let r1 = Nsga2::new(spec(), 24, &toy).run(|_, _| {});
+        let r2 = Nsga2::new(spec(), 24, &toy).run(|_, _| {});
+        let o1: Vec<[f64; 2]> = r1.front.iter().map(|i| i.objs).collect();
+        let o2: Vec<[f64; 2]> = r2.front.iter().map(|i| i.objs).collect();
+        assert_eq!(o1, o2);
+    }
+}

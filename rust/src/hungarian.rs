@@ -1,0 +1,204 @@
+//! Kuhn–Munkres (Hungarian) assignment solver — paper §III-C2 uses it to
+//! pick which output-neuron pair is compared at each comparator of the
+//! approximate Argmax tree, minimizing the total number of compared bits.
+//!
+//! O(n³) shortest-augmenting-path formulation (Jonker-Volgenant style
+//! potentials). Minimizes total cost of a perfect matching on a square
+//! cost matrix. The paper's matrices are at most 16×16, but the solver is
+//! exact and general.
+
+/// Solve the min-cost assignment problem.
+///
+/// `cost[i][j]` = cost of assigning row `i` to column `j`. Returns
+/// `(assignment, total)` where `assignment[i]` is the column matched to
+/// row `i`.
+pub fn solve(cost: &[Vec<f64>]) -> (Vec<usize>, f64) {
+    let n = cost.len();
+    if n == 0 {
+        return (Vec::new(), 0.0);
+    }
+    for row in cost {
+        assert_eq!(row.len(), n, "cost matrix must be square");
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed potentials per the classic formulation.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    // p[j] = row matched to column j (0 = none yet).
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the path.
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            assignment[p[j] - 1] = j - 1;
+        }
+    }
+    let total = (0..n).map(|i| cost[i][assignment[i]]).sum();
+    (assignment, total)
+}
+
+/// Brute-force solver for testing (n ≤ 9).
+#[cfg(test)]
+pub fn solve_brute(cost: &[Vec<f64>]) -> f64 {
+    let n = cost.len();
+    let mut cols: Vec<usize> = (0..n).collect();
+    let mut best = f64::INFINITY;
+    permute(&mut cols, 0, &mut |perm| {
+        let total: f64 = perm.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+        if total < best {
+            best = total;
+        }
+    });
+    best
+}
+
+#[cfg(test)]
+fn permute(xs: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == xs.len() {
+        f(xs);
+        return;
+    }
+    for i in k..xs.len() {
+        xs.swap(k, i);
+        permute(xs, k + 1, f);
+        xs.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, gen};
+
+    #[test]
+    fn identity_matrix_prefers_diagonal_zeros() {
+        let cost = vec![
+            vec![0.0, 1.0, 1.0],
+            vec![1.0, 0.0, 1.0],
+            vec![1.0, 1.0, 0.0],
+        ];
+        let (a, total) = solve(&cost);
+        assert_eq!(a, vec![0, 1, 2]);
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // Classic example: optimal is 1+2+2 = 5? Verify by brute force.
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let (_, total) = solve(&cost);
+        assert_eq!(total, solve_brute(&cost));
+        assert_eq!(total, 5.0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let (a, t) = solve(&[]);
+        assert!(a.is_empty());
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn single_cell() {
+        let (a, t) = solve(&[vec![7.5]]);
+        assert_eq!(a, vec![0]);
+        assert_eq!(t, 7.5);
+    }
+
+    #[test]
+    fn assignment_is_permutation() {
+        let cost = vec![
+            vec![9.0, 2.0, 7.0, 8.0],
+            vec![6.0, 4.0, 3.0, 7.0],
+            vec![5.0, 8.0, 1.0, 8.0],
+            vec![7.0, 6.0, 9.0, 4.0],
+        ];
+        let (a, _) = solve(&cost);
+        let mut s = a.clone();
+        s.sort();
+        assert_eq!(s, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prop_matches_brute_force() {
+        prop::check("hungarian == brute force", |rng, _| {
+            let n = 2 + rng.below(5); // up to 6x6
+            let cost = gen::cost_matrix(rng, n, 100.0);
+            let (a, total) = solve(&cost);
+            // Assignment must be a permutation.
+            let mut s = a.clone();
+            s.sort();
+            if s != (0..n).collect::<Vec<_>>() {
+                return Err(format!("not a permutation: {a:?}"));
+            }
+            let brute = solve_brute(&cost);
+            if (total - brute).abs() > 1e-9 {
+                return Err(format!("total {total} != brute {brute}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn handles_16x16_fast() {
+        // The paper's largest matrix (Arrhythmia: 16 output neurons).
+        let mut rng = crate::util::Rng::new(3);
+        let cost = gen::cost_matrix(&mut rng, 16, 50.0);
+        let (a, total) = solve(&cost);
+        assert_eq!(a.len(), 16);
+        assert!(total.is_finite());
+    }
+}

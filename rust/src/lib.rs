@@ -1,0 +1,35 @@
+//! # printed-mlp
+//!
+//! Reproduction of *"Bespoke Approximation of Multiplication-Accumulation
+//! and Activation Targeting Printed Multilayer Perceptrons"* (Afentaki et
+//! al., ICCAD 2023) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is the Layer-3 coordinator: it owns the design-automation
+//! pipeline (train → QAT → genetic accumulation approximation → approximate
+//! Argmax → gate-level synthesis → hardware analysis → Pareto reporting)
+//! and drives AOT-compiled XLA programs (Layer-2 JAX model calling the
+//! Layer-1 Pallas masked-MAC kernel) through PJRT.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index.
+
+pub mod util;
+pub mod config;
+pub mod fixedpoint;
+pub mod datasets;
+pub mod model;
+pub mod accum;
+pub mod area;
+pub mod ga;
+pub mod hungarian;
+pub mod argmax;
+pub mod netlist;
+pub mod synth;
+pub mod egfet;
+pub mod sim;
+pub mod sc;
+pub mod baselines;
+pub mod train;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod bench;

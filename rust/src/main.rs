@@ -1,0 +1,267 @@
+//! `pmlp` — the printed-MLP approximation framework CLI (Layer-3 leader
+//! entrypoint).
+//!
+//! Subcommands:
+//!   list                         show built-in dataset configs
+//!   run      --dataset <name>    full pipeline (train → GA → argmax →
+//!                                synthesis → battery report)
+//!   train    --dataset <name>    training + QAT only
+//!   gen-data --dataset <name>    dump the synthetic dataset as CSV
+//!   repro    --exp <id>          regenerate a paper table/figure
+//!                                (table2|table3|table4|table5|fig4|fig5|all)
+//!   ablation --dataset <name>    PJRT-vs-native evaluator throughput
+//!
+//! Shared flags: --scale smoke|small|paper, --backend auto|pjrt|native,
+//! --out <file> (JSON for `run`, text otherwise), --pop/--gens overrides.
+
+use anyhow::{anyhow, bail, Result};
+use printed_mlp::bench::{self, Scale, Study};
+use printed_mlp::config::{builtin, RunConfig};
+use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
+use printed_mlp::datasets;
+use printed_mlp::report;
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{k}'"))?
+                .to_string();
+            let val = it.next().unwrap_or_else(|| "true".to_string());
+            flags.insert(key, val);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn scale(&self) -> Result<Scale> {
+        let s = self.get("scale").unwrap_or("small");
+        Scale::parse(s).ok_or_else(|| anyhow!("bad --scale '{s}' (smoke|small|paper)"))
+    }
+
+    fn backend(&self) -> Result<EvalBackend> {
+        Ok(match self.get("backend").unwrap_or("auto") {
+            "auto" => EvalBackend::Auto,
+            "pjrt" => EvalBackend::Pjrt,
+            "native" => EvalBackend::Native,
+            other => bail!("bad --backend '{other}' (auto|pjrt|native)"),
+        })
+    }
+
+    fn cfg(&self) -> Result<RunConfig> {
+        let name = self.get("dataset").unwrap_or("cardio");
+        let mut cfg = if let Some(path) = self.get("config") {
+            RunConfig::load(std::path::Path::new(path))?
+        } else {
+            builtin::by_name(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown dataset '{name}' (try: {})",
+                    builtin::paper_names().join(", ")
+                )
+            })?
+        };
+        if let Some(p) = self.get("pop") {
+            cfg.ga.population = p.parse()?;
+        }
+        if let Some(g) = self.get("gens") {
+            cfg.ga.generations = g.parse()?;
+        }
+        Ok(cfg)
+    }
+
+    fn emit(&self, text: &str) -> Result<()> {
+        println!("{text}");
+        if let Some(path) = self.get("out") {
+            std::fs::write(path, text)?;
+            eprintln!("(written to {path})");
+        }
+        Ok(())
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "list" => {
+            let mut rows = Vec::new();
+            for cfg in builtin::all() {
+                rows.push(vec![
+                    cfg.dataset.name.clone(),
+                    format!(
+                        "({},{},{})",
+                        cfg.topology.n_in, cfg.topology.n_hidden, cfg.topology.n_out
+                    ),
+                    format!("{}", cfg.topology.n_params()),
+                    format!("{}", cfg.dataset.n_samples),
+                    format!("{}", cfg.dataset.n_classes),
+                    format!("{} ms", cfg.hw.clock_ms),
+                ]);
+            }
+            args.emit(&report::render_table(
+                "built-in configurations",
+                &["name", "topology", "params", "samples", "classes", "clock"],
+                &rows,
+            ))
+        }
+        "run" => {
+            let cfg = args.cfg()?;
+            let opts = PipelineOpts {
+                backend: args.backend()?,
+                max_hw_points: args
+                    .get("hw-points")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(4),
+                synth_baseline: args.get("no-baseline").is_none(),
+                approx_argmax: args.get("no-argmax").is_none(),
+                verbose: true,
+            };
+            let result = Pipeline::new(cfg, opts).run()?;
+            // Human summary.
+            let mut rows = Vec::new();
+            if let Some(hw) = &result.baseline_hw {
+                rows.push(vec![
+                    "baseline [8]".to_string(),
+                    format!("{:.3}", result.baseline_acc_test),
+                    report::hw_cell(hw),
+                    String::new(),
+                ]);
+            }
+            rows.push(vec![
+                "QAT only".to_string(),
+                format!("{:.3}", result.trained.acc_q_test),
+                report::hw_cell(&result.qat_hw),
+                String::new(),
+            ]);
+            for d in &result.designs {
+                rows.push(vec![
+                    format!("ours (FA {})", d.area_fa),
+                    format!("{:.3}", d.acc_test_full),
+                    report::hw_cell(&d.hw_full),
+                    format!(
+                        "0.6V: {:.3} mW -> {}",
+                        d.hw_0p6v.power_mw,
+                        d.power_source.label()
+                    ),
+                ]);
+            }
+            let summary = report::render_table(
+                &format!(
+                    "pipeline [{}] (backend: {})",
+                    result.cfg.dataset.name, result.backend_used
+                ),
+                &["design", "test acc", "1V hardware", "battery"],
+                &rows,
+            );
+            println!("{summary}");
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, report::result_to_json(&result).to_string_pretty())?;
+                eprintln!("(JSON written to {path})");
+            }
+            Ok(())
+        }
+        "train" => {
+            let cfg = args.cfg()?;
+            let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+            let tm = printed_mlp::train::train_native(&cfg, &split, &qtrain, &qtest);
+            args.emit(&format!(
+                "dataset {}: float test acc {:.3}, QAT train acc {:.3}, QAT test acc {:.3}, act_shift {}",
+                cfg.dataset.name,
+                tm.acc_float_test,
+                tm.acc_q_train,
+                tm.acc_q_test,
+                tm.qmlp.act_shift
+            ))
+        }
+        "gen-data" => {
+            let cfg = args.cfg()?;
+            let ds = datasets::generate(&cfg.dataset);
+            let mut csv = String::new();
+            for (row, &y) in ds.x.iter().zip(&ds.y) {
+                for v in row {
+                    csv.push_str(&format!("{v:.5},"));
+                }
+                csv.push_str(&format!("{y}\n"));
+            }
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &csv)?;
+                    println!("wrote {} samples to {path}", ds.y.len());
+                }
+                None => print!("{csv}"),
+            }
+            Ok(())
+        }
+        "repro" => {
+            let exp = args.get("exp").unwrap_or("all");
+            let scale = args.scale()?;
+            let backend = args.backend()?;
+            let mut study = Study::new(scale, backend);
+            let mut out = String::new();
+            let want = |id: &str| exp == "all" || exp == id;
+            if want("table2") {
+                out.push_str(&bench::table2(scale));
+            }
+            if want("table3") {
+                out.push_str(&bench::table3(&mut study));
+            }
+            if want("fig4") {
+                out.push_str(&bench::fig4(&mut study));
+            }
+            if want("table4") {
+                out.push_str(&bench::table4(&mut study));
+            }
+            if want("fig5") {
+                out.push_str(&bench::fig5(&mut study));
+            }
+            if want("table5") {
+                out.push_str(&bench::table5(&mut study));
+            }
+            if out.is_empty() {
+                bail!("unknown --exp '{exp}' (table2|table3|table4|table5|fig4|fig5|all)");
+            }
+            args.emit(&out)
+        }
+        "ablation" => {
+            let name = args.get("dataset").unwrap_or("cardio");
+            let n = args.get("n").map(|v| v.parse()).transpose()?.unwrap_or(64);
+            args.emit(&bench::ablation_evaluators(name, n))
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "pmlp — printed-MLP holistic approximation framework (ICCAD'23 reproduction)\n\n\
+                 usage: pmlp <command> [--flags]\n\n\
+                 commands:\n  \
+                 list                      built-in dataset configs\n  \
+                 run --dataset <name>      full pipeline [--backend auto|pjrt|native] [--pop N] [--gens N] [--out r.json]\n  \
+                 train --dataset <name>    training + QAT only\n  \
+                 gen-data --dataset <name> dump synthetic dataset CSV [--out f.csv]\n  \
+                 repro --exp <id>          regenerate table2|table3|table4|table5|fig4|fig5|all [--scale smoke|small|paper]\n  \
+                 ablation --dataset <name> evaluator throughput (native vs PJRT) [--n N]"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `pmlp help`)"),
+    }
+}

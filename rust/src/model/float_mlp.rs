@@ -1,0 +1,404 @@
+//! Float single-hidden-layer MLP (Relu hidden, linear output) plus a
+//! self-contained Adam trainer with optional straight-through power-of-2
+//! QAT — the native counterpart of the Layer-2 JAX `train_step`.
+//!
+//! The native trainer exists for three reasons: (1) it is a substrate the
+//! paper depends on (scikit-learn training); (2) it lets the full
+//! pipeline run before `make artifacts`; (3) it cross-checks the
+//! PJRT-driven trainer in integration tests.
+
+use crate::config::Topology;
+use crate::datasets::Dataset;
+use crate::fixedpoint::{dequantize_po2, layer_a_exp, quantize_po2};
+use crate::util::Rng;
+
+/// Dense float MLP: `h = relu(W1 x + b1)`, `z = W2 h + b2`.
+#[derive(Clone, Debug)]
+pub struct FloatMlp {
+    pub topo: Topology,
+    /// `(n_hidden, n_in)` row-major.
+    pub w1: Vec<Vec<f64>>,
+    pub b1: Vec<f64>,
+    /// `(n_out, n_hidden)` row-major.
+    pub w2: Vec<Vec<f64>>,
+    pub b2: Vec<f64>,
+    /// QRelu clipping range used by QAT forward passes (calibrated to
+    /// the maximum hidden pre-activation at QAT start; 8-bit grid on
+    /// `[0, act_max)`).
+    pub act_max: f64,
+}
+
+/// Training options.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub seed: u64,
+    /// If true, apply straight-through po2 quantization to the weights
+    /// and 8-bit QRelu to the hidden activations in the forward pass
+    /// (quantization-aware training, paper §III-B).
+    pub qat_po2: bool,
+    /// L2 weight decay.
+    pub weight_decay: f64,
+    /// Apply sqrt-inverse-frequency class balancing to the loss (the
+    /// paper's datasets are heavily imbalanced). Disable for QAT
+    /// fine-tuning, where re-balancing fights the already-learned
+    /// decision boundaries.
+    pub class_balance: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            epochs: 60,
+            batch_size: 64,
+            lr: 0.02,
+            seed: 7,
+            qat_po2: false,
+            weight_decay: 1e-4,
+            class_balance: true,
+        }
+    }
+}
+
+/// Adam state for one parameter tensor.
+#[derive(Clone, Debug, Default)]
+struct Adam {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(n: usize) -> Self {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+    fn step(&mut self, params: &mut [f64], grads: &[f64], lr: f64) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * grads[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * grads[i] * grads[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+}
+
+impl FloatMlp {
+    /// He-initialized random MLP.
+    pub fn init(topo: Topology, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4D4C_5000);
+        let init_mat = |rng: &mut Rng, rows: usize, cols: usize| -> Vec<Vec<f64>> {
+            let scale = (2.0 / cols as f64).sqrt();
+            (0..rows)
+                .map(|_| (0..cols).map(|_| rng.normal() * scale).collect())
+                .collect()
+        };
+        FloatMlp {
+            topo,
+            w1: init_mat(&mut rng, topo.n_hidden, topo.n_in),
+            b1: vec![0.0; topo.n_hidden],
+            w2: init_mat(&mut rng, topo.n_out, topo.n_hidden),
+            b2: vec![0.0; topo.n_out],
+            act_max: 8.0,
+        }
+    }
+
+    /// Calibrate `act_max` to the maximum (quantized-weight) hidden
+    /// pre-activation over a dataset — run before QAT fine-tuning so
+    /// the float QRelu grid matches the integer truncation the hardware
+    /// will use.
+    pub fn calibrate_act_max(&mut self, ds: &Dataset) {
+        let (w1, _) = self.eff_weights(true);
+        let mut maxh = 1e-6f64;
+        for x in &ds.x {
+            for n in 0..self.topo.n_hidden {
+                let mut acc = self.b1[n];
+                for (j, &xj) in x.iter().enumerate() {
+                    acc += w1[n][j] * xj;
+                }
+                maxh = maxh.max(acc);
+            }
+        }
+        // Round up to a power of two (the integer QRelu truncation is a
+        // power-of-2 shift).
+        self.act_max = (2f64).powi(maxh.log2().ceil() as i32);
+    }
+
+    /// Effective weights as seen by the forward pass (po2-quantized under
+    /// QAT, raw otherwise).
+    fn eff_weights(&self, qat: bool) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        if !qat {
+            return (self.w1.clone(), self.w2.clone());
+        }
+        let q = |w: &Vec<Vec<f64>>| -> Vec<Vec<f64>> {
+            let flat: Vec<f64> = w.iter().flatten().copied().collect();
+            let a = layer_a_exp(&flat);
+            w.iter()
+                .map(|row| row.iter().map(|&v| dequantize_po2(quantize_po2(v, a), a)).collect())
+                .collect()
+        };
+        (q(&self.w1), q(&self.w2))
+    }
+
+    /// Forward pass for one sample; returns (hidden, logits).
+    /// `qat` applies po2 weight quantization + 8-bit QRelu clipping.
+    pub fn forward(&self, x: &[f64], qat: bool) -> (Vec<f64>, Vec<f64>) {
+        let (w1, w2) = self.eff_weights(qat);
+        self.forward_with(&w1, &w2, x, qat)
+    }
+
+    fn forward_with(
+        &self,
+        w1: &[Vec<f64>],
+        w2: &[Vec<f64>],
+        x: &[f64],
+        qat: bool,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut h = vec![0.0; self.topo.n_hidden];
+        for (n, hn) in h.iter_mut().enumerate() {
+            let mut acc = self.b1[n];
+            for (j, &xj) in x.iter().enumerate() {
+                acc += w1[n][j] * xj;
+            }
+            let mut a = acc.max(0.0);
+            if qat {
+                // QRelu(8): 8-bit grid on the calibrated [0, act_max)
+                // range (matches the L2 JAX model and the integer
+                // truncation shift of the hardware).
+                let step = self.act_max / 256.0;
+                a = ((a / step).floor() * step).min(self.act_max - step);
+            }
+            *hn = a;
+        }
+        let mut z = vec![0.0; self.topo.n_out];
+        for (m, zm) in z.iter_mut().enumerate() {
+            let mut acc = self.b2[m];
+            for (n, &hn) in h.iter().enumerate() {
+                acc += w2[m][n] * hn;
+            }
+            *zm = acc;
+        }
+        (h, z)
+    }
+
+    /// Predicted class (argmax of logits, ties to the lowest index —
+    /// matching the hardware comparator-tree convention).
+    pub fn predict(&self, x: &[f64], qat: bool) -> usize {
+        let (_, z) = self.forward(x, qat);
+        argmax_f(&z)
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, ds: &Dataset, qat: bool) -> f64 {
+        if ds.y.is_empty() {
+            return 0.0;
+        }
+        let correct = ds
+            .x
+            .iter()
+            .zip(&ds.y)
+            .filter(|(x, &y)| self.predict(x, qat) == y)
+            .count();
+        correct as f64 / ds.y.len() as f64
+    }
+
+    /// Train with Adam on softmax cross-entropy. Gradients flow through
+    /// the straight-through estimator when `opts.qat_po2` is set: the
+    /// forward uses quantized weights/activations, the backward treats
+    /// the quantizers as identity.
+    pub fn train(&mut self, ds: &Dataset, opts: &TrainOpts) {
+        let topo = self.topo;
+        let (ni, nh, no) = (topo.n_in, topo.n_hidden, topo.n_out);
+        let mut rng = Rng::new(opts.seed ^ 0x5452_4149);
+        if opts.qat_po2 {
+            self.calibrate_act_max(ds);
+        }
+        let mut adam_w1 = Adam::new(nh * ni);
+        let mut adam_b1 = Adam::new(nh);
+        let mut adam_w2 = Adam::new(no * nh);
+        let mut adam_b2 = Adam::new(no);
+
+        // Inverse-frequency class weighting: the paper's datasets are
+        // heavily imbalanced (e.g. wines, arrhythmia) and sklearn's MLP
+        // with balanced sampling is approximated this way.
+        let mut class_counts = vec![0usize; no];
+        for &y in &ds.y {
+            class_counts[y] += 1;
+        }
+        let n_present = class_counts.iter().filter(|&&c| c > 0).count().max(1);
+        let class_w: Vec<f64> = class_counts
+            .iter()
+            .map(|&c| {
+                if c == 0 {
+                    0.0
+                } else if opts.class_balance {
+                    // Soft balancing: sqrt of inverse frequency.
+                    (ds.y.len() as f64 / (n_present as f64 * c as f64)).sqrt()
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+
+        let n = ds.y.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        for _epoch in 0..opts.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(opts.batch_size) {
+                let (w1e, w2e) = self.eff_weights(opts.qat_po2);
+                let mut gw1 = vec![0.0; nh * ni];
+                let mut gb1 = vec![0.0; nh];
+                let mut gw2 = vec![0.0; no * nh];
+                let mut gb2 = vec![0.0; no];
+                let mut total_w = 0.0;
+                for &i in chunk {
+                    let x = &ds.x[i];
+                    let y = ds.y[i];
+                    let cw = class_w[y];
+                    total_w += cw;
+                    let (h, z) = self.forward_with(&w1e, &w2e, x, opts.qat_po2);
+                    // Softmax CE gradient on logits.
+                    let maxz = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let exps: Vec<f64> = z.iter().map(|&v| (v - maxz).exp()).collect();
+                    let sum: f64 = exps.iter().sum();
+                    let mut dz: Vec<f64> = exps.iter().map(|&e| e / sum).collect();
+                    dz[y] -= 1.0;
+                    for d in dz.iter_mut() {
+                        *d *= cw;
+                    }
+                    // Output layer grads.
+                    for m in 0..no {
+                        gb2[m] += dz[m];
+                        for nn in 0..nh {
+                            gw2[m * nh + nn] += dz[m] * h[nn];
+                        }
+                    }
+                    // Backprop into hidden (STE: through quantized relu as
+                    // identity on the active region).
+                    for nn in 0..nh {
+                        if h[nn] <= 0.0 {
+                            continue;
+                        }
+                        let mut dh = 0.0;
+                        for m in 0..no {
+                            dh += dz[m] * w2e[m][nn];
+                        }
+                        gb1[nn] += dh;
+                        for (j, &xj) in x.iter().enumerate() {
+                            gw1[nn * ni + j] += dh * xj;
+                        }
+                    }
+                }
+                let scale = 1.0 / total_w.max(1e-9);
+                for g in gw1.iter_mut().chain(&mut gb1).chain(&mut gw2).chain(&mut gb2) {
+                    *g *= scale;
+                }
+                // Weight decay on the raw (latent) weights.
+                for (idx, g) in gw1.iter_mut().enumerate() {
+                    *g += opts.weight_decay * self.w1[idx / ni][idx % ni];
+                }
+                for (idx, g) in gw2.iter_mut().enumerate() {
+                    *g += opts.weight_decay * self.w2[idx / nh][idx % nh];
+                }
+                // Adam updates on flattened views.
+                let mut w1_flat: Vec<f64> = self.w1.iter().flatten().copied().collect();
+                adam_w1.step(&mut w1_flat, &gw1, opts.lr);
+                for (idx, v) in w1_flat.into_iter().enumerate() {
+                    self.w1[idx / ni][idx % ni] = v;
+                }
+                let mut w2_flat: Vec<f64> = self.w2.iter().flatten().copied().collect();
+                adam_w2.step(&mut w2_flat, &gw2, opts.lr);
+                for (idx, v) in w2_flat.into_iter().enumerate() {
+                    self.w2[idx / nh][idx % nh] = v;
+                }
+                adam_b1.step(&mut self.b1, &gb1, opts.lr);
+                adam_b2.step(&mut self.b2, &gb2, opts.lr);
+            }
+        }
+    }
+}
+
+/// Argmax with ties resolved to the lowest index (hardware convention:
+/// the comparator tree keeps the earlier neuron on equality).
+pub fn argmax_f(z: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in z.iter().enumerate().skip(1) {
+        if v > z[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::datasets;
+
+    #[test]
+    fn trains_tiny_dataset_above_chance() {
+        let cfg = builtin::tiny();
+        let (split, _, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        let before = mlp.accuracy(&split.test, false);
+        mlp.train(
+            &split.train,
+            &TrainOpts { epochs: 40, ..Default::default() },
+        );
+        let after = mlp.accuracy(&split.test, false);
+        assert!(after > 0.85, "before={before} after={after}");
+    }
+
+    #[test]
+    fn qat_training_keeps_accuracy_close() {
+        let cfg = builtin::tiny();
+        let (split, _, _) = datasets::load(&cfg.dataset);
+        let mut float = FloatMlp::init(cfg.topology, 1);
+        float.train(&split.train, &TrainOpts { epochs: 40, ..Default::default() });
+        let base = float.accuracy(&split.test, false);
+        let mut qat = float.clone();
+        qat.train(
+            &split.train,
+            &TrainOpts { epochs: 25, qat_po2: true, lr: 0.01, ..Default::default() },
+        );
+        let qacc = qat.accuracy(&split.test, true);
+        assert!(
+            qacc > base - 0.10,
+            "QAT accuracy collapsed: base={base} qat={qacc}"
+        );
+    }
+
+    #[test]
+    fn argmax_ties_to_lowest() {
+        assert_eq!(argmax_f(&[1.0, 1.0, 0.5]), 0);
+        assert_eq!(argmax_f(&[0.1, 0.9, 0.9]), 1);
+        assert_eq!(argmax_f(&[2.0]), 0);
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mlp = FloatMlp::init(crate::config::Topology::new(4, 3, 2), 9);
+        let (h, z) = mlp.forward(&[0.1, 0.2, 0.3, 0.4], false);
+        assert_eq!(h.len(), 3);
+        assert_eq!(z.len(), 2);
+    }
+
+    #[test]
+    fn qat_forward_hits_po2_grid() {
+        let mut mlp = FloatMlp::init(crate::config::Topology::new(3, 2, 2), 5);
+        mlp.w1[0][0] = 0.3; // quantizes to 0.25
+        let (w1, _) = mlp.eff_weights(true);
+        let v = w1[0][0];
+        // Must be a power of two (or zero).
+        assert!(v > 0.0 && (v.log2() - v.log2().round()).abs() < 1e-12, "v={v}");
+    }
+}

@@ -1,0 +1,10 @@
+//! MLP models: the float model produced by training and the quantized
+//! integer model that every hardware stage (GA, netlist, PJRT evaluator)
+//! consumes. The integer model is the *golden reference* of the
+//! equivalence chain (DESIGN.md §2).
+
+pub mod float_mlp;
+pub mod quantized;
+
+pub use float_mlp::FloatMlp;
+pub use quantized::{BiasQ, MaskSet, QuantLayer, QuantMlp};

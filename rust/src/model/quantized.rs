@@ -1,0 +1,494 @@
+//! The quantized integer MLP — the exact arithmetic the bespoke printed
+//! circuit implements, and the golden reference every other evaluation
+//! path (Pallas kernel, HLO-via-PJRT, gate-level netlist) must match
+//! bit-for-bit.
+//!
+//! Arithmetic per neuron (paper §III-A/B/C):
+//! * power-of-2 weights → each product is `input << shift` (pure wiring);
+//! * positive and negative weights accumulate in two separate unsigned
+//!   adder trees; the two sums are subtracted once at the end;
+//! * hidden layer applies QRelu(8): arithmetic right shift by the static
+//!   layer truncation `t`, clip to `[0, 255]`;
+//! * the output layer's pre-activations go to (approximate) Argmax.
+//!
+//! The accumulation approximation (paper §III-D) masks individual summand
+//! bits: `summand = (input & mask) << shift`. Masking before the shift is
+//! equivalent to masking the aligned summand bit in the adder tree.
+
+use crate::config::Topology;
+use crate::datasets::QuantDataset;
+use crate::fixedpoint::{bits_for, layer_a_exp, quantize_po2, QWeight, ACT_BITS, INPUT_BITS, MAX_SHIFT};
+use crate::model::FloatMlp;
+
+/// A power-of-2 quantized bias in the layer's column-scale units:
+/// `sign * 2^shift` (`sign == 0` → no bias summand).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BiasQ {
+    pub sign: i8,
+    pub shift: u8,
+}
+
+impl BiasQ {
+    pub const ZERO: BiasQ = BiasQ { sign: 0, shift: 0 };
+    #[inline]
+    pub fn is_nonzero(&self) -> bool {
+        self.sign != 0
+    }
+    #[inline]
+    pub fn int_value(&self) -> i64 {
+        self.sign as i64 * (1i64 << self.shift)
+    }
+}
+
+/// One quantized layer: po2 weight matrix + po2 biases.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Flat `(n_out, n_in)` row-major.
+    pub w: Vec<QWeight>,
+    pub bias: Vec<BiasQ>,
+    /// Layer weight-scale exponent (`2^a_exp >= max|w_float|`).
+    pub a_exp: i32,
+    /// Bits of the unsigned integer inputs of this layer.
+    pub in_bits: u32,
+}
+
+impl QuantLayer {
+    #[inline]
+    pub fn weight(&self, n: usize, j: usize) -> QWeight {
+        self.w[n * self.n_in + j]
+    }
+
+    /// Worst-case (unmasked) positive/negative tree sums for neuron `n` —
+    /// determines accumulator and comparator widths in the netlist.
+    pub fn tree_max(&self, n: usize) -> (u64, u64) {
+        let amax = (1u64 << self.in_bits) - 1;
+        let mut pos = 0u64;
+        let mut neg = 0u64;
+        for j in 0..self.n_in {
+            let w = self.weight(n, j);
+            match w.sign {
+                1 => pos += amax << w.shift,
+                -1 => neg += amax << w.shift,
+                _ => {}
+            }
+        }
+        let b = self.bias[n];
+        match b.sign {
+            1 => pos += 1u64 << b.shift,
+            -1 => neg += 1u64 << b.shift,
+            _ => {}
+        }
+        (pos, neg)
+    }
+
+    /// Bit width of the signed pre-activation of neuron `n` (two's
+    /// complement width able to hold `[-neg_max, pos_max]`).
+    pub fn preact_width(&self, n: usize) -> u32 {
+        let (pos, neg) = self.tree_max(n);
+        bits_for(pos.max(neg)) + 1
+    }
+}
+
+/// Per-summand-bit masks for the accumulation approximation. `1` bits
+/// keep the summand bit, `0` bits remove it (constant zero in hardware).
+/// Flat layouts mirror [`QuantLayer::w`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MaskSet {
+    /// Hidden-layer input masks `(n_hidden, n_in)`, `in_bits` wide each.
+    pub m1: Vec<u32>,
+    /// Hidden-layer bias keep flags.
+    pub mb1: Vec<bool>,
+    /// Output-layer input masks `(n_out, n_hidden)`, `ACT_BITS` wide.
+    pub m2: Vec<u32>,
+    /// Output-layer bias keep flags.
+    pub mb2: Vec<bool>,
+}
+
+impl MaskSet {
+    /// The exact (nothing removed) mask set.
+    pub fn exact(topo: &Topology) -> MaskSet {
+        MaskSet {
+            m1: vec![(1u32 << INPUT_BITS) - 1; topo.n_hidden * topo.n_in],
+            mb1: vec![true; topo.n_hidden],
+            m2: vec![(1u32 << ACT_BITS) - 1; topo.n_out * topo.n_hidden],
+            mb2: vec![true; topo.n_out],
+        }
+    }
+}
+
+/// The full quantized MLP.
+#[derive(Clone, Debug)]
+pub struct QuantMlp {
+    pub topo: Topology,
+    pub l1: QuantLayer,
+    pub l2: QuantLayer,
+    /// QRelu truncation: hidden activation = `clamp(z >> act_shift, 0, 255)`.
+    pub act_shift: u32,
+}
+
+impl QuantMlp {
+    /// Quantize a trained float MLP and calibrate the QRelu truncation on
+    /// the (quantized) train set.
+    pub fn from_float(float: &FloatMlp, calib: &QuantDataset) -> QuantMlp {
+        let topo = float.topo;
+        let flat1: Vec<f64> = float.w1.iter().flatten().copied().collect();
+        let flat2: Vec<f64> = float.w2.iter().flatten().copied().collect();
+        let a1 = layer_a_exp(&flat1);
+        let a2 = layer_a_exp(&flat2);
+
+        // Layer 1: inputs are 4-bit with real scale 2^-INPUT_BITS.
+        let col1_log2 = -(INPUT_BITS as i32) + a1 - MAX_SHIFT as i32;
+        let w1: Vec<QWeight> = flat1.iter().map(|&w| quantize_po2(w, a1)).collect();
+        let bias1: Vec<BiasQ> =
+            float.b1.iter().map(|&b| quantize_bias(b, col1_log2)).collect();
+        let mut l1 = QuantLayer {
+            n_in: topo.n_in,
+            n_out: topo.n_hidden,
+            w: w1,
+            bias: bias1,
+            a_exp: a1,
+            in_bits: INPUT_BITS,
+        };
+
+        // Calibrate QRelu truncation: smallest t such that the maximum
+        // positive pre-activation over the calibration set fits ACT_BITS.
+        let mut max_z: i64 = 0;
+        for row in &calib.x {
+            for n in 0..topo.n_hidden {
+                let z = neuron_preact(&l1, n, row, None, None);
+                max_z = max_z.max(z);
+            }
+        }
+        let act_shift = (bits_for(max_z.max(0) as u64)).saturating_sub(ACT_BITS);
+
+        // Layer 2: inputs are the 8-bit hidden activations with real
+        // scale col1 * 2^act_shift.
+        let col2_in_log2 = col1_log2 + act_shift as i32;
+        let col2_log2 = col2_in_log2 + a2 - MAX_SHIFT as i32;
+        let w2: Vec<QWeight> = flat2.iter().map(|&w| quantize_po2(w, a2)).collect();
+        let bias2: Vec<BiasQ> =
+            float.b2.iter().map(|&b| quantize_bias(b, col2_log2)).collect();
+        let l2 = QuantLayer {
+            n_in: topo.n_hidden,
+            n_out: topo.n_out,
+            w: w2,
+            bias: bias2,
+            a_exp: a2,
+            in_bits: ACT_BITS,
+        };
+
+        // Dead-bias cleanup for layer 1: a bias whose entire magnitude is
+        // truncated away by QRelu contributes nothing but area.
+        for b in l1.bias.iter_mut() {
+            if b.is_nonzero() && (b.shift as u32) < act_shift.saturating_sub(4) {
+                *b = BiasQ::ZERO;
+            }
+        }
+
+        QuantMlp { topo, l1, l2, act_shift }
+    }
+
+    /// Exact integer forward: returns (hidden activations, output-layer
+    /// pre-activations).
+    pub fn forward(&self, x: &[u32]) -> (Vec<u32>, Vec<i64>) {
+        self.forward_masked(x, None)
+    }
+
+    /// Masked integer forward (the accumulation approximation). `None`
+    /// masks mean exact.
+    pub fn forward_masked(&self, x: &[u32], masks: Option<&MaskSet>) -> (Vec<u32>, Vec<i64>) {
+        debug_assert_eq!(x.len(), self.topo.n_in);
+        let mut h = vec![0u32; self.topo.n_hidden];
+        for (n, hn) in h.iter_mut().enumerate() {
+            let z = neuron_preact(
+                &self.l1,
+                n,
+                x,
+                masks.map(|m| &m.m1[..]),
+                masks.map(|m| &m.mb1[..]),
+            );
+            *hn = qrelu(z, self.act_shift);
+        }
+        let mut z2 = vec![0i64; self.topo.n_out];
+        for (m_idx, zm) in z2.iter_mut().enumerate() {
+            *zm = neuron_preact(
+                &self.l2,
+                m_idx,
+                &h,
+                masks.map(|m| &m.m2[..]),
+                masks.map(|m| &m.mb2[..]),
+            );
+        }
+        (h, z2)
+    }
+
+    /// Predicted class of one sample.
+    pub fn predict(&self, x: &[u32], masks: Option<&MaskSet>) -> usize {
+        let (_, z) = self.forward_masked(x, masks);
+        argmax_i(&z)
+    }
+
+    /// Accuracy over a quantized dataset.
+    pub fn accuracy(&self, ds: &QuantDataset, masks: Option<&MaskSet>) -> f64 {
+        if ds.y.is_empty() {
+            return 0.0;
+        }
+        self.count_correct(ds, masks) as f64 / ds.y.len() as f64
+    }
+
+    /// Allocation-free correct-prediction count — the native GA
+    /// evaluator's hot loop (EXPERIMENTS.md §Perf): hidden/output
+    /// buffers are reused across samples and the argmax is computed
+    /// in-line instead of materializing the logits vector per call.
+    pub fn count_correct(&self, ds: &QuantDataset, masks: Option<&MaskSet>) -> usize {
+        let mut h = vec![0u32; self.topo.n_hidden];
+        let m1 = masks.map(|m| &m.m1[..]);
+        let mb1 = masks.map(|m| &m.mb1[..]);
+        let m2 = masks.map(|m| &m.m2[..]);
+        let mb2 = masks.map(|m| &m.mb2[..]);
+        let mut correct = 0usize;
+        for (x, &y) in ds.x.iter().zip(&ds.y) {
+            for n in 0..self.topo.n_hidden {
+                h[n] = qrelu(neuron_preact(&self.l1, n, x, m1, mb1), self.act_shift);
+            }
+            let mut best = 0usize;
+            let mut best_z = i64::MIN;
+            for m_idx in 0..self.topo.n_out {
+                let z = neuron_preact(&self.l2, m_idx, &h, m2, mb2);
+                if z > best_z {
+                    best_z = z;
+                    best = m_idx;
+                }
+            }
+            correct += usize::from(best == y);
+        }
+        correct
+    }
+
+    /// Output-layer pre-activations for a whole dataset (used by the
+    /// approximate-Argmax search, which needs the neuron outputs).
+    pub fn output_preacts(&self, ds: &QuantDataset, masks: Option<&MaskSet>) -> Vec<Vec<i64>> {
+        ds.x.iter().map(|x| self.forward_masked(x, masks).1).collect()
+    }
+
+    /// Maximum output-layer pre-activation width (bits, signed) across
+    /// neurons — the exact-Argmax comparator width.
+    pub fn output_width(&self) -> u32 {
+        (0..self.topo.n_out).map(|n| self.l2.preact_width(n)).max().unwrap_or(2)
+    }
+}
+
+/// Pre-activation of one neuron with optional summand-bit masks:
+/// two unsigned accumulators (positive / negative trees) subtracted once.
+#[inline]
+pub fn neuron_preact(
+    layer: &QuantLayer,
+    n: usize,
+    x: &[u32],
+    masks: Option<&[u32]>,
+    bias_keep: Option<&[bool]>,
+) -> i64 {
+    let row = n * layer.n_in;
+    let mut pos: i64 = 0;
+    let mut neg: i64 = 0;
+    for j in 0..layer.n_in {
+        let w = layer.w[row + j];
+        if w.sign == 0 {
+            continue;
+        }
+        let mut a = x[j] as i64;
+        if let Some(m) = masks {
+            a &= m[row + j] as i64;
+        }
+        let s = a << w.shift;
+        if w.sign > 0 {
+            pos += s;
+        } else {
+            neg += s;
+        }
+    }
+    let b = layer.bias[n];
+    if b.is_nonzero() && bias_keep.map(|k| k[n]).unwrap_or(true) {
+        if b.sign > 0 {
+            pos += 1i64 << b.shift;
+        } else {
+            neg += 1i64 << b.shift;
+        }
+    }
+    pos - neg
+}
+
+/// QRelu(8): truncate `t` LSBs, clip to `[0, 255]`.
+#[inline]
+pub fn qrelu(z: i64, t: u32) -> u32 {
+    if z <= 0 {
+        return 0;
+    }
+    ((z >> t) as u64).min((1u64 << ACT_BITS) - 1) as u32
+}
+
+/// Integer argmax, ties to the lowest index (hardware convention).
+pub fn argmax_i(z: &[i64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in z.iter().enumerate().skip(1) {
+        if v > z[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn quantize_bias(b: f64, col_log2: i32) -> BiasQ {
+    if b == 0.0 || !b.is_finite() {
+        return BiasQ::ZERO;
+    }
+    // Integer magnitude in column-scale units, then round to po2.
+    let mag = b.abs() / (2f64).powi(col_log2);
+    if mag < 0.5 {
+        return BiasQ::ZERO;
+    }
+    let shift = mag.log2().round().clamp(0.0, 30.0) as u8;
+    BiasQ { sign: if b > 0.0 { 1 } else { -1 }, shift }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::datasets;
+    use crate::model::float_mlp::TrainOpts;
+    use crate::util::prop;
+
+    fn trained_tiny() -> (QuantMlp, QuantDataset, QuantDataset) {
+        let cfg = builtin::tiny();
+        let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 40, ..Default::default() });
+        mlp.train(
+            &split.train,
+            &TrainOpts { epochs: 20, qat_po2: true, lr: 0.008, ..Default::default() },
+        );
+        (QuantMlp::from_float(&mlp, &qtrain), qtrain, qtest)
+    }
+
+    #[test]
+    fn quantized_model_keeps_accuracy() {
+        let (qmlp, _, qtest) = trained_tiny();
+        let acc = qmlp.accuracy(&qtest, None);
+        assert!(acc > 0.75, "quantized accuracy {acc}");
+    }
+
+    #[test]
+    fn exact_masks_equal_no_masks() {
+        let (qmlp, qtrain, _) = trained_tiny();
+        let exact = MaskSet::exact(&qmlp.topo);
+        for row in qtrain.x.iter().take(50) {
+            let a = qmlp.forward_masked(row, None);
+            let b = qmlp.forward_masked(row, Some(&exact));
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn all_zero_masks_zero_everything() {
+        let (qmlp, qtrain, _) = trained_tiny();
+        let zero = MaskSet {
+            m1: vec![0; qmlp.topo.n_hidden * qmlp.topo.n_in],
+            mb1: vec![false; qmlp.topo.n_hidden],
+            m2: vec![0; qmlp.topo.n_out * qmlp.topo.n_hidden],
+            mb2: vec![false; qmlp.topo.n_out],
+        };
+        let (h, z) = qmlp.forward_masked(&qtrain.x[0], Some(&zero));
+        assert!(h.iter().all(|&v| v == 0));
+        assert!(z.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn qrelu_behaviour() {
+        assert_eq!(qrelu(-5, 0), 0);
+        assert_eq!(qrelu(0, 0), 0);
+        assert_eq!(qrelu(255, 0), 255);
+        assert_eq!(qrelu(256, 0), 255); // clip
+        assert_eq!(qrelu(256, 1), 128); // truncate
+        assert_eq!(qrelu(511, 1), 255);
+        assert_eq!(qrelu(1 << 20, 4), 255);
+    }
+
+    #[test]
+    fn argmax_ties_low() {
+        assert_eq!(argmax_i(&[5, 5, 3]), 0);
+        assert_eq!(argmax_i(&[1, 7, 7]), 1);
+        assert_eq!(argmax_i(&[-3, -1, -2]), 1);
+    }
+
+    #[test]
+    fn tree_max_bounds_preacts() {
+        // Property: |pre-activation| never exceeds the analytic tree max.
+        let (qmlp, qtrain, _) = trained_tiny();
+        for row in qtrain.x.iter().take(100) {
+            for n in 0..qmlp.topo.n_hidden {
+                let z = neuron_preact(&qmlp.l1, n, row, None, None);
+                let (pos, neg) = qmlp.l1.tree_max(n);
+                assert!(z <= pos as i64 && z >= -(neg as i64));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_masking_only_lowers_tree_sums() {
+        // Removing summand bits can only reduce each unsigned tree sum —
+        // the monotonicity the area/accuracy trade-off builds on.
+        let (qmlp, qtrain, _) = trained_tiny();
+        prop::check("masking monotone per tree", |rng, _| {
+            let topo = qmlp.topo;
+            let masks = MaskSet {
+                m1: (0..topo.n_hidden * topo.n_in)
+                    .map(|_| rng.below(16) as u32)
+                    .collect(),
+                mb1: (0..topo.n_hidden).map(|_| rng.chance(0.5)).collect(),
+                m2: (0..topo.n_out * topo.n_hidden)
+                    .map(|_| rng.below(256) as u32)
+                    .collect(),
+                mb2: (0..topo.n_out).map(|_| rng.chance(0.5)).collect(),
+            };
+            let x = &qtrain.x[rng.below(qtrain.x.len())];
+            for n in 0..topo.n_hidden {
+                // Compare pos/neg trees separately via two synthetic
+                // evaluations: masked vs exact with the bias stripped.
+                let exact = neuron_preact(&qmlp.l1, n, x, None, None);
+                let masked =
+                    neuron_preact(&qmlp.l1, n, x, Some(&masks.m1), Some(&masks.mb1));
+                // The *difference* pos-neg may move either way; what must
+                // hold is the width bound:
+                let (pos, neg) = qmlp.l1.tree_max(n);
+                if masked > pos as i64 || masked < -(neg as i64) {
+                    return Err(format!("masked preact out of range: {masked} vs {exact}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hidden_activations_are_8bit() {
+        let (qmlp, qtrain, _) = trained_tiny();
+        for row in &qtrain.x {
+            let (h, _) = qmlp.forward(row);
+            assert!(h.iter().all(|&v| v <= 255));
+        }
+    }
+
+    #[test]
+    fn bias_quantization() {
+        assert_eq!(quantize_bias(0.0, -4), BiasQ::ZERO);
+        // b=0.5 with column scale 2^-4 -> integer 8 -> shift 3.
+        let b = quantize_bias(0.5, -4);
+        assert_eq!((b.sign, b.shift), (1, 3));
+        let b = quantize_bias(-0.5, -4);
+        assert_eq!((b.sign, b.shift), (-1, 3));
+        // Sub-half magnitudes flush to zero.
+        assert_eq!(quantize_bias(0.02, -4), BiasQ::ZERO);
+    }
+}

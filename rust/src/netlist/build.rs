@@ -1,0 +1,416 @@
+//! Arithmetic circuit builders: adders, carry-save trees, subtractors,
+//! shifters, constant-coefficient multipliers, QRelu, masked comparators,
+//! and argmax trees — the building blocks of the bespoke MLP circuits.
+//!
+//! Builders are *naive on purpose*: they instantiate generic structures
+//! with `Const(false)` wires where the power-of-2 shifts or the
+//! accumulation approximation place known zeros, and rely on
+//! `crate::synth` to sweep the constants through — exactly how the paper
+//! uses the EDA tool's constant propagation (§III-D).
+
+use super::{Bus, Netlist, NodeId};
+
+/// Constant bus of `width` bits holding `value`.
+pub fn const_bus(nl: &mut Netlist, value: u64, width: u32) -> Bus {
+    (0..width).map(|i| nl.constant((value >> i) & 1 == 1)).collect()
+}
+
+/// Zero-extend (or truncate) a bus to `width`.
+pub fn resize(nl: &mut Netlist, bus: &Bus, width: u32) -> Bus {
+    let mut out = bus.clone();
+    while (out.len() as u32) < width {
+        out.push(nl.constant(false));
+    }
+    out.truncate(width as usize);
+    out
+}
+
+/// Sign-extend a two's-complement bus to `width`.
+pub fn sign_extend(nl: &mut Netlist, bus: &Bus, width: u32) -> Bus {
+    assert!(!bus.is_empty());
+    let _ = nl;
+    let mut out = bus.clone();
+    let msb = *bus.last().unwrap();
+    while (out.len() as u32) < width {
+        out.push(msb);
+    }
+    out.truncate(width as usize);
+    out
+}
+
+/// Left shift by a constant: pure wiring (`shift` zero LSBs).
+pub fn shl(nl: &mut Netlist, bus: &Bus, shift: u32) -> Bus {
+    let mut out: Bus = (0..shift).map(|_| nl.constant(false)).collect();
+    out.extend_from_slice(bus);
+    out
+}
+
+/// Half adder: returns (sum, carry).
+pub fn half_adder(nl: &mut Netlist, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+    (nl.xor(a, b), nl.and(a, b))
+}
+
+/// Full adder: returns (sum, carry).
+pub fn full_adder(nl: &mut Netlist, a: NodeId, b: NodeId, c: NodeId) -> (NodeId, NodeId) {
+    let axb = nl.xor(a, b);
+    let sum = nl.xor(axb, c);
+    let t1 = nl.and(axb, c);
+    let t2 = nl.and(a, b);
+    let carry = nl.or(t1, t2);
+    (sum, carry)
+}
+
+/// Ripple-carry adder; output has `max(len)+1` bits.
+pub fn adder(nl: &mut Netlist, a: &Bus, b: &Bus) -> Bus {
+    let width = a.len().max(b.len()) as u32;
+    let a = resize(nl, a, width);
+    let b = resize(nl, b, width);
+    let mut out = Vec::with_capacity(width as usize + 1);
+    let mut carry = nl.constant(false);
+    for i in 0..width as usize {
+        let (s, c) = full_adder(nl, a[i], b[i], carry);
+        out.push(s);
+        carry = c;
+    }
+    out.push(carry);
+    out
+}
+
+/// Carry-save reduction of many unsigned summands to a single sum bus.
+///
+/// Column-wise 3:2 / 2:2 compression (Wallace-style) until every column
+/// holds ≤ 2 bits, then one final ripple-carry add — the same carry-save
+/// operation the paper's area surrogate assumes (§III-D3).
+pub fn csa_tree(nl: &mut Netlist, summands: &[Bus]) -> Bus {
+    if summands.is_empty() {
+        return vec![nl.constant(false)];
+    }
+    let width = summands.iter().map(Vec::len).max().unwrap() as u32;
+    // Columns of live bits.
+    let mut cols: Vec<Vec<NodeId>> = vec![Vec::new(); width as usize + 2];
+    for s in summands {
+        for (i, &bit) in s.iter().enumerate() {
+            cols[i].push(bit);
+        }
+    }
+    // Reduce until every column has at most 2 entries.
+    loop {
+        let maxh = cols.iter().map(Vec::len).max().unwrap();
+        if maxh <= 2 {
+            break;
+        }
+        let mut next: Vec<Vec<NodeId>> = vec![Vec::new(); cols.len() + 1];
+        for (k, col) in cols.iter().enumerate() {
+            let mut it = col.iter().copied();
+            loop {
+                let chunk: Vec<NodeId> = it.by_ref().take(3).collect();
+                match chunk.len() {
+                    3 => {
+                        let (s, c) = full_adder(nl, chunk[0], chunk[1], chunk[2]);
+                        next[k].push(s);
+                        next[k + 1].push(c);
+                    }
+                    2 => {
+                        let (s, c) = half_adder(nl, chunk[0], chunk[1]);
+                        next[k].push(s);
+                        next[k + 1].push(c);
+                    }
+                    1 => next[k].push(chunk[0]),
+                    _ => break,
+                }
+            }
+        }
+        while next.last().map(|c| c.is_empty()).unwrap_or(false) {
+            next.pop();
+        }
+        cols = next;
+    }
+    // Final two rows -> ripple-carry adder.
+    let width = cols.len() as u32;
+    let zero = nl.constant(false);
+    let mut row_a: Bus = Vec::with_capacity(width as usize);
+    let mut row_b: Bus = Vec::with_capacity(width as usize);
+    for col in &cols {
+        row_a.push(col.first().copied().unwrap_or(zero));
+        row_b.push(col.get(1).copied().unwrap_or(zero));
+    }
+    adder(nl, &row_a, &row_b)
+}
+
+/// Two's-complement subtraction `a - b`, output width `w+1` where
+/// `w = max(len)` (signed result, MSB = sign).
+pub fn subtractor(nl: &mut Netlist, a: &Bus, b: &Bus) -> Bus {
+    let width = (a.len().max(b.len()) + 1) as u32;
+    let a = resize(nl, a, width);
+    let b = resize(nl, b, width);
+    let mut out = Vec::with_capacity(width as usize);
+    let mut carry = nl.constant(true); // +1 of the two's complement
+    for i in 0..width as usize {
+        let nb = nl.not(b[i]);
+        let (s, c) = full_adder(nl, a[i], nb, carry);
+        out.push(s);
+        carry = c;
+    }
+    out
+}
+
+/// Constant-coefficient unsigned multiplier `x * k` (shift-add over the
+/// set bits of `k`) — the bespoke multiplier of the exact baseline [8].
+pub fn const_mul(nl: &mut Netlist, x: &Bus, k: u64) -> Bus {
+    if k == 0 {
+        return vec![nl.constant(false)];
+    }
+    let mut partials: Vec<Bus> = Vec::new();
+    for bit in 0..64 {
+        if (k >> bit) & 1 == 1 {
+            partials.push(shl(nl, x, bit));
+        }
+    }
+    if partials.len() == 1 {
+        return partials.pop().unwrap();
+    }
+    csa_tree(nl, &partials)
+}
+
+/// QRelu(8) on a signed bus: `clamp(z >> t, 0, 255)`.
+///
+/// out_i = ~sign & (overflow | z_{t+i}), overflow = OR of magnitude bits
+/// above the 8-bit window (nullification ANDs + clipping ORs — the "few
+/// AND/OR gates" of paper §III-C1).
+pub fn qrelu(nl: &mut Netlist, z: &Bus, t: u32, act_bits: u32) -> Bus {
+    let w = z.len();
+    assert!(w >= 2, "qrelu needs a signed bus");
+    let sign = z[w - 1];
+    let not_sign = nl.not(sign);
+    // Overflow: any magnitude bit above the window (excluding sign).
+    let hi_lo = (t + act_bits) as usize;
+    let mut overflow = nl.constant(false);
+    for &bit in z.iter().take(w - 1).skip(hi_lo.min(w - 1)) {
+        overflow = nl.or(overflow, bit);
+    }
+    let zero = nl.constant(false);
+    (0..act_bits)
+        .map(|i| {
+            let idx = (t + i) as usize;
+            let v = if idx < w - 1 { z[idx] } else { zero };
+            let v_or_ovf = nl.or(v, overflow);
+            nl.and(not_sign, v_or_ovf)
+        })
+        .collect()
+}
+
+/// Unsigned masked comparator: `sel = (B > A)` comparing only the bit
+/// positions set in `mask` (the approximate-Argmax comparator).
+///
+/// Ripple from LSB to MSB over the masked positions:
+/// `gt = b & ~a | (b ⊙ a) & gt_prev` — one stage per compared bit, so a
+/// 4-bit subset instantiates a 4-bit comparator (Table IV's size cut).
+pub fn masked_gt(nl: &mut Netlist, a: &Bus, b: &Bus, mask: u64) -> NodeId {
+    let mut gt = nl.constant(false);
+    for i in 0..a.len().max(b.len()) {
+        if (mask >> i) & 1 == 0 {
+            continue;
+        }
+        let zero = nl.constant(false);
+        let ai = a.get(i).copied().unwrap_or(zero);
+        let bi = b.get(i).copied().unwrap_or(zero);
+        let na = nl.not(ai);
+        let b_gt = nl.and(bi, na);
+        let eq = nl.xnor(ai, bi);
+        let keep = nl.and(eq, gt);
+        gt = nl.or(b_gt, keep);
+    }
+    gt
+}
+
+/// 2:1 bus mux: `sel ? b : a`.
+pub fn mux_bus(nl: &mut Netlist, sel: NodeId, a: &Bus, b: &Bus) -> Bus {
+    let width = a.len().max(b.len()) as u32;
+    let a = resize(nl, a, width);
+    let b = resize(nl, b, width);
+    (0..width as usize).map(|i| nl.mux(sel, a[i], b[i])).collect()
+}
+
+/// Convert a signed two's-complement bus to the biased (offset-binary)
+/// form used by the argmax comparators: flip the sign bit.
+pub fn bias_signed(nl: &mut Netlist, z: &Bus) -> Bus {
+    let mut out = z.clone();
+    let w = out.len();
+    out[w - 1] = nl.not(z[w - 1]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::eval;
+    use crate::util::prop;
+
+    fn bus_value(bits: &[bool]) -> u64 {
+        bits.iter().enumerate().map(|(i, &b)| (b as u64) << i).sum()
+    }
+
+    fn to_bits(v: u64, w: u32) -> Vec<bool> {
+        (0..w).map(|i| (v >> i) & 1 == 1).collect()
+    }
+
+    #[test]
+    fn adder_exhaustive_4bit() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus(4);
+        let b = nl.input_bus(4);
+        let s = adder(&mut nl, &a, &b);
+        nl.output("s", s);
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                let mut inputs = to_bits(x, 4);
+                inputs.extend(to_bits(y, 4));
+                let out = eval(&nl, &inputs);
+                assert_eq!(bus_value(&out["s"]), x + y, "{x}+{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_csa_tree_sums() {
+        prop::check("csa tree sums", |rng, _| {
+            let n = 1 + rng.below(8);
+            let w = 3 + rng.below(5) as u32;
+            let vals: Vec<u64> = (0..n).map(|_| rng.below(1 << w) as u64).collect();
+            let mut nl = Netlist::new();
+            let buses: Vec<Bus> = vals.iter().map(|_| nl.input_bus(w)).collect();
+            let s = csa_tree(&mut nl, &buses);
+            nl.output("s", s);
+            let mut inputs = Vec::new();
+            for &v in &vals {
+                inputs.extend(to_bits(v, w));
+            }
+            let out = eval(&nl, &inputs);
+            let expect: u64 = vals.iter().sum();
+            if bus_value(&out["s"]) != expect {
+                return Err(format!("{vals:?} -> {} != {expect}", bus_value(&out["s"])));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_subtractor_signed() {
+        prop::check("subtractor", |rng, _| {
+            let w = 6u32;
+            let x = rng.below(1 << w) as i64;
+            let y = rng.below(1 << w) as i64;
+            let mut nl = Netlist::new();
+            let a = nl.input_bus(w);
+            let b = nl.input_bus(w);
+            let d = subtractor(&mut nl, &a, &b);
+            nl.output("d", d.clone());
+            let mut inputs = to_bits(x as u64, w);
+            inputs.extend(to_bits(y as u64, w));
+            let out = eval(&nl, &inputs);
+            let raw = bus_value(&out["d"]);
+            // Interpret as signed (w+1 bits).
+            let width = d.len() as u32;
+            let signed = if (raw >> (width - 1)) & 1 == 1 {
+                raw as i64 - (1i64 << width)
+            } else {
+                raw as i64
+            };
+            if signed != x - y {
+                return Err(format!("{x}-{y} = {signed}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_const_mul() {
+        prop::check("const mul", |rng, _| {
+            let w = 4u32;
+            let x = rng.below(1 << w) as u64;
+            let k = rng.below(256) as u64;
+            let mut nl = Netlist::new();
+            let a = nl.input_bus(w);
+            let p = const_mul(&mut nl, &a, k);
+            nl.output("p", p);
+            let out = eval(&nl, &to_bits(x, w));
+            if bus_value(&out["p"]) != x * k {
+                return Err(format!("{x}*{k} = {}", bus_value(&out["p"])));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qrelu_matches_model() {
+        // 10-bit signed z, t=2, 4-bit activations for a compact check.
+        let w = 10u32;
+        let t = 2u32;
+        let act = 4u32;
+        let mut nl = Netlist::new();
+        let z = nl.input_bus(w);
+        let h = qrelu(&mut nl, &z, t, act);
+        nl.output("h", h);
+        for val in -512i64..512 {
+            let raw = (val & ((1i64 << w) - 1)) as u64;
+            let out = eval(&nl, &to_bits(raw, w));
+            let got = bus_value(&out["h"]);
+            let expect = if val <= 0 {
+                0
+            } else {
+                ((val >> t) as u64).min((1 << act) - 1)
+            };
+            assert_eq!(got, expect, "val={val}");
+        }
+    }
+
+    #[test]
+    fn prop_masked_gt() {
+        prop::check("masked comparator", |rng, _| {
+            let w = 8u32;
+            let x = rng.below(1 << w) as u64;
+            let y = rng.below(1 << w) as u64;
+            let mask = rng.below(1 << w) as u64;
+            let mut nl = Netlist::new();
+            let a = nl.input_bus(w);
+            let b = nl.input_bus(w);
+            let gt = masked_gt(&mut nl, &a, &b, mask);
+            nl.output("gt", vec![gt]);
+            let mut inputs = to_bits(x, w);
+            inputs.extend(to_bits(y, w));
+            let out = eval(&nl, &inputs);
+            let expect = (y & mask) > (x & mask);
+            if out["gt"][0] != expect {
+                return Err(format!("x={x} y={y} mask={mask:#b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mux_bus_selects() {
+        let mut nl = Netlist::new();
+        let sel = nl.input();
+        let a = nl.input_bus(3);
+        let b = nl.input_bus(3);
+        let m = mux_bus(&mut nl, sel, &a, &b);
+        nl.output("m", m);
+        // sel=0 -> a (=5), sel=1 -> b (=2)
+        let mut inputs = vec![false];
+        inputs.extend(to_bits(5, 3));
+        inputs.extend(to_bits(2, 3));
+        assert_eq!(bus_value(&eval(&nl, &inputs)["m"]), 5);
+        inputs[0] = true;
+        assert_eq!(bus_value(&eval(&nl, &inputs)["m"]), 2);
+    }
+
+    #[test]
+    fn shl_is_wiring() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus(3);
+        let before = nl.cell_count();
+        let s = shl(&mut nl, &a, 4);
+        assert_eq!(nl.cell_count(), before, "shift must not add cells");
+        assert_eq!(s.len(), 7);
+    }
+}

@@ -1,0 +1,324 @@
+//! Bespoke MLP circuit generator — the "HDL description" stage of the
+//! paper's flow (Fig. 1), at the gate level.
+//!
+//! Generates the fully-parallel (one inference per cycle) bespoke circuit
+//! of a quantized MLP: per neuron, the positive and negative power-of-2
+//! summands feed two carry-save adder trees (shifts are wiring), the two
+//! sums meet in one subtractor, the hidden layer applies QRelu(8), and
+//! the output layer ends in an (exact or approximate) Argmax comparator
+//! tree. Summand bits removed by the accumulation approximation become
+//! `Const(false)` wires for `crate::synth` to sweep — exactly the
+//! mechanism of paper §III-D.
+
+use crate::argmax::ArgmaxPlan;
+use crate::fixedpoint::{bits_for, ACT_BITS};
+use crate::model::{MaskSet, QuantLayer, QuantMlp};
+use crate::netlist::build::{
+    bias_signed, const_bus, masked_gt, mux_bus, qrelu, resize, shl, sign_extend, subtractor,
+};
+use crate::netlist::{build, Bus, Netlist};
+
+/// How the circuit terminates.
+#[derive(Clone, Debug)]
+pub enum ArgmaxMode {
+    /// Expose the raw output-layer pre-activations (for equivalence
+    /// tests and for the argmax search itself).
+    Raw,
+    /// Exact comparator tree (adjacent pairing, full width).
+    Exact,
+    /// Approximate plan from `crate::argmax`.
+    Plan(ArgmaxPlan),
+}
+
+/// Circuit generation options.
+#[derive(Clone, Debug)]
+pub struct MlpCircuitOpts {
+    /// Summand-bit masks (accumulation approximation); `None` = exact.
+    pub masks: Option<MaskSet>,
+    pub argmax: ArgmaxMode,
+}
+
+impl Default for MlpCircuitOpts {
+    fn default() -> Self {
+        MlpCircuitOpts { masks: None, argmax: ArgmaxMode::Exact }
+    }
+}
+
+/// Build the bespoke circuit of a quantized MLP.
+///
+/// Inputs: `n_in` 4-bit buses in feature order (LSB first each).
+/// Outputs: `class` (the argmax index) and, in `Raw` mode, one signed
+/// `z<m>` bus per output neuron.
+pub fn build_mlp_circuit(mlp: &QuantMlp, opts: &MlpCircuitOpts) -> Netlist {
+    let mut nl = Netlist::new();
+    let x: Vec<Bus> = (0..mlp.topo.n_in).map(|_| nl.input_bus(mlp.l1.in_bits)).collect();
+
+    // ---- hidden layer ---------------------------------------------------
+    let mut h: Vec<Bus> = Vec::with_capacity(mlp.topo.n_hidden);
+    for n in 0..mlp.topo.n_hidden {
+        let z = neuron_preact_bus(
+            &mut nl,
+            &mlp.l1,
+            n,
+            &x,
+            opts.masks.as_ref().map(|m| (&m.m1[..], &m.mb1[..])),
+        );
+        h.push(qrelu(&mut nl, &z, mlp.act_shift, ACT_BITS));
+    }
+
+    // ---- output layer ----------------------------------------------------
+    let width = mlp.output_width();
+    let mut z2: Vec<Bus> = Vec::with_capacity(mlp.topo.n_out);
+    for m in 0..mlp.topo.n_out {
+        let z = neuron_preact_bus(
+            &mut nl,
+            &mlp.l2,
+            m,
+            &h,
+            opts.masks.as_ref().map(|ms| (&ms.m2[..], &ms.mb2[..])),
+        );
+        z2.push(sign_extend(&mut nl, &z, width));
+    }
+
+    // ---- activation of the output layer (argmax) -------------------------
+    match &opts.argmax {
+        ArgmaxMode::Raw => {
+            for (m, z) in z2.iter().enumerate() {
+                nl.output(&format!("z{m}"), z.clone());
+            }
+        }
+        ArgmaxMode::Exact => {
+            let plan = ArgmaxPlan::exact(mlp.topo.n_out, width);
+            let class = argmax_tree(&mut nl, &z2, &plan);
+            nl.output("class", class);
+        }
+        ArgmaxMode::Plan(plan) => {
+            assert_eq!(plan.n, mlp.topo.n_out);
+            assert_eq!(plan.width, width, "plan width must match circuit width");
+            let class = argmax_tree(&mut nl, &z2, plan);
+            nl.output("class", class);
+        }
+    }
+    nl
+}
+
+/// One neuron's pre-activation bus: two CSA trees (pos/neg) + subtract.
+fn neuron_preact_bus(
+    nl: &mut Netlist,
+    layer: &QuantLayer,
+    n: usize,
+    inputs: &[Bus],
+    masks: Option<(&[u32], &[bool])>,
+) -> Bus {
+    let mut pos: Vec<Bus> = Vec::new();
+    let mut neg: Vec<Bus> = Vec::new();
+    for (j, input) in inputs.iter().enumerate() {
+        let w = layer.weight(n, j);
+        if w.sign == 0 {
+            continue;
+        }
+        // Apply the summand-bit mask: removed bits become constant zero.
+        let mask = masks.map(|(m, _)| m[n * layer.n_in + j]).unwrap_or(u32::MAX);
+        let masked: Bus = input
+            .iter()
+            .enumerate()
+            .map(|(b, &bit)| if (mask >> b) & 1 == 1 { bit } else { nl.constant(false) })
+            .collect();
+        let summand = shl(nl, &masked, w.shift as u32);
+        if w.sign > 0 {
+            pos.push(summand);
+        } else {
+            neg.push(summand);
+        }
+    }
+    let bias = layer.bias[n];
+    let bias_kept = masks.map(|(_, bk)| bk[n]).unwrap_or(true);
+    if bias.is_nonzero() && bias_kept {
+        let bus = const_bus(nl, 1u64 << bias.shift, bias.shift as u32 + 1);
+        if bias.sign > 0 {
+            pos.push(bus);
+        } else {
+            neg.push(bus);
+        }
+    }
+    let psum = build::csa_tree(nl, &pos);
+    let nsum = build::csa_tree(nl, &neg);
+    // Width: enough for the worst-case unmasked sums (masking only
+    // shrinks values, so this is always sufficient).
+    let (pmax, nmax) = layer.tree_max(n);
+    let w = bits_for(pmax.max(nmax)).max(1);
+    let psum = resize(nl, &psum, w);
+    let nsum = resize(nl, &nsum, w);
+    subtractor(nl, &psum, &nsum)
+}
+
+/// Instantiate an argmax comparator tree per an [`ArgmaxPlan`]: slots
+/// carry (biased value bus, index bus); each comparator is a masked
+/// unsigned comparator + value/index muxes.
+fn argmax_tree(nl: &mut Netlist, z: &[Bus], plan: &ArgmaxPlan) -> Bus {
+    let idx_width = bits_for((z.len().max(2) - 1) as u64);
+    let mut slots: Vec<(Bus, Bus)> = z
+        .iter()
+        .enumerate()
+        .map(|(i, bus)| {
+            let biased = bias_signed(nl, bus);
+            let index = const_bus(nl, i as u64, idx_width);
+            (biased, index)
+        })
+        .collect();
+    for stage in &plan.stages {
+        let mut used = vec![false; slots.len()];
+        let mut next: Vec<(Bus, Bus)> = Vec::with_capacity(stage.len() + 1);
+        for cmp in stage {
+            let (va, ia) = slots[cmp.a].clone();
+            let (vb, ib) = slots[cmp.b].clone();
+            used[cmp.a] = true;
+            used[cmp.b] = true;
+            let sel = masked_gt(nl, &va, &vb, cmp.mask); // sel=1 -> b wins
+            let val = mux_bus(nl, sel, &va, &vb);
+            let idx = mux_bus(nl, sel, &ia, &ib);
+            next.push((val, idx));
+        }
+        for (k, slot) in slots.iter().enumerate() {
+            if !used[k] {
+                next.push(slot.clone());
+            }
+        }
+        slots = next;
+    }
+    slots[0].1.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accum::GenomeMap;
+    use crate::config::builtin;
+    use crate::datasets;
+    use crate::model::float_mlp::TrainOpts;
+    use crate::model::FloatMlp;
+    use crate::sim::{bus_to_i64, bus_to_u64, eval};
+    use crate::synth::optimize;
+    use crate::util::Rng;
+
+    fn tiny_qmlp() -> (QuantMlp, crate::datasets::QuantDataset) {
+        let cfg = builtin::tiny();
+        let (split, qtrain, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 25, ..Default::default() });
+        (QuantMlp::from_float(&mlp, &qtrain), qtrain)
+    }
+
+    fn encode_inputs(x: &[u32], bits: u32) -> Vec<bool> {
+        let mut v = Vec::new();
+        for &xi in x {
+            for b in 0..bits {
+                v.push((xi >> b) & 1 == 1);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn raw_circuit_matches_integer_model() {
+        let (qmlp, qtrain) = tiny_qmlp();
+        let nl = build_mlp_circuit(
+            &qmlp,
+            &MlpCircuitOpts { masks: None, argmax: ArgmaxMode::Raw },
+        );
+        for row in qtrain.x.iter().take(30) {
+            let (_, z_model) = qmlp.forward(row);
+            let out = eval(&nl, &encode_inputs(row, 4));
+            for (m, &zm) in z_model.iter().enumerate() {
+                let z_hw = bus_to_i64(&out[&format!("z{m}")]);
+                assert_eq!(z_hw, zm, "neuron {m} sample mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_argmax_circuit_matches_predict() {
+        let (qmlp, qtrain) = tiny_qmlp();
+        let nl = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
+        for row in qtrain.x.iter().take(30) {
+            let expect = qmlp.predict(row, None);
+            let out = eval(&nl, &encode_inputs(row, 4));
+            assert_eq!(bus_to_u64(&out["class"]) as usize, expect);
+        }
+    }
+
+    #[test]
+    fn masked_circuit_matches_masked_model() {
+        let (qmlp, qtrain) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let mut rng = Rng::new(9);
+        for trial in 0..5 {
+            let genome = map.random_genome(&mut rng, 0.7);
+            let masks = map.to_masks(&genome);
+            let nl = build_mlp_circuit(
+                &qmlp,
+                &MlpCircuitOpts {
+                    masks: Some(masks.clone()),
+                    argmax: ArgmaxMode::Raw,
+                },
+            );
+            let (opt, _) = optimize(&nl);
+            for row in qtrain.x.iter().take(10) {
+                let (_, z_model) = qmlp.forward_masked(row, Some(&masks));
+                let out = eval(&opt, &encode_inputs(row, 4));
+                for (m, &zm) in z_model.iter().enumerate() {
+                    assert_eq!(
+                        bus_to_i64(&out[&format!("z{m}")]),
+                        zm,
+                        "trial {trial} neuron {m}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synthesis_shrinks_masked_circuits() {
+        let (qmlp, _) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let exact_nl = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
+        let (exact_opt, _) = optimize(&exact_nl);
+        // Remove half the summand bits.
+        let mut rng = Rng::new(4);
+        let genome = map.random_genome(&mut rng, 0.5);
+        let masks = map.to_masks(&genome);
+        let approx_nl = build_mlp_circuit(
+            &qmlp,
+            &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Exact },
+        );
+        let (approx_opt, _) = optimize(&approx_nl);
+        assert!(
+            approx_opt.cell_count() < exact_opt.cell_count(),
+            "approx {} !< exact {}",
+            approx_opt.cell_count(),
+            exact_opt.cell_count()
+        );
+    }
+
+    #[test]
+    fn approximate_argmax_circuit_matches_plan() {
+        let (qmlp, qtrain) = tiny_qmlp();
+        let preacts = qmlp.output_preacts(&qtrain, None);
+        let plan = crate::argmax::build_plan(
+            &preacts,
+            &qtrain.y,
+            qmlp.output_width(),
+            &crate::argmax::ArgmaxSearchOpts::default(),
+        );
+        let nl = build_mlp_circuit(
+            &qmlp,
+            &MlpCircuitOpts { masks: None, argmax: ArgmaxMode::Plan(plan.clone()) },
+        );
+        let (opt, _) = optimize(&nl);
+        for (row, z) in qtrain.x.iter().zip(&preacts).take(50) {
+            let expect = plan.predict(z);
+            let out = eval(&opt, &encode_inputs(row, 4));
+            assert_eq!(bus_to_u64(&out["class"]) as usize, expect);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Gate-level netlist IR and combinational circuit builders.
+//!
+//! This is the "RTL + synthesis front-end" substrate that replaces the
+//! commercial EDA flow of the paper (Synopsys DC + VCS): the bespoke MLP
+//! circuit generators emit gates directly, `crate::synth` optimizes them
+//! (constant propagation, structural hashing, dead-gate elimination —
+//! the mechanisms the paper's approximation explicitly leans on), the
+//! EGFET library (`crate::egfet`) provides area/power/delay, and
+//! `crate::sim` provides functional simulation for equivalence checking.
+//!
+//! Invariant: gate operands always refer to earlier node ids, so the
+//! gate list is topologically ordered by construction — simulation and
+//! timing are single forward passes.
+
+pub mod build;
+pub mod mlp;
+
+/// Node id in a netlist.
+pub type NodeId = u32;
+
+/// A combinational gate (2-input cells + inverter + mux, matching the
+/// printed EGFET standard-cell library).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// Primary input (index into the input vector).
+    Input(u32),
+    /// Constant 0/1 (hardwired — free after synthesis).
+    Const(bool),
+    Not(NodeId),
+    And(NodeId, NodeId),
+    Or(NodeId, NodeId),
+    Xor(NodeId, NodeId),
+    Nand(NodeId, NodeId),
+    Nor(NodeId, NodeId),
+    Xnor(NodeId, NodeId),
+    /// `Mux(sel, a, b)` = `sel ? b : a`.
+    Mux(NodeId, NodeId, NodeId),
+}
+
+impl Gate {
+    /// Operand ids of this gate.
+    pub fn operands(&self) -> impl Iterator<Item = NodeId> {
+        let (a, b, c) = match *self {
+            Gate::Input(_) | Gate::Const(_) => (None, None, None),
+            Gate::Not(x) => (Some(x), None, None),
+            Gate::And(x, y)
+            | Gate::Or(x, y)
+            | Gate::Xor(x, y)
+            | Gate::Nand(x, y)
+            | Gate::Nor(x, y)
+            | Gate::Xnor(x, y) => (Some(x), Some(y), None),
+            Gate::Mux(s, x, y) => (Some(s), Some(x), Some(y)),
+        };
+        [a, b, c].into_iter().flatten()
+    }
+
+    /// True for nodes that occupy silicon (not inputs/constants).
+    pub fn is_cell(&self) -> bool {
+        !matches!(self, Gate::Input(_) | Gate::Const(_))
+    }
+}
+
+/// A combinational netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub gates: Vec<Gate>,
+    /// Named output buses: `(name, bits LSB-first)`.
+    pub outputs: Vec<(String, Vec<NodeId>)>,
+    pub n_inputs: u32,
+}
+
+/// A bus is a vector of node ids, LSB first.
+pub type Bus = Vec<NodeId>;
+
+impl Netlist {
+    pub fn new() -> Netlist {
+        Netlist::default()
+    }
+
+    fn push(&mut self, g: Gate) -> NodeId {
+        debug_assert!(g.operands().all(|o| (o as usize) < self.gates.len()));
+        self.gates.push(g);
+        (self.gates.len() - 1) as NodeId
+    }
+
+    /// Allocate the next primary input bit.
+    pub fn input(&mut self) -> NodeId {
+        let idx = self.n_inputs;
+        self.n_inputs += 1;
+        self.push(Gate::Input(idx))
+    }
+
+    /// Allocate an input bus of `width` bits (LSB first).
+    pub fn input_bus(&mut self, width: u32) -> Bus {
+        (0..width).map(|_| self.input()).collect()
+    }
+
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.push(Gate::Const(v))
+    }
+
+    pub fn not(&mut self, a: NodeId) -> NodeId {
+        self.push(Gate::Not(a))
+    }
+    pub fn and(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Gate::And(a, b))
+    }
+    pub fn or(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Gate::Or(a, b))
+    }
+    pub fn xor(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Gate::Xor(a, b))
+    }
+    pub fn nand(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Gate::Nand(a, b))
+    }
+    pub fn nor(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Gate::Nor(a, b))
+    }
+    pub fn xnor(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Gate::Xnor(a, b))
+    }
+    pub fn mux(&mut self, sel: NodeId, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Gate::Mux(sel, a, b))
+    }
+
+    /// Register an output bus.
+    pub fn output(&mut self, name: &str, bus: Bus) {
+        self.outputs.push((name.to_string(), bus));
+    }
+
+    /// Total gate nodes including inputs/constants.
+    pub fn len(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gates.is_empty()
+    }
+
+    /// Number of real cells (excluding inputs and constants).
+    pub fn cell_count(&self) -> usize {
+        self.gates.iter().filter(|g| g.is_cell()).count()
+    }
+
+    /// Per-gate-kind cell counts `(not, and, or, xor, nand, nor, xnor, mux)`.
+    pub fn cell_histogram(&self) -> CellCounts {
+        let mut c = CellCounts::default();
+        for g in &self.gates {
+            match g {
+                Gate::Not(_) => c.not += 1,
+                Gate::And(..) => c.and += 1,
+                Gate::Or(..) => c.or += 1,
+                Gate::Xor(..) => c.xor += 1,
+                Gate::Nand(..) => c.nand += 1,
+                Gate::Nor(..) => c.nor += 1,
+                Gate::Xnor(..) => c.xnor += 1,
+                Gate::Mux(..) => c.mux += 1,
+                _ => {}
+            }
+        }
+        c
+    }
+
+    /// Logic depth (levels) per node; level of inputs/constants is 0.
+    pub fn levels(&self) -> Vec<u32> {
+        let mut lv = vec![0u32; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            if g.is_cell() {
+                lv[i] = g.operands().map(|o| lv[o as usize]).max().unwrap_or(0) + 1;
+            }
+        }
+        lv
+    }
+
+    /// Maximum logic depth over the output cone.
+    pub fn depth(&self) -> u32 {
+        let lv = self.levels();
+        self.outputs
+            .iter()
+            .flat_map(|(_, bus)| bus.iter())
+            .map(|&n| lv[n as usize])
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Cell counts per kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CellCounts {
+    pub not: usize,
+    pub and: usize,
+    pub or: usize,
+    pub xor: usize,
+    pub nand: usize,
+    pub nor: usize,
+    pub xnor: usize,
+    pub mux: usize,
+}
+
+impl CellCounts {
+    pub fn total(&self) -> usize {
+        self.not + self.and + self.or + self.xor + self.nand + self.nor + self.xnor + self.mux
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topological_invariant() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.and(a, b);
+        let d = nl.xor(c, a);
+        nl.output("y", vec![d]);
+        for (i, g) in nl.gates.iter().enumerate() {
+            for o in g.operands() {
+                assert!((o as usize) < i);
+            }
+        }
+    }
+
+    #[test]
+    fn cell_counts_exclude_io() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let k = nl.constant(true);
+        let c = nl.and(a, b);
+        let d = nl.or(c, k);
+        nl.output("y", vec![d]);
+        assert_eq!(nl.cell_count(), 2);
+        let h = nl.cell_histogram();
+        assert_eq!(h.and, 1);
+        assert_eq!(h.or, 1);
+        assert_eq!(h.total(), 2);
+    }
+
+    #[test]
+    fn depth_computation() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.and(a, b); // level 1
+        let d = nl.or(c, b); // level 2
+        let e = nl.xor(d, c); // level 3
+        nl.output("y", vec![e]);
+        assert_eq!(nl.depth(), 3);
+    }
+
+    #[test]
+    fn input_indices_sequential() {
+        let mut nl = Netlist::new();
+        let bus = nl.input_bus(4);
+        assert_eq!(bus.len(), 4);
+        assert_eq!(nl.n_inputs, 4);
+        match nl.gates[bus[3] as usize] {
+            Gate::Input(3) => {}
+            ref g => panic!("expected Input(3), got {g:?}"),
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Reporting: fixed-width table rendering, normalization against the
+//! exact baseline [8], and JSON export of pipeline results — the output
+//! side of the framework (what the paper presents as Tables II-V and
+//! Figs. 4-5).
+
+use crate::coordinator::PipelineResult;
+use crate::egfet::HwReport;
+use crate::util::json::Json;
+
+/// Render a fixed-width text table.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<width$}  ", cell, width = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// `x` formatted as a gain factor ("12.5x") against a reference.
+pub fn factor(reference: f64, value: f64) -> String {
+    if value <= 0.0 {
+        return "inf".to_string();
+    }
+    format!("{:.1}x", reference / value)
+}
+
+/// Compact hardware summary cell.
+pub fn hw_cell(hw: &HwReport) -> String {
+    format!("{:.3} cm2 / {:.3} mW", hw.area_cm2, hw.power_mw)
+}
+
+/// Serialize a pipeline result for downstream tooling.
+pub fn result_to_json(r: &PipelineResult) -> Json {
+    let designs: Vec<Json> = r
+        .designs
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("acc_test_accum", Json::num(d.acc_test_accum)),
+                ("acc_test_full", Json::num(d.acc_test_full)),
+                ("acc_train", Json::num(d.acc_train)),
+                ("area_fa", Json::num(d.area_fa as f64)),
+                ("area_cm2", Json::num(d.hw_full.area_cm2)),
+                ("power_mw", Json::num(d.hw_full.power_mw)),
+                ("delay_ms", Json::num(d.hw_full.delay_ms)),
+                ("area_cm2_0p6v", Json::num(d.hw_0p6v.area_cm2)),
+                ("power_mw_0p6v", Json::num(d.hw_0p6v.power_mw)),
+                ("power_source", Json::str(d.power_source.label())),
+                (
+                    "argmax_avg_bits",
+                    Json::num(d.argmax_plan.comparator_stats().0),
+                ),
+                ("kept_bits", Json::num(d.genome.count_ones() as f64)),
+                ("genome_len", Json::num(d.genome.len() as f64)),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("dataset", Json::str(&r.cfg.dataset.name)),
+        (
+            "topology",
+            Json::arr(vec![
+                Json::num(r.cfg.topology.n_in as f64),
+                Json::num(r.cfg.topology.n_hidden as f64),
+                Json::num(r.cfg.topology.n_out as f64),
+            ]),
+        ),
+        ("backend", Json::str(r.backend_used)),
+        ("acc_float_test", Json::num(r.trained.acc_float_test)),
+        ("acc_qat_test", Json::num(r.trained.acc_q_test)),
+        ("baseline_acc_test", Json::num(r.baseline_acc_test)),
+        (
+            "qat_hw",
+            Json::obj(vec![
+                ("area_cm2", Json::num(r.qat_hw.area_cm2)),
+                ("power_mw", Json::num(r.qat_hw.power_mw)),
+                ("delay_ms", Json::num(r.qat_hw.delay_ms)),
+            ]),
+        ),
+        ("designs", Json::arr(designs)),
+        (
+            "front",
+            Json::arr(
+                r.front
+                    .iter()
+                    .map(|i| Json::arr(vec![Json::num(i.objs[0]), Json::num(i.objs[1])]))
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(hw) = &r.baseline_hw {
+        fields.push((
+            "baseline_hw",
+            Json::obj(vec![
+                ("area_cm2", Json::num(hw.area_cm2)),
+                ("power_mw", Json::num(hw.power_mw)),
+                ("delay_ms", Json::num(hw.delay_ms)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "demo",
+            &["name", "value"],
+            &[
+                vec!["cardio".into(), "1.0".into()],
+                vec!["breastcancer".into(), "22".into()],
+            ],
+        );
+        assert!(t.contains("== demo =="));
+        assert!(t.contains("cardio"));
+        // Header padded to the longest cell.
+        let lines: Vec<&str> = t.lines().collect();
+        let head_idx = lines.iter().position(|l| l.starts_with("name")).unwrap();
+        assert!(lines[head_idx].contains("value"));
+    }
+
+    #[test]
+    fn factor_formatting() {
+        assert_eq!(factor(100.0, 10.0), "10.0x");
+        assert_eq!(factor(5.0, 2.0), "2.5x");
+        assert_eq!(factor(1.0, 0.0), "inf");
+    }
+}

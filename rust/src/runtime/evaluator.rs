@@ -1,0 +1,294 @@
+//! GA chromosome evaluators — the hot path of the framework.
+//!
+//! Two interchangeable implementations of [`crate::ga::Evaluator`]:
+//!
+//! * [`PjrtEvaluator`] — the three-layer architecture's path: batches of
+//!   chromosomes are packed into mask tensors and dispatched to the
+//!   AOT-compiled `masked_acc_<ds>` program (Layer-2 JAX calling the
+//!   Layer-1 Pallas masked-MAC kernel) through PJRT. Python is not
+//!   involved at run time.
+//! * [`NativeEvaluator`] — the pure-Rust integer model, thread-parallel.
+//!   Used for cross-checking the PJRT path bit-exactly and as the
+//!   fallback when artifacts are absent.
+//!
+//! Both return the objective pair `[accuracy_loss, estimated_area]` the
+//! NSGA-II optimizer minimizes (paper §III-D1/D2/D3).
+
+use crate::accum::GenomeMap;
+use crate::area::AreaModel;
+use crate::datasets::QuantDataset;
+use crate::ga::Evaluator;
+use crate::model::QuantMlp;
+use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Runtime};
+use crate::util::{threads, BitVec};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Flattened i32 views of a quantized MLP (what the artifacts consume).
+#[derive(Clone, Debug)]
+pub struct QuantInts {
+    pub w1_sign: Vec<i32>,
+    pub w1_shift: Vec<i32>,
+    pub b1_val: Vec<i32>,
+    pub w2_sign: Vec<i32>,
+    pub w2_shift: Vec<i32>,
+    pub b2_val: Vec<i32>,
+    pub act_shift: i32,
+}
+
+impl QuantInts {
+    pub fn from_mlp(mlp: &QuantMlp) -> QuantInts {
+        let conv = |layer: &crate::model::QuantLayer| {
+            let sign: Vec<i32> = layer.w.iter().map(|w| w.sign as i32).collect();
+            let shift: Vec<i32> = layer.w.iter().map(|w| w.shift as i32).collect();
+            let bias: Vec<i32> = layer.bias.iter().map(|b| b.int_value() as i32).collect();
+            (sign, shift, bias)
+        };
+        let (w1_sign, w1_shift, b1_val) = conv(&mlp.l1);
+        let (w2_sign, w2_shift, b2_val) = conv(&mlp.l2);
+        QuantInts {
+            w1_sign,
+            w1_shift,
+            b1_val,
+            w2_sign,
+            w2_shift,
+            b2_val,
+            act_shift: mlp.act_shift as i32,
+        }
+    }
+}
+
+/// The PJRT-backed evaluator.
+pub struct PjrtEvaluator {
+    exe: Arc<Executable>,
+    /// Population tile of the artifact.
+    p: usize,
+    n_real: usize,
+    mlp: QuantMlp,
+    map: GenomeMap,
+    area: AreaModel,
+    base_acc: f64,
+    // Pre-built literals reused across every dispatch.
+    fixed_args: Vec<xla::Literal>,
+    dims: (usize, usize, usize, usize), // (B, N0, H, O)
+}
+
+impl PjrtEvaluator {
+    /// Build an evaluator for `name` over the quantized train set.
+    ///
+    /// `base_acc` is the exact (unmasked) train accuracy the loss is
+    /// measured against.
+    pub fn new(
+        runtime: &Runtime,
+        name: &str,
+        mlp: &QuantMlp,
+        train: &QuantDataset,
+        base_acc: f64,
+    ) -> Result<PjrtEvaluator> {
+        let entry = runtime.entry(name)?.clone();
+        anyhow::ensure!(
+            entry.n_in == mlp.topo.n_in
+                && entry.n_hidden == mlp.topo.n_hidden
+                && entry.n_out == mlp.topo.n_out,
+            "artifact topology mismatch for '{name}'"
+        );
+        let b = entry.eval_batch;
+        anyhow::ensure!(
+            train.n_samples() <= b,
+            "train set ({}) exceeds artifact eval batch ({b})",
+            train.n_samples()
+        );
+        let exe = runtime.load(&format!("masked_acc_{name}"))?;
+        let (n0, h, o) = (entry.n_in, entry.n_hidden, entry.n_out);
+
+        // Pad inputs to B rows; padding labels are -1 (never correct).
+        let mut x_flat = vec![0i32; b * n0];
+        let mut labels = vec![-1i32; b];
+        for (i, row) in train.x.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                x_flat[i * n0 + j] = v as i32;
+            }
+            labels[i] = train.y[i] as i32;
+        }
+
+        let ints = QuantInts::from_mlp(mlp);
+        let fixed_args = vec![
+            lit_i32(&x_flat, &[b as i64, n0 as i64])?,
+            lit_i32(&labels, &[b as i64])?,
+            lit_i32(&ints.w1_sign, &[h as i64, n0 as i64])?,
+            lit_i32(&ints.w1_shift, &[h as i64, n0 as i64])?,
+            lit_i32(&ints.b1_val, &[h as i64])?,
+            // mb1 slot is per-batch (index 5) — placeholder replaced per call.
+            lit_i32(&ints.w2_sign, &[o as i64, h as i64])?,
+            lit_i32(&ints.w2_shift, &[o as i64, h as i64])?,
+            lit_i32(&ints.b2_val, &[o as i64])?,
+        ];
+        let map = GenomeMap::new(mlp);
+        let area = AreaModel::new(&map);
+        Ok(PjrtEvaluator {
+            exe,
+            p: runtime.manifest.p_tile,
+            n_real: train.n_samples(),
+            mlp: mlp.clone(),
+            map,
+            area,
+            base_acc,
+            fixed_args,
+            dims: (b, n0, h, o),
+        })
+    }
+
+    /// The genome map (shared with the coordinator for mask decoding).
+    pub fn genome_map(&self) -> &GenomeMap {
+        &self.map
+    }
+
+    /// Evaluate one tile of up to `p` genomes; returns train accuracies.
+    fn eval_tile(&self, genomes: &[&BitVec]) -> Result<Vec<f64>> {
+        let (_, n0, h, o) = self.dims;
+        let p = self.p;
+        assert!(genomes.len() <= p);
+        let exact = self.map.exact_genome();
+        let mut m1 = vec![0i32; p * h * n0];
+        let mut mb1 = vec![0i32; p * h];
+        let mut m2 = vec![0i32; p * o * h];
+        let mut mb2 = vec![0i32; p * o];
+        for pi in 0..p {
+            let genome = genomes.get(pi).copied().unwrap_or(&exact);
+            let masks = self.map.to_masks(genome);
+            for (k, &m) in masks.m1.iter().enumerate() {
+                m1[pi * h * n0 + k] = m as i32;
+            }
+            for (k, &keep) in masks.mb1.iter().enumerate() {
+                mb1[pi * h + k] = keep as i32;
+            }
+            for (k, &m) in masks.m2.iter().enumerate() {
+                m2[pi * o * h + k] = m as i32;
+            }
+            for (k, &keep) in masks.mb2.iter().enumerate() {
+                mb2[pi * o + k] = keep as i32;
+            }
+        }
+        // Positional argument order fixed by aot.py::lower_masked_acc.
+        let mb1_lit = lit_i32(&mb1, &[p as i64, h as i64])?;
+        let mb2_lit = lit_i32(&mb2, &[p as i64, o as i64])?;
+        let m1_lit = lit_i32(&m1, &[p as i64, h as i64, n0 as i64])?;
+        let m2_lit = lit_i32(&m2, &[p as i64, o as i64, h as i64])?;
+        let act_lit = lit_i32_scalar(self.act_shift());
+        let f = &self.fixed_args;
+        let all: Vec<&xla::Literal> = vec![
+            &f[0], &f[1], &f[2], &f[3], &f[4], &mb1_lit, &f[5], &f[6], &f[7], &mb2_lit,
+            &m1_lit, &m2_lit, &act_lit,
+        ];
+        let outs = self.exe.run(&all)?;
+        let counts = outs[0].to_vec::<i32>()?;
+        Ok(counts
+            .iter()
+            .take(genomes.len())
+            .map(|&c| c as f64 / self.n_real as f64)
+            .collect())
+    }
+
+    fn act_shift(&self) -> i32 {
+        self.mlp.act_shift as i32
+    }
+}
+
+impl Evaluator for PjrtEvaluator {
+    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
+        let mut objs = Vec::with_capacity(genomes.len());
+        for chunk in genomes.chunks(self.p) {
+            let refs: Vec<&BitVec> = chunk.iter().collect();
+            let accs = self
+                .eval_tile(&refs)
+                .expect("PJRT evaluation failed (artifacts stale?)");
+            for (genome, acc) in chunk.iter().zip(accs) {
+                let loss = (self.base_acc - acc).max(0.0);
+                let area = self.area.estimate(genome) as f64;
+                objs.push([loss, area]);
+            }
+        }
+        objs
+    }
+}
+
+/// The pure-Rust evaluator (threaded).
+pub struct NativeEvaluator {
+    pub mlp: QuantMlp,
+    pub train: QuantDataset,
+    pub map: GenomeMap,
+    pub area: AreaModel,
+    pub base_acc: f64,
+    pub threads: usize,
+}
+
+impl NativeEvaluator {
+    pub fn new(mlp: &QuantMlp, train: &QuantDataset, base_acc: f64) -> NativeEvaluator {
+        let map = GenomeMap::new(mlp);
+        let area = AreaModel::new(&map);
+        NativeEvaluator {
+            mlp: mlp.clone(),
+            train: train.clone(),
+            map,
+            area,
+            base_acc,
+            threads: threads::default_threads(),
+        }
+    }
+}
+
+impl Evaluator for NativeEvaluator {
+    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
+        threads::par_map(genomes.len(), self.threads, |i| {
+            let masks = self.map.to_masks(&genomes[i]);
+            let acc = self.mlp.accuracy(&self.train, Some(&masks));
+            let loss = (self.base_acc - acc).max(0.0);
+            let area = self.area.estimate(&genomes[i]) as f64;
+            [loss, area]
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::datasets;
+    use crate::model::float_mlp::TrainOpts;
+    use crate::model::FloatMlp;
+    use crate::util::Rng;
+
+    #[test]
+    fn native_evaluator_exact_genome_has_zero_loss() {
+        let cfg = builtin::tiny();
+        let (split, qtrain, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 20, ..Default::default() });
+        let qmlp = QuantMlp::from_float(&mlp, &qtrain);
+        let base = qmlp.accuracy(&qtrain, None);
+        let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
+        let exact = ev.map.exact_genome();
+        let objs = ev.evaluate(&[exact]);
+        assert_eq!(objs.len(), 1);
+        assert_eq!(objs[0][0], 0.0);
+        assert!(objs[0][1] > 0.0);
+    }
+
+    #[test]
+    fn native_evaluator_batch_matches_single() {
+        let cfg = builtin::tiny();
+        let (split, qtrain, _) = datasets::load(&cfg.dataset);
+        let mut mlp = FloatMlp::init(cfg.topology, 1);
+        mlp.train(&split.train, &TrainOpts { epochs: 20, ..Default::default() });
+        let qmlp = QuantMlp::from_float(&mlp, &qtrain);
+        let base = qmlp.accuracy(&qtrain, None);
+        let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
+        let mut rng = Rng::new(5);
+        let genomes: Vec<_> = (0..7).map(|_| ev.map.random_genome(&mut rng, 0.8)).collect();
+        let batch = ev.evaluate(&genomes);
+        for (i, genome) in genomes.iter().enumerate() {
+            let single = ev.evaluate(std::slice::from_ref(genome));
+            assert_eq!(batch[i], single[0]);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Architecture (DESIGN.md §1): python runs once at build time
+//! (`make artifacts`); this module gives the Layer-3 coordinator direct
+//! access to the Layer-2/Layer-1 compute graphs through the PJRT C API
+//! (`xla` crate). One compiled executable per (program, topology) pair,
+//! cached for the lifetime of the runtime.
+
+pub mod evaluator;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub use evaluator::PjrtEvaluator;
+
+/// Shape metadata of one topology's artifacts (from `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+    /// Padded evaluation-batch size of the `masked_acc` artifact.
+    pub eval_batch: usize,
+}
+
+/// The artifact manifest written by `aot.py`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub p_tile: usize,
+    pub p_pre: usize,
+    pub bt: usize,
+    pub entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut entries = HashMap::new();
+        if let Some(obj) = j.get("entries").and_then(Json::as_obj) {
+            for (name, e) in obj {
+                entries.insert(
+                    name.clone(),
+                    ManifestEntry {
+                        n_in: e.usize_or("n_in", 0),
+                        n_hidden: e.usize_or("n_hidden", 0),
+                        n_out: e.usize_or("n_out", 0),
+                        eval_batch: e.usize_or("eval_batch", 0),
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            p_tile: j.usize_or("p_tile", 16),
+            p_pre: j.usize_or("p_pre", 4),
+            bt: j.usize_or("bt", 64),
+            entries,
+        })
+    }
+}
+
+/// A compiled PJRT executable plus its program name.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional literal arguments; returns the flattened
+    /// tuple elements of the (single, tupled) result.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The runtime: a CPU PJRT client + executable cache over an artifacts
+/// directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over `dir` (default `artifacts/`).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        // Silence the TFRT client's info-level banner on stderr.
+        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory (env `PMLP_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PMLP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load + compile (or fetch from cache) an artifact by file stem,
+    /// e.g. `masked_acc_tiny`.
+    pub fn load(&self, stem: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(stem) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{stem}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {stem}"))?;
+        let exe = std::sync::Arc::new(Executable { name: stem.to_string(), exe });
+        self.cache.lock().unwrap().insert(stem.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("topology '{name}' not in artifact manifest"))
+    }
+}
+
+/// Build an i32 literal of the given dimensions (row-major data).
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "lit_i32 shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an f32 literal of the given dimensions (row-major data).
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "lit_f32 shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar literals.
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+pub fn lit_f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Runtime::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_if_present() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Runtime::default_dir()).unwrap();
+        assert!(m.p_tile > 0);
+        assert!(!m.entries.is_empty());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = lit_i32(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        let back = lit.to_vec::<i32>().unwrap();
+        assert_eq!(back, vec![1, 2, 3, 4, 5, 6]);
+    }
+}

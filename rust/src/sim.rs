@@ -1,0 +1,171 @@
+//! Levelized gate-level logic simulator.
+//!
+//! Replaces the commercial simulation step (Synopsys VCS) of the paper's
+//! flow: every generated circuit is functionally verified against the
+//! integer model on concrete vectors (the equivalence chain of
+//! DESIGN.md §2), and the toggle activity it reports feeds the dynamic
+//! power estimate in `crate::egfet`.
+
+use crate::netlist::{Gate, Netlist};
+use std::collections::HashMap;
+
+/// Evaluate a netlist on one input vector; returns named output buses as
+/// bit vectors (LSB first).
+pub fn eval(nl: &Netlist, inputs: &[bool]) -> HashMap<String, Vec<bool>> {
+    let values = eval_nodes(nl, inputs);
+    nl.outputs
+        .iter()
+        .map(|(name, bus)| {
+            (name.clone(), bus.iter().map(|&n| values[n as usize]).collect())
+        })
+        .collect()
+}
+
+/// Evaluate and return the value of every node (single forward pass —
+/// the gate list is topologically ordered by construction).
+pub fn eval_nodes(nl: &Netlist, inputs: &[bool]) -> Vec<bool> {
+    let mut v = vec![false; nl.gates.len()];
+    for (i, g) in nl.gates.iter().enumerate() {
+        v[i] = match *g {
+            Gate::Input(idx) => {
+                *inputs.get(idx as usize).unwrap_or_else(|| {
+                    panic!("input {idx} missing ({} provided)", inputs.len())
+                })
+            }
+            Gate::Const(c) => c,
+            Gate::Not(a) => !v[a as usize],
+            Gate::And(a, b) => v[a as usize] & v[b as usize],
+            Gate::Or(a, b) => v[a as usize] | v[b as usize],
+            Gate::Xor(a, b) => v[a as usize] ^ v[b as usize],
+            Gate::Nand(a, b) => !(v[a as usize] & v[b as usize]),
+            Gate::Nor(a, b) => !(v[a as usize] | v[b as usize]),
+            Gate::Xnor(a, b) => !(v[a as usize] ^ v[b as usize]),
+            Gate::Mux(s, a, b) => {
+                if v[s as usize] {
+                    v[b as usize]
+                } else {
+                    v[a as usize]
+                }
+            }
+        };
+    }
+    v
+}
+
+/// Interpret an output bus as an unsigned integer.
+pub fn bus_to_u64(bits: &[bool]) -> u64 {
+    bits.iter().enumerate().map(|(i, &b)| (b as u64) << i).sum()
+}
+
+/// Interpret an output bus as a signed (two's-complement) integer.
+pub fn bus_to_i64(bits: &[bool]) -> i64 {
+    let raw = bus_to_u64(bits) as i64;
+    let w = bits.len() as u32;
+    if w < 64 && bits.last() == Some(&true) {
+        raw - (1i64 << w)
+    } else {
+        raw
+    }
+}
+
+/// Pack an unsigned integer into an input bit vector (LSB first).
+pub fn u64_to_bits(v: u64, width: u32) -> Vec<bool> {
+    (0..width).map(|i| (v >> i) & 1 == 1).collect()
+}
+
+/// Average toggle activity per cell over a set of input vectors —
+/// the activity factor used by the dynamic power model. Returns the
+/// fraction of (cell, consecutive-vector) pairs whose value flipped.
+pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
+    if vectors.len() < 2 || nl.cell_count() == 0 {
+        return 0.0;
+    }
+    let mut prev = eval_nodes(nl, &vectors[0]);
+    let mut toggles = 0u64;
+    let mut slots = 0u64;
+    for vec in &vectors[1..] {
+        let cur = eval_nodes(nl, vec);
+        for (i, g) in nl.gates.iter().enumerate() {
+            if g.is_cell() {
+                slots += 1;
+                if cur[i] != prev[i] {
+                    toggles += 1;
+                }
+            }
+        }
+        prev = cur;
+    }
+    toggles as f64 / slots as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Netlist;
+
+    #[test]
+    fn gate_truth_tables() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let and = nl.and(a, b);
+        let or = nl.or(a, b);
+        let xor = nl.xor(a, b);
+        let nand = nl.nand(a, b);
+        let nor = nl.nor(a, b);
+        let xnor = nl.xnor(a, b);
+        let not = nl.not(a);
+        nl.output("all", vec![and, or, xor, nand, nor, xnor, not]);
+        for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+            let out = &eval(&nl, &[va, vb])["all"];
+            assert_eq!(out[0], va & vb);
+            assert_eq!(out[1], va | vb);
+            assert_eq!(out[2], va ^ vb);
+            assert_eq!(out[3], !(va & vb));
+            assert_eq!(out[4], !(va | vb));
+            assert_eq!(out[5], !(va ^ vb));
+            assert_eq!(out[6], !va);
+        }
+    }
+
+    #[test]
+    fn mux_truth_table() {
+        let mut nl = Netlist::new();
+        let s = nl.input();
+        let a = nl.input();
+        let b = nl.input();
+        let m = nl.mux(s, a, b);
+        nl.output("m", vec![m]);
+        assert_eq!(eval(&nl, &[false, true, false])["m"][0], true); // sel=0 -> a
+        assert_eq!(eval(&nl, &[true, true, false])["m"][0], false); // sel=1 -> b
+    }
+
+    #[test]
+    fn signed_conversion() {
+        assert_eq!(bus_to_i64(&[true, true, true]), -1);
+        assert_eq!(bus_to_i64(&[false, true, false]), 2);
+        assert_eq!(bus_to_i64(&[true, false, false]), 1);
+        assert_eq!(bus_to_u64(&[true, false, true]), 5);
+    }
+
+    #[test]
+    fn roundtrip_bits() {
+        for v in 0..64u64 {
+            assert_eq!(bus_to_u64(&u64_to_bits(v, 6)), v);
+        }
+    }
+
+    #[test]
+    fn toggle_activity_bounds() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let n = nl.not(a);
+        nl.output("y", vec![n]);
+        // Alternating input -> the NOT gate toggles every step.
+        let vectors = vec![vec![false], vec![true], vec![false], vec![true]];
+        assert_eq!(toggle_activity(&nl, &vectors), 1.0);
+        // Constant input -> no toggles.
+        let vectors = vec![vec![true]; 4];
+        assert_eq!(toggle_activity(&nl, &vectors), 0.0);
+    }
+}

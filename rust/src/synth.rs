@@ -1,0 +1,525 @@
+//! Synthesis-lite: the logic-optimization pass that stands in for
+//! Synopsys Design Compiler in the paper's flow.
+//!
+//! The accumulation approximation works by *replacing summand bits with
+//! constant zeros* and letting synthesis sweep the constants through the
+//! adder trees (paper §III-D: "we fully leverage the IPs and optimization
+//! capabilities of the EDA synthesis tool, which among others includes
+//! constant propagation"). This pass implements exactly that mechanism:
+//!
+//! * constant propagation and algebraic simplification
+//!   (`x & 0 → 0`, `x ^ 0 → x`, `x & x → x`, `mux(s,a,a) → a`, …),
+//! * structural hashing (common-subexpression elimination),
+//! * dead-gate elimination (only the output cone survives).
+//!
+//! The result is functionally equivalent (verified by `crate::sim`-based
+//! equivalence tests) and is what the EGFET area/power/timing analysis
+//! consumes.
+
+use crate::netlist::{Gate, Netlist, NodeId};
+use std::collections::HashMap;
+
+/// What a source node resolved to after optimization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Repr {
+    Node(NodeId),
+    Const(bool),
+}
+
+/// Optimization statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SynthStats {
+    pub cells_in: usize,
+    pub cells_out: usize,
+}
+
+/// Optimize a netlist: constant propagation + structural hashing + DCE.
+pub fn optimize(nl: &Netlist) -> (Netlist, SynthStats) {
+    let mut out = Netlist::new();
+    let mut repr: Vec<Repr> = Vec::with_capacity(nl.gates.len());
+    // Structural-hash table over gates already emitted into `out`.
+    let mut dedup: HashMap<Gate, NodeId> = HashMap::new();
+    // Lazily-created constants in `out`.
+    let mut consts: [Option<NodeId>; 2] = [None, None];
+
+    // Emit with hashing.
+    let mut emit = |out: &mut Netlist, dedup: &mut HashMap<Gate, NodeId>, g: Gate| -> NodeId {
+        let g = canon(g);
+        if let Some(&id) = dedup.get(&g) {
+            return id;
+        }
+        let id = match g {
+            Gate::Input(_) => {
+                // Inputs are pre-created below; unreachable here.
+                unreachable!("inputs emitted eagerly")
+            }
+            _ => {
+                out.gates.push(g);
+                (out.gates.len() - 1) as NodeId
+            }
+        };
+        dedup.insert(g, id);
+        id
+    };
+
+    let mut get_const = |out: &mut Netlist, v: bool| -> NodeId {
+        let slot = &mut consts[v as usize];
+        if let Some(id) = *slot {
+            return id;
+        }
+        out.gates.push(Gate::Const(v));
+        let id = (out.gates.len() - 1) as NodeId;
+        *slot = Some(id);
+        id
+    };
+
+    // Pre-create all primary inputs so input indices survive unchanged.
+    let mut input_map: HashMap<u32, NodeId> = HashMap::new();
+    for g in &nl.gates {
+        if let Gate::Input(idx) = g {
+            input_map.entry(*idx).or_insert(0);
+        }
+    }
+    out.n_inputs = nl.n_inputs;
+    let mut sorted_inputs: Vec<u32> = input_map.keys().copied().collect();
+    sorted_inputs.sort_unstable();
+    for idx in sorted_inputs {
+        out.gates.push(Gate::Input(idx));
+        let id = (out.gates.len() - 1) as NodeId;
+        input_map.insert(idx, id);
+        dedup.insert(Gate::Input(idx), id);
+    }
+
+    for g in &nl.gates {
+        let r = match *g {
+            Gate::Input(idx) => Repr::Node(input_map[&idx]),
+            Gate::Const(v) => Repr::Const(v),
+            Gate::Not(a) => match repr[a as usize] {
+                Repr::Const(v) => Repr::Const(!v),
+                Repr::Node(n) => {
+                    // NOT(NOT(x)) -> x
+                    if let Gate::Not(inner) = out.gates[n as usize] {
+                        Repr::Node(inner)
+                    } else {
+                        Repr::Node(emit(&mut out, &mut dedup, Gate::Not(n)))
+                    }
+                }
+            },
+            Gate::And(a, b) => binop(
+                repr[a as usize],
+                repr[b as usize],
+                &mut out,
+                &mut dedup,
+                &mut emit,
+                BinRules {
+                    both: |x, y| x & y,
+                    with_true: WithConst::Other,
+                    with_false: WithConst::Const(false),
+                    same: SameRule::Same,
+                    build: Gate::And,
+                },
+            ),
+            Gate::Or(a, b) => binop(
+                repr[a as usize],
+                repr[b as usize],
+                &mut out,
+                &mut dedup,
+                &mut emit,
+                BinRules {
+                    both: |x, y| x | y,
+                    with_true: WithConst::Const(true),
+                    with_false: WithConst::Other,
+                    same: SameRule::Same,
+                    build: Gate::Or,
+                },
+            ),
+            Gate::Xor(a, b) => binop(
+                repr[a as usize],
+                repr[b as usize],
+                &mut out,
+                &mut dedup,
+                &mut emit,
+                BinRules {
+                    both: |x, y| x ^ y,
+                    with_true: WithConst::NotOther,
+                    with_false: WithConst::Other,
+                    same: SameRule::Const(false),
+                    build: Gate::Xor,
+                },
+            ),
+            Gate::Nand(a, b) => binop(
+                repr[a as usize],
+                repr[b as usize],
+                &mut out,
+                &mut dedup,
+                &mut emit,
+                BinRules {
+                    both: |x, y| !(x & y),
+                    with_true: WithConst::NotOther,
+                    with_false: WithConst::Const(true),
+                    same: SameRule::NotSame,
+                    build: Gate::Nand,
+                },
+            ),
+            Gate::Nor(a, b) => binop(
+                repr[a as usize],
+                repr[b as usize],
+                &mut out,
+                &mut dedup,
+                &mut emit,
+                BinRules {
+                    both: |x, y| !(x | y),
+                    with_true: WithConst::Const(false),
+                    with_false: WithConst::NotOther,
+                    same: SameRule::NotSame,
+                    build: Gate::Nor,
+                },
+            ),
+            Gate::Xnor(a, b) => binop(
+                repr[a as usize],
+                repr[b as usize],
+                &mut out,
+                &mut dedup,
+                &mut emit,
+                BinRules {
+                    both: |x, y| !(x ^ y),
+                    with_true: WithConst::Other,
+                    with_false: WithConst::NotOther,
+                    same: SameRule::Const(true),
+                    build: Gate::Xnor,
+                },
+            ),
+            Gate::Mux(s, a, b) => {
+                let (rs, ra, rb) = (repr[s as usize], repr[a as usize], repr[b as usize]);
+                match (rs, ra, rb) {
+                    (Repr::Const(false), _, _) => ra,
+                    (Repr::Const(true), _, _) => rb,
+                    (_, Repr::Const(x), Repr::Const(y)) if x == y => Repr::Const(x),
+                    // mux(s, 0, 1) = s ; mux(s, 1, 0) = !s
+                    (Repr::Node(sn), Repr::Const(false), Repr::Const(true)) => Repr::Node(sn),
+                    (Repr::Node(sn), Repr::Const(true), Repr::Const(false)) => {
+                        Repr::Node(emit(&mut out, &mut dedup, Gate::Not(sn)))
+                    }
+                    // Equal-constant arms are covered by the x == y guard
+                    // above; rustc cannot see that, so mark unreachable.
+                    (Repr::Node(_), Repr::Const(_), Repr::Const(_)) => unreachable!(),
+                    // mux(s, 0, b) = s & b ; mux(s, 1, b) = !s | b
+                    (Repr::Node(sn), Repr::Const(false), Repr::Node(bn)) => {
+                        Repr::Node(emit(&mut out, &mut dedup, Gate::And(sn, bn)))
+                    }
+                    (Repr::Node(sn), Repr::Const(true), Repr::Node(bn)) => {
+                        let ns = emit(&mut out, &mut dedup, Gate::Not(sn));
+                        Repr::Node(emit(&mut out, &mut dedup, Gate::Or(ns, bn)))
+                    }
+                    // mux(s, a, 0) = !s & a ; mux(s, a, 1) = s | a
+                    (Repr::Node(sn), Repr::Node(an), Repr::Const(false)) => {
+                        let ns = emit(&mut out, &mut dedup, Gate::Not(sn));
+                        Repr::Node(emit(&mut out, &mut dedup, Gate::And(ns, an)))
+                    }
+                    (Repr::Node(sn), Repr::Node(an), Repr::Const(true)) => {
+                        Repr::Node(emit(&mut out, &mut dedup, Gate::Or(sn, an)))
+                    }
+                    (Repr::Node(sn), Repr::Node(an), Repr::Node(bn)) => {
+                        if an == bn {
+                            Repr::Node(an)
+                        } else {
+                            Repr::Node(emit(&mut out, &mut dedup, Gate::Mux(sn, an, bn)))
+                        }
+                    }
+                }
+            }
+        };
+        repr.push(r);
+    }
+
+    // Rewrite outputs, materializing constants where needed.
+    for (name, bus) in &nl.outputs {
+        let new_bus: Vec<NodeId> = bus
+            .iter()
+            .map(|&n| match repr[n as usize] {
+                Repr::Node(id) => id,
+                Repr::Const(v) => get_const(&mut out, v),
+            })
+            .collect();
+        out.outputs.push((name.clone(), new_bus));
+    }
+
+    let out = dce(&out);
+    let stats = SynthStats { cells_in: nl.cell_count(), cells_out: out.cell_count() };
+    (out, stats)
+}
+
+/// How a binary op simplifies against a constant operand.
+#[derive(Clone, Copy)]
+enum WithConst {
+    /// Result is the non-constant operand.
+    Other,
+    /// Result is NOT of the non-constant operand.
+    NotOther,
+    /// Result is a constant.
+    Const(bool),
+}
+
+#[derive(Clone, Copy)]
+enum SameRule {
+    /// op(x, x) = x
+    Same,
+    /// op(x, x) = !x
+    NotSame,
+    /// op(x, x) = const
+    Const(bool),
+}
+
+struct BinRules {
+    both: fn(bool, bool) -> bool,
+    with_true: WithConst,
+    with_false: WithConst,
+    same: SameRule,
+    build: fn(NodeId, NodeId) -> Gate,
+}
+
+fn binop(
+    ra: Repr,
+    rb: Repr,
+    out: &mut Netlist,
+    dedup: &mut HashMap<Gate, NodeId>,
+    emit: &mut impl FnMut(&mut Netlist, &mut HashMap<Gate, NodeId>, Gate) -> NodeId,
+    rules: BinRules,
+) -> Repr {
+    match (ra, rb) {
+        (Repr::Const(x), Repr::Const(y)) => Repr::Const((rules.both)(x, y)),
+        (Repr::Const(c), Repr::Node(n)) | (Repr::Node(n), Repr::Const(c)) => {
+            let rule = if c { rules.with_true } else { rules.with_false };
+            match rule {
+                WithConst::Other => Repr::Node(n),
+                WithConst::NotOther => Repr::Node(emit(out, dedup, Gate::Not(n))),
+                WithConst::Const(v) => Repr::Const(v),
+            }
+        }
+        (Repr::Node(x), Repr::Node(y)) => {
+            if x == y {
+                match rules.same {
+                    SameRule::Same => Repr::Node(x),
+                    SameRule::NotSame => Repr::Node(emit(out, dedup, Gate::Not(x))),
+                    SameRule::Const(v) => Repr::Const(v),
+                }
+            } else {
+                Repr::Node(emit(out, dedup, (rules.build)(x, y)))
+            }
+        }
+    }
+}
+
+/// Canonicalize commutative gates (sorted operands) for hashing.
+fn canon(g: Gate) -> Gate {
+    match g {
+        Gate::And(a, b) if a > b => Gate::And(b, a),
+        Gate::Or(a, b) if a > b => Gate::Or(b, a),
+        Gate::Xor(a, b) if a > b => Gate::Xor(b, a),
+        Gate::Nand(a, b) if a > b => Gate::Nand(b, a),
+        Gate::Nor(a, b) if a > b => Gate::Nor(b, a),
+        Gate::Xnor(a, b) if a > b => Gate::Xnor(b, a),
+        g => g,
+    }
+}
+
+/// Dead-code elimination: keep only nodes reachable from outputs (plus
+/// all primary inputs, which define the interface).
+fn dce(nl: &Netlist) -> Netlist {
+    let n = nl.gates.len();
+    let mut live = vec![false; n];
+    let mut stack: Vec<NodeId> = Vec::new();
+    for (_, bus) in &nl.outputs {
+        for &b in bus {
+            if !live[b as usize] {
+                live[b as usize] = true;
+                stack.push(b);
+            }
+        }
+    }
+    while let Some(id) = stack.pop() {
+        for op in nl.gates[id as usize].operands() {
+            if !live[op as usize] {
+                live[op as usize] = true;
+                stack.push(op);
+            }
+        }
+    }
+    // Inputs stay (interface stability for the simulator).
+    for (i, g) in nl.gates.iter().enumerate() {
+        if matches!(g, Gate::Input(_)) {
+            live[i] = true;
+        }
+    }
+    let mut remap = vec![0 as NodeId; n];
+    let mut out = Netlist::new();
+    out.n_inputs = nl.n_inputs;
+    for (i, g) in nl.gates.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        let g2 = match *g {
+            Gate::Input(idx) => Gate::Input(idx),
+            Gate::Const(v) => Gate::Const(v),
+            Gate::Not(a) => Gate::Not(remap[a as usize]),
+            Gate::And(a, b) => Gate::And(remap[a as usize], remap[b as usize]),
+            Gate::Or(a, b) => Gate::Or(remap[a as usize], remap[b as usize]),
+            Gate::Xor(a, b) => Gate::Xor(remap[a as usize], remap[b as usize]),
+            Gate::Nand(a, b) => Gate::Nand(remap[a as usize], remap[b as usize]),
+            Gate::Nor(a, b) => Gate::Nor(remap[a as usize], remap[b as usize]),
+            Gate::Xnor(a, b) => Gate::Xnor(remap[a as usize], remap[b as usize]),
+            Gate::Mux(s, a, b) => {
+                Gate::Mux(remap[s as usize], remap[a as usize], remap[b as usize])
+            }
+        };
+        out.gates.push(g2);
+        remap[i] = (out.gates.len() - 1) as NodeId;
+    }
+    for (name, bus) in &nl.outputs {
+        out.outputs
+            .push((name.clone(), bus.iter().map(|&b| remap[b as usize]).collect()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::build;
+    use crate::sim::{eval, u64_to_bits};
+    use crate::util::prop;
+
+    #[test]
+    fn constants_propagate_through_and() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let zero = nl.constant(false);
+        let g = nl.and(a, zero); // == 0
+        let h = nl.or(g, a); // == a
+        nl.output("y", vec![h]);
+        let (opt, stats) = optimize(&nl);
+        assert_eq!(stats.cells_out, 0, "everything should fold to a wire");
+        assert_eq!(eval(&opt, &[true])["y"][0], true);
+        assert_eq!(eval(&opt, &[false])["y"][0], false);
+    }
+
+    #[test]
+    fn structural_hashing_merges_duplicates() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let g1 = nl.and(a, b);
+        let g2 = nl.and(b, a); // same gate, swapped operands
+        let y = nl.xor(g1, g2); // x ^ x = 0
+        nl.output("y", vec![y]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 0);
+        assert_eq!(eval(&opt, &[true, true])["y"][0], false);
+    }
+
+    #[test]
+    fn double_negation_removed() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let n1 = nl.not(a);
+        let n2 = nl.not(n1);
+        nl.output("y", vec![n2]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 0);
+        assert_eq!(eval(&opt, &[true])["y"][0], true);
+    }
+
+    #[test]
+    fn dce_removes_unused_logic() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let _unused = nl.xor(a, b);
+        let used = nl.and(a, b);
+        nl.output("y", vec![used]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 1);
+    }
+
+    #[test]
+    fn mux_simplifications() {
+        let mut nl = Netlist::new();
+        let s = nl.input();
+        let a = nl.input();
+        let zero = nl.constant(false);
+        let one = nl.constant(true);
+        let m1 = nl.mux(s, zero, one); // = s
+        let m2 = nl.mux(s, a, a); // = a
+        let m3 = nl.mux(zero, a, one); // = a
+        nl.output("y", vec![m1, m2, m3]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 0);
+        let out = &eval(&opt, &[true, false])["y"];
+        assert_eq!(out.as_slice(), &[true, false, false]);
+    }
+
+    #[test]
+    fn prop_optimize_preserves_function() {
+        // Random adder circuits with some constant inputs: the optimized
+        // netlist must compute the same function.
+        prop::check("synth preserves semantics", |rng, _| {
+            let w = 4u32;
+            let mut nl = Netlist::new();
+            let a = nl.input_bus(w);
+            let kconst = rng.below(16) as u64;
+            let kb = build::const_bus(&mut nl, kconst, w);
+            let s = build::adder(&mut nl, &a, &kb);
+            let m = build::const_mul(&mut nl, &s, rng.below(8) as u64 + 1);
+            nl.output("m", m);
+            let (opt, stats) = optimize(&nl);
+            if stats.cells_out > stats.cells_in {
+                return Err("synthesis grew the circuit".to_string());
+            }
+            for _ in 0..8 {
+                let x = rng.below(1 << w) as u64;
+                let bits = u64_to_bits(x, w);
+                let o1 = &eval(&nl, &bits)["m"];
+                let o2 = &eval(&opt, &bits)["m"];
+                if crate::sim::bus_to_u64(o1) != crate::sim::bus_to_u64(o2) {
+                    return Err(format!("mismatch at x={x} k={kconst}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masked_zero_bits_shrink_adder_tree() {
+        // The paper's core mechanism: replacing summand bits by constant
+        // zero must shrink the synthesized adder tree.
+        let w = 4u32;
+        let build_tree = |mask: u64| -> usize {
+            let mut nl = Netlist::new();
+            let mut summands = Vec::new();
+            for _ in 0..4 {
+                let bus = nl.input_bus(w);
+                let masked: Vec<_> = bus
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &bit)| {
+                        if (mask >> i) & 1 == 1 {
+                            bit
+                        } else {
+                            nl.constant(false)
+                        }
+                    })
+                    .collect();
+                summands.push(masked);
+            }
+            let s = build::csa_tree(&mut nl, &summands);
+            nl.output("s", s);
+            let (opt, _) = optimize(&nl);
+            opt.cell_count()
+        };
+        let full = build_tree(0xF);
+        let half = build_tree(0b0110);
+        let none = build_tree(0x0);
+        assert!(half < full, "half {half} vs full {full}");
+        assert_eq!(none, 0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Training system: float pre-training + power-of-2 QAT (paper §III-A/B).
+//!
+//! Two QAT engines share one interface:
+//! * [`train_native`] — the in-crate float trainer (`FloatMlp::train`)
+//!   with straight-through po2/QRelu quantizers;
+//! * [`PjrtTrainer`] — drives the AOT-compiled `train_step_<ds>` program
+//!   (Layer-2 JAX forward+backward+Adam) from Rust, one minibatch per
+//!   PJRT dispatch. The paper's QKeras QAT maps to this path.
+//!
+//! Both end in [`crate::model::QuantMlp::from_float`], which extracts the
+//! integer po2 model and calibrates the QRelu truncation.
+
+pub mod pjrt;
+
+use crate::config::RunConfig;
+use crate::datasets::{QuantDataset, Split};
+use crate::model::float_mlp::TrainOpts;
+use crate::model::{FloatMlp, QuantMlp};
+
+pub use pjrt::PjrtTrainer;
+
+/// A trained + quantized model with its bookkeeping accuracies.
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    pub float: FloatMlp,
+    pub qmlp: QuantMlp,
+    /// Float model accuracy on the test split (the paper's baseline
+    /// accuracy column).
+    pub acc_float_test: f64,
+    /// Quantized (QAT-only) accuracy on train — the GA's reference.
+    pub acc_q_train: f64,
+    /// Quantized (QAT-only) accuracy on test (Table III "QAT Only").
+    pub acc_q_test: f64,
+}
+
+fn base_opts(cfg: &RunConfig) -> TrainOpts {
+    TrainOpts {
+        epochs: cfg.train.epochs,
+        batch_size: cfg.train.batch_size,
+        lr: cfg.train.lr,
+        seed: cfg.train.seed,
+        qat_po2: false,
+        weight_decay: 1e-4,
+        class_balance: true,
+    }
+}
+
+/// Float pre-training with a small randomized restart search (the paper
+/// trains with scikit-learn's randomized parameter optimization +
+/// cross-validation): seeds x learning rates, scored on the train split.
+/// Shared by the native pipeline and the PJRT pipeline (which runs QAT
+/// through the AOT `train_step` afterwards).
+pub fn train_float_search(cfg: &RunConfig, split: &Split) -> FloatMlp {
+    let opts = base_opts(cfg);
+    let mut best: Option<(f64, FloatMlp)> = None;
+    for seed_off in 0..3u64 {
+        for lr_mul in [1.0, 2.5] {
+            let mut cand = FloatMlp::init(cfg.topology, cfg.train.seed + seed_off);
+            cand.train(
+                &split.train,
+                &TrainOpts {
+                    lr: cfg.train.lr * lr_mul,
+                    seed: cfg.train.seed + seed_off,
+                    ..opts.clone()
+                },
+            );
+            let score = cand.accuracy(&split.train, false);
+            if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                best = Some((score, cand));
+            }
+        }
+    }
+    best.unwrap().1
+}
+
+/// Native two-phase training: float restart search, then po2 QAT
+/// fine-tune.
+pub fn train_native(cfg: &RunConfig, split: &Split, qtrain: &QuantDataset, qtest: &QuantDataset) -> TrainedModel {
+    let base_opts = base_opts(cfg);
+    let float = train_float_search(cfg, split);
+    let acc_float_test = float.accuracy(&split.test, false);
+
+    // QAT fine-tune at reduced learning rates, keeping the better run
+    // (paper: "QAT requires only few retraining epochs, even for the
+    // most complex printed MLPs").
+    let mut best_q: Option<(f64, FloatMlp)> = None;
+    for lr_mul in [0.4, 0.1] {
+        let mut qat = float.clone();
+        qat.train(
+            &split.train,
+            &TrainOpts {
+                epochs: (cfg.train.epochs / 2).max(10),
+                lr: cfg.train.lr * lr_mul,
+                qat_po2: true,
+                weight_decay: 0.0,
+                class_balance: false,
+                ..base_opts.clone()
+            },
+        );
+        let score = qat.accuracy(&split.train, true);
+        if best_q.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+            best_q = Some((score, qat));
+        }
+    }
+    let qat = best_q.unwrap().1;
+    finish(float, qat, qtrain, qtest, acc_float_test)
+}
+
+/// Shared tail: quantize, calibrate, score.
+pub fn finish(
+    float: FloatMlp,
+    qat: FloatMlp,
+    qtrain: &QuantDataset,
+    qtest: &QuantDataset,
+    acc_float_test: f64,
+) -> TrainedModel {
+    let qmlp = QuantMlp::from_float(&qat, qtrain);
+    let acc_q_train = qmlp.accuracy(qtrain, None);
+    let acc_q_test = qmlp.accuracy(qtest, None);
+    TrainedModel { float, qmlp, acc_float_test, acc_q_train, acc_q_test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::datasets;
+
+    #[test]
+    fn native_training_pipeline() {
+        let cfg = builtin::tiny();
+        let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+        let tm = train_native(&cfg, &split, &qtrain, &qtest);
+        assert!(tm.acc_float_test > 0.8, "float acc {}", tm.acc_float_test);
+        assert!(
+            tm.acc_q_test > tm.acc_float_test - 0.15,
+            "QAT lost too much: {} vs {}",
+            tm.acc_q_test,
+            tm.acc_float_test
+        );
+        // Quantized weights must be po2 (sign/shift pairs by construction).
+        assert!(tm.qmlp.l1.w.iter().any(|w| w.sign != 0));
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT-driven QAT: the Rust trainer owns the epoch/minibatch loop and
+//! dispatches the AOT-compiled `train_step_<ds>` program (Layer-2 JAX
+//! QAT forward + backward + Adam, lowered once at build time) for every
+//! step. Parameters and optimizer state live in Rust between steps.
+
+use crate::config::RunConfig;
+use crate::datasets::{Dataset, QuantDataset, Split};
+use crate::fixedpoint::INPUT_BITS;
+use crate::model::FloatMlp;
+use crate::runtime::{lit_f32, lit_f32_scalar, lit_i32, lit_i32_scalar, Runtime};
+use crate::train::TrainedModel;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// QAT trainer over the `train_step` artifact.
+pub struct PjrtTrainer<'rt> {
+    runtime: &'rt Runtime,
+    name: String,
+}
+
+impl<'rt> PjrtTrainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, name: &str) -> PjrtTrainer<'rt> {
+        PjrtTrainer { runtime, name: name.to_string() }
+    }
+
+    /// Fine-tune `float` with QAT for `epochs`; returns the QAT weights.
+    ///
+    /// Inputs are snapped to the 4-bit grid (x_int/16) so training sees
+    /// exactly the distribution the hardware will.
+    pub fn finetune(
+        &self,
+        float: &FloatMlp,
+        train: &Dataset,
+        epochs: usize,
+        lr: f64,
+        seed: u64,
+    ) -> Result<(FloatMlp, f32)> {
+        let exe = self.runtime.load(&format!("train_step_{}", self.name))?;
+        let bt = self.runtime.manifest.bt;
+        let topo = float.topo;
+        let (n0, h, o) = (topo.n_in, topo.n_hidden, topo.n_out);
+
+        // Calibrate the QRelu range once, exactly like the native QAT.
+        let act_max = {
+            let mut probe = float.clone();
+            probe.calibrate_act_max(train);
+            probe.act_max
+        };
+
+        // QAT fine-tuning uses uniform sample weights (class re-balancing
+        // would fight the already-learned decision boundaries — same
+        // choice as the native QAT path).
+        let class_w: Vec<f32> = vec![1.0; o];
+
+        // Flatten parameters + Adam state.
+        let flat = |m: &Vec<Vec<f64>>| -> Vec<f32> {
+            m.iter().flatten().map(|&v| v as f32).collect()
+        };
+        let mut w1 = flat(&float.w1);
+        let mut b1: Vec<f32> = float.b1.iter().map(|&v| v as f32).collect();
+        let mut w2 = flat(&float.w2);
+        let mut b2: Vec<f32> = float.b2.iter().map(|&v| v as f32).collect();
+        let mut m_state = [vec![0f32; w1.len()], vec![0f32; h], vec![0f32; w2.len()], vec![0f32; o]];
+        let mut v_state = m_state.clone();
+        let mut step = 0i32;
+        let mut last_loss = f32::NAN;
+
+        // 4-bit-snapped inputs.
+        let snap = |v: f64| -> f32 {
+            let q = crate::fixedpoint::quantize_input(v, INPUT_BITS);
+            q as f32 / (1u32 << INPUT_BITS) as f32
+        };
+        let n = train.y.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed ^ 0x504A_5254);
+
+        for _epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(bt) {
+                // Fixed batch shape: wrap around when the tail is short.
+                let mut xb = vec![0f32; bt * n0];
+                let mut yb = vec![0i32; bt];
+                let mut swb = vec![0f32; bt];
+                for k in 0..bt {
+                    let idx = chunk[k % chunk.len()];
+                    for j in 0..n0 {
+                        xb[k * n0 + j] = snap(train.x[idx][j]);
+                    }
+                    yb[k] = train.y[idx] as i32;
+                    // Tail wrap repeats samples; keep their weight so the
+                    // batch mean stays unbiased across the epoch.
+                    swb[k] = class_w[train.y[idx] % o];
+                }
+                let args: Vec<xla::Literal> = vec![
+                    lit_f32(&w1, &[h as i64, n0 as i64])?,
+                    lit_f32(&b1, &[h as i64])?,
+                    lit_f32(&w2, &[o as i64, h as i64])?,
+                    lit_f32(&b2, &[o as i64])?,
+                    lit_f32(&m_state[0], &[h as i64, n0 as i64])?,
+                    lit_f32(&m_state[1], &[h as i64])?,
+                    lit_f32(&m_state[2], &[o as i64, h as i64])?,
+                    lit_f32(&m_state[3], &[o as i64])?,
+                    lit_f32(&v_state[0], &[h as i64, n0 as i64])?,
+                    lit_f32(&v_state[1], &[h as i64])?,
+                    lit_f32(&v_state[2], &[o as i64, h as i64])?,
+                    lit_f32(&v_state[3], &[o as i64])?,
+                    lit_i32_scalar(step),
+                    lit_f32(&xb, &[bt as i64, n0 as i64])?,
+                    lit_i32(&yb, &[bt as i64])?,
+                    lit_f32(&swb, &[bt as i64])?,
+                    lit_f32_scalar(lr as f32),
+                    lit_f32_scalar(act_max as f32),
+                ];
+                let outs = exe.run(&args)?;
+                w1 = outs[0].to_vec::<f32>()?;
+                b1 = outs[1].to_vec::<f32>()?;
+                w2 = outs[2].to_vec::<f32>()?;
+                b2 = outs[3].to_vec::<f32>()?;
+                for (k, slot) in m_state.iter_mut().enumerate() {
+                    *slot = outs[4 + k].to_vec::<f32>()?;
+                }
+                for (k, slot) in v_state.iter_mut().enumerate() {
+                    *slot = outs[8 + k].to_vec::<f32>()?;
+                }
+                step = outs[12].to_vec::<i32>()?[0];
+                last_loss = outs[13].to_vec::<f32>()?[0];
+            }
+        }
+
+        // Rebuild a FloatMlp from the trained parameters.
+        let unflat = |v: &[f32], rows: usize, cols: usize| -> Vec<Vec<f64>> {
+            (0..rows)
+                .map(|r| (0..cols).map(|c| v[r * cols + c] as f64).collect())
+                .collect()
+        };
+        let out = FloatMlp {
+            topo,
+            w1: unflat(&w1, h, n0),
+            b1: b1.iter().map(|&v| v as f64).collect(),
+            w2: unflat(&w2, o, h),
+            b2: b2.iter().map(|&v| v as f64).collect(),
+            act_max,
+        };
+        Ok((out, last_loss))
+    }
+
+    /// Full pipeline tail: float model in, [`TrainedModel`] out. Tries
+    /// two QAT learning rates and keeps the better integer model (same
+    /// policy as the native trainer).
+    pub fn train(
+        &self,
+        cfg: &RunConfig,
+        float: &FloatMlp,
+        split: &Split,
+        qtrain: &QuantDataset,
+        qtest: &QuantDataset,
+    ) -> Result<TrainedModel> {
+        let acc_float_test = float.accuracy(&split.test, false);
+        let epochs = (cfg.train.epochs / 2).max(10);
+        let mut best: Option<(f64, FloatMlp)> = None;
+        for lr_mul in [0.4, 0.1] {
+            for seed_off in 0..2u64 {
+                let (qat, _loss) = self.finetune(
+                    float,
+                    &split.train,
+                    epochs,
+                    cfg.train.lr * lr_mul,
+                    cfg.train.seed + seed_off,
+                )?;
+                let score =
+                    crate::model::QuantMlp::from_float(&qat, qtrain).accuracy(qtrain, None);
+                if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                    best = Some((score, qat));
+                }
+            }
+        }
+        let qat = best.unwrap().1;
+        Ok(crate::train::finish(float.clone(), qat, qtrain, qtest, acc_float_test))
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree infrastructure: PRNG, JSON, bit vectors, statistics, a tiny
+//! thread-pool helper, and a property-testing harness.
+//!
+//! The offline vendored crate set only provides `xla` + `anyhow`, so the
+//! usual ecosystem crates (`rand`, `serde`, `proptest`, `rayon`,
+//! `criterion`) are replaced by these small, well-tested std-only modules.
+
+pub mod rng;
+pub mod json;
+pub mod bitvec;
+pub mod stats;
+pub mod threads;
+pub mod prop;
+
+pub use bitvec::BitVec;
+pub use rng::Rng;

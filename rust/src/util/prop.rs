@@ -1,0 +1,126 @@
+//! Property-testing harness (proptest-lite).
+//!
+//! The vendored crate set has no `proptest`, so this module provides the
+//! 20% that covers our needs: run a property over N random cases drawn
+//! from explicit generators, and on failure report the seed + case index
+//! so the exact counterexample replays deterministically.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Env overrides let CI crank the case count up.
+        let cases = std::env::var("PMLP_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("PMLP_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop(rng, case_index)`; panic with a replayable seed on failure.
+///
+/// `prop` returns `Result<(), String>` — `Err` describes the violation.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check_with(PropConfig::default(), name, prop)
+}
+
+/// Like [`check`] with explicit config.
+pub fn check_with<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Each case gets an independent deterministic stream so a failure
+        // replays without re-running earlier cases.
+        let mut rng = Rng::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers used by property tests across the crate.
+pub mod gen {
+    use crate::util::{BitVec, Rng};
+
+    /// Random vector of `n` integers in `[lo, hi)`.
+    pub fn ints(rng: &mut Rng, n: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..n).map(|_| rng.range(lo, hi)).collect()
+    }
+
+    /// Random f64 vector in `[lo, hi)`.
+    pub fn floats(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| lo + (hi - lo) * rng.f64()).collect()
+    }
+
+    /// Random bit vector of length `n` with density `p` of ones.
+    pub fn bits(rng: &mut Rng, n: usize, p: f64) -> BitVec {
+        let bools: Vec<bool> = (0..n).map(|_| rng.chance(p)).collect();
+        BitVec::from_bools(&bools)
+    }
+
+    /// Random square cost matrix with entries in `[0, max)`.
+    pub fn cost_matrix(rng: &mut Rng, n: usize, max: f64) -> Vec<Vec<f64>> {
+        (0..n).map(|_| floats(rng, n, 0.0, max)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum commutes", |rng, _| {
+            let a = rng.range(-1000, 1000);
+            let b = rng.range(-1000, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        check_with(
+            PropConfig { cases: 3, seed: 1 },
+            "always fails",
+            |_, _| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn cases_deterministic() {
+        let mut first = Vec::new();
+        check_with(PropConfig { cases: 5, seed: 7 }, "collect", |rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check_with(PropConfig { cases: 5, seed: 7 }, "collect", |rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,105 @@
+//! Thread-parallel map over an index range using `std::thread::scope`.
+//!
+//! This is the parallel substrate of the GA evaluation loop and of the
+//! Table II synthesis sweep (no rayon in the vendored crate set). Work is
+//! distributed by chunking the index space; results come back in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `PMLP_THREADS` overrides).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PMLP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel map `f(i)` for `i in 0..n`, preserving order of results.
+///
+/// Uses dynamic (work-stealing-ish) scheduling through a shared atomic
+/// cursor so unevenly sized items (e.g. netlist synthesis of different
+/// chromosomes) balance well.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let cursor = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let fref = &f;
+            let cref = &cursor;
+            let optr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = cref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = fref(i);
+                // SAFETY: each index i is claimed exactly once by the
+                // atomic fetch_add, so no two threads write the same slot,
+                // and the scope guarantees the vec outlives the workers.
+                unsafe {
+                    *optr.0.add(i) = Some(v);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("worker filled slot")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let serial: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        let parallel = par_map(1000, 8, |i| i * i);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_map_single_thread() {
+        let v = par_map(10, 1, |i| i + 1);
+        assert_eq!(v, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let v: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn par_map_uneven_work() {
+        // Items with wildly different cost still produce ordered results.
+        let v = par_map(64, 8, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i * 1000) {
+                acc = acc.wrapping_add(k as u64);
+            }
+            (i, acc)
+        });
+        for (i, item) in v.iter().enumerate() {
+            assert_eq!(item.0, i);
+        }
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

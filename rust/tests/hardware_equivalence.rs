@@ -1,0 +1,127 @@
+//! Integration: the hardware equivalence chain on a trained model —
+//! `gate-level netlist simulation == Rust integer model`, exact and
+//! masked, plus synthesized-circuit monotonicity (DESIGN.md §2).
+
+use printed_mlp::accum::GenomeMap;
+use printed_mlp::argmax::{build_plan, ArgmaxSearchOpts};
+use printed_mlp::config::builtin;
+use printed_mlp::datasets;
+use printed_mlp::model::float_mlp::TrainOpts;
+use printed_mlp::model::{FloatMlp, QuantMlp};
+use printed_mlp::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
+use printed_mlp::sim::{bus_to_u64, eval, u64_to_bits};
+use printed_mlp::synth::optimize;
+use printed_mlp::util::Rng;
+
+fn trained() -> (QuantMlp, datasets::QuantDataset) {
+    let cfg = builtin::tiny();
+    let (split, qtrain, _) = datasets::load(&cfg.dataset);
+    let mut mlp = FloatMlp::init(cfg.topology, 3);
+    mlp.train(&split.train, &TrainOpts { epochs: 30, ..Default::default() });
+    mlp.train(
+        &split.train,
+        &TrainOpts { epochs: 15, qat_po2: true, lr: 0.008, ..Default::default() },
+    );
+    (QuantMlp::from_float(&mlp, &qtrain), qtrain)
+}
+
+fn encode(x: &[u32]) -> Vec<bool> {
+    let mut bits = Vec::new();
+    for &v in x {
+        bits.extend(u64_to_bits(v as u64, 4));
+    }
+    bits
+}
+
+#[test]
+fn full_approximate_circuit_equals_model_predictions() {
+    let (qmlp, qtrain) = trained();
+    let map = GenomeMap::new(&qmlp);
+    let mut rng = Rng::new(17);
+    let genome = map.random_genome(&mut rng, 0.75);
+    let masks = map.to_masks(&genome);
+
+    // Approximate argmax plan on the masked model.
+    let preacts = qmlp.output_preacts(&qtrain, Some(&masks));
+    let plan = build_plan(
+        &preacts,
+        &qtrain.y,
+        qmlp.output_width(),
+        &ArgmaxSearchOpts::default(),
+    );
+
+    // Full holistic circuit, synthesized.
+    let nl = build_mlp_circuit(
+        &qmlp,
+        &MlpCircuitOpts {
+            masks: Some(masks.clone()),
+            argmax: ArgmaxMode::Plan(plan.clone()),
+        },
+    );
+    let (opt, stats) = optimize(&nl);
+    assert!(stats.cells_out <= stats.cells_in);
+
+    // Gate-level simulation == model + plan, sample by sample.
+    for (row, z) in qtrain.x.iter().zip(&preacts).take(60) {
+        let expect = plan.predict(z);
+        let out = eval(&opt, &encode(row));
+        assert_eq!(bus_to_u64(&out["class"]) as usize, expect);
+    }
+}
+
+#[test]
+fn synthesis_never_changes_function() {
+    let (qmlp, qtrain) = trained();
+    let nl = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
+    let (opt, _) = optimize(&nl);
+    for row in qtrain.x.iter().take(60) {
+        let a = eval(&nl, &encode(row));
+        let b = eval(&opt, &encode(row));
+        assert_eq!(a["class"], b["class"]);
+    }
+}
+
+#[test]
+fn deeper_masking_monotonically_shrinks_synthesized_area() {
+    let (qmlp, _) = trained();
+    let map = GenomeMap::new(&qmlp);
+    let mut last = usize::MAX;
+    for keep in [1.0, 0.7, 0.4, 0.1] {
+        let mut rng = Rng::new(23);
+        let genome = map.random_genome(&mut rng, keep);
+        let masks = map.to_masks(&genome);
+        let nl = build_mlp_circuit(
+            &qmlp,
+            &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Exact },
+        );
+        let (opt, _) = optimize(&nl);
+        let cells = opt.cell_count();
+        assert!(
+            cells <= last,
+            "keep={keep}: {cells} cells > previous {last}"
+        );
+        last = cells;
+    }
+}
+
+#[test]
+fn egfet_reports_scale_with_circuit_size() {
+    use printed_mlp::egfet::{analyze, Library};
+    let (qmlp, _) = trained();
+    let nl_exact = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
+    let (opt_exact, _) = optimize(&nl_exact);
+    let map = GenomeMap::new(&qmlp);
+    let mut rng = Rng::new(29);
+    let masks = map.to_masks(&map.random_genome(&mut rng, 0.3));
+    let nl_small = build_mlp_circuit(
+        &qmlp,
+        &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Exact },
+    );
+    let (opt_small, _) = optimize(&nl_small);
+    let lib = Library::egfet_1v();
+    let big = analyze(&opt_exact, &lib, 200.0, 0.25);
+    let small = analyze(&opt_small, &lib, 200.0, 0.25);
+    assert!(small.area_cm2 < big.area_cm2);
+    assert!(small.power_mw < big.power_mw);
+    assert!(small.delay_ms <= big.delay_ms + 1e-9);
+}

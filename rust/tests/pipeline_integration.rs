@@ -1,0 +1,77 @@
+//! Integration: the full coordinator pipeline and the experiment
+//! harnesses at smoke scale.
+
+use printed_mlp::bench::{Scale, Study};
+use printed_mlp::config::builtin;
+use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
+use printed_mlp::egfet::PowerSource;
+
+fn smoke_opts(backend: EvalBackend) -> PipelineOpts {
+    PipelineOpts {
+        backend,
+        max_hw_points: 2,
+        synth_baseline: true,
+        approx_argmax: true,
+        verbose: false,
+    }
+}
+
+#[test]
+fn full_pipeline_produces_consistent_report() {
+    let mut cfg = builtin::tiny();
+    cfg.ga.population = 30;
+    cfg.ga.generations = 4;
+    let r = Pipeline::new(cfg, smoke_opts(EvalBackend::Native)).run().unwrap();
+
+    let baseline = r.baseline_hw.as_ref().unwrap();
+    // Monotone story of the paper: baseline > QAT-only > holistic.
+    assert!(baseline.area_cm2 > r.qat_hw.area_cm2);
+    for d in &r.designs {
+        assert!(d.hw_full.area_cm2 <= r.qat_hw.area_cm2 * 1.05);
+        // 0.6 V saves power vs 1 V on the same netlist.
+        assert!(d.hw_0p6v.power_mw < d.hw_full.power_mw);
+        // Battery classification consistent with the budget.
+        match d.power_source {
+            PowerSource::None => assert!(d.hw_0p6v.power_mw > 30.0),
+            s => assert!(d.hw_0p6v.power_mw <= s.budget_mw()),
+        }
+        // Test accuracies are probabilities.
+        assert!((0.0..=1.0).contains(&d.acc_test_full));
+    }
+    // The exact-genome fallback guarantees at least one design close to
+    // QAT-only accuracy.
+    let best_acc = r.designs.iter().map(|d| d.acc_test_accum).fold(0.0, f64::max);
+    assert!(best_acc >= r.trained.acc_q_test - 0.02);
+}
+
+#[test]
+fn pipeline_deterministic_given_config() {
+    let mut cfg = builtin::tiny();
+    cfg.ga.population = 20;
+    cfg.ga.generations = 3;
+    let r1 = Pipeline::new(cfg.clone(), smoke_opts(EvalBackend::Native)).run().unwrap();
+    let r2 = Pipeline::new(cfg, smoke_opts(EvalBackend::Native)).run().unwrap();
+    assert_eq!(r1.baseline_acc_test, r2.baseline_acc_test);
+    assert_eq!(r1.trained.acc_q_test, r2.trained.acc_q_test);
+    let a1: Vec<u64> = r1.designs.iter().map(|d| d.area_fa).collect();
+    let a2: Vec<u64> = r2.designs.iter().map(|d| d.area_fa).collect();
+    assert_eq!(a1, a2);
+}
+
+#[test]
+fn study_harnesses_smoke() {
+    // Table II at smoke scale: the surrogate must rank-correlate highly
+    // even on the tiny MLP.
+    let t2 = printed_mlp::bench::table2(Scale::Smoke);
+    assert!(t2.contains("tiny"));
+
+    let mut study = Study::new(Scale::Smoke, EvalBackend::Native);
+    let t3 = printed_mlp::bench::table3(&mut study);
+    assert!(t3.contains("tiny"));
+    let f4 = printed_mlp::bench::fig4(&mut study);
+    assert!(f4.contains("tiny"));
+    let t4 = printed_mlp::bench::table4(&mut study);
+    assert!(t4.contains("tiny"));
+    let t5 = printed_mlp::bench::table5(&mut study);
+    assert!(t5.contains("tiny"));
+}

@@ -1,0 +1,105 @@
+//! Integration: the AOT bridge. Verifies the equivalence chain
+//! `HLO-via-PJRT == native Rust integer model` (DESIGN.md §2) and that
+//! the PJRT-driven QAT trainer learns.
+//!
+//! These tests need `make artifacts` (at least the `tiny` topology); they
+//! skip gracefully when artifacts are absent so `cargo test` works on a
+//! fresh checkout.
+
+use printed_mlp::config::builtin;
+use printed_mlp::datasets;
+use printed_mlp::ga::Evaluator;
+use printed_mlp::model::float_mlp::TrainOpts;
+use printed_mlp::model::FloatMlp;
+use printed_mlp::model::QuantMlp;
+use printed_mlp::runtime::evaluator::NativeEvaluator;
+use printed_mlp::runtime::{PjrtEvaluator, Runtime};
+use printed_mlp::train::PjrtTrainer;
+use printed_mlp::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("masked_acc_tiny.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn tiny_model() -> (QuantMlp, datasets::QuantDataset, datasets::QuantDataset) {
+    let cfg = builtin::tiny();
+    let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+    let mut mlp = FloatMlp::init(cfg.topology, 1);
+    mlp.train(&split.train, &TrainOpts { epochs: 30, ..Default::default() });
+    (QuantMlp::from_float(&mlp, &qtrain), qtrain, qtest)
+}
+
+#[test]
+fn pjrt_evaluator_matches_native_exactly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (qmlp, qtrain, _) = tiny_model();
+    let base = qmlp.accuracy(&qtrain, None);
+    let native = NativeEvaluator::new(&qmlp, &qtrain, base);
+    let pjrt = PjrtEvaluator::new(&rt, "tiny", &qmlp, &qtrain, base).expect("pjrt eval");
+
+    let mut rng = Rng::new(42);
+    // Mix of exact, dense and sparse genomes, more than one tile (P=16).
+    let mut genomes = vec![native.map.exact_genome()];
+    for _ in 0..37 {
+        let p = 0.4 + 0.6 * rng.f64();
+        genomes.push(native.map.random_genome(&mut rng, p));
+    }
+    let native_objs = native.evaluate(&genomes);
+    let pjrt_objs = pjrt.evaluate(&genomes);
+    assert_eq!(native_objs.len(), pjrt_objs.len());
+    for (i, (n, p)) in native_objs.iter().zip(&pjrt_objs).enumerate() {
+        assert!(
+            (n[0] - p[0]).abs() < 1e-9,
+            "genome {i}: accuracy loss differs native={} pjrt={}",
+            n[0],
+            p[0]
+        );
+        assert_eq!(n[1], p[1], "genome {i}: area estimate differs");
+    }
+}
+
+#[test]
+fn pjrt_trainer_learns_tiny() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = builtin::tiny();
+    let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+    let mut float = FloatMlp::init(cfg.topology, 1);
+    float.train(&split.train, &TrainOpts { epochs: 30, ..Default::default() });
+
+    let trainer = PjrtTrainer::new(&rt, "tiny");
+    let tm = trainer.train(&cfg, &float, &split, &qtrain, &qtest).expect("train");
+    assert!(
+        tm.acc_q_test > 0.70,
+        "PJRT-QAT quantized accuracy too low: {}",
+        tm.acc_q_test
+    );
+    assert!(
+        tm.acc_q_test > tm.acc_float_test - 0.2,
+        "QAT lost too much accuracy: {} vs float {}",
+        tm.acc_q_test,
+        tm.acc_float_test
+    );
+}
+
+#[test]
+fn pjrt_ga_smoke() {
+    // A short NSGA-II run entirely on the PJRT evaluator.
+    let Some(rt) = runtime_or_skip() else { return };
+    let (qmlp, qtrain, _) = tiny_model();
+    let base = qmlp.accuracy(&qtrain, None);
+    let pjrt = PjrtEvaluator::new(&rt, "tiny", &qmlp, &qtrain, base).expect("pjrt eval");
+    let mut spec = builtin::tiny().ga;
+    spec.population = 16;
+    spec.generations = 3;
+    let glen = pjrt.genome_map().len();
+    let ga = printed_mlp::ga::Nsga2::new(spec, glen, &pjrt);
+    let result = ga.run(|_, _| {});
+    assert!(!result.front.is_empty());
+    // The exact anchor guarantees a zero-loss point on the front.
+    assert!(result.front.iter().any(|i| i.objs[0] == 0.0));
+}
