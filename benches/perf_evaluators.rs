@@ -1,5 +1,7 @@
-//! Perf: GA-evaluator throughput (chromosomes/s), native vs PJRT, per
-//! dataset — the framework's hot path (EXPERIMENTS.md §Perf).
+//! Perf: GA-evaluator throughput (chromosomes/s) — native vs
+//! circuit-in-the-loop (synthesize + wave-classify per chromosome) vs
+//! PJRT when artifacts exist — per dataset; the framework's hot path
+//! (EXPERIMENTS.md §Perf).
 mod common;
 
 fn main() {

@@ -1,5 +1,8 @@
 //! Perf: netlist generation + synthesis + analysis throughput on the
-//! exact baseline circuits (the Table II sweep's inner loop).
+//! exact baseline circuits (the Table II sweep's inner loop), plus the
+//! simulation section: scalar `eval_nodes` vs the bit-parallel wave
+//! engine in vectors/sec on the synthesized netlists (the wave engine's
+//! ≥20× target lives here).
 mod common;
 use printed_mlp::baselines::Int8Mlp;
 use printed_mlp::config::builtin;
@@ -8,11 +11,41 @@ use printed_mlp::egfet::{analyze, Library};
 use printed_mlp::model::float_mlp::TrainOpts;
 use printed_mlp::model::FloatMlp;
 use printed_mlp::netlist::mlp::ArgmaxMode;
+use printed_mlp::netlist::Netlist;
+use printed_mlp::sim::{self, wave};
 use printed_mlp::synth::optimize;
+use printed_mlp::util::Rng;
+
+/// Simulation throughput of one netlist: (scalar vectors/s, wave
+/// vectors/s). Same random stimulus for both engines.
+fn sim_rates(nl: &Netlist, n_vectors: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let vectors: Vec<Vec<bool>> = (0..n_vectors)
+        .map(|_| (0..nl.n_inputs).map(|_| rng.chance(0.5)).collect())
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut values = Vec::new();
+    for v in &vectors {
+        sim::eval_nodes_into(nl, v, &mut values);
+    }
+    let scalar_rate = n_vectors as f64 / t0.elapsed().as_secs_f64();
+
+    let batches: Vec<wave::InputWave> =
+        vectors.chunks(wave::LANES).map(wave::pack_vectors).collect();
+    let t0 = std::time::Instant::now();
+    let mut words = Vec::new();
+    for b in &batches {
+        wave::eval_wave_into(nl, &b.words, &mut words);
+    }
+    let wave_rate = n_vectors as f64 / t0.elapsed().as_secs_f64();
+    (scalar_rate, wave_rate)
+}
 
 fn main() {
     common::timed("perf_synth", || {
         let mut rows = Vec::new();
+        let mut sim_rows = Vec::new();
         for name in ["cardio", "pendigits", "arrhythmia"] {
             let cfg = builtin::by_name(name).unwrap();
             let (split, _, _) = datasets::load(&cfg.dataset);
@@ -37,11 +70,26 @@ fn main() {
                 format!("{t_analyze:.4}s"),
                 format!("{:.0}", hw.area_cm2),
             ]);
+
+            let (scalar_rate, wave_rate) = sim_rates(&opt, 4096, 7);
+            sim_rows.push(vec![
+                name.to_string(),
+                format!("{}", opt.cell_count()),
+                format!("{scalar_rate:.0}"),
+                format!("{wave_rate:.0}"),
+                format!("{:.1}x", wave_rate / scalar_rate),
+            ]);
         }
-        printed_mlp::report::render_table(
+        let mut out = printed_mlp::report::render_table(
             "synthesis throughput (exact baseline circuits)",
             &["dataset", "gates in", "cells out", "build", "synth", "analyze", "area cm2"],
             &rows,
-        )
+        );
+        out.push_str(&printed_mlp::report::render_table(
+            "simulation throughput (synthesized netlists, 4096 vectors)",
+            &["dataset", "cells", "scalar vec/s", "wave vec/s", "speedup"],
+            &sim_rows,
+        ));
+        out
     });
 }

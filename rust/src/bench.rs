@@ -498,7 +498,9 @@ pub fn table5(study: &mut Study) -> String {
 // Ablation — PJRT vs native evaluator (design-choice bench)
 // ---------------------------------------------------------------------------
 
-/// Throughput of the two GA evaluators on one dataset (chromosomes/s).
+/// Throughput of the GA evaluators on one dataset (chromosomes/s):
+/// native integer model, circuit-in-the-loop (synthesize + wave-classify
+/// per chromosome), and PJRT when artifacts are present.
 pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
     use crate::ga::Evaluator;
     let cfg = builtin::by_name(name).expect("dataset");
@@ -520,6 +522,23 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
         format!("{native_rate:.0}"),
         format!("{}", objs_native.len()),
     ]];
+
+    // Circuit-in-the-loop on a genome subset (each evaluation is a full
+    // build + synthesis + wave classification of the train set).
+    let n_circuit = n_genomes.min(16);
+    let circuit = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base);
+    let t0 = std::time::Instant::now();
+    let objs_circuit = circuit.evaluate(&genomes[..n_circuit]);
+    let circuit_rate = n_circuit as f64 / t0.elapsed().as_secs_f64();
+    let agree = objs_native
+        .iter()
+        .zip(&objs_circuit)
+        .all(|(a, b)| (a[0] - b[0]).abs() < 1e-9 && a[1] == b[1]);
+    rows.push(vec![
+        "circuit".to_string(),
+        format!("{circuit_rate:.1}"),
+        format!("netlist-equal over {n_circuit}: {agree}"),
+    ]);
 
     if let Ok(rt) = crate::runtime::Runtime::new(&crate::runtime::Runtime::default_dir()) {
         if rt.manifest.entries.contains_key(name) {

@@ -9,18 +9,27 @@
 //! The GA accuracy evaluator is pluggable: the PJRT path (AOT-compiled
 //! Layer-2/Layer-1 programs) when artifacts are present, the native
 //! integer model otherwise — both verified bit-equivalent in
-//! `rust/tests/pjrt_integration.rs`.
+//! `rust/tests/pjrt_integration.rs` — or, with
+//! [`EvalBackend::Circuit`], the circuit-in-the-loop evaluator that
+//! synthesizes every chromosome and classifies the train set on the
+//! gate-level netlist through the bit-parallel wave simulator
+//! (`crate::sim::wave`). All hardware reports use toggle activity
+//! measured by wave-simulating a shared train-set stimulus.
 
 use crate::accum::GenomeMap;
 use crate::argmax::{build_plan, ArgmaxPlan, ArgmaxSearchOpts};
 use crate::baselines::Int8Mlp;
 use crate::config::RunConfig;
 use crate::datasets;
-use crate::egfet::{analyze, analyze_0p6v, classify_power_source, HwReport, Library, PowerSource};
+use crate::egfet::{
+    analyze_0p6v_measured, analyze_measured, classify_power_source, HwReport, Library,
+    PowerSource,
+};
 use crate::ga::{self, Nsga2};
 use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
-use crate::runtime::evaluator::NativeEvaluator;
+use crate::runtime::evaluator::{CircuitEvaluator, NativeEvaluator};
 use crate::runtime::{PjrtEvaluator, Runtime};
+use crate::sim::wave;
 use crate::synth::optimize;
 use crate::train::{self, TrainedModel};
 use crate::util::BitVec;
@@ -33,6 +42,9 @@ pub enum EvalBackend {
     Auto,
     Pjrt,
     Native,
+    /// Circuit-in-the-loop: fitness on the synthesized gate-level netlist
+    /// through the bit-parallel wave simulator.
+    Circuit,
 }
 
 /// Pipeline options.
@@ -134,7 +146,7 @@ impl Pipeline {
 
         // ---- 2. training + QAT -----------------------------------------
         let runtime = match self.opts.backend {
-            EvalBackend::Native => None,
+            EvalBackend::Native | EvalBackend::Circuit => None,
             _ => Runtime::new(&Runtime::default_dir()).ok(),
         };
         let have_artifact = runtime
@@ -171,19 +183,30 @@ impl Pipeline {
         ));
 
         // ---- 3. baseline + QAT-only hardware ----------------------------
+        // Shared stimulus for every hardware analysis: a slice of the
+        // quantized train set in the circuits' common 4-bit input
+        // encoding. Each netlist is wave-simulated on it so the dynamic
+        // power estimate uses *measured* toggle activity (the paper's
+        // VCS-reported switching activity), not a nominal constant.
+        let qmlp = &trained.qmlp;
+        let stimulus: Vec<Vec<bool>> = qtrain
+            .x
+            .iter()
+            .take(192)
+            .map(|row| wave::encode_features(row, qmlp.l1.in_bits))
+            .collect();
         let int8 = Int8Mlp::from_float(&trained.float);
         let baseline_acc_test = int8.accuracy(&qtest);
         let baseline_hw = if self.opts.synth_baseline {
             let nl = int8.build_circuit(ArgmaxMode::Exact);
             let (opt, _) = optimize(&nl);
-            Some(analyze(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25))
+            Some(analyze_measured(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus))
         } else {
             None
         };
-        let qmlp = &trained.qmlp;
         let qat_nl = build_mlp_circuit(qmlp, &MlpCircuitOpts::default());
         let (qat_opt, _) = optimize(&qat_nl);
-        let qat_hw = analyze(&qat_opt, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+        let qat_hw = analyze_measured(&qat_opt, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus);
         if let Some(hw) = &baseline_hw {
             log(&format!(
                 "baseline: {:.1} cm2 / {:.1} mW; QAT-only: {:.2} cm2 / {:.2} mW",
@@ -200,23 +223,31 @@ impl Pipeline {
         let depths1: Vec<u8> = vec![t / 2, t, t.saturating_add(2), t.saturating_add(4)];
         let depths2: Vec<u8> = vec![0, 2, 4, 6];
         let seeds = crate::accum::truncation_seeds(&map, &depths1, &depths2);
-        let (front, population, backend_used) = if have_artifact {
+        let log_gen = |generation: usize, snap: &ga::GaResult| {
+            if self.opts.verbose {
+                let (b2, b5) = snap.history.last().copied().unwrap_or((0.0, 0.0));
+                eprintln!(
+                    "[{name}] gen {generation}: best area @2% loss = {b2:.0} FA, @5% = {b5:.0} FA"
+                );
+            }
+        };
+        let (front, population, backend_used) = if self.opts.backend == EvalBackend::Circuit {
+            // Circuit-in-the-loop: every chromosome is synthesized and
+            // classified at the gate level through the wave engine.
+            let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train);
+            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
+            let result = ga.run(log_gen);
+            (result.front, result.population, "circuit")
+        } else if have_artifact {
             let rt = runtime.as_ref().unwrap();
             let ev = PjrtEvaluator::new(rt, &cfg.dataset.name, qmlp, &qtrain, base_acc_train)?;
             let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
-            let result = ga.run(|generation, snap| {
-                if self.opts.verbose {
-                    let (b2, b5) = snap.history.last().copied().unwrap_or((0.0, 0.0));
-                    eprintln!(
-                        "[{name}] gen {generation}: best area @2% loss = {b2:.0} FA, @5% = {b5:.0} FA"
-                    );
-                }
-            });
+            let result = ga.run(log_gen);
             (result.front, result.population, "pjrt")
         } else {
             let ev = NativeEvaluator::new(qmlp, &qtrain, base_acc_train);
             let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
-            let result = ga.run(|_, _| {});
+            let result = ga.run(log_gen);
             (result.front, result.population, "native")
         };
         log(&format!(
@@ -259,7 +290,7 @@ impl Pipeline {
             );
             let (opt_exact, _) = optimize(&nl_exact);
             let hw_exact_argmax =
-                analyze(&opt_exact, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
+                analyze_measured(&opt_exact, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus);
             let nl_full = build_mlp_circuit(
                 qmlp,
                 &MlpCircuitOpts {
@@ -268,8 +299,9 @@ impl Pipeline {
                 },
             );
             let (opt_full, _) = optimize(&nl_full);
-            let hw_full = analyze(&opt_full, &Library::egfet_1v(), cfg.hw.clock_ms, 0.25);
-            let hw_0p6v = analyze_0p6v(&opt_full, cfg.hw.clock_ms, 0.25);
+            let hw_full =
+                analyze_measured(&opt_full, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus);
+            let hw_0p6v = analyze_0p6v_measured(&opt_full, cfg.hw.clock_ms, &stimulus);
             let power_source = classify_power_source(hw_0p6v.power_mw);
 
             designs.push(FinalDesign {

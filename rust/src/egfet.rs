@@ -171,6 +171,36 @@ pub fn analyze_0p6v(nl: &Netlist, clock_ms: f64, activity: f64) -> HwReport {
     analyze(nl, &Library::egfet_0p6v_upsized(), clock_ms, activity)
 }
 
+/// Nominal activity factor assumed when no vectors are simulated.
+pub const NOMINAL_ACTIVITY: f64 = 0.25;
+
+/// Toggle activity of a netlist under a concrete stimulus, via the
+/// bit-parallel wave simulator; falls back to [`NOMINAL_ACTIVITY`] when
+/// fewer than two vectors are supplied (activity needs transitions).
+pub fn measured_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
+    if vectors.len() < 2 {
+        return NOMINAL_ACTIVITY;
+    }
+    crate::sim::toggle_activity(nl, vectors)
+}
+
+/// [`analyze`] with the activity factor *measured* by wave-simulating
+/// `vectors` (the paper's VCS-reported switching activity step) instead
+/// of the nominal constant.
+pub fn analyze_measured(
+    nl: &Netlist,
+    lib: &Library,
+    clock_ms: f64,
+    vectors: &[Vec<bool>],
+) -> HwReport {
+    analyze(nl, lib, clock_ms, measured_activity(nl, vectors))
+}
+
+/// [`analyze_0p6v`] driven by measured toggle activity.
+pub fn analyze_0p6v_measured(nl: &Netlist, clock_ms: f64, vectors: &[Vec<bool>]) -> HwReport {
+    analyze_0p6v(nl, clock_ms, measured_activity(nl, vectors))
+}
+
 /// Printed power sources of the paper's Table V narrative.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PowerSource {
@@ -306,5 +336,23 @@ mod tests {
         let quiet = analyze(&nl, &lib, 200.0, 0.0);
         let busy = analyze(&nl, &lib, 200.0, 0.5);
         assert!(busy.power_mw > quiet.power_mw);
+    }
+
+    #[test]
+    fn measured_activity_uses_wave_sim() {
+        let nl = small_netlist();
+        // Constant stimulus -> zero activity; fewer than 2 vectors -> the
+        // nominal fallback.
+        let quiet = vec![vec![true, true]; 8];
+        assert_eq!(measured_activity(&nl, &quiet), 0.0);
+        assert_eq!(measured_activity(&nl, &[]), NOMINAL_ACTIVITY);
+        // Alternating stimulus toggles cells, and the measured report
+        // burns more power than the quiet one.
+        let busy: Vec<Vec<bool>> =
+            (0..8).map(|i| vec![i % 2 == 0, i % 3 == 0]).collect();
+        let lib = Library::egfet_1v();
+        let r_busy = analyze_measured(&nl, &lib, 200.0, &busy);
+        let r_quiet = analyze_measured(&nl, &lib, 200.0, &quiet);
+        assert!(r_busy.power_mw > r_quiet.power_mw);
     }
 }

@@ -18,10 +18,12 @@ use crate::util::{BitVec, Rng};
 /// Batch evaluator of chromosomes → objective pairs
 /// `[accuracy_loss, area_estimate]` (both minimized).
 ///
-/// Implemented by the native integer-model evaluator and by the PJRT
-/// evaluator that runs the AOT-compiled Layer-2/Layer-1 program.
-/// Parallelism lives *inside* `evaluate` (thread pool or XLA), so the
-/// trait itself needs no `Sync` bound — PJRT handles are not `Sync`.
+/// Implemented by the native integer-model evaluator, by the PJRT
+/// evaluator that runs the AOT-compiled Layer-2/Layer-1 program, and by
+/// the circuit-in-the-loop evaluator that wave-simulates the synthesized
+/// netlist (`crate::runtime::evaluator`). Parallelism lives *inside*
+/// `evaluate` (thread pool or XLA), so the trait itself needs no `Sync`
+/// bound — PJRT handles are not `Sync`.
 pub trait Evaluator {
     /// Evaluate a batch of genomes. Must return one `[f64; 2]` per input.
     fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]>;

@@ -8,7 +8,15 @@
 //! pipeline (train → QAT → genetic accumulation approximation → approximate
 //! Argmax → gate-level synthesis → hardware analysis → Pareto reporting)
 //! and drives AOT-compiled XLA programs (Layer-2 JAX model calling the
-//! Layer-1 Pallas masked-MAC kernel) through PJRT.
+//! Layer-1 Pallas masked-MAC kernel) through PJRT (behind the `xla`
+//! cargo feature; stubbed out in the default offline build).
+//!
+//! Circuit evaluation runs on two engines in [`sim`]: the scalar
+//! reference simulator and the bit-parallel *wave* engine
+//! ([`sim::wave`]) — 64 input vectors per pass over `u64` lane words —
+//! which powers toggle-activity measurement, the hardware-equivalence
+//! sweeps, and the circuit-in-the-loop GA backend
+//! ([`runtime::evaluator::CircuitEvaluator`], `--backend circuit`).
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index.
 

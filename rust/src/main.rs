@@ -11,7 +11,9 @@
 //!                                (table2|table3|table4|table5|fig4|fig5|all)
 //!   ablation --dataset <name>    PJRT-vs-native evaluator throughput
 //!
-//! Shared flags: --scale smoke|small|paper, --backend auto|pjrt|native,
+//! Shared flags: --scale smoke|small|paper,
+//! --backend auto|pjrt|native|circuit (`circuit` scores GA fitness on the
+//! synthesized netlist via the bit-parallel wave simulator),
 //! --out <file> (JSON for `run`, text otherwise), --pop/--gens overrides.
 
 use anyhow::{anyhow, bail, Result};
@@ -65,7 +67,8 @@ impl Args {
             "auto" => EvalBackend::Auto,
             "pjrt" => EvalBackend::Pjrt,
             "native" => EvalBackend::Native,
-            other => bail!("bad --backend '{other}' (auto|pjrt|native)"),
+            "circuit" => EvalBackend::Circuit,
+            other => bail!("bad --backend '{other}' (auto|pjrt|native|circuit)"),
         })
     }
 
@@ -254,11 +257,13 @@ fn run() -> Result<()> {
                  usage: pmlp <command> [--flags]\n\n\
                  commands:\n  \
                  list                      built-in dataset configs\n  \
-                 run --dataset <name>      full pipeline [--backend auto|pjrt|native] [--pop N] [--gens N] [--out r.json]\n  \
+                 run --dataset <name>      full pipeline [--backend auto|pjrt|native|circuit] [--pop N] [--gens N] [--out r.json]\n                            \
+                 (backend 'circuit' = circuit-in-the-loop: GA fitness measured on the\n                            \
+                 synthesized gate-level netlist via the 64-lane wave simulator)\n  \
                  train --dataset <name>    training + QAT only\n  \
                  gen-data --dataset <name> dump synthetic dataset CSV [--out f.csv]\n  \
                  repro --exp <id>          regenerate table2|table3|table4|table5|fig4|fig5|all [--scale smoke|small|paper]\n  \
-                 ablation --dataset <name> evaluator throughput (native vs PJRT) [--n N]"
+                 ablation --dataset <name> evaluator throughput (native vs PJRT vs circuit) [--n N]"
             );
             Ok(())
         }

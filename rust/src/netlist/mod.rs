@@ -10,7 +10,9 @@
 //!
 //! Invariant: gate operands always refer to earlier node ids, so the
 //! gate list is topologically ordered by construction — simulation and
-//! timing are single forward passes.
+//! timing are single forward passes. The same invariant is what lets the
+//! bit-parallel wave engine (`crate::sim::wave`, DESIGN.md §2) evaluate
+//! 64 vectors per pass with one `u64` word per node.
 
 pub mod build;
 pub mod mlp;

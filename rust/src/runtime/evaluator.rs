@@ -1,6 +1,6 @@
 //! GA chromosome evaluators — the hot path of the framework.
 //!
-//! Two interchangeable implementations of [`crate::ga::Evaluator`]:
+//! Three interchangeable implementations of [`crate::ga::Evaluator`]:
 //!
 //! * [`PjrtEvaluator`] — the three-layer architecture's path: batches of
 //!   chromosomes are packed into mask tensors and dispatched to the
@@ -10,8 +10,14 @@
 //! * [`NativeEvaluator`] — the pure-Rust integer model, thread-parallel.
 //!   Used for cross-checking the PJRT path bit-exactly and as the
 //!   fallback when artifacts are absent.
+//! * [`CircuitEvaluator`] — circuit-in-the-loop: every chromosome is
+//!   synthesized to its bespoke gate-level netlist and the whole
+//!   evaluation set is classified through the bit-parallel wave simulator
+//!   (`crate::sim::wave`), so the GA's accuracy objective is measured on
+//!   the *actual hardware function*, not the integer model. Affordable
+//!   only because the wave engine advances 64 vectors per pass.
 //!
-//! Both return the objective pair `[accuracy_loss, estimated_area]` the
+//! All return the objective pair `[accuracy_loss, estimated_area]` the
 //! NSGA-II optimizer minimizes (paper §III-D1/D2/D3).
 
 use crate::accum::GenomeMap;
@@ -19,10 +25,14 @@ use crate::area::AreaModel;
 use crate::datasets::QuantDataset;
 use crate::ga::Evaluator;
 use crate::model::QuantMlp;
-use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Runtime};
+use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
+use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
+use crate::sim::wave::{self, InputWave};
+use crate::synth::optimize;
 use crate::util::{threads, BitVec};
 use anyhow::Result;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Flattened i32 views of a quantized MLP (what the artifacts consume).
 #[derive(Clone, Debug)]
@@ -69,7 +79,7 @@ pub struct PjrtEvaluator {
     area: AreaModel,
     base_acc: f64,
     // Pre-built literals reused across every dispatch.
-    fixed_args: Vec<xla::Literal>,
+    fixed_args: Vec<Literal>,
     dims: (usize, usize, usize, usize), // (B, N0, H, O)
 }
 
@@ -176,7 +186,7 @@ impl PjrtEvaluator {
         let m2_lit = lit_i32(&m2, &[p as i64, o as i64, h as i64])?;
         let act_lit = lit_i32_scalar(self.act_shift());
         let f = &self.fixed_args;
-        let all: Vec<&xla::Literal> = vec![
+        let all: Vec<&Literal> = vec![
             &f[0], &f[1], &f[2], &f[3], &f[4], &mb1_lit, &f[5], &f[6], &f[7], &mb2_lit,
             &m1_lit, &m2_lit, &act_lit,
         ];
@@ -249,6 +259,106 @@ impl Evaluator for NativeEvaluator {
     }
 }
 
+/// Circuit-in-the-loop evaluator: fitness on the synthesized netlist.
+///
+/// For every chromosome the bespoke circuit is generated
+/// ([`build_mlp_circuit`]), optimized ([`crate::synth::optimize`] — the
+/// constant-sweep that realizes the approximation) and the whole
+/// evaluation set is classified through the wave simulator, 64 samples
+/// per pass. The accuracy objective therefore reflects the exact gate-
+/// level function the design tapes out with, closing the loop the paper
+/// leaves open between the GA's integer surrogate and the hardware.
+///
+/// The area objective stays the FA surrogate of [`AreaModel`] so fronts
+/// from all three backends are directly comparable (and the coordinator's
+/// exact-genome fallback injects the same units).
+///
+/// Results are memoized per genome: NSGA-II's crossover/mutation streams
+/// revisit identical chromosomes across generations, and each cache hit
+/// skips a full build + synthesis + simulation, reusing the work of the
+/// earlier fitness call.
+pub struct CircuitEvaluator {
+    pub mlp: QuantMlp,
+    pub map: GenomeMap,
+    pub area: AreaModel,
+    pub base_acc: f64,
+    pub threads: usize,
+    /// Train samples packed once into 64-lane input waves.
+    batches: Vec<InputWave>,
+    labels: Vec<usize>,
+    cache: Mutex<HashMap<BitVec, [f64; 2]>>,
+}
+
+impl CircuitEvaluator {
+    pub fn new(mlp: &QuantMlp, train: &QuantDataset, base_acc: f64) -> CircuitEvaluator {
+        let map = GenomeMap::new(mlp);
+        let area = AreaModel::new(&map);
+        let encoded: Vec<Vec<bool>> = train
+            .x
+            .iter()
+            .map(|row| wave::encode_features(row, mlp.l1.in_bits))
+            .collect();
+        let batches = encoded.chunks(wave::LANES).map(wave::pack_vectors).collect();
+        CircuitEvaluator {
+            mlp: mlp.clone(),
+            map,
+            area,
+            base_acc,
+            threads: threads::default_threads(),
+            batches,
+            labels: train.y.clone(),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Build + optimize the chromosome's netlist and classify the train
+    /// set through it (single-threaded: parallelism is across genomes).
+    fn score(&self, genome: &BitVec) -> [f64; 2] {
+        let masks = self.map.to_masks(genome);
+        let nl = build_mlp_circuit(
+            &self.mlp,
+            &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Exact },
+        );
+        let (opt, _) = optimize(&nl);
+        let preds = wave::classify(&opt, &self.batches, "class", 1);
+        let correct = preds
+            .iter()
+            .zip(&self.labels)
+            .filter(|(&p, &y)| p as usize == y)
+            .count();
+        let acc = correct as f64 / self.labels.len().max(1) as f64;
+        let loss = (self.base_acc - acc).max(0.0);
+        [loss, self.area.estimate(genome) as f64]
+    }
+}
+
+impl Evaluator for CircuitEvaluator {
+    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
+        // Dedup within the batch first: NSGA-II offspring routinely
+        // repeat chromosomes, and concurrent workers would otherwise all
+        // miss the cache together and each pay a full synthesis.
+        let mut uniq: Vec<&BitVec> = Vec::new();
+        let mut slot: HashMap<&BitVec, usize> = HashMap::new();
+        let mut which = Vec::with_capacity(genomes.len());
+        for g in genomes {
+            let k = *slot.entry(g).or_insert_with(|| {
+                uniq.push(g);
+                uniq.len() - 1
+            });
+            which.push(k);
+        }
+        let uniq_objs = threads::par_map(uniq.len(), self.threads, |i| {
+            if let Some(hit) = self.cache.lock().unwrap().get(uniq[i]) {
+                return *hit;
+            }
+            let objs = self.score(uniq[i]);
+            self.cache.lock().unwrap().insert(uniq[i].clone(), objs);
+            objs
+        });
+        which.into_iter().map(|k| uniq_objs[k]).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,14 +368,19 @@ mod tests {
     use crate::model::FloatMlp;
     use crate::util::Rng;
 
-    #[test]
-    fn native_evaluator_exact_genome_has_zero_loss() {
+    fn tiny_setup() -> (QuantMlp, crate::datasets::QuantDataset, f64) {
         let cfg = builtin::tiny();
         let (split, qtrain, _) = datasets::load(&cfg.dataset);
         let mut mlp = FloatMlp::init(cfg.topology, 1);
         mlp.train(&split.train, &TrainOpts { epochs: 20, ..Default::default() });
         let qmlp = QuantMlp::from_float(&mlp, &qtrain);
         let base = qmlp.accuracy(&qtrain, None);
+        (qmlp, qtrain, base)
+    }
+
+    #[test]
+    fn native_evaluator_exact_genome_has_zero_loss() {
+        let (qmlp, qtrain, base) = tiny_setup();
         let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
         let exact = ev.map.exact_genome();
         let objs = ev.evaluate(&[exact]);
@@ -276,12 +391,7 @@ mod tests {
 
     #[test]
     fn native_evaluator_batch_matches_single() {
-        let cfg = builtin::tiny();
-        let (split, qtrain, _) = datasets::load(&cfg.dataset);
-        let mut mlp = FloatMlp::init(cfg.topology, 1);
-        mlp.train(&split.train, &TrainOpts { epochs: 20, ..Default::default() });
-        let qmlp = QuantMlp::from_float(&mlp, &qtrain);
-        let base = qmlp.accuracy(&qtrain, None);
+        let (qmlp, qtrain, base) = tiny_setup();
         let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
         let mut rng = Rng::new(5);
         let genomes: Vec<_> = (0..7).map(|_| ev.map.random_genome(&mut rng, 0.8)).collect();
@@ -290,5 +400,42 @@ mod tests {
             let single = ev.evaluate(std::slice::from_ref(genome));
             assert_eq!(batch[i], single[0]);
         }
+    }
+
+    #[test]
+    fn circuit_evaluator_matches_native_on_tiny() {
+        // The gate-level netlists are verified equivalent to the masked
+        // integer model, so the circuit evaluator's objectives must equal
+        // the native evaluator's on every genome.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let native = NativeEvaluator::new(&qmlp, &qtrain, base);
+        let circuit = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        let mut rng = Rng::new(11);
+        let mut genomes = vec![native.map.exact_genome()];
+        for _ in 0..5 {
+            genomes.push(native.map.random_genome(&mut rng, 0.7));
+        }
+        let a = native.evaluate(&genomes);
+        let b = circuit.evaluate(&genomes);
+        for (i, (na, ci)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (na[0] - ci[0]).abs() < 1e-12,
+                "genome {i}: native loss {} vs circuit loss {}",
+                na[0],
+                ci[0]
+            );
+            assert_eq!(na[1], ci[1], "genome {i}: area objective differs");
+        }
+    }
+
+    #[test]
+    fn circuit_evaluator_cache_is_stable() {
+        let (qmlp, qtrain, base) = tiny_setup();
+        let circuit = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        let mut rng = Rng::new(3);
+        let g = circuit.map.random_genome(&mut rng, 0.6);
+        let first = circuit.evaluate(std::slice::from_ref(&g));
+        let second = circuit.evaluate(std::slice::from_ref(&g));
+        assert_eq!(first, second);
     }
 }

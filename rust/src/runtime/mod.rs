@@ -6,16 +6,21 @@
 //! access to the Layer-2/Layer-1 compute graphs through the PJRT C API
 //! (`xla` crate). One compiled executable per (program, topology) pair,
 //! cached for the lifetime of the runtime.
+//!
+//! The PJRT bridge is gated behind the `xla` cargo feature: without it
+//! (the default offline build) [`Runtime::new`] fails cleanly at run time
+//! and the coordinator falls back to the native/circuit evaluators, so
+//! every caller compiles unchanged either way.
 
 pub mod evaluator;
 
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::Path;
 
-pub use evaluator::PjrtEvaluator;
+pub use evaluator::{CircuitEvaluator, PjrtEvaluator};
+pub use pjrt::{lit_f32, lit_f32_scalar, lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
 
 /// Shape metadata of one topology's artifacts (from `manifest.json`).
 #[derive(Clone, Debug)]
@@ -65,111 +70,206 @@ impl Manifest {
     }
 }
 
-/// A compiled PJRT executable plus its program name.
-pub struct Executable {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+/// Default artifacts directory (env `PMLP_ARTIFACTS` or `artifacts/`).
+fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("PMLP_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
 }
 
-impl Executable {
-    /// Execute with positional literal arguments; returns the flattened
-    /// tuple elements of the (single, tupled) result.
-    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
-        &self,
-        args: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        let bufs = self
-            .exe
-            .execute::<L>(args)
-            .with_context(|| format!("executing {}", self.name))?;
-        let lit = bufs[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        Ok(lit.to_tuple()?)
+#[cfg(feature = "xla")]
+mod pjrt {
+    //! The real PJRT bridge (requires the `xla` crate).
+
+    use super::{default_artifact_dir, Manifest, ManifestEntry};
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    /// Host-side tensor literal handed to/returned from executables.
+    pub type Literal = xla::Literal;
+
+    /// A compiled PJRT executable plus its program name.
+    pub struct Executable {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
-}
 
-/// The runtime: a CPU PJRT client + executable cache over an artifacts
-/// directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub dir: PathBuf,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Create a runtime over `dir` (default `artifacts/`).
-    pub fn new(dir: &Path) -> Result<Runtime> {
-        // Silence the TFRT client's info-level banner on stderr.
-        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
-            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    impl Executable {
+        /// Execute with positional literal arguments; returns the flattened
+        /// tuple elements of the (single, tupled) result.
+        pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+            let bufs = self
+                .exe
+                .execute::<L>(args)
+                .with_context(|| format!("executing {}", self.name))?;
+            let lit = bufs[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True.
+            Ok(lit.to_tuple()?)
         }
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
     }
 
-    /// Default artifacts directory (env `PMLP_ARTIFACTS` or `artifacts/`).
-    pub fn default_dir() -> PathBuf {
-        std::env::var("PMLP_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    /// The runtime: a CPU PJRT client + executable cache over an artifacts
+    /// directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        pub dir: PathBuf,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
     }
 
-    /// Load + compile (or fetch from cache) an artifact by file stem,
-    /// e.g. `masked_acc_tiny`.
-    pub fn load(&self, stem: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(stem) {
-            return Ok(exe.clone());
+    impl Runtime {
+        /// Create a runtime over `dir` (default `artifacts/`).
+        pub fn new(dir: &Path) -> Result<Runtime> {
+            // Silence the TFRT client's info-level banner on stderr.
+            if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+                std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+            }
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Runtime {
+                client,
+                dir: dir.to_path_buf(),
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            })
         }
-        let path = self.dir.join(format!("{stem}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .with_context(|| format!("loading {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {stem}"))?;
-        let exe = std::sync::Arc::new(Executable { name: stem.to_string(), exe });
-        self.cache.lock().unwrap().insert(stem.to_string(), exe.clone());
-        Ok(exe)
+
+        /// Default artifacts directory (env `PMLP_ARTIFACTS` or `artifacts/`).
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
+        }
+
+        /// Load + compile (or fetch from cache) an artifact by file stem,
+        /// e.g. `masked_acc_tiny`.
+        pub fn load(&self, stem: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(stem) {
+                return Ok(exe.clone());
+            }
+            let path = self.dir.join(format!("{stem}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {stem}"))?;
+            let exe = std::sync::Arc::new(Executable { name: stem.to_string(), exe });
+            self.cache.lock().unwrap().insert(stem.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+            self.manifest
+                .entries
+                .get(name)
+                .ok_or_else(|| anyhow!("topology '{name}' not in artifact manifest"))
+        }
     }
 
-    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
-        self.manifest
-            .entries
-            .get(name)
-            .ok_or_else(|| anyhow!("topology '{name}' not in artifact manifest"))
+    /// Build an i32 literal of the given dimensions (row-major data).
+    pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+        let expect: i64 = dims.iter().product();
+        anyhow::ensure!(expect as usize == data.len(), "lit_i32 shape mismatch");
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Build an f32 literal of the given dimensions (row-major data).
+    pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        let expect: i64 = dims.iter().product();
+        anyhow::ensure!(expect as usize == data.len(), "lit_f32 shape mismatch");
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Scalar literals.
+    pub fn lit_i32_scalar(v: i32) -> Literal {
+        xla::Literal::scalar(v)
+    }
+    pub fn lit_f32_scalar(v: f32) -> Literal {
+        xla::Literal::scalar(v)
     }
 }
 
-/// Build an i32 literal of the given dimensions (row-major data).
-pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    anyhow::ensure!(expect as usize == data.len(), "lit_i32 shape mismatch");
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    //! Stub bridge for builds without the `xla` crate: every constructor
+    //! fails at run time with a clear message, so the coordinator's
+    //! artifact probing degrades to "no artifacts" and the native/circuit
+    //! paths take over. Signatures mirror the real bridge exactly.
 
-/// Build an f32 literal of the given dimensions (row-major data).
-pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    anyhow::ensure!(expect as usize == data.len(), "lit_f32 shape mismatch");
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
+    use super::{default_artifact_dir, Manifest, ManifestEntry};
+    use anyhow::{bail, Result};
+    use std::path::{Path, PathBuf};
+    use std::sync::Arc;
 
-/// Scalar literals.
-pub fn lit_i32_scalar(v: i32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-pub fn lit_f32_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
+    const NO_XLA: &str = "PJRT bridge unavailable: built without the `xla` feature";
+
+    /// Placeholder for `xla::Literal` (never holds data in stub builds).
+    pub struct Literal;
+
+    impl Literal {
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            bail!(NO_XLA)
+        }
+    }
+
+    /// Placeholder for a compiled PJRT executable.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    impl Executable {
+        pub fn run<L: std::borrow::Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Literal>> {
+            bail!(NO_XLA)
+        }
+    }
+
+    /// Stub runtime: construction always fails.
+    pub struct Runtime {
+        pub dir: PathBuf,
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(_dir: &Path) -> Result<Runtime> {
+            bail!(NO_XLA)
+        }
+
+        /// Default artifacts directory (env `PMLP_ARTIFACTS` or `artifacts/`).
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
+        }
+
+        pub fn load(&self, _stem: &str) -> Result<Arc<Executable>> {
+            bail!(NO_XLA)
+        }
+
+        pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+            self.manifest
+                .entries
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("topology '{name}' not in artifact manifest"))
+        }
+    }
+
+    pub fn lit_i32(_data: &[i32], _dims: &[i64]) -> Result<Literal> {
+        bail!(NO_XLA)
+    }
+
+    pub fn lit_f32(_data: &[f32], _dims: &[i64]) -> Result<Literal> {
+        bail!(NO_XLA)
+    }
+
+    pub fn lit_i32_scalar(_v: i32) -> Literal {
+        Literal
+    }
+
+    pub fn lit_f32_scalar(_v: f32) -> Literal {
+        Literal
+    }
 }
 
 #[cfg(test)]
@@ -191,10 +291,19 @@ mod tests {
         assert!(!m.entries.is_empty());
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip() {
         let lit = lit_i32(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
         let back = lit.to_vec::<i32>().unwrap();
         assert_eq!(back, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_fails_cleanly() {
+        let err = Runtime::new(&Runtime::default_dir()).unwrap_err();
+        assert!(format!("{err}").contains("xla"));
+        assert!(lit_i32(&[1], &[1]).is_err());
     }
 }

@@ -1,16 +1,31 @@
-//! Levelized gate-level logic simulator.
+//! Gate-level logic simulation.
 //!
 //! Replaces the commercial simulation step (Synopsys VCS) of the paper's
 //! flow: every generated circuit is functionally verified against the
 //! integer model on concrete vectors (the equivalence chain of
 //! DESIGN.md §2), and the toggle activity it reports feeds the dynamic
 //! power estimate in `crate::egfet`.
+//!
+//! Two engines share the node/netlist model:
+//!
+//! * the scalar engine below — one `bool` per node, one vector at a time;
+//!   simple, and the golden reference for the wave engine;
+//! * [`wave`] — the bit-parallel engine: one `u64` lane word per node, 64
+//!   vectors per forward pass, popcount-based toggle counting and
+//!   thread-parallel batch dispatch. All batch workloads (toggle
+//!   activity, dataset classification, equivalence sweeps) run on it.
 
-use crate::netlist::{Gate, Netlist};
+pub mod wave;
+
+use crate::netlist::{Gate, Netlist, NodeId};
 use std::collections::HashMap;
 
 /// Evaluate a netlist on one input vector; returns named output buses as
 /// bit vectors (LSB first).
+///
+/// Convenience wrapper that allocates per call — hot paths should use
+/// [`eval_nodes_into`] + [`gather_bus`] with reused buffers, or the
+/// [`wave`] engine for batches.
 pub fn eval(nl: &Netlist, inputs: &[bool]) -> HashMap<String, Vec<bool>> {
     let values = eval_nodes(nl, inputs);
     nl.outputs
@@ -24,32 +39,48 @@ pub fn eval(nl: &Netlist, inputs: &[bool]) -> HashMap<String, Vec<bool>> {
 /// Evaluate and return the value of every node (single forward pass —
 /// the gate list is topologically ordered by construction).
 pub fn eval_nodes(nl: &Netlist, inputs: &[bool]) -> Vec<bool> {
-    let mut v = vec![false; nl.gates.len()];
-    for (i, g) in nl.gates.iter().enumerate() {
-        v[i] = match *g {
+    let mut v = Vec::new();
+    eval_nodes_into(nl, inputs, &mut v);
+    v
+}
+
+/// [`eval_nodes`] through a caller-owned buffer: `values` is cleared and
+/// refilled, so repeated simulation performs no per-vector allocation.
+pub fn eval_nodes_into(nl: &Netlist, inputs: &[bool], values: &mut Vec<bool>) {
+    values.clear();
+    values.reserve(nl.gates.len());
+    for g in &nl.gates {
+        let v = match *g {
             Gate::Input(idx) => {
                 *inputs.get(idx as usize).unwrap_or_else(|| {
                     panic!("input {idx} missing ({} provided)", inputs.len())
                 })
             }
             Gate::Const(c) => c,
-            Gate::Not(a) => !v[a as usize],
-            Gate::And(a, b) => v[a as usize] & v[b as usize],
-            Gate::Or(a, b) => v[a as usize] | v[b as usize],
-            Gate::Xor(a, b) => v[a as usize] ^ v[b as usize],
-            Gate::Nand(a, b) => !(v[a as usize] & v[b as usize]),
-            Gate::Nor(a, b) => !(v[a as usize] | v[b as usize]),
-            Gate::Xnor(a, b) => !(v[a as usize] ^ v[b as usize]),
+            Gate::Not(a) => !values[a as usize],
+            Gate::And(a, b) => values[a as usize] & values[b as usize],
+            Gate::Or(a, b) => values[a as usize] | values[b as usize],
+            Gate::Xor(a, b) => values[a as usize] ^ values[b as usize],
+            Gate::Nand(a, b) => !(values[a as usize] & values[b as usize]),
+            Gate::Nor(a, b) => !(values[a as usize] | values[b as usize]),
+            Gate::Xnor(a, b) => !(values[a as usize] ^ values[b as usize]),
             Gate::Mux(s, a, b) => {
-                if v[s as usize] {
-                    v[b as usize]
+                if values[s as usize] {
+                    values[b as usize]
                 } else {
-                    v[a as usize]
+                    values[a as usize]
                 }
             }
         };
+        values.push(v);
     }
-    v
+}
+
+/// Gather an output bus out of a node-value slice into a caller-owned
+/// buffer (cleared first) — the zero-allocation companion of [`eval`].
+pub fn gather_bus(values: &[bool], bus: &[NodeId], out: &mut Vec<bool>) {
+    out.clear();
+    out.extend(bus.iter().map(|&n| values[n as usize]));
 }
 
 /// Interpret an output bus as an unsigned integer.
@@ -76,26 +107,12 @@ pub fn u64_to_bits(v: u64, width: u32) -> Vec<bool> {
 /// Average toggle activity per cell over a set of input vectors —
 /// the activity factor used by the dynamic power model. Returns the
 /// fraction of (cell, consecutive-vector) pairs whose value flipped.
+///
+/// Runs on the wave engine: consecutive vectors occupy adjacent lanes,
+/// so each cell's toggles over a 64-vector window are two word ops and a
+/// popcount (see [`wave::toggle_activity`]).
 pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
-    if vectors.len() < 2 || nl.cell_count() == 0 {
-        return 0.0;
-    }
-    let mut prev = eval_nodes(nl, &vectors[0]);
-    let mut toggles = 0u64;
-    let mut slots = 0u64;
-    for vec in &vectors[1..] {
-        let cur = eval_nodes(nl, vec);
-        for (i, g) in nl.gates.iter().enumerate() {
-            if g.is_cell() {
-                slots += 1;
-                if cur[i] != prev[i] {
-                    toggles += 1;
-                }
-            }
-        }
-        prev = cur;
-    }
-    toggles as f64 / slots as f64
+    wave::toggle_activity(nl, vectors)
 }
 
 #[cfg(test)]
@@ -167,5 +184,40 @@ mod tests {
         // Constant input -> no toggles.
         let vectors = vec![vec![true]; 4];
         assert_eq!(toggle_activity(&nl, &vectors), 0.0);
+    }
+
+    #[test]
+    fn eval_nodes_into_reuses_buffer() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        nl.output("y", vec![x]);
+        let mut values = Vec::new();
+        let mut out = Vec::new();
+        for (va, vb) in [(false, true), (true, true), (false, false)] {
+            eval_nodes_into(&nl, &[va, vb], &mut values);
+            assert_eq!(values.len(), nl.len());
+            gather_bus(&values, &nl.outputs[0].1, &mut out);
+            assert_eq!(out.as_slice(), &[va ^ vb]);
+        }
+    }
+
+    #[test]
+    fn eval_wrapper_matches_buffer_api() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.and(a, b);
+        let d = nl.nor(c, a);
+        nl.output("y", vec![c, d]);
+        let mut values = Vec::new();
+        let mut out = Vec::new();
+        for bits in [[false, false], [true, false], [true, true]] {
+            let via_map = &eval(&nl, &bits)["y"];
+            eval_nodes_into(&nl, &bits, &mut values);
+            gather_bus(&values, &nl.outputs[0].1, &mut out);
+            assert_eq!(via_map, &out);
+        }
     }
 }

@@ -7,7 +7,7 @@ use crate::config::RunConfig;
 use crate::datasets::{Dataset, QuantDataset, Split};
 use crate::fixedpoint::INPUT_BITS;
 use crate::model::FloatMlp;
-use crate::runtime::{lit_f32, lit_f32_scalar, lit_i32, lit_i32_scalar, Runtime};
+use crate::runtime::{lit_f32, lit_f32_scalar, lit_i32, lit_i32_scalar, Literal, Runtime};
 use crate::train::TrainedModel;
 use crate::util::Rng;
 use anyhow::Result;
@@ -91,7 +91,7 @@ impl<'rt> PjrtTrainer<'rt> {
                     // batch mean stays unbiased across the epoch.
                     swb[k] = class_w[train.y[idx] % o];
                 }
-                let args: Vec<xla::Literal> = vec![
+                let args: Vec<Literal> = vec![
                     lit_f32(&w1, &[h as i64, n0 as i64])?,
                     lit_f32(&b1, &[h as i64])?,
                     lit_f32(&w2, &[o as i64, h as i64])?,

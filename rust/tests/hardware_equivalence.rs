@@ -1,6 +1,10 @@
 //! Integration: the hardware equivalence chain on a trained model —
 //! `gate-level netlist simulation == Rust integer model`, exact and
 //! masked, plus synthesized-circuit monotonicity (DESIGN.md §2).
+//!
+//! The batch sweeps run on the bit-parallel wave engine (64 vectors per
+//! pass); one test additionally pins the wave engine to the scalar
+//! simulator lane-by-lane on a real synthesized MLP circuit.
 
 use printed_mlp::accum::GenomeMap;
 use printed_mlp::argmax::{build_plan, ArgmaxSearchOpts};
@@ -9,7 +13,8 @@ use printed_mlp::datasets;
 use printed_mlp::model::float_mlp::TrainOpts;
 use printed_mlp::model::{FloatMlp, QuantMlp};
 use printed_mlp::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
-use printed_mlp::sim::{bus_to_u64, eval, u64_to_bits};
+use printed_mlp::netlist::Netlist;
+use printed_mlp::sim::{eval_nodes, wave};
 use printed_mlp::synth::optimize;
 use printed_mlp::util::Rng;
 
@@ -25,12 +30,17 @@ fn trained() -> (QuantMlp, datasets::QuantDataset) {
     (QuantMlp::from_float(&mlp, &qtrain), qtrain)
 }
 
-fn encode(x: &[u32]) -> Vec<bool> {
-    let mut bits = Vec::new();
-    for &v in x {
-        bits.extend(u64_to_bits(v as u64, 4));
-    }
-    bits
+/// Encode the first `n` rows of a quantized dataset into packed waves.
+fn packed_rows(ds: &datasets::QuantDataset, n: usize) -> (Vec<Vec<bool>>, Vec<wave::InputWave>) {
+    let encoded: Vec<Vec<bool>> =
+        ds.x.iter().take(n).map(|row| wave::encode_features(row, ds.bits)).collect();
+    let batches = encoded.chunks(wave::LANES).map(wave::pack_vectors).collect();
+    (encoded, batches)
+}
+
+/// Wave-classify the `class` bus of a netlist over packed batches.
+fn classes(nl: &Netlist, batches: &[wave::InputWave]) -> Vec<usize> {
+    wave::classify(nl, batches, "class", 2).into_iter().map(|c| c as usize).collect()
 }
 
 #[test]
@@ -61,11 +71,11 @@ fn full_approximate_circuit_equals_model_predictions() {
     let (opt, stats) = optimize(&nl);
     assert!(stats.cells_out <= stats.cells_in);
 
-    // Gate-level simulation == model + plan, sample by sample.
-    for (row, z) in qtrain.x.iter().zip(&preacts).take(60) {
-        let expect = plan.predict(z);
-        let out = eval(&opt, &encode(row));
-        assert_eq!(bus_to_u64(&out["class"]) as usize, expect);
+    // Wave simulation == model + plan, the whole train set in one sweep.
+    let (_, batches) = packed_rows(&qtrain, qtrain.n_samples());
+    let got = classes(&opt, &batches);
+    for (k, z) in preacts.iter().enumerate() {
+        assert_eq!(got[k], plan.predict(z), "sample {k}");
     }
 }
 
@@ -74,11 +84,60 @@ fn synthesis_never_changes_function() {
     let (qmlp, qtrain) = trained();
     let nl = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
     let (opt, _) = optimize(&nl);
-    for row in qtrain.x.iter().take(60) {
-        let a = eval(&nl, &encode(row));
-        let b = eval(&opt, &encode(row));
-        assert_eq!(a["class"], b["class"]);
+    let (_, batches) = packed_rows(&qtrain, qtrain.n_samples());
+    // The unoptimized and optimized netlists classify identically.
+    assert_eq!(classes(&nl, &batches), classes(&opt, &batches));
+}
+
+#[test]
+fn wave_engine_is_bit_exact_on_synthesized_mlp() {
+    // Lane-by-lane, node-by-node agreement between the wave engine and
+    // the scalar reference on a real synthesized circuit — the same
+    // property the random-netlist suite checks, pinned on production
+    // structure (CSA trees, QRelu, comparator muxes).
+    let (qmlp, qtrain) = trained();
+    let nl = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
+    let (opt, _) = optimize(&nl);
+    let (encoded, batches) = packed_rows(&qtrain, 150);
+    let mut k = 0usize;
+    for batch in &batches {
+        let words = wave::eval_wave(&opt, batch);
+        for lane in 0..batch.n_lanes {
+            let scalar = eval_nodes(&opt, &encoded[k]);
+            for (i, w) in words.iter().enumerate() {
+                assert_eq!(
+                    (w >> lane) & 1 == 1,
+                    scalar[i],
+                    "sample {k} node {i} diverges"
+                );
+            }
+            k += 1;
+        }
     }
+
+    // Toggle activity: the wave implementation is the production path;
+    // cross-check it against a direct scalar recomputation.
+    let act = printed_mlp::sim::toggle_activity(&opt, &encoded);
+    let mut toggles = 0u64;
+    let mut slots = 0u64;
+    let mut prev = eval_nodes(&opt, &encoded[0]);
+    for v in &encoded[1..] {
+        let cur = eval_nodes(&opt, v);
+        for (i, g) in opt.gates.iter().enumerate() {
+            if g.is_cell() {
+                slots += 1;
+                if cur[i] != prev[i] {
+                    toggles += 1;
+                }
+            }
+        }
+        prev = cur;
+    }
+    let scalar_act = toggles as f64 / slots as f64;
+    assert!(
+        (act - scalar_act).abs() < 1e-12,
+        "wave activity {act} vs scalar {scalar_act}"
+    );
 }
 
 #[test]
@@ -106,8 +165,8 @@ fn deeper_masking_monotonically_shrinks_synthesized_area() {
 
 #[test]
 fn egfet_reports_scale_with_circuit_size() {
-    use printed_mlp::egfet::{analyze, Library};
-    let (qmlp, _) = trained();
+    use printed_mlp::egfet::{analyze_measured, Library};
+    let (qmlp, qtrain) = trained();
     let nl_exact = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
     let (opt_exact, _) = optimize(&nl_exact);
     let map = GenomeMap::new(&qmlp);
@@ -119,9 +178,14 @@ fn egfet_reports_scale_with_circuit_size() {
     );
     let (opt_small, _) = optimize(&nl_small);
     let lib = Library::egfet_1v();
-    let big = analyze(&opt_exact, &lib, 200.0, 0.25);
-    let small = analyze(&opt_small, &lib, 200.0, 0.25);
+    // Measured toggle activity from the same wave-simulated stimulus.
+    let (encoded, _) = packed_rows(&qtrain, 100);
+    let big = analyze_measured(&opt_exact, &lib, 200.0, &encoded);
+    let small = analyze_measured(&opt_small, &lib, 200.0, &encoded);
     assert!(small.area_cm2 < big.area_cm2);
-    assert!(small.power_mw < big.power_mw);
     assert!(small.delay_ms <= big.delay_ms + 1e-9);
+    // At matched activity the smaller circuit always burns less power.
+    let big_nom = printed_mlp::egfet::analyze(&opt_exact, &lib, 200.0, 0.25);
+    let small_nom = printed_mlp::egfet::analyze(&opt_small, &lib, 200.0, 0.25);
+    assert!(small_nom.power_mw < big_nom.power_mw);
 }

@@ -45,6 +45,41 @@ fn full_pipeline_produces_consistent_report() {
 }
 
 #[test]
+fn pipeline_circuit_backend_end_to_end() {
+    // Circuit-in-the-loop: GA fitness measured on the synthesized
+    // netlist through the wave simulator, end to end via the coordinator.
+    let mut cfg = builtin::tiny();
+    cfg.ga.population = 16;
+    cfg.ga.generations = 2;
+    let r = Pipeline::new(cfg, smoke_opts(EvalBackend::Circuit)).run().unwrap();
+    assert_eq!(r.backend_used, "circuit");
+    assert!(!r.front.is_empty());
+    assert!(!r.designs.is_empty());
+    // The gate-level netlists are bit-equivalent to the integer model, so
+    // the exact-genome anchor still scores exactly zero loss.
+    assert!(r.front.iter().any(|i| i.objs[0] == 0.0));
+    for d in &r.designs {
+        assert!((0.0..=1.0).contains(&d.acc_test_full));
+        assert!(d.hw_0p6v.power_mw < d.hw_full.power_mw);
+    }
+}
+
+#[test]
+fn circuit_and_native_backends_agree_on_front_semantics() {
+    // Same config, same seeds: because circuit-level accuracy equals the
+    // integer model's (hardware equivalence), both backends walk the
+    // same GA trajectory and land on the same Pareto objectives.
+    let mut cfg = builtin::tiny();
+    cfg.ga.population = 12;
+    cfg.ga.generations = 2;
+    let rn = Pipeline::new(cfg.clone(), smoke_opts(EvalBackend::Native)).run().unwrap();
+    let rc = Pipeline::new(cfg, smoke_opts(EvalBackend::Circuit)).run().unwrap();
+    let on: Vec<[f64; 2]> = rn.front.iter().map(|i| i.objs).collect();
+    let oc: Vec<[f64; 2]> = rc.front.iter().map(|i| i.objs).collect();
+    assert_eq!(on, oc);
+}
+
+#[test]
 fn pipeline_deterministic_given_config() {
     let mut cfg = builtin::tiny();
     cfg.ga.population = 20;
