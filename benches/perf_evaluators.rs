@@ -1,14 +1,21 @@
 //! Perf: GA-evaluator throughput (chromosomes/s) — native vs
-//! circuit-in-the-loop (synthesize + wave-classify per chromosome) vs
-//! PJRT when artifacts exist — per dataset; the framework's hot path
-//! (EXPERIMENTS.md §Perf).
+//! circuit-in-the-loop in both synthesis modes (from-scratch per
+//! chromosome vs template + incremental cone-local re-synthesis, on a
+//! GA-like mutation chain) vs PJRT when artifacts exist — per dataset;
+//! the framework's hot path (EXPERIMENTS.md §Perf). The incremental row
+//! reports its speedup over the from-scratch circuit path.
 mod common;
+use printed_mlp::bench::Scale;
 
 fn main() {
     common::timed("perf_evaluators", || {
+        let (names, n): (Vec<&str>, usize) = match common::scale() {
+            Scale::Smoke => (vec!["tiny"], 24),
+            _ => (vec!["cardio", "pendigits", "arrhythmia"], 64),
+        };
         let mut out = String::new();
-        for name in ["cardio", "pendigits", "arrhythmia"] {
-            out.push_str(&printed_mlp::bench::ablation_evaluators(name, 64));
+        for name in names {
+            out.push_str(&printed_mlp::bench::ablation_evaluators(name, n));
         }
         out
     });

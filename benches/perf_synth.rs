@@ -1,18 +1,26 @@
 //! Perf: netlist generation + synthesis + analysis throughput on the
-//! exact baseline circuits (the Table II sweep's inner loop), plus the
-//! simulation section: scalar `eval_nodes` vs the bit-parallel wave
-//! engine in vectors/sec on the synthesized netlists (the wave engine's
-//! ≥20× target lives here).
+//! exact baseline circuits (the Table II sweep's inner loop), the
+//! simulation section (scalar `eval_nodes` vs the bit-parallel wave
+//! engine in vectors/sec — the wave engine's ≥20× target), and the
+//! incremental re-synthesis section: template cone-patch re-synths/sec
+//! per flipped-param count vs from-scratch `optimize` (the ≥5× circuit-
+//! backend target rides on this).
+//!
+//! `PMLP_BENCH_SCALE=smoke` restricts to the tiny dataset with small
+//! vector/step counts — the CI regression gate.
 mod common;
+use printed_mlp::accum::GenomeMap;
 use printed_mlp::baselines::Int8Mlp;
+use printed_mlp::bench::Scale;
 use printed_mlp::config::builtin;
 use printed_mlp::datasets;
 use printed_mlp::egfet::{analyze, Library};
 use printed_mlp::model::float_mlp::TrainOpts;
-use printed_mlp::model::FloatMlp;
-use printed_mlp::netlist::mlp::ArgmaxMode;
+use printed_mlp::model::{FloatMlp, QuantMlp};
+use printed_mlp::netlist::mlp::{build_mlp_template, ArgmaxMode};
 use printed_mlp::netlist::Netlist;
 use printed_mlp::sim::{self, wave};
+use printed_mlp::synth::incremental::IncrementalSynth;
 use printed_mlp::synth::optimize;
 use printed_mlp::util::Rng;
 
@@ -44,11 +52,19 @@ fn sim_rates(nl: &Netlist, n_vectors: usize, seed: u64) -> (f64, f64) {
 
 fn main() {
     common::timed("perf_synth", || {
+        let scale = common::scale();
+        let (names, n_vectors, n_full, resynth_steps): (Vec<&str>, usize, usize, usize) =
+            match scale {
+                Scale::Smoke => (vec!["tiny"], 512, 3, 24),
+                _ => (vec!["cardio", "pendigits", "arrhythmia"], 4096, 8, 64),
+            };
+
         let mut rows = Vec::new();
         let mut sim_rows = Vec::new();
-        for name in ["cardio", "pendigits", "arrhythmia"] {
+        let mut inc_rows = Vec::new();
+        for name in &names {
             let cfg = builtin::by_name(name).unwrap();
-            let (split, _, _) = datasets::load(&cfg.dataset);
+            let (split, qtrain, _) = datasets::load(&cfg.dataset);
             let mut mlp = FloatMlp::init(cfg.topology, 1);
             mlp.train(&split.train, &TrainOpts { epochs: 10, ..Default::default() });
             let int8 = Int8Mlp::from_float(&mlp);
@@ -71,7 +87,7 @@ fn main() {
                 format!("{:.0}", hw.area_cm2),
             ]);
 
-            let (scalar_rate, wave_rate) = sim_rates(&opt, 4096, 7);
+            let (scalar_rate, wave_rate) = sim_rates(&opt, n_vectors, 7);
             sim_rows.push(vec![
                 name.to_string(),
                 format!("{}", opt.cell_count()),
@@ -79,6 +95,43 @@ fn main() {
                 format!("{wave_rate:.0}"),
                 format!("{:.1}x", wave_rate / scalar_rate),
             ]);
+
+            // ---- incremental vs from-scratch re-synthesis --------------
+            // Template of the quantized MLP; from-scratch baseline is
+            // `optimize(instantiate)` per genome, incremental is a
+            // `set_params` chain flipping k mask bits per step.
+            let qmlp = QuantMlp::from_float(&mlp, &qtrain);
+            let map = GenomeMap::new(&qmlp);
+            let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+            let mut rng = Rng::new(11);
+            let base = map.random_genome(&mut rng, 0.8);
+            let t0 = std::time::Instant::now();
+            let mut g = base.clone();
+            for _ in 0..n_full {
+                g.flip(rng.below(map.len()));
+                let _ = optimize(&tpl.instantiate(&g));
+            }
+            let full_rate = n_full as f64 / t0.elapsed().as_secs_f64();
+            let mut row = vec![
+                name.to_string(),
+                format!("{}", map.len()),
+                format!("{full_rate:.1}"),
+            ];
+            for k in [1usize, 4, 16] {
+                let mut inc = IncrementalSynth::new(tpl.clone());
+                let mut g = base.clone();
+                inc.set_params(&g); // prime: the one full pass
+                let t0 = std::time::Instant::now();
+                for _ in 0..resynth_steps {
+                    for _ in 0..k {
+                        g.flip(rng.below(map.len()));
+                    }
+                    inc.set_params(&g);
+                }
+                let rate = resynth_steps as f64 / t0.elapsed().as_secs_f64();
+                row.push(format!("{rate:.0} ({:.0}x)", rate / full_rate));
+            }
+            inc_rows.push(row);
         }
         let mut out = printed_mlp::report::render_table(
             "synthesis throughput (exact baseline circuits)",
@@ -86,9 +139,14 @@ fn main() {
             &rows,
         );
         out.push_str(&printed_mlp::report::render_table(
-            "simulation throughput (synthesized netlists, 4096 vectors)",
+            &format!("simulation throughput (synthesized netlists, {n_vectors} vectors)"),
             &["dataset", "cells", "scalar vec/s", "wave vec/s", "speedup"],
             &sim_rows,
+        ));
+        out.push_str(&printed_mlp::report::render_table(
+            "incremental re-synthesis (re-synths/s at k flipped params, vs from-scratch)",
+            &["dataset", "genome bits", "full synth/s", "incr @k=1", "@k=4", "@k=16"],
+            &inc_rows,
         ));
         out
     });

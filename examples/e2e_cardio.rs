@@ -50,9 +50,8 @@ fn main() -> anyhow::Result<()> {
     let opts = PipelineOpts {
         backend: EvalBackend::Pjrt,
         max_hw_points: 4,
-        synth_baseline: true,
-        approx_argmax: true,
         verbose: true,
+        ..Default::default()
     };
     let result = Pipeline::new(cfg, opts).run()?;
 

@@ -19,9 +19,8 @@ fn main() -> anyhow::Result<()> {
     let opts = PipelineOpts {
         backend: EvalBackend::Auto,
         max_hw_points: 3,
-        synth_baseline: true,
-        approx_argmax: true,
         verbose: true,
+        ..Default::default()
     };
     let result = Pipeline::new(cfg, opts).run()?;
 

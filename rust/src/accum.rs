@@ -230,7 +230,7 @@ mod tests {
             }
         }
         assert_eq!(map.len(), expect);
-        assert!(map.len() > 0);
+        assert!(!map.is_empty());
     }
 
     #[test]

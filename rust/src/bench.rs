@@ -120,9 +120,8 @@ impl Study {
             let opts = PipelineOpts {
                 backend: self.backend,
                 max_hw_points: 4,
-                synth_baseline: true,
-                approx_argmax: true,
                 verbose: std::env::var("PMLP_VERBOSE").is_ok(),
+                ..Default::default()
             };
             let result = Pipeline::new(cfg, opts).run().expect("pipeline");
             self.results.insert(name.to_string(), result);
@@ -499,10 +498,17 @@ pub fn table5(study: &mut Study) -> String {
 // ---------------------------------------------------------------------------
 
 /// Throughput of the GA evaluators on one dataset (chromosomes/s):
-/// native integer model, circuit-in-the-loop (synthesize + wave-classify
-/// per chromosome), and PJRT when artifacts are present.
+/// native integer model, circuit-in-the-loop in both synthesis modes
+/// (from-scratch per chromosome vs template + incremental cone-local
+/// re-synthesis), and PJRT when artifacts are present.
+///
+/// The circuit rows run on a GA-like *mutation chain* (each genome is a
+/// few bit flips from its predecessor) — the workload the incremental
+/// engine targets and the population structure NSGA-II actually
+/// produces; the native row keeps the independent random stream.
 pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
     use crate::ga::Evaluator;
+    use crate::synth::SynthMode;
     let cfg = builtin::by_name(name).expect("dataset");
     let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
     let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
@@ -523,21 +529,52 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
         format!("{}", objs_native.len()),
     ]];
 
-    // Circuit-in-the-loop on a genome subset (each evaluation is a full
-    // build + synthesis + wave classification of the train set).
-    let n_circuit = n_genomes.min(16);
-    let circuit = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base);
+    // GA-like mutation chain for the circuit backends.
+    let chain: Vec<crate::util::BitVec> = {
+        let mut g = native.map.random_genome(&mut rng, 0.8);
+        let mut v = Vec::with_capacity(n_genomes);
+        v.push(g.clone());
+        while v.len() < n_genomes {
+            for _ in 0..4 {
+                g.flip(rng.below(native.map.len()));
+            }
+            v.push(g.clone());
+        }
+        v
+    };
+    let objs_chain_native = native.evaluate(&chain);
+
+    // From-scratch circuit evaluation on a chain prefix (each genome is
+    // a full build + synthesis + wave classification of the train set).
+    let n_full = n_genomes.min(16);
+    let full_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
+        .with_mode(SynthMode::Full);
     let t0 = std::time::Instant::now();
-    let objs_circuit = circuit.evaluate(&genomes[..n_circuit]);
-    let circuit_rate = n_circuit as f64 / t0.elapsed().as_secs_f64();
-    let agree = objs_native
+    let objs_full = full_ev.evaluate(&chain[..n_full]);
+    let full_rate = n_full as f64 / t0.elapsed().as_secs_f64();
+    let agree_native = objs_chain_native
         .iter()
-        .zip(&objs_circuit)
+        .zip(&objs_full)
         .all(|(a, b)| (a[0] - b[0]).abs() < 1e-9 && a[1] == b[1]);
     rows.push(vec![
-        "circuit".to_string(),
-        format!("{circuit_rate:.1}"),
-        format!("netlist-equal over {n_circuit}: {agree}"),
+        "circuit/full".to_string(),
+        format!("{full_rate:.1}"),
+        format!("netlist-equal over {n_full}: {agree_native}"),
+    ]);
+
+    // Incremental: same template arena + wave cache across the chain.
+    let incr_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base);
+    let t0 = std::time::Instant::now();
+    let objs_incr = incr_ev.evaluate(&chain);
+    let incr_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+    let agree_full = objs_incr[..n_full] == objs_full[..];
+    rows.push(vec![
+        "circuit/incr".to_string(),
+        format!("{incr_rate:.1}"),
+        format!(
+            "== full over {n_full}: {agree_full}; speedup {:.1}x",
+            incr_rate / full_rate
+        ),
     ]);
 
     if let Ok(rt) = crate::runtime::Runtime::new(&crate::runtime::Runtime::default_dir()) {

@@ -30,7 +30,7 @@ use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
 use crate::runtime::evaluator::{CircuitEvaluator, NativeEvaluator};
 use crate::runtime::{PjrtEvaluator, Runtime};
 use crate::sim::wave;
-use crate::synth::optimize;
+use crate::synth::{optimize, SynthMode};
 use crate::train::{self, TrainedModel};
 use crate::util::BitVec;
 use anyhow::Result;
@@ -51,6 +51,10 @@ pub enum EvalBackend {
 #[derive(Clone, Debug)]
 pub struct PipelineOpts {
     pub backend: EvalBackend,
+    /// Synthesis strategy of the circuit backend (`--synth`): template +
+    /// incremental cone-local re-synthesis (default) or from-scratch per
+    /// chromosome. Classification output is bit-identical either way.
+    pub synth: SynthMode,
     /// Synthesize + analyze at most this many Pareto designs (the
     /// hardware step dominates runtime for large MLPs).
     pub max_hw_points: usize,
@@ -65,6 +69,7 @@ impl Default for PipelineOpts {
     fn default() -> Self {
         PipelineOpts {
             backend: EvalBackend::Auto,
+            synth: SynthMode::Incremental,
             max_hw_points: 4,
             synth_baseline: true,
             approx_argmax: true,
@@ -233,8 +238,10 @@ impl Pipeline {
         };
         let (front, population, backend_used) = if self.opts.backend == EvalBackend::Circuit {
             // Circuit-in-the-loop: every chromosome is synthesized and
-            // classified at the gate level through the wave engine.
-            let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train);
+            // classified at the gate level through the wave engine,
+            // incrementally (template cone-patch) or from scratch.
+            let ev =
+                CircuitEvaluator::new(qmlp, &qtrain, base_acc_train).with_mode(self.opts.synth);
             let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
             let result = ga.run(log_gen);
             (result.front, result.population, "circuit")
@@ -376,9 +383,7 @@ mod tests {
         let opts = PipelineOpts {
             backend: EvalBackend::Native,
             max_hw_points: 2,
-            synth_baseline: true,
-            approx_argmax: true,
-            verbose: false,
+            ..Default::default()
         };
         let result = Pipeline::new(cfg, opts).run().expect("pipeline");
         assert!(result.trained.acc_q_test > 0.6);

@@ -101,7 +101,7 @@ impl Library {
             Gate::Nor(..) => Some(&self.nor),
             Gate::Xnor(..) => Some(&self.xnor),
             Gate::Mux(..) => Some(&self.mux),
-            Gate::Input(_) | Gate::Const(_) => None,
+            Gate::Input(_) | Gate::Const(_) | Gate::Param(_) => None,
         }
     }
 }

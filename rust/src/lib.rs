@@ -18,6 +18,13 @@
 //! sweeps, and the circuit-in-the-loop GA backend
 //! ([`runtime::evaluator::CircuitEvaluator`], `--backend circuit`).
 //!
+//! Synthesis is a pass manager ([`synth`]) over a gate-level IR that
+//! also has a parameterized [`netlist::Template`] form: mask-controlled
+//! summand bits are `Param` literal sites, so the circuit backend can
+//! re-synthesize each chromosome incrementally ([`synth::incremental`],
+//! `--synth incremental|full`) — only the fanout cones of flipped mask
+//! bits are re-simplified and re-simulated.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index.
 
 pub mod util;

@@ -14,6 +14,9 @@
 //! Shared flags: --scale smoke|small|paper,
 //! --backend auto|pjrt|native|circuit (`circuit` scores GA fitness on the
 //! synthesized netlist via the bit-parallel wave simulator),
+//! --synth incremental|full (circuit backend: template + cone-local
+//! incremental re-synthesis, the default, or from-scratch per
+//! chromosome — bit-identical outputs),
 //! --out <file> (JSON for `run`, text otherwise), --pop/--gens overrides.
 
 use anyhow::{anyhow, bail, Result};
@@ -22,6 +25,7 @@ use printed_mlp::config::{builtin, RunConfig};
 use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
 use printed_mlp::datasets;
 use printed_mlp::report;
+use printed_mlp::synth::SynthMode;
 use std::collections::HashMap;
 
 fn main() {
@@ -70,6 +74,11 @@ impl Args {
             "circuit" => EvalBackend::Circuit,
             other => bail!("bad --backend '{other}' (auto|pjrt|native|circuit)"),
         })
+    }
+
+    fn synth(&self) -> Result<SynthMode> {
+        let s = self.get("synth").unwrap_or("incremental");
+        SynthMode::parse(s).ok_or_else(|| anyhow!("bad --synth '{s}' (incremental|full)"))
     }
 
     fn cfg(&self) -> Result<RunConfig> {
@@ -131,6 +140,7 @@ fn run() -> Result<()> {
             let cfg = args.cfg()?;
             let opts = PipelineOpts {
                 backend: args.backend()?,
+                synth: args.synth()?,
                 max_hw_points: args
                     .get("hw-points")
                     .map(|v| v.parse())
@@ -259,7 +269,10 @@ fn run() -> Result<()> {
                  list                      built-in dataset configs\n  \
                  run --dataset <name>      full pipeline [--backend auto|pjrt|native|circuit] [--pop N] [--gens N] [--out r.json]\n                            \
                  (backend 'circuit' = circuit-in-the-loop: GA fitness measured on the\n                            \
-                 synthesized gate-level netlist via the 64-lane wave simulator)\n  \
+                 synthesized gate-level netlist via the 64-lane wave simulator;\n                            \
+                 --synth incremental|full selects template cone-local re-synthesis\n                            \
+                 [default, same bits, re-synth cost scales with mutation size]\n                            \
+                 or from-scratch synthesis per chromosome)\n  \
                  train --dataset <name>    training + QAT only\n  \
                  gen-data --dataset <name> dump synthetic dataset CSV [--out f.csv]\n  \
                  repro --exp <id>          regenerate table2|table3|table4|table5|fig4|fig5|all [--scale smoke|small|paper]\n  \

@@ -45,6 +45,22 @@ pub fn shl(nl: &mut Netlist, bus: &Bus, shift: u32) -> Bus {
     out
 }
 
+/// Guard each bit of `bus` behind a fresh `Param` literal: bit `i`
+/// becomes `bus[i] & Param(next + i)`, and `next` advances past the
+/// allocated indices. Binding a param to 1 makes the AND fold to a wire;
+/// binding it to 0 yields the constant zero the accumulation
+/// approximation plants — so one template instantiation per chromosome
+/// reproduces the masked-summand construction after the constant sweep.
+pub fn param_masked(nl: &mut Netlist, bus: &Bus, next: &mut u32) -> Bus {
+    bus.iter()
+        .map(|&bit| {
+            let p = nl.param(*next);
+            *next += 1;
+            nl.and(bit, p)
+        })
+        .collect()
+}
+
 /// Half adder: returns (sum, carry).
 pub fn half_adder(nl: &mut Netlist, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
     (nl.xor(a, b), nl.and(a, b))
@@ -402,6 +418,32 @@ mod tests {
         assert_eq!(bus_value(&eval(&nl, &inputs)["m"]), 5);
         inputs[0] = true;
         assert_eq!(bus_value(&eval(&nl, &inputs)["m"]), 2);
+    }
+
+    #[test]
+    fn param_masked_matches_mask_semantics() {
+        // Instantiating the param-guarded bus must equal masking by the
+        // same bits, for every mask value.
+        use crate::netlist::Template;
+        use crate::util::BitVec;
+        let w = 3usize;
+        let mut nl = Netlist::new();
+        let a = nl.input_bus(w as u32);
+        let mut next = 0u32;
+        let guarded = param_masked(&mut nl, &a, &mut next);
+        assert_eq!(next, w as u32);
+        nl.output("g", guarded);
+        let tpl = Template::new(nl, w);
+        for mask in 0..1u64 << w {
+            let params = BitVec::from_bools(
+                &(0..w).map(|i| (mask >> i) & 1 == 1).collect::<Vec<_>>(),
+            );
+            let inst = tpl.instantiate(&params);
+            for x in 0..1u64 << w {
+                let out = eval(&inst, &to_bits(x, w as u32));
+                assert_eq!(bus_value(&out["g"]), x & mask, "x={x} mask={mask}");
+            }
+        }
     }
 
     #[test]

@@ -14,9 +14,10 @@ use crate::argmax::ArgmaxPlan;
 use crate::fixedpoint::{bits_for, ACT_BITS};
 use crate::model::{MaskSet, QuantLayer, QuantMlp};
 use crate::netlist::build::{
-    bias_signed, const_bus, masked_gt, mux_bus, qrelu, resize, shl, sign_extend, subtractor,
+    bias_signed, const_bus, masked_gt, mux_bus, param_masked, qrelu, resize, shl, sign_extend,
+    subtractor,
 };
-use crate::netlist::{build, Bus, Netlist};
+use crate::netlist::{build, Bus, Netlist, Template};
 
 /// How the circuit terminates.
 #[derive(Clone, Debug)]
@@ -102,6 +103,61 @@ pub fn build_mlp_circuit(mlp: &QuantMlp, opts: &MlpCircuitOpts) -> Netlist {
     nl
 }
 
+/// Build the parameterized *template* of a quantized MLP: structurally
+/// the same bespoke circuit as [`build_mlp_circuit`], but every
+/// mask-controlled summand bit is guarded by a [`crate::netlist::Gate::Param`]
+/// literal instead of being resolved against a concrete mask.
+///
+/// Param index `p` is exactly genome bit `p` of
+/// [`crate::accum::GenomeMap`]'s canonical order (layer 1 then 2; neuron
+/// by neuron; non-zero-weight inputs `j` ascending, bits LSB→MSB; bias
+/// bit last) — the two enumerations below and in `GenomeMap::new` must
+/// stay in lockstep, and the evaluator asserts their lengths agree.
+/// Instantiating the template with a chromosome therefore reproduces the
+/// masked build's function (pinned by tests), which is what lets
+/// `synth::incremental` re-synthesize only the cones of flipped bits.
+pub fn build_mlp_template(mlp: &QuantMlp, argmax: &ArgmaxMode) -> Template {
+    let mut nl = Netlist::new();
+    let mut next_param = 0u32;
+    let x: Vec<Bus> = (0..mlp.topo.n_in).map(|_| nl.input_bus(mlp.l1.in_bits)).collect();
+
+    // ---- hidden layer ---------------------------------------------------
+    let mut h: Vec<Bus> = Vec::with_capacity(mlp.topo.n_hidden);
+    for n in 0..mlp.topo.n_hidden {
+        let z = neuron_preact_template(&mut nl, &mlp.l1, n, &x, &mut next_param);
+        h.push(qrelu(&mut nl, &z, mlp.act_shift, ACT_BITS));
+    }
+
+    // ---- output layer ----------------------------------------------------
+    let width = mlp.output_width();
+    let mut z2: Vec<Bus> = Vec::with_capacity(mlp.topo.n_out);
+    for m in 0..mlp.topo.n_out {
+        let z = neuron_preact_template(&mut nl, &mlp.l2, m, &h, &mut next_param);
+        z2.push(sign_extend(&mut nl, &z, width));
+    }
+
+    // ---- activation of the output layer (argmax) -------------------------
+    match argmax {
+        ArgmaxMode::Raw => {
+            for (m, z) in z2.iter().enumerate() {
+                nl.output(&format!("z{m}"), z.clone());
+            }
+        }
+        ArgmaxMode::Exact => {
+            let plan = ArgmaxPlan::exact(mlp.topo.n_out, width);
+            let class = argmax_tree(&mut nl, &z2, &plan);
+            nl.output("class", class);
+        }
+        ArgmaxMode::Plan(plan) => {
+            assert_eq!(plan.n, mlp.topo.n_out);
+            assert_eq!(plan.width, width, "plan width must match circuit width");
+            let class = argmax_tree(&mut nl, &z2, plan);
+            nl.output("class", class);
+        }
+    }
+    Template::new(nl, next_param as usize)
+}
+
 /// One neuron's pre-activation bus: two CSA trees (pos/neg) + subtract.
 fn neuron_preact_bus(
     nl: &mut Netlist,
@@ -145,6 +201,54 @@ fn neuron_preact_bus(
     let nsum = build::csa_tree(nl, &neg);
     // Width: enough for the worst-case unmasked sums (masking only
     // shrinks values, so this is always sufficient).
+    let (pmax, nmax) = layer.tree_max(n);
+    let w = bits_for(pmax.max(nmax)).max(1);
+    let psum = resize(nl, &psum, w);
+    let nsum = resize(nl, &nsum, w);
+    subtractor(nl, &psum, &nsum)
+}
+
+/// Template twin of [`neuron_preact_bus`]: identical tree structure, but
+/// every summand bit is `input & Param(p)` and the bias summand's set
+/// bit is `Param(p)` itself (an all-zero bus when the bias is dropped —
+/// arithmetically the legacy omitted bus). The two functions must
+/// enumerate summands in the same order; `build_mlp_template` documents
+/// the shared canonical order.
+fn neuron_preact_template(
+    nl: &mut Netlist,
+    layer: &QuantLayer,
+    n: usize,
+    inputs: &[Bus],
+    next_param: &mut u32,
+) -> Bus {
+    let mut pos: Vec<Bus> = Vec::new();
+    let mut neg: Vec<Bus> = Vec::new();
+    for (j, input) in inputs.iter().enumerate() {
+        let w = layer.weight(n, j);
+        if w.sign == 0 {
+            continue;
+        }
+        let masked = param_masked(nl, input, next_param);
+        let summand = shl(nl, &masked, w.shift as u32);
+        if w.sign > 0 {
+            pos.push(summand);
+        } else {
+            neg.push(summand);
+        }
+    }
+    let bias = layer.bias[n];
+    if bias.is_nonzero() {
+        let p = nl.param(*next_param);
+        *next_param += 1;
+        let bus = shl(nl, &vec![p], bias.shift as u32);
+        if bias.sign > 0 {
+            pos.push(bus);
+        } else {
+            neg.push(bus);
+        }
+    }
+    let psum = build::csa_tree(nl, &pos);
+    let nsum = build::csa_tree(nl, &neg);
     let (pmax, nmax) = layer.tree_max(n);
     let w = bits_for(pmax.max(nmax)).max(1);
     let psum = resize(nl, &psum, w);
@@ -273,6 +377,58 @@ mod tests {
                         "trial {trial} neuron {m}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn template_params_match_genome_map() {
+        let (qmlp, _) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+        assert_eq!(tpl.n_params, map.len(), "param sites must be genome bits");
+    }
+
+    #[test]
+    fn template_instantiation_matches_masked_build() {
+        // The template bound to a chromosome must compute exactly what
+        // the legacy masked build computes — neuron by neuron against
+        // the masked integer model, plus matching class outputs.
+        let (qmlp, qtrain) = tiny_qmlp();
+        let map = GenomeMap::new(&qmlp);
+        let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Raw);
+        let tpl_class = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+        let mut rng = Rng::new(31);
+        for trial in 0..4 {
+            let genome = if trial == 0 {
+                map.exact_genome()
+            } else {
+                map.random_genome(&mut rng, 0.6)
+            };
+            let masks = map.to_masks(&genome);
+            let (opt, _) = optimize(&tpl.instantiate(&genome));
+            let legacy_nl = build_mlp_circuit(
+                &qmlp,
+                &MlpCircuitOpts { masks: Some(masks.clone()), argmax: ArgmaxMode::Exact },
+            );
+            let (legacy_opt, _) = optimize(&legacy_nl);
+            let (class_opt, _) = optimize(&tpl_class.instantiate(&genome));
+            for row in qtrain.x.iter().take(10) {
+                let (_, z_model) = qmlp.forward_masked(row, Some(&masks));
+                let out = eval(&opt, &encode_inputs(row, 4));
+                for (m, &zm) in z_model.iter().enumerate() {
+                    assert_eq!(
+                        bus_to_i64(&out[&format!("z{m}")]),
+                        zm,
+                        "trial {trial} neuron {m}"
+                    );
+                }
+                let inputs = encode_inputs(row, 4);
+                assert_eq!(
+                    bus_to_u64(&eval(&class_opt, &inputs)["class"]),
+                    bus_to_u64(&eval(&legacy_opt, &inputs)["class"]),
+                    "trial {trial}: class output diverged from masked build"
+                );
             }
         }
     }

@@ -28,6 +28,11 @@ pub enum Gate {
     Input(u32),
     /// Constant 0/1 (hardwired — free after synthesis).
     Const(bool),
+    /// Boolean literal site of a [`Template`]: bound to a concrete
+    /// `Const` at instantiation time (one site per mask-controlled
+    /// summand bit). Never appears in an instantiated/synthesized
+    /// netlist — the simulators reject it.
+    Param(u32),
     Not(NodeId),
     And(NodeId, NodeId),
     Or(NodeId, NodeId),
@@ -43,7 +48,7 @@ impl Gate {
     /// Operand ids of this gate.
     pub fn operands(&self) -> impl Iterator<Item = NodeId> {
         let (a, b, c) = match *self {
-            Gate::Input(_) | Gate::Const(_) => (None, None, None),
+            Gate::Input(_) | Gate::Const(_) | Gate::Param(_) => (None, None, None),
             Gate::Not(x) => (Some(x), None, None),
             Gate::And(x, y)
             | Gate::Or(x, y)
@@ -56,9 +61,9 @@ impl Gate {
         [a, b, c].into_iter().flatten()
     }
 
-    /// True for nodes that occupy silicon (not inputs/constants).
+    /// True for nodes that occupy silicon (not inputs/constants/params).
     pub fn is_cell(&self) -> bool {
-        !matches!(self, Gate::Input(_) | Gate::Const(_))
+        !matches!(self, Gate::Input(_) | Gate::Const(_) | Gate::Param(_))
     }
 }
 
@@ -99,6 +104,12 @@ impl Netlist {
 
     pub fn constant(&mut self, v: bool) -> NodeId {
         self.push(Gate::Const(v))
+    }
+
+    /// Allocate a [`Gate::Param`] literal site (template construction —
+    /// callers assign indices; [`Template::new`] checks density).
+    pub fn param(&mut self, p: u32) -> NodeId {
+        self.push(Gate::Param(p))
     }
 
     pub fn not(&mut self, a: NodeId) -> NodeId {
@@ -206,6 +217,92 @@ impl CellCounts {
     }
 }
 
+/// A parameterized netlist: a fixed gate graph whose [`Gate::Param`]
+/// leaves are boolean literal sites bound at instantiation time.
+///
+/// This is the once-per-(dataset, quantized model) form of the bespoke
+/// MLP circuits: every mask-controlled summand bit is a `Param` site, so
+/// one chromosome differs from the next only in the constants bound to a
+/// handful of leaves — which is what lets `synth::incremental` re-run
+/// simplification over just the fanout cones of the flipped literals.
+/// The template also carries the fanout adjacency (CSR: consumers of
+/// each node) that cone traversal needs.
+#[derive(Clone, Debug)]
+pub struct Template {
+    /// The parameterized gate graph (topologically ordered, like every
+    /// [`Netlist`]).
+    pub nl: Netlist,
+    /// Number of `Param` sites; indices are dense in `0..n_params`.
+    pub n_params: usize,
+    /// Node id of `Param(p)`, indexed by `p`.
+    pub param_nodes: Vec<NodeId>,
+    /// CSR fanout: consumers of node `i` are
+    /// `fan_dst[fan_off[i]..fan_off[i + 1]]`.
+    fan_off: Vec<u32>,
+    fan_dst: Vec<NodeId>,
+}
+
+impl Template {
+    /// Wrap a netlist containing `Param` gates. Every index in
+    /// `0..n_params` must appear exactly once.
+    pub fn new(nl: Netlist, n_params: usize) -> Template {
+        let mut param_nodes = vec![NodeId::MAX; n_params];
+        for (i, g) in nl.gates.iter().enumerate() {
+            if let Gate::Param(p) = *g {
+                let slot = &mut param_nodes[p as usize];
+                assert_eq!(*slot, NodeId::MAX, "duplicate Param({p})");
+                *slot = i as NodeId;
+            }
+        }
+        assert!(
+            param_nodes.iter().all(|&n| n != NodeId::MAX),
+            "template param indices must be dense in 0..{n_params}"
+        );
+
+        // CSR fanout: count consumer degrees, prefix-sum, fill.
+        let n = nl.gates.len();
+        let mut fan_off = vec![0u32; n + 1];
+        for g in &nl.gates {
+            for op in g.operands() {
+                fan_off[op as usize + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            fan_off[i + 1] += fan_off[i];
+        }
+        let mut fan_dst: Vec<NodeId> = vec![0; fan_off[n] as usize];
+        let mut cursor: Vec<u32> = fan_off[..n].to_vec();
+        for (i, g) in nl.gates.iter().enumerate() {
+            for op in g.operands() {
+                let c = &mut cursor[op as usize];
+                fan_dst[*c as usize] = i as NodeId;
+                *c += 1;
+            }
+        }
+        Template { nl, n_params, param_nodes, fan_off, fan_dst }
+    }
+
+    /// Consumers of node `id` (each consumer id is > `id` by the
+    /// topological invariant).
+    pub fn consumers(&self, id: NodeId) -> &[NodeId] {
+        let lo = self.fan_off[id as usize] as usize;
+        let hi = self.fan_off[id as usize + 1] as usize;
+        &self.fan_dst[lo..hi]
+    }
+
+    /// Bind every `Param(p)` to `Const(params[p])`, yielding an ordinary
+    /// netlist ready for from-scratch synthesis — the reference the
+    /// incremental engine is pinned against.
+    pub fn instantiate(&self, params: &crate::util::BitVec) -> Netlist {
+        assert_eq!(params.len(), self.n_params, "param count mismatch");
+        let mut out = self.nl.clone();
+        for (p, &id) in self.param_nodes.iter().enumerate() {
+            out.gates[id as usize] = Gate::Const(params.get(p));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,6 +348,46 @@ mod tests {
         let e = nl.xor(d, c); // level 3
         nl.output("y", vec![e]);
         assert_eq!(nl.depth(), 3);
+    }
+
+    #[test]
+    fn template_fanout_and_instantiation() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let p0 = nl.param(0);
+        let p1 = nl.param(1);
+        let g = nl.and(a, p0);
+        let h = nl.or(g, p1);
+        nl.output("y", vec![h]);
+        let tpl = Template::new(nl, 2);
+        assert_eq!(tpl.param_nodes, vec![p0, p1]);
+        assert_eq!(tpl.consumers(a), &[g]);
+        assert_eq!(tpl.consumers(p0), &[g]);
+        assert_eq!(tpl.consumers(g), &[h]);
+        assert_eq!(tpl.consumers(h), &[] as &[NodeId]);
+
+        let params = crate::util::BitVec::from_bools(&[true, false]);
+        let inst = tpl.instantiate(&params);
+        assert_eq!(inst.gates[p0 as usize], Gate::Const(true));
+        assert_eq!(inst.gates[p1 as usize], Gate::Const(false));
+        // Cell structure untouched; only the literal sites were bound.
+        assert_eq!(inst.cell_count(), tpl.nl.cell_count());
+    }
+
+    #[test]
+    #[should_panic(expected = "dense")]
+    fn template_rejects_sparse_params() {
+        let mut nl = Netlist::new();
+        nl.param(1); // index 0 missing
+        Template::new(nl, 2);
+    }
+
+    #[test]
+    fn params_are_not_cells() {
+        let mut nl = Netlist::new();
+        let p = nl.param(0);
+        assert!(!nl.gates[p as usize].is_cell());
+        assert_eq!(nl.cell_count(), 0);
     }
 
     #[test]

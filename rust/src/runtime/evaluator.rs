@@ -15,7 +15,10 @@
 //!   evaluation set is classified through the bit-parallel wave simulator
 //!   (`crate::sim::wave`), so the GA's accuracy objective is measured on
 //!   the *actual hardware function*, not the integer model. Affordable
-//!   only because the wave engine advances 64 vectors per pass.
+//!   because the wave engine advances 64 vectors per pass and, in the
+//!   default [`SynthMode::Incremental`], because chromosomes are deltas
+//!   against a shared template: synthesis and simulation only revisit
+//!   the fanout cones of the flipped mask bits.
 //!
 //! All return the objective pair `[accuracy_loss, estimated_area]` the
 //! NSGA-II optimizer minimizes (paper §III-D1/D2/D3).
@@ -25,10 +28,11 @@ use crate::area::AreaModel;
 use crate::datasets::QuantDataset;
 use crate::ga::Evaluator;
 use crate::model::QuantMlp;
-use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
+use crate::netlist::mlp::{build_mlp_circuit, build_mlp_template, ArgmaxMode, MlpCircuitOpts};
 use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
-use crate::sim::wave::{self, InputWave};
-use crate::synth::optimize;
+use crate::sim::wave::{self, InputWave, WaveCache};
+use crate::synth::incremental::IncrementalSynth;
+use crate::synth::{optimize, SynthMode};
 use crate::util::{threads, BitVec};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -261,13 +265,26 @@ impl Evaluator for NativeEvaluator {
 
 /// Circuit-in-the-loop evaluator: fitness on the synthesized netlist.
 ///
-/// For every chromosome the bespoke circuit is generated
-/// ([`build_mlp_circuit`]), optimized ([`crate::synth::optimize`] — the
-/// constant-sweep that realizes the approximation) and the whole
-/// evaluation set is classified through the wave simulator, 64 samples
-/// per pass. The accuracy objective therefore reflects the exact gate-
-/// level function the design tapes out with, closing the loop the paper
-/// leaves open between the GA's integer surrogate and the hardware.
+/// Every chromosome is scored on the *actual gate-level function* the
+/// design tapes out with, closing the loop the paper leaves open between
+/// the GA's integer surrogate and the hardware. Two synthesis strategies
+/// ([`SynthMode`], `--synth` on the CLI) produce bit-identical
+/// classifications:
+///
+/// * [`SynthMode::Full`] — the from-scratch path: per chromosome, build
+///   the bespoke circuit ([`build_mlp_circuit`]), run
+///   [`crate::synth::optimize`] (the constant sweep that realizes the
+///   approximation) and wave-classify the train set, 64 samples per
+///   pass; thread-parallel across genomes.
+/// * [`SynthMode::Incremental`] — the template path (the default): one
+///   parameterized netlist ([`build_mlp_template`], `Param` site `p` =
+///   genome bit `p`) is built lazily on first use, then every chromosome
+///   is an [`IncrementalSynth::set_params`] delta that re-simplifies
+///   only the fanout cones of the flipped mask bits against the
+///   persistent structural-hash arena. Simulation rides the same arena
+///   through a [`WaveCache`]: a node's lane words are computed once,
+///   ever, per train batch, so per-chromosome cost scales with
+///   *mutation size* instead of netlist size.
 ///
 /// The area objective stays the FA surrogate of [`AreaModel`] so fronts
 /// from all three backends are directly comparable (and the coordinator's
@@ -275,21 +292,39 @@ impl Evaluator for NativeEvaluator {
 ///
 /// Results are memoized per genome: NSGA-II's crossover/mutation streams
 /// revisit identical chromosomes across generations, and each cache hit
-/// skips a full build + synthesis + simulation, reusing the work of the
-/// earlier fitness call.
+/// skips synthesis + simulation entirely.
 pub struct CircuitEvaluator {
     pub mlp: QuantMlp,
     pub map: GenomeMap,
     pub area: AreaModel,
     pub base_acc: f64,
     pub threads: usize,
+    mode: SynthMode,
     /// Train samples packed once into 64-lane input waves.
     batches: Vec<InputWave>,
     labels: Vec<usize>,
     cache: Mutex<HashMap<BitVec, [f64; 2]>>,
+    /// Lazily-built incremental state (template + arena + wave cache);
+    /// the engine is a sequential state machine, so incremental batches
+    /// are processed under this lock in submission order.
+    incr: Mutex<Option<IncrState>>,
 }
 
+struct IncrState {
+    synth: IncrementalSynth,
+    wave: WaveCache,
+}
+
+/// Reset the incremental state when the append-only arena (and its
+/// per-batch lane-word caches) outgrows the template by this factor.
+/// Dedup makes growth decelerate sharply on GA streams, so the cap is a
+/// memory backstop for pathologically diverse genome sequences; a reset
+/// costs one from-scratch pass on the next batch, and the per-genome
+/// memo cache survives it.
+const ARENA_GROWTH_LIMIT: usize = 8;
+
 impl CircuitEvaluator {
+    /// Defaults to [`SynthMode::Incremental`]; see [`Self::with_mode`].
     pub fn new(mlp: &QuantMlp, train: &QuantDataset, base_acc: f64) -> CircuitEvaluator {
         let map = GenomeMap::new(mlp);
         let area = AreaModel::new(&map);
@@ -305,15 +340,42 @@ impl CircuitEvaluator {
             area,
             base_acc,
             threads: threads::default_threads(),
+            mode: SynthMode::Incremental,
             batches,
             labels: train.y.clone(),
             cache: Mutex::new(HashMap::new()),
+            incr: Mutex::new(None),
         }
     }
 
-    /// Build + optimize the chromosome's netlist and classify the train
-    /// set through it (single-threaded: parallelism is across genomes).
-    fn score(&self, genome: &BitVec) -> [f64; 2] {
+    /// Select the synthesis strategy (both are bit-identical in output).
+    pub fn with_mode(mut self, mode: SynthMode) -> CircuitEvaluator {
+        self.mode = mode;
+        self
+    }
+
+    pub fn mode(&self) -> SynthMode {
+        self.mode
+    }
+
+    fn objectives(&self, genome: &BitVec, acc: f64) -> [f64; 2] {
+        let loss = (self.base_acc - acc).max(0.0);
+        [loss, self.area.estimate(genome) as f64]
+    }
+
+    fn accuracy_of(&self, preds: &[u64]) -> f64 {
+        let correct = preds
+            .iter()
+            .zip(&self.labels)
+            .filter(|(&p, &y)| p as usize == y)
+            .count();
+        correct as f64 / self.labels.len().max(1) as f64
+    }
+
+    /// From-scratch scoring: build + optimize the chromosome's netlist
+    /// and classify the train set through it (single-threaded:
+    /// parallelism is across genomes).
+    fn score_full(&self, genome: &BitVec) -> [f64; 2] {
         let masks = self.map.to_masks(genome);
         let nl = build_mlp_circuit(
             &self.mlp,
@@ -321,14 +383,54 @@ impl CircuitEvaluator {
         );
         let (opt, _) = optimize(&nl);
         let preds = wave::classify(&opt, &self.batches, "class", 1);
-        let correct = preds
-            .iter()
-            .zip(&self.labels)
-            .filter(|(&p, &y)| p as usize == y)
-            .count();
-        let acc = correct as f64 / self.labels.len().max(1) as f64;
-        let loss = (self.base_acc - acc).max(0.0);
-        [loss, self.area.estimate(genome) as f64]
+        self.objectives(genome, self.accuracy_of(&preds))
+    }
+
+    /// Incremental scoring of a deduplicated genome batch, sequential
+    /// over the shared template/arena state. The first genome ever seen
+    /// pays one from-scratch pass; every later one costs its cone.
+    fn score_incremental(&self, uniq: &[&BitVec]) -> Vec<[f64; 2]> {
+        let mut guard = self.incr.lock().unwrap();
+        let st = guard.get_or_insert_with(|| {
+            let tpl = build_mlp_template(&self.mlp, &ArgmaxMode::Exact);
+            assert_eq!(
+                tpl.n_params,
+                self.map.len(),
+                "template param sites drifted from the genome map"
+            );
+            IncrState {
+                synth: IncrementalSynth::new(tpl),
+                wave: WaveCache::new(self.batches.clone()),
+            }
+        });
+        let IncrState { synth, wave } = st;
+        let mut out = Vec::with_capacity(uniq.len());
+        for &genome in uniq {
+            if let Some(hit) = self.cache.lock().unwrap().get(genome) {
+                out.push(*hit);
+                continue;
+            }
+            synth.set_params(genome);
+            let arena = synth.arena();
+            let bus = &arena
+                .outputs
+                .iter()
+                .find(|(name, _)| name == "class")
+                .expect("template has a class output")
+                .1;
+            let preds = wave.classify_bus(arena, bus);
+            let objs = self.objectives(genome, self.accuracy_of(&preds));
+            self.cache.lock().unwrap().insert(genome.clone(), objs);
+            out.push(objs);
+        }
+        // Memory backstop: drop (and later rebuild) the state if the
+        // arena grew far beyond the template.
+        let oversized =
+            synth.arena().len() > ARENA_GROWTH_LIMIT * synth.template().nl.len().max(1);
+        if oversized {
+            *guard = None;
+        }
+        out
     }
 }
 
@@ -347,14 +449,17 @@ impl Evaluator for CircuitEvaluator {
             });
             which.push(k);
         }
-        let uniq_objs = threads::par_map(uniq.len(), self.threads, |i| {
-            if let Some(hit) = self.cache.lock().unwrap().get(uniq[i]) {
-                return *hit;
-            }
-            let objs = self.score(uniq[i]);
-            self.cache.lock().unwrap().insert(uniq[i].clone(), objs);
-            objs
-        });
+        let uniq_objs = match self.mode {
+            SynthMode::Incremental => self.score_incremental(&uniq),
+            SynthMode::Full => threads::par_map(uniq.len(), self.threads, |i| {
+                if let Some(hit) = self.cache.lock().unwrap().get(uniq[i]) {
+                    return *hit;
+                }
+                let objs = self.score_full(uniq[i]);
+                self.cache.lock().unwrap().insert(uniq[i].clone(), objs);
+                objs
+            }),
+        };
         which.into_iter().map(|k| uniq_objs[k]).collect()
     }
 }
@@ -437,5 +542,30 @@ mod tests {
         let first = circuit.evaluate(std::slice::from_ref(&g));
         let second = circuit.evaluate(std::slice::from_ref(&g));
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn circuit_evaluator_modes_agree() {
+        // `--synth full` and `--synth incremental` must yield identical
+        // objectives on a GA-like mutation stream (the acceptance
+        // criterion's bit-identical requirement, at evaluator level).
+        let (qmlp, qtrain, base) = tiny_setup();
+        let full = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
+        let incr = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        assert_eq!(full.mode(), SynthMode::Full);
+        assert_eq!(incr.mode(), SynthMode::Incremental);
+        let mut rng = Rng::new(17);
+        let mut genomes = vec![full.map.exact_genome()];
+        let mut g = full.map.random_genome(&mut rng, 0.7);
+        genomes.push(g.clone());
+        for _ in 0..6 {
+            for _ in 0..3 {
+                g.flip(rng.below(full.map.len()));
+            }
+            genomes.push(g.clone());
+        }
+        let a = full.evaluate(&genomes);
+        let b = incr.evaluate(&genomes);
+        assert_eq!(a, b, "full and incremental objectives must be identical");
     }
 }

@@ -57,6 +57,7 @@ pub fn eval_nodes_into(nl: &Netlist, inputs: &[bool], values: &mut Vec<bool>) {
                 })
             }
             Gate::Const(c) => c,
+            Gate::Param(p) => panic!("Param({p}) in simulation — instantiate first"),
             Gate::Not(a) => !values[a as usize],
             Gate::And(a, b) => values[a as usize] & values[b as usize],
             Gate::Or(a, b) => values[a as usize] | values[b as usize],

@@ -75,8 +75,25 @@ pub fn encode_features(features: &[u32], bits: u32) -> Vec<bool> {
 /// cleared and refilled, so batch loops perform no per-batch allocation.
 pub fn eval_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
     values.clear();
-    values.reserve(nl.gates.len());
-    for g in &nl.gates {
+    extend_wave_into(nl, inputs, values);
+}
+
+/// Cone-local word re-evaluation: extend a lane-word buffer over a
+/// netlist that *grew* since the buffer was filled. Nodes
+/// `0..values.len()` keep their cached words; only `values.len()..` are
+/// evaluated.
+///
+/// Sound only for append-only netlists under a fixed stimulus — exactly
+/// the synthesis arena of `synth::incremental`, where a node's gate and
+/// operands never change after creation, so its lane word under the
+/// fixed train-set batch is a constant. This is what lets the
+/// circuit-in-the-loop evaluator reuse every unchanged node's words
+/// across chromosomes and simulate only the re-synthesized cone.
+pub fn extend_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
+    let done = values.len();
+    assert!(done <= nl.gates.len(), "lane-word cache longer than netlist");
+    values.reserve(nl.gates.len() - done);
+    for g in &nl.gates[done..] {
         let w = match *g {
             Gate::Input(idx) => {
                 *inputs.get(idx as usize).unwrap_or_else(|| {
@@ -90,6 +107,7 @@ pub fn eval_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
                     0
                 }
             }
+            Gate::Param(p) => panic!("Param({p}) in simulation — instantiate first"),
             Gate::Not(a) => !values[a as usize],
             Gate::And(a, b) => values[a as usize] & values[b as usize],
             Gate::Or(a, b) => values[a as usize] | values[b as usize],
@@ -141,6 +159,52 @@ pub fn classify(nl: &Netlist, batches: &[InputWave], out_bus: &str, n_threads: u
             .collect::<Vec<u64>>()
     });
     per_batch.into_iter().flatten().collect()
+}
+
+/// Persistent lane-word caches over a monotonically growing netlist —
+/// the simulation half of incremental re-synthesis.
+///
+/// One buffer per packed input batch, each aligned with the synthesis
+/// arena's node ids. [`WaveCache::classify_bus`] extends every buffer to
+/// the arena's current length (evaluating only nodes appended since the
+/// last call — see [`extend_wave_into`]) and then reads the requested
+/// output bus per lane. Across a GA run this makes simulation cost scale
+/// with the re-synthesized cone, not the netlist: a node's words are
+/// computed once, ever, per batch.
+pub struct WaveCache {
+    batches: Vec<InputWave>,
+    values: Vec<Vec<u64>>,
+}
+
+impl WaveCache {
+    pub fn new(batches: Vec<InputWave>) -> WaveCache {
+        let values = batches.iter().map(|_| Vec::new()).collect();
+        WaveCache { batches, values }
+    }
+
+    /// Total number of input vectors across all batches.
+    pub fn n_vectors(&self) -> usize {
+        self.batches.iter().map(|b| b.n_lanes).sum()
+    }
+
+    /// Words cached per batch (== the arena length last seen).
+    pub fn cached_nodes(&self) -> usize {
+        self.values.first().map(Vec::len).unwrap_or(0)
+    }
+
+    /// Evaluate `bus` for every vector. `nl` must be the same
+    /// append-only netlist on every call (longer is fine, shorter or
+    /// rewritten is not — node ids are the cache key).
+    pub fn classify_bus(&mut self, nl: &Netlist, bus: &[NodeId]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.n_vectors());
+        for (batch, values) in self.batches.iter().zip(&mut self.values) {
+            extend_wave_into(nl, &batch.words, values);
+            for lane in 0..batch.n_lanes {
+                out.push(lane_bus_u64(values, bus, lane));
+            }
+        }
+        out
+    }
 }
 
 /// Average toggle activity per cell over a vector sequence — bit-exact
@@ -360,6 +424,66 @@ mod tests {
         // And a constant sequence crossing the boundary stays at zero.
         let vectors = vec![vec![true]; 130];
         assert_eq!(toggle_activity(&nl, &vectors), 0.0);
+    }
+
+    #[test]
+    fn extend_wave_reuses_cached_words() {
+        // Grow a netlist after a first pass: cached words must be kept
+        // verbatim and only the appended nodes evaluated.
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        let vectors = vec![vec![false, true], vec![true, true], vec![true, false]];
+        let batch = pack_vectors(&vectors);
+        let mut values = Vec::new();
+        extend_wave_into(&nl, &batch.words, &mut values);
+        assert_eq!(values.len(), 3);
+        let cached = values.clone();
+        // Append more logic, then extend.
+        let n = nl.not(x);
+        let y = nl.and(n, a);
+        extend_wave_into(&nl, &batch.words, &mut values);
+        assert_eq!(values.len(), 5);
+        assert_eq!(&values[..3], cached.as_slice());
+        let full = eval_wave(&nl, &batch);
+        assert_eq!(values, full);
+        let _ = (n, y);
+    }
+
+    #[test]
+    fn wave_cache_tracks_growing_netlist() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        let vectors: Vec<Vec<bool>> =
+            (0..70u64).map(|v| crate::sim::u64_to_bits(v % 4, 2)).collect();
+        let batches: Vec<InputWave> = vectors.chunks(LANES).map(pack_vectors).collect();
+        let mut cache = WaveCache::new(batches.clone());
+        assert_eq!(cache.n_vectors(), 70);
+        // First query on the small netlist.
+        let got = cache.classify_bus(&nl, &[x]);
+        let expect: Vec<u64> =
+            (0..70u64).map(|v| ((v % 4) ^ ((v % 4) >> 1)) & 1).collect();
+        assert_eq!(got, expect);
+        assert_eq!(cache.cached_nodes(), nl.len());
+        // Grow the netlist (append-only) and query a new bus: the cache
+        // extends instead of recomputing, and stays consistent with a
+        // cold full evaluation.
+        let n = nl.not(x);
+        let got2 = cache.classify_bus(&nl, &[n, a]);
+        let cold: Vec<u64> = batches
+            .iter()
+            .flat_map(|bt| {
+                let values = eval_wave(&nl, bt);
+                (0..bt.n_lanes)
+                    .map(|lane| lane_bus_u64(&values, &[n, a], lane))
+                    .collect::<Vec<u64>>()
+            })
+            .collect();
+        assert_eq!(got2, cold);
+        assert_eq!(cache.cached_nodes(), nl.len());
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Incremental cone-local re-synthesis over a [`Template`].
+//!
+//! The circuit-in-the-loop GA evaluates thousands of chromosomes that
+//! differ from their parents in a handful of mask bits, yet from-scratch
+//! synthesis pays the full netlist-sized rewrite for each one. This
+//! engine exploits the template form: since every chromosome binds the
+//! same fixed gate graph and only the `Param` literal values change, the
+//! simplification result can only change inside the *fanout cones* of
+//! the flipped literals.
+//!
+//! Mechanics ([`IncrementalSynth`]):
+//!
+//! * a persistent [`Rewriter`] arena (fused const-prop + structural
+//!   hashing) accumulates every survivor gate ever emitted; the arena is
+//!   append-only, so node ids — and any lane-word caches keyed on them
+//!   (`sim::wave::WaveCache`) — stay valid across instantiations;
+//! * a per-template-node `Repr` table remembers what each source node
+//!   resolved to under the current parameter binding;
+//! * on a parameter delta, a min-heap worklist walks the dirty cone in
+//!   ascending node id (= topological) order, recomputing reprs and
+//!   stopping early where a node's repr converges to its old value —
+//!   work scales with *mutation size*, not netlist size;
+//! * outputs are re-resolved through the repr table, and the survivor
+//!   netlist (or just its live-cell count) falls out of a hash-free DCE
+//!   walk over the arena.
+//!
+//! Invariants, pinned by the property suite below:
+//!
+//! 1. after every `set_params`, the arena output cone computes the same
+//!    function as `optimize(template.instantiate(params))`, and
+//! 2. `SynthStats::cells_out` matches the from-scratch pass exactly —
+//!    the incremental survivor is the same netlist up to node
+//!    renumbering (dedup makes both sides emit one node per distinct
+//!    canonical structure, and repr convergence never skips a node whose
+//!    inputs changed).
+
+use crate::netlist::{Gate, Netlist, NodeId, Template};
+use crate::synth::{dce, Repr, Rewriter, SynthStats};
+use crate::util::BitVec;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Persistent incremental re-synthesizer for one template.
+pub struct IncrementalSynth {
+    tpl: Template,
+    rw: Rewriter,
+    /// Representative of each template node under `cur`.
+    repr: Vec<Repr>,
+    /// Current parameter binding (valid once `ready`).
+    cur: BitVec,
+    ready: bool,
+    /// Worklist de-dup stamps, one slot per template node.
+    dirty_stamp: Vec<u32>,
+    stamp: u32,
+    /// Scratch stamps for live-cone walks over the arena.
+    live_stamp: Vec<u32>,
+    live_mark: u32,
+}
+
+impl IncrementalSynth {
+    pub fn new(tpl: Template) -> IncrementalSynth {
+        let mut rw = Rewriter::new(true, true);
+        rw.seed_inputs(&tpl.nl);
+        let n = tpl.nl.len();
+        IncrementalSynth {
+            rw,
+            repr: Vec::with_capacity(n),
+            cur: BitVec::zeros(tpl.n_params),
+            ready: false,
+            dirty_stamp: vec![0; n],
+            stamp: 0,
+            live_stamp: Vec::new(),
+            live_mark: 0,
+            tpl,
+        }
+    }
+
+    pub fn template(&self) -> &Template {
+        &self.tpl
+    }
+
+    /// The persistent arena. Append-only across instantiations; its
+    /// `outputs` reflect the most recent `set_params` binding.
+    pub fn arena(&self) -> &Netlist {
+        &self.rw.out
+    }
+
+    /// Bind the parameters to `params` and re-simplify. The first call
+    /// is a full from-scratch pass; subsequent calls revisit only the
+    /// fanout cones of the flipped literals. Returns survivor stats.
+    pub fn set_params(&mut self, params: &BitVec) -> SynthStats {
+        assert_eq!(params.len(), self.tpl.n_params, "param count mismatch");
+        if !self.ready {
+            self.cur = params.clone();
+            self.full_pass();
+            self.ready = true;
+        } else {
+            let flipped: Vec<NodeId> = (0..self.tpl.n_params)
+                .filter(|&p| params.get(p) != self.cur.get(p))
+                .map(|p| self.tpl.param_nodes[p])
+                .collect();
+            self.cur = params.clone();
+            self.cone_pass(&flipped);
+        }
+        self.refresh_outputs();
+        SynthStats { cells_in: self.tpl.nl.cell_count(), cells_out: self.live_cells() }
+    }
+
+    /// Materialize the compact survivor netlist of the current binding
+    /// (DCE over the arena's live cone) — the same netlist, up to node
+    /// renumbering, as `optimize(template.instantiate(params))`.
+    pub fn survivor(&self) -> (Netlist, SynthStats) {
+        assert!(self.ready, "set_params before survivor");
+        let out = dce(&self.rw.out);
+        let stats =
+            SynthStats { cells_in: self.tpl.nl.cell_count(), cells_out: out.cell_count() };
+        (out, stats)
+    }
+
+    fn full_pass(&mut self) {
+        let IncrementalSynth { tpl, rw, repr, cur, .. } = self;
+        repr.clear();
+        for g in &tpl.nl.gates {
+            let r = match *g {
+                Gate::Param(p) => Repr::Const(cur.get(p as usize)),
+                _ => rw.rewrite_gate(g, |id| repr[id as usize]),
+            };
+            repr.push(r);
+        }
+    }
+
+    /// Recompute reprs over the fanout cones of `flipped` param nodes.
+    /// The min-heap pops in ascending node id order, which by the
+    /// topological invariant means every operand repr is final when a
+    /// node is recomputed; a node whose repr converges to its old value
+    /// does not dirty its consumers.
+    fn cone_pass(&mut self, flipped: &[NodeId]) {
+        if flipped.is_empty() {
+            return;
+        }
+        self.stamp += 1;
+        let stamp = self.stamp;
+        let IncrementalSynth { tpl, rw, repr, cur, dirty_stamp, .. } = self;
+        let mut heap: BinaryHeap<Reverse<NodeId>> =
+            BinaryHeap::with_capacity(flipped.len() * 4);
+        for &id in flipped {
+            if dirty_stamp[id as usize] != stamp {
+                dirty_stamp[id as usize] = stamp;
+                heap.push(Reverse(id));
+            }
+        }
+        while let Some(Reverse(id)) = heap.pop() {
+            let g = &tpl.nl.gates[id as usize];
+            let new = match *g {
+                Gate::Param(p) => Repr::Const(cur.get(p as usize)),
+                _ => rw.rewrite_gate(g, |i| repr[i as usize]),
+            };
+            if new != repr[id as usize] {
+                repr[id as usize] = new;
+                for &c in tpl.consumers(id) {
+                    if dirty_stamp[c as usize] != stamp {
+                        dirty_stamp[c as usize] = stamp;
+                        heap.push(Reverse(c));
+                    }
+                }
+            }
+        }
+    }
+
+    fn refresh_outputs(&mut self) {
+        let IncrementalSynth { tpl, rw, repr, .. } = self;
+        rw.resolve_outputs(&tpl.nl.outputs, repr);
+    }
+
+    /// Count live cells of the current output cone (the `cells_out` a
+    /// from-scratch DCE would report) without materializing the netlist.
+    fn live_cells(&mut self) -> usize {
+        let IncrementalSynth { rw, live_stamp, live_mark, .. } = self;
+        let arena = &rw.out;
+        *live_mark += 1;
+        let mark = *live_mark;
+        live_stamp.resize(arena.len(), 0);
+        let mut stack: Vec<NodeId> = Vec::new();
+        let mut count = 0usize;
+        for (_, bus) in &arena.outputs {
+            for &b in bus {
+                if live_stamp[b as usize] != mark {
+                    live_stamp[b as usize] = mark;
+                    stack.push(b);
+                }
+            }
+        }
+        while let Some(id) = stack.pop() {
+            let g = &arena.gates[id as usize];
+            if g.is_cell() {
+                count += 1;
+            }
+            for op in g.operands() {
+                if live_stamp[op as usize] != mark {
+                    live_stamp[op as usize] = mark;
+                    stack.push(op);
+                }
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::wave::{eval_wave, lane_bus_u64, pack_vectors, InputWave, LANES};
+    use crate::synth::optimize;
+    use crate::util::{prop, Rng};
+
+    /// Random topologically-valid template: inputs, a dense block of
+    /// params, optional constants, then a random gate soup over all of
+    /// them, with a few declared outputs.
+    fn random_template(rng: &mut Rng) -> Template {
+        let mut nl = Netlist::new();
+        let n_in = 1 + rng.below(4);
+        for _ in 0..n_in {
+            nl.input();
+        }
+        let n_params = 1 + rng.below(8);
+        for p in 0..n_params as u32 {
+            nl.param(p);
+        }
+        if rng.chance(0.5) {
+            nl.constant(rng.chance(0.5));
+        }
+        let n_gates = 5 + rng.below(60);
+        for _ in 0..n_gates {
+            let len = nl.len();
+            let pick = |r: &mut Rng| r.below(len) as NodeId;
+            let (a, b) = (pick(rng), pick(rng));
+            match rng.below(9) {
+                0 => nl.not(a),
+                1 => nl.and(a, b),
+                2 => nl.or(a, b),
+                3 => nl.xor(a, b),
+                4 => nl.nand(a, b),
+                5 => nl.nor(a, b),
+                6 => nl.xnor(a, b),
+                7 => nl.constant(rng.chance(0.5)),
+                _ => {
+                    let s = pick(rng);
+                    nl.mux(s, a, b)
+                }
+            };
+        }
+        let len = nl.len();
+        for k in 0..1 + rng.below(3) {
+            let bus: Vec<NodeId> =
+                (0..1 + rng.below(4)).map(|_| rng.below(len) as NodeId).collect();
+            nl.output(&format!("y{k}"), bus);
+        }
+        Template::new(nl, n_params)
+    }
+
+    fn random_batch(rng: &mut Rng, n_inputs: u32, n_vec: usize) -> InputWave {
+        let vectors: Vec<Vec<bool>> = (0..n_vec)
+            .map(|_| (0..n_inputs).map(|_| rng.chance(0.5)).collect())
+            .collect();
+        pack_vectors(&vectors)
+    }
+
+    /// Compare every output bus of `fresh` (from-scratch) against both
+    /// incremental views (survivor + arena), lane by lane.
+    fn check_equiv(
+        inc: &IncrementalSynth,
+        fresh: &Netlist,
+        batch: &InputWave,
+    ) -> Result<(), String> {
+        let (surv, _) = inc.survivor();
+        let vf = eval_wave(fresh, batch);
+        let vs = eval_wave(&surv, batch);
+        let va = eval_wave(inc.arena(), batch);
+        for (oi, (name, busf)) in fresh.outputs.iter().enumerate() {
+            let buss = &surv.outputs[oi].1;
+            let busa = &inc.arena().outputs[oi].1;
+            for lane in 0..batch.n_lanes {
+                let want = lane_bus_u64(&vf, busf, lane);
+                let got_s = lane_bus_u64(&vs, buss, lane);
+                let got_a = lane_bus_u64(&va, busa, lane);
+                if got_s != want || got_a != want {
+                    return Err(format!(
+                        "output '{name}' lane {lane}: fresh {want}, survivor {got_s}, arena {got_a}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_incremental_matches_from_scratch() {
+        // The tentpole invariant: across random mask-flip sequences on
+        // random templates, the incremental engine's output cone is
+        // function-identical (wave-simulated, lane by lane) to
+        // from-scratch `optimize`, with matching `cells_out`.
+        prop::check("incremental == from-scratch synth", |rng, _| {
+            let tpl = random_template(rng);
+            let n_params = tpl.n_params;
+            let mut params = prop::gen::bits(rng, n_params, 0.5);
+            let mut inc = IncrementalSynth::new(tpl.clone());
+            let n_vec = (8 + rng.below(56)).min(LANES);
+            let batch = random_batch(rng, tpl.nl.n_inputs, n_vec);
+            for step in 0..6 {
+                if step > 0 {
+                    let flips = 1 + rng.below(n_params);
+                    for _ in 0..flips {
+                        params.flip(rng.below(n_params));
+                    }
+                }
+                let stats_inc = inc.set_params(&params);
+                let (fresh, stats_fresh) = optimize(&tpl.instantiate(&params));
+                if stats_inc.cells_out != stats_fresh.cells_out {
+                    return Err(format!(
+                        "step {step}: cells_out {} (incremental) != {} (from-scratch)",
+                        stats_inc.cells_out, stats_fresh.cells_out
+                    ));
+                }
+                let (_, sstats) = inc.survivor();
+                if sstats != stats_fresh {
+                    return Err(format!(
+                        "step {step}: survivor stats {sstats:?} != fresh {stats_fresh:?}"
+                    ));
+                }
+                check_equiv(&inc, &fresh, &batch)
+                    .map_err(|e| format!("step {step}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_param_gate_folds_both_ways() {
+        // and(x, p): p=1 -> wire to x (0 cells); p=0 -> constant 0.
+        let mut nl = Netlist::new();
+        let x = nl.input();
+        let p = nl.param(0);
+        let g = nl.and(x, p);
+        nl.output("y", vec![g]);
+        let tpl = Template::new(nl, 1);
+        let mut inc = IncrementalSynth::new(tpl.clone());
+
+        let on = BitVec::ones(1);
+        let stats = inc.set_params(&on);
+        assert_eq!(stats.cells_out, 0);
+        let batch = pack_vectors(&[vec![false], vec![true]]);
+        let (fresh, _) = optimize(&tpl.instantiate(&on));
+        check_equiv(&inc, &fresh, &batch).unwrap();
+
+        let off = BitVec::zeros(1);
+        let stats = inc.set_params(&off);
+        assert_eq!(stats.cells_out, 0);
+        let (fresh, _) = optimize(&tpl.instantiate(&off));
+        check_equiv(&inc, &fresh, &batch).unwrap();
+    }
+
+    #[test]
+    fn arena_converges_on_revisited_bindings() {
+        // Flipping a binding A -> B -> A must not grow the arena on the
+        // second visit: every cone re-emission dedups onto existing
+        // nodes. This is the property that keeps long GA runs bounded.
+        let mut rng = Rng::new(42);
+        let tpl = random_template(&mut rng);
+        let a = prop::gen::bits(&mut rng, tpl.n_params, 0.5);
+        let mut b = a.clone();
+        b.flip(0);
+        let mut inc = IncrementalSynth::new(tpl);
+        inc.set_params(&a);
+        inc.set_params(&b);
+        inc.set_params(&a);
+        let len_after_first_cycle = inc.arena().len();
+        let stats_a = inc.set_params(&a);
+        inc.set_params(&b);
+        let stats_a2 = inc.set_params(&a);
+        assert_eq!(inc.arena().len(), len_after_first_cycle, "arena must not grow");
+        assert_eq!(stats_a, stats_a2, "stats must be reproducible");
+    }
+
+    #[test]
+    fn no_flip_resynth_is_stable() {
+        let mut rng = Rng::new(7);
+        let tpl = random_template(&mut rng);
+        let params = prop::gen::bits(&mut rng, tpl.n_params, 0.5);
+        let mut inc = IncrementalSynth::new(tpl);
+        let s1 = inc.set_params(&params);
+        let len = inc.arena().len();
+        let s2 = inc.set_params(&params);
+        assert_eq!(s1, s2);
+        assert_eq!(inc.arena().len(), len);
+    }
+}

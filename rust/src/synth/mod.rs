@@ -1,0 +1,787 @@
+//! Synthesis-lite: the logic-optimization stage that stands in for
+//! Synopsys Design Compiler in the paper's flow.
+//!
+//! The accumulation approximation works by *replacing summand bits with
+//! constant zeros* and letting synthesis sweep the constants through the
+//! adder trees (paper §III-D: "we fully leverage the IPs and optimization
+//! capabilities of the EDA synthesis tool, which among others includes
+//! constant propagation"). This module implements exactly that mechanism
+//! as a small pass manager over composable [`Pass`]es:
+//!
+//! * [`ConstProp`] — constant propagation and algebraic simplification
+//!   (`x & 0 → 0`, `x ^ 0 → x`, `x & x → x`, `mux(s,a,a) → a`, …);
+//! * [`StructHash`] — structural hashing (common-subexpression
+//!   elimination over operand-canonicalized gates);
+//! * [`Simplify`] — the two fused at node granularity (fold rules see
+//!   hashed operands and vice versa), which is strictly stronger than
+//!   running them back to back and is the engine the incremental
+//!   re-synthesizer ([`incremental`]) shares;
+//! * [`Dce`] — dead-gate elimination (only the output cone survives).
+//!
+//! The public [`optimize`] entry is unchanged: it runs the standard
+//! pipeline `[Simplify, Dce]`. The result is functionally equivalent to
+//! the input (verified by `crate::sim`-based equivalence tests) and is
+//! what the EGFET area/power/timing analysis consumes.
+//!
+//! All hash tables on the hot path use the std-only Fx hasher
+//! (`crate::util::fxhash`): gate keys are tiny fixed-size values, so
+//! SipHash's keyed rounds are pure overhead.
+
+pub mod incremental;
+
+use crate::netlist::{Gate, Netlist, NodeId};
+use crate::util::FxHashMap;
+
+/// What a source node resolved to after rewriting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Repr {
+    Node(NodeId),
+    Const(bool),
+}
+
+/// Optimization statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SynthStats {
+    pub cells_in: usize,
+    pub cells_out: usize,
+}
+
+/// How the circuit-in-the-loop evaluator synthesizes chromosomes
+/// (`pmlp run --backend circuit --synth …`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthMode {
+    /// From-scratch netlist build + [`optimize`] per chromosome.
+    Full,
+    /// One shared template + [`incremental`] cone-local re-synthesis;
+    /// bit-identical classification, cost scales with mutation size.
+    Incremental,
+}
+
+impl SynthMode {
+    pub fn parse(s: &str) -> Option<SynthMode> {
+        match s.to_lowercase().as_str() {
+            "full" => Some(SynthMode::Full),
+            "incremental" | "incr" => Some(SynthMode::Incremental),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SynthMode::Full => "full",
+            SynthMode::Incremental => "incremental",
+        }
+    }
+}
+
+/// A composable netlist-to-netlist optimization pass.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, nl: &Netlist) -> Netlist;
+}
+
+/// Constant propagation + algebraic simplification (no hashing).
+pub struct ConstProp;
+
+/// Structural hashing / CSE only (no constant folding).
+pub struct StructHash;
+
+/// Fused constant propagation + structural hashing — the classic
+/// "synthesis-lite" rewrite, shared with [`incremental`].
+pub struct Simplify;
+
+/// Dead-gate elimination: keep only the output cone (plus all primary
+/// inputs, which define the interface).
+pub struct Dce;
+
+impl Pass for ConstProp {
+    fn name(&self) -> &'static str {
+        "const-prop"
+    }
+    fn run(&self, nl: &Netlist) -> Netlist {
+        rewrite_netlist(nl, true, false)
+    }
+}
+
+impl Pass for StructHash {
+    fn name(&self) -> &'static str {
+        "struct-hash"
+    }
+    fn run(&self, nl: &Netlist) -> Netlist {
+        rewrite_netlist(nl, false, true)
+    }
+}
+
+impl Pass for Simplify {
+    fn name(&self) -> &'static str {
+        "simplify"
+    }
+    fn run(&self, nl: &Netlist) -> Netlist {
+        rewrite_netlist(nl, true, true)
+    }
+}
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+    fn run(&self, nl: &Netlist) -> Netlist {
+        dce(nl)
+    }
+}
+
+/// Runs a pass list in order and reports aggregate cell statistics.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn new(passes: Vec<Box<dyn Pass>>) -> PassManager {
+        PassManager { passes }
+    }
+
+    /// The default pipeline behind [`optimize`]: fused simplification,
+    /// then dead-gate elimination.
+    pub fn standard() -> PassManager {
+        PassManager::new(vec![Box::new(Simplify), Box::new(Dce)])
+    }
+
+    /// Names of the scheduled passes, in order.
+    pub fn pass_names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn run(&self, nl: &Netlist) -> (Netlist, SynthStats) {
+        let cells_in = nl.cell_count();
+        let mut cur = None;
+        for pass in &self.passes {
+            let next = pass.run(cur.as_ref().unwrap_or(nl));
+            cur = Some(next);
+        }
+        let out = cur.unwrap_or_else(|| nl.clone());
+        let stats = SynthStats { cells_in, cells_out: out.cell_count() };
+        (out, stats)
+    }
+}
+
+/// Optimize a netlist with the standard pipeline (fused constant
+/// propagation + structural hashing, then DCE).
+pub fn optimize(nl: &Netlist) -> (Netlist, SynthStats) {
+    PassManager::standard().run(nl)
+}
+
+// ---------------------------------------------------------------------------
+// The shared rewriter core
+// ---------------------------------------------------------------------------
+
+/// The rewrite engine behind [`ConstProp`], [`StructHash`], [`Simplify`]
+/// and the incremental re-synthesizer: maps source gates to
+/// representatives in an append-only output arena, optionally applying
+/// fold rules (`fold`) and emitting through a structural-hash table
+/// (`hash`). The arena is never mutated in place — only appended to —
+/// which is what lets the incremental engine keep it (and the per-node
+/// lane-word caches of `sim::wave::WaveCache`) alive across
+/// instantiations.
+pub(crate) struct Rewriter {
+    pub(crate) out: Netlist,
+    dedup: FxHashMap<Gate, NodeId>,
+    consts: [Option<NodeId>; 2],
+    input_map: FxHashMap<u32, NodeId>,
+    fold: bool,
+    hash: bool,
+}
+
+impl Rewriter {
+    pub(crate) fn new(fold: bool, hash: bool) -> Rewriter {
+        Rewriter {
+            out: Netlist::new(),
+            dedup: FxHashMap::default(),
+            consts: [None, None],
+            input_map: FxHashMap::default(),
+            fold,
+            hash,
+        }
+    }
+
+    /// Pre-create every primary input of `nl` (sorted by input index) so
+    /// input node ids are stable and survive DCE/interface-wise.
+    pub(crate) fn seed_inputs(&mut self, nl: &Netlist) {
+        self.out.n_inputs = nl.n_inputs;
+        let mut idxs: Vec<u32> = nl
+            .gates
+            .iter()
+            .filter_map(|g| if let Gate::Input(i) = g { Some(*i) } else { None })
+            .collect();
+        idxs.sort_unstable();
+        idxs.dedup();
+        for idx in idxs {
+            let id = self.push(Gate::Input(idx));
+            self.input_map.insert(idx, id);
+        }
+    }
+
+    fn push(&mut self, g: Gate) -> NodeId {
+        self.out.gates.push(g);
+        (self.out.gates.len() - 1) as NodeId
+    }
+
+    /// Emit a gate into the arena, deduplicating when hashing is on.
+    fn emit(&mut self, g: Gate) -> NodeId {
+        debug_assert!(!matches!(g, Gate::Input(_)), "inputs are seeded eagerly");
+        let g = canon(g);
+        if self.hash {
+            if let Some(&id) = self.dedup.get(&g) {
+                return id;
+            }
+        }
+        let id = self.push(g);
+        if self.hash {
+            self.dedup.insert(g, id);
+        }
+        id
+    }
+
+    /// Materialize a constant node in the arena (lazily, one per value).
+    pub(crate) fn get_const(&mut self, v: bool) -> NodeId {
+        if let Some(id) = self.consts[v as usize] {
+            return id;
+        }
+        let id = self.push(Gate::Const(v));
+        self.consts[v as usize] = Some(id);
+        id
+    }
+
+    /// Rewrite source output buses into the arena through a repr table,
+    /// materializing constants where needed. Replaces any previously
+    /// resolved outputs — shared by the full passes and the incremental
+    /// engine so the two can never diverge on output resolution.
+    pub(crate) fn resolve_outputs(
+        &mut self,
+        outputs: &[(String, Vec<NodeId>)],
+        repr: &[Repr],
+    ) {
+        self.out.outputs.clear();
+        for (name, bus) in outputs {
+            let new_bus: Vec<NodeId> = bus
+                .iter()
+                .map(|&n| match repr[n as usize] {
+                    Repr::Node(id) => id,
+                    Repr::Const(v) => self.get_const(v),
+                })
+                .collect();
+            self.out.outputs.push((name.clone(), new_bus));
+        }
+    }
+
+    /// Map one source gate to its representative, emitting into the
+    /// arena as needed. `r` resolves operand ids to their reprs.
+    ///
+    /// `Gate::Param` is kept as an opaque (deduplicated) leaf — engines
+    /// that bind params to values, like `incremental`, intercept it
+    /// before calling here.
+    pub(crate) fn rewrite_gate(&mut self, g: &Gate, r: impl Fn(NodeId) -> Repr) -> Repr {
+        match *g {
+            Gate::Input(idx) => {
+                Repr::Node(*self.input_map.get(&idx).expect("input not seeded"))
+            }
+            Gate::Const(v) => {
+                if self.fold {
+                    Repr::Const(v)
+                } else {
+                    Repr::Node(self.get_const(v))
+                }
+            }
+            Gate::Param(p) => Repr::Node(self.emit(Gate::Param(p))),
+            Gate::Not(a) => match r(a) {
+                Repr::Const(v) => Repr::Const(!v),
+                Repr::Node(n) => {
+                    // NOT(NOT(x)) -> x
+                    if self.fold {
+                        if let Gate::Not(inner) = self.out.gates[n as usize] {
+                            return Repr::Node(inner);
+                        }
+                    }
+                    Repr::Node(self.emit(Gate::Not(n)))
+                }
+            },
+            Gate::And(a, b) => self.binop(
+                r(a),
+                r(b),
+                BinRules {
+                    both: |x, y| x & y,
+                    with_true: WithConst::Other,
+                    with_false: WithConst::Const(false),
+                    same: SameRule::Same,
+                    build: Gate::And,
+                },
+            ),
+            Gate::Or(a, b) => self.binop(
+                r(a),
+                r(b),
+                BinRules {
+                    both: |x, y| x | y,
+                    with_true: WithConst::Const(true),
+                    with_false: WithConst::Other,
+                    same: SameRule::Same,
+                    build: Gate::Or,
+                },
+            ),
+            Gate::Xor(a, b) => self.binop(
+                r(a),
+                r(b),
+                BinRules {
+                    both: |x, y| x ^ y,
+                    with_true: WithConst::NotOther,
+                    with_false: WithConst::Other,
+                    same: SameRule::Const(false),
+                    build: Gate::Xor,
+                },
+            ),
+            Gate::Nand(a, b) => self.binop(
+                r(a),
+                r(b),
+                BinRules {
+                    both: |x, y| !(x & y),
+                    with_true: WithConst::NotOther,
+                    with_false: WithConst::Const(true),
+                    same: SameRule::NotSame,
+                    build: Gate::Nand,
+                },
+            ),
+            Gate::Nor(a, b) => self.binop(
+                r(a),
+                r(b),
+                BinRules {
+                    both: |x, y| !(x | y),
+                    with_true: WithConst::Const(false),
+                    with_false: WithConst::NotOther,
+                    same: SameRule::NotSame,
+                    build: Gate::Nor,
+                },
+            ),
+            Gate::Xnor(a, b) => self.binop(
+                r(a),
+                r(b),
+                BinRules {
+                    both: |x, y| !(x ^ y),
+                    with_true: WithConst::Other,
+                    with_false: WithConst::NotOther,
+                    same: SameRule::Const(true),
+                    build: Gate::Xnor,
+                },
+            ),
+            Gate::Mux(s, a, b) => self.mux(r(s), r(a), r(b)),
+        }
+    }
+
+    fn binop(&mut self, ra: Repr, rb: Repr, rules: BinRules) -> Repr {
+        if !self.fold {
+            // Hash-only mode: reprs are always nodes (constants became
+            // arena nodes), so just re-emit through the dedup table.
+            let (Repr::Node(x), Repr::Node(y)) = (ra, rb) else {
+                unreachable!("const reprs only exist in fold mode")
+            };
+            return Repr::Node(self.emit((rules.build)(x, y)));
+        }
+        match (ra, rb) {
+            (Repr::Const(x), Repr::Const(y)) => Repr::Const((rules.both)(x, y)),
+            (Repr::Const(c), Repr::Node(n)) | (Repr::Node(n), Repr::Const(c)) => {
+                let rule = if c { rules.with_true } else { rules.with_false };
+                match rule {
+                    WithConst::Other => Repr::Node(n),
+                    WithConst::NotOther => Repr::Node(self.emit(Gate::Not(n))),
+                    WithConst::Const(v) => Repr::Const(v),
+                }
+            }
+            (Repr::Node(x), Repr::Node(y)) => {
+                if x == y {
+                    match rules.same {
+                        SameRule::Same => Repr::Node(x),
+                        SameRule::NotSame => Repr::Node(self.emit(Gate::Not(x))),
+                        SameRule::Const(v) => Repr::Const(v),
+                    }
+                } else {
+                    Repr::Node(self.emit((rules.build)(x, y)))
+                }
+            }
+        }
+    }
+
+    fn mux(&mut self, rs: Repr, ra: Repr, rb: Repr) -> Repr {
+        if !self.fold {
+            let (Repr::Node(sn), Repr::Node(an), Repr::Node(bn)) = (rs, ra, rb) else {
+                unreachable!("const reprs only exist in fold mode")
+            };
+            return Repr::Node(self.emit(Gate::Mux(sn, an, bn)));
+        }
+        match (rs, ra, rb) {
+            (Repr::Const(false), _, _) => ra,
+            (Repr::Const(true), _, _) => rb,
+            (_, Repr::Const(x), Repr::Const(y)) if x == y => Repr::Const(x),
+            // mux(s, 0, 1) = s ; mux(s, 1, 0) = !s
+            (Repr::Node(sn), Repr::Const(false), Repr::Const(true)) => Repr::Node(sn),
+            (Repr::Node(sn), Repr::Const(true), Repr::Const(false)) => {
+                Repr::Node(self.emit(Gate::Not(sn)))
+            }
+            // Equal-constant arms are covered by the x == y guard above;
+            // rustc cannot see that, so mark unreachable.
+            (Repr::Node(_), Repr::Const(_), Repr::Const(_)) => unreachable!(),
+            // mux(s, 0, b) = s & b ; mux(s, 1, b) = !s | b
+            (Repr::Node(sn), Repr::Const(false), Repr::Node(bn)) => {
+                Repr::Node(self.emit(Gate::And(sn, bn)))
+            }
+            (Repr::Node(sn), Repr::Const(true), Repr::Node(bn)) => {
+                let ns = self.emit(Gate::Not(sn));
+                Repr::Node(self.emit(Gate::Or(ns, bn)))
+            }
+            // mux(s, a, 0) = !s & a ; mux(s, a, 1) = s | a
+            (Repr::Node(sn), Repr::Node(an), Repr::Const(false)) => {
+                let ns = self.emit(Gate::Not(sn));
+                Repr::Node(self.emit(Gate::And(ns, an)))
+            }
+            (Repr::Node(sn), Repr::Node(an), Repr::Const(true)) => {
+                Repr::Node(self.emit(Gate::Or(sn, an)))
+            }
+            (Repr::Node(sn), Repr::Node(an), Repr::Node(bn)) => {
+                if an == bn {
+                    Repr::Node(an)
+                } else {
+                    Repr::Node(self.emit(Gate::Mux(sn, an, bn)))
+                }
+            }
+        }
+    }
+}
+
+/// One full forward rewrite of a netlist (the non-incremental pass body).
+fn rewrite_netlist(nl: &Netlist, fold: bool, hash: bool) -> Netlist {
+    let mut rw = Rewriter::new(fold, hash);
+    rw.seed_inputs(nl);
+    let mut repr: Vec<Repr> = Vec::with_capacity(nl.gates.len());
+    for g in &nl.gates {
+        let r = rw.rewrite_gate(g, |id| repr[id as usize]);
+        repr.push(r);
+    }
+    rw.resolve_outputs(&nl.outputs, &repr);
+    rw.out
+}
+
+/// How a binary op simplifies against a constant operand.
+#[derive(Clone, Copy)]
+enum WithConst {
+    /// Result is the non-constant operand.
+    Other,
+    /// Result is NOT of the non-constant operand.
+    NotOther,
+    /// Result is a constant.
+    Const(bool),
+}
+
+#[derive(Clone, Copy)]
+enum SameRule {
+    /// op(x, x) = x
+    Same,
+    /// op(x, x) = !x
+    NotSame,
+    /// op(x, x) = const
+    Const(bool),
+}
+
+struct BinRules {
+    both: fn(bool, bool) -> bool,
+    with_true: WithConst,
+    with_false: WithConst,
+    same: SameRule,
+    build: fn(NodeId, NodeId) -> Gate,
+}
+
+/// Canonicalize commutative gates (sorted operands) for hashing.
+fn canon(g: Gate) -> Gate {
+    match g {
+        Gate::And(a, b) if a > b => Gate::And(b, a),
+        Gate::Or(a, b) if a > b => Gate::Or(b, a),
+        Gate::Xor(a, b) if a > b => Gate::Xor(b, a),
+        Gate::Nand(a, b) if a > b => Gate::Nand(b, a),
+        Gate::Nor(a, b) if a > b => Gate::Nor(b, a),
+        Gate::Xnor(a, b) if a > b => Gate::Xnor(b, a),
+        g => g,
+    }
+}
+
+/// Dead-code elimination: keep only nodes reachable from outputs (plus
+/// all primary inputs, which define the interface).
+pub(crate) fn dce(nl: &Netlist) -> Netlist {
+    let n = nl.gates.len();
+    let mut live = vec![false; n];
+    let mut stack: Vec<NodeId> = Vec::new();
+    for (_, bus) in &nl.outputs {
+        for &b in bus {
+            if !live[b as usize] {
+                live[b as usize] = true;
+                stack.push(b);
+            }
+        }
+    }
+    while let Some(id) = stack.pop() {
+        for op in nl.gates[id as usize].operands() {
+            if !live[op as usize] {
+                live[op as usize] = true;
+                stack.push(op);
+            }
+        }
+    }
+    // Inputs stay (interface stability for the simulator).
+    for (i, g) in nl.gates.iter().enumerate() {
+        if matches!(g, Gate::Input(_)) {
+            live[i] = true;
+        }
+    }
+    let mut remap: Vec<NodeId> = vec![0; n];
+    let mut out = Netlist::new();
+    out.n_inputs = nl.n_inputs;
+    for (i, g) in nl.gates.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        let g2 = match *g {
+            Gate::Input(idx) => Gate::Input(idx),
+            Gate::Const(v) => Gate::Const(v),
+            Gate::Param(p) => Gate::Param(p),
+            Gate::Not(a) => Gate::Not(remap[a as usize]),
+            Gate::And(a, b) => Gate::And(remap[a as usize], remap[b as usize]),
+            Gate::Or(a, b) => Gate::Or(remap[a as usize], remap[b as usize]),
+            Gate::Xor(a, b) => Gate::Xor(remap[a as usize], remap[b as usize]),
+            Gate::Nand(a, b) => Gate::Nand(remap[a as usize], remap[b as usize]),
+            Gate::Nor(a, b) => Gate::Nor(remap[a as usize], remap[b as usize]),
+            Gate::Xnor(a, b) => Gate::Xnor(remap[a as usize], remap[b as usize]),
+            Gate::Mux(s, a, b) => {
+                Gate::Mux(remap[s as usize], remap[a as usize], remap[b as usize])
+            }
+        };
+        out.gates.push(g2);
+        remap[i] = (out.gates.len() - 1) as NodeId;
+    }
+    for (name, bus) in &nl.outputs {
+        out.outputs
+            .push((name.clone(), bus.iter().map(|&b| remap[b as usize]).collect()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::build;
+    use crate::sim::{eval, u64_to_bits};
+    use crate::util::prop;
+
+    #[test]
+    fn constants_propagate_through_and() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let zero = nl.constant(false);
+        let g = nl.and(a, zero); // == 0
+        let h = nl.or(g, a); // == a
+        nl.output("y", vec![h]);
+        let (opt, stats) = optimize(&nl);
+        assert_eq!(stats.cells_out, 0, "everything should fold to a wire");
+        assert_eq!(eval(&opt, &[true])["y"][0], true);
+        assert_eq!(eval(&opt, &[false])["y"][0], false);
+    }
+
+    #[test]
+    fn structural_hashing_merges_duplicates() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let g1 = nl.and(a, b);
+        let g2 = nl.and(b, a); // same gate, swapped operands
+        let y = nl.xor(g1, g2); // x ^ x = 0
+        nl.output("y", vec![y]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 0);
+        assert_eq!(eval(&opt, &[true, true])["y"][0], false);
+    }
+
+    #[test]
+    fn double_negation_removed() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let n1 = nl.not(a);
+        let n2 = nl.not(n1);
+        nl.output("y", vec![n2]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 0);
+        assert_eq!(eval(&opt, &[true])["y"][0], true);
+    }
+
+    #[test]
+    fn dce_removes_unused_logic() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let _unused = nl.xor(a, b);
+        let used = nl.and(a, b);
+        nl.output("y", vec![used]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 1);
+    }
+
+    #[test]
+    fn mux_simplifications() {
+        let mut nl = Netlist::new();
+        let s = nl.input();
+        let a = nl.input();
+        let zero = nl.constant(false);
+        let one = nl.constant(true);
+        let m1 = nl.mux(s, zero, one); // = s
+        let m2 = nl.mux(s, a, a); // = a
+        let m3 = nl.mux(zero, a, one); // = a
+        nl.output("y", vec![m1, m2, m3]);
+        let (opt, _) = optimize(&nl);
+        assert_eq!(opt.cell_count(), 0);
+        let out = &eval(&opt, &[true, false])["y"];
+        assert_eq!(out.as_slice(), &[true, false, false]);
+    }
+
+    #[test]
+    fn prop_optimize_preserves_function() {
+        // Random adder circuits with some constant inputs: the optimized
+        // netlist must compute the same function.
+        prop::check("synth preserves semantics", |rng, _| {
+            let w = 4u32;
+            let mut nl = Netlist::new();
+            let a = nl.input_bus(w);
+            let kconst = rng.below(16) as u64;
+            let kb = build::const_bus(&mut nl, kconst, w);
+            let s = build::adder(&mut nl, &a, &kb);
+            let m = build::const_mul(&mut nl, &s, rng.below(8) as u64 + 1);
+            nl.output("m", m);
+            let (opt, stats) = optimize(&nl);
+            if stats.cells_out > stats.cells_in {
+                return Err("synthesis grew the circuit".to_string());
+            }
+            for _ in 0..8 {
+                let x = rng.below(1 << w) as u64;
+                let bits = u64_to_bits(x, w);
+                let o1 = &eval(&nl, &bits)["m"];
+                let o2 = &eval(&opt, &bits)["m"];
+                if crate::sim::bus_to_u64(o1) != crate::sim::bus_to_u64(o2) {
+                    return Err(format!("mismatch at x={x} k={kconst}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masked_zero_bits_shrink_adder_tree() {
+        // The paper's core mechanism: replacing summand bits by constant
+        // zero must shrink the synthesized adder tree.
+        let w = 4u32;
+        let build_tree = |mask: u64| -> usize {
+            let mut nl = Netlist::new();
+            let mut summands = Vec::new();
+            for _ in 0..4 {
+                let bus = nl.input_bus(w);
+                let masked: Vec<_> = bus
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &bit)| {
+                        if (mask >> i) & 1 == 1 {
+                            bit
+                        } else {
+                            nl.constant(false)
+                        }
+                    })
+                    .collect();
+                summands.push(masked);
+            }
+            let s = build::csa_tree(&mut nl, &summands);
+            nl.output("s", s);
+            let (opt, _) = optimize(&nl);
+            opt.cell_count()
+        };
+        let full = build_tree(0xF);
+        let half = build_tree(0b0110);
+        let none = build_tree(0x0);
+        assert!(half < full, "half {half} vs full {full}");
+        assert_eq!(none, 0);
+    }
+
+    #[test]
+    fn standard_pipeline_names() {
+        assert_eq!(PassManager::standard().pass_names(), vec!["simplify", "dce"]);
+    }
+
+    #[test]
+    fn const_prop_alone_folds_but_keeps_duplicates() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let zero = nl.constant(false);
+        let dead = nl.and(a, zero); // folds to const 0
+        let g1 = nl.and(a, b);
+        let g2 = nl.and(b, a); // duplicate of g1 — const-prop keeps it
+        let y = nl.or(g1, g2);
+        let z = nl.or(dead, y); // == y
+        nl.output("y", vec![z]);
+        let out = ConstProp.run(&nl);
+        // g1, g2 and the or survive; the masked AND folded away.
+        assert_eq!(out.cell_count(), 3);
+        assert_eq!(eval(&out, &[true, true])["y"][0], true);
+        assert_eq!(eval(&out, &[true, false])["y"][0], false);
+    }
+
+    #[test]
+    fn struct_hash_alone_merges_but_keeps_constants() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let g1 = nl.and(a, b);
+        let g2 = nl.and(b, a); // merges with g1
+        let zero = nl.constant(false);
+        let dead = nl.or(g1, zero); // hashing alone cannot fold this
+        let y = nl.xor(g2, dead);
+        nl.output("y", vec![y]);
+        let out = StructHash.run(&nl);
+        // and (merged), or-with-const, xor: 3 cells, no folding.
+        assert_eq!(out.cell_count(), 3);
+        for bits in [[false, false], [true, false], [true, true]] {
+            assert_eq!(eval(&out, &bits)["y"][0], eval(&nl, &bits)["y"][0]);
+        }
+    }
+
+    #[test]
+    fn prop_custom_pipelines_preserve_function() {
+        // Any composition of the passes must be semantics-preserving.
+        prop::check("pass pipelines preserve semantics", |rng, _| {
+            let w = 3u32;
+            let mut nl = Netlist::new();
+            let a = nl.input_bus(w);
+            let kb = build::const_bus(&mut nl, rng.below(8) as u64, w);
+            let s = build::adder(&mut nl, &a, &kb);
+            nl.output("s", s);
+            let pm = match rng.below(3) {
+                0 => PassManager::new(vec![Box::new(ConstProp), Box::new(Dce)]),
+                1 => PassManager::new(vec![
+                    Box::new(ConstProp),
+                    Box::new(StructHash),
+                    Box::new(Dce),
+                ]),
+                _ => PassManager::new(vec![Box::new(StructHash), Box::new(Simplify)]),
+            };
+            let (out, _) = pm.run(&nl);
+            for _ in 0..8 {
+                let x = rng.below(1 << w) as u64;
+                let bits = u64_to_bits(x, w);
+                let o1 = crate::sim::bus_to_u64(&eval(&nl, &bits)["s"]);
+                let o2 = crate::sim::bus_to_u64(&eval(&out, &bits)["s"]);
+                if o1 != o2 {
+                    return Err(format!("pipeline mismatch at x={x}: {o1} != {o2}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

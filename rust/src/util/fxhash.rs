@@ -1,0 +1,135 @@
+//! FxHash-style hasher (std-only reimplementation of the rustc/Firefox
+//! `FxHasher` mixing function).
+//!
+//! The synthesis hot path hashes millions of tiny fixed-size keys
+//! (`netlist::Gate` is a 12-byte enum) per optimized netlist; SipHash's
+//! keyed, DoS-resistant rounds are wasted work there. Fx folds each word
+//! with one rotate + xor + multiply, which is both faster and good
+//! enough: the keys are program-internal node ids, never attacker
+//! controlled. Use [`FxHashMap`]/[`FxHashSet`] for such tables; keep the
+//! std default hasher for anything keyed by external data.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// A `HashMap` using the Fx mixing function.
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+/// A `HashSet` using the Fx mixing function.
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// The Fx streaming hasher: one rotate-xor-multiply per word.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut word = [0u8; 8];
+            word[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(word));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::Hash;
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        let mut h = FxHasher::default();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn deterministic_and_discriminating() {
+        assert_eq!(hash_of(&42u64), hash_of(&42u64));
+        assert_ne!(hash_of(&42u64), hash_of(&43u64));
+        assert_ne!(hash_of(&(1u32, 2u32)), hash_of(&(2u32, 1u32)));
+    }
+
+    #[test]
+    fn byte_stream_tail_handled() {
+        let mut a = FxHasher::default();
+        a.write(&[1, 2, 3]);
+        let mut b = FxHasher::default();
+        b.write(&[1, 2, 3, 0]);
+        // Different lengths zero-pad to the same word here; the point is
+        // only that short tails hash without panicking and spread bits.
+        assert_ne!(a.finish(), 0);
+        assert_ne!(b.finish(), 0);
+    }
+
+    #[test]
+    fn works_as_map_hasher_with_gate_like_keys() {
+        #[derive(PartialEq, Eq, Hash)]
+        enum K {
+            A(u32, u32),
+            B(u32),
+        }
+        let mut m: FxHashMap<K, usize> = FxHashMap::default();
+        m.insert(K::A(1, 2), 10);
+        m.insert(K::B(1), 20);
+        m.insert(K::A(2, 1), 30);
+        assert_eq!(m[&K::A(1, 2)], 10);
+        assert_eq!(m[&K::B(1)], 20);
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn set_dedups() {
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        for i in 0..100 {
+            s.insert(i % 10);
+        }
+        assert_eq!(s.len(), 10);
+    }
+}

@@ -8,9 +8,11 @@
 pub mod rng;
 pub mod json;
 pub mod bitvec;
+pub mod fxhash;
 pub mod stats;
 pub mod threads;
 pub mod prop;
 
 pub use bitvec::BitVec;
+pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;

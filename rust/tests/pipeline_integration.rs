@@ -5,15 +5,10 @@ use printed_mlp::bench::{Scale, Study};
 use printed_mlp::config::builtin;
 use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
 use printed_mlp::egfet::PowerSource;
+use printed_mlp::synth::SynthMode;
 
 fn smoke_opts(backend: EvalBackend) -> PipelineOpts {
-    PipelineOpts {
-        backend,
-        max_hw_points: 2,
-        synth_baseline: true,
-        approx_argmax: true,
-        verbose: false,
-    }
+    PipelineOpts { backend, max_hw_points: 2, ..Default::default() }
 }
 
 #[test]
@@ -77,6 +72,23 @@ fn circuit_and_native_backends_agree_on_front_semantics() {
     let on: Vec<[f64; 2]> = rn.front.iter().map(|i| i.objs).collect();
     let oc: Vec<[f64; 2]> = rc.front.iter().map(|i| i.objs).collect();
     assert_eq!(on, oc);
+}
+
+#[test]
+fn circuit_synth_modes_bit_identical_fronts() {
+    // Acceptance: `--backend circuit --synth incremental` must be
+    // bit-identical in classification (hence GA trajectory and front)
+    // to `--synth full`.
+    let mut cfg = builtin::tiny();
+    cfg.ga.population = 12;
+    cfg.ga.generations = 2;
+    let mut full_opts = smoke_opts(EvalBackend::Circuit);
+    full_opts.synth = SynthMode::Full;
+    let rf = Pipeline::new(cfg.clone(), full_opts).run().unwrap();
+    let ri = Pipeline::new(cfg, smoke_opts(EvalBackend::Circuit)).run().unwrap();
+    let of: Vec<[f64; 2]> = rf.front.iter().map(|i| i.objs).collect();
+    let oi: Vec<[f64; 2]> = ri.front.iter().map(|i| i.objs).collect();
+    assert_eq!(of, oi);
 }
 
 #[test]
