@@ -4,6 +4,12 @@
 //! GA-like mutation chain) vs PJRT when artifacts exist — per dataset;
 //! the framework's hot path (EXPERIMENTS.md §Perf). The incremental row
 //! reports its speedup over the from-scratch circuit path.
+//!
+//! The jobs-scaling section measures the population-parallel fan-out of
+//! the circuit backend (per-worker synthesis arenas + wave caches) at
+//! `--jobs` 1/2/4/8: genomes/sec per width, speedup vs serial, and a
+//! bit-identical check across widths. The tentpole target is ≥3× at 8
+//! workers over `--jobs 1`.
 mod common;
 use printed_mlp::bench::Scale;
 
@@ -13,9 +19,16 @@ fn main() {
             Scale::Smoke => (vec!["tiny"], 24),
             _ => (vec!["cardio", "pendigits", "arrhythmia"], 64),
         };
+        let n_scaling = match common::scale() {
+            Scale::Smoke => 32,
+            _ => 96,
+        };
         let mut out = String::new();
-        for name in names {
+        for name in &names {
             out.push_str(&printed_mlp::bench::ablation_evaluators(name, n));
+        }
+        for name in &names {
+            out.push_str(&printed_mlp::bench::jobs_scaling(name, n_scaling, &[1, 2, 4, 8]));
         }
         out
     });

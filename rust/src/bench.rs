@@ -507,7 +507,7 @@ pub fn table5(study: &mut Study) -> String {
 /// engine targets and the population structure NSGA-II actually
 /// produces; the native row keeps the independent random stream.
 pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
-    use crate::ga::Evaluator;
+    use crate::ga::{evaluate_parallel, Evaluator};
     use crate::synth::SynthMode;
     let cfg = builtin::by_name(name).expect("dataset");
     let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
@@ -546,11 +546,14 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
 
     // From-scratch circuit evaluation on a chain prefix (each genome is
     // a full build + synthesis + wave classification of the train set).
+    // Both circuit chain rows run at jobs=1 on purpose: they measure the
+    // *serial chain-locality* cost (one arena walking the mutation
+    // chain), not machine-width scaling — `jobs_scaling` covers that.
     let n_full = n_genomes.min(16);
     let full_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
         .with_mode(SynthMode::Full);
     let t0 = std::time::Instant::now();
-    let objs_full = full_ev.evaluate(&chain[..n_full]);
+    let objs_full = evaluate_parallel(&full_ev, &chain[..n_full], 1);
     let full_rate = n_full as f64 / t0.elapsed().as_secs_f64();
     let agree_native = objs_chain_native
         .iter()
@@ -562,10 +565,11 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
         format!("netlist-equal over {n_full}: {agree_native}"),
     ]);
 
-    // Incremental: same template arena + wave cache across the chain.
+    // Incremental: one worker's template arena + wave cache across the
+    // whole chain (jobs=1, see above).
     let incr_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base);
     let t0 = std::time::Instant::now();
-    let objs_incr = incr_ev.evaluate(&chain);
+    let objs_incr = evaluate_parallel(&incr_ev, &chain, 1);
     let incr_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
     let agree_full = objs_incr[..n_full] == objs_full[..];
     rows.push(vec![
@@ -600,6 +604,66 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
     render_table(
         &format!("Evaluator ablation [{name}] ({n_genomes} chromosomes)"),
         &["backend", "chromosomes/s", "notes"],
+        &rows,
+    )
+}
+
+/// Genomes/sec of the circuit backend's population-parallel fan-out at
+/// increasing `--jobs` widths (incremental synthesis, per-worker arenas)
+/// — the scaling row of `benches/perf_evaluators.rs`.
+///
+/// Each width gets a *fresh* evaluator: the cross-generation memo is
+/// shared state, and reusing it would let the second run answer from
+/// cache. The workload is independent semi-random chromosomes (the
+/// initial-population shape — large cone deltas, so per-genome work is
+/// substantial and the fan-out has something to win on). Objectives are
+/// asserted bit-identical across widths.
+pub fn jobs_scaling(name: &str, n_genomes: usize, jobs_list: &[usize]) -> String {
+    use crate::ga::evaluate_parallel;
+    let cfg = builtin::by_name(name).expect("dataset");
+    let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+    let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
+    let qmlp: &QuantMlp = &tm.qmlp;
+    let base = tm.acc_q_train;
+    let map = GenomeMap::new(qmlp);
+    let mut rng = Rng::new(9);
+    let genomes: Vec<_> = (0..n_genomes)
+        .map(|_| {
+            let keep = 0.6 + 0.35 * rng.f64();
+            map.random_genome(&mut rng, keep)
+        })
+        .collect();
+    let mut rows = Vec::new();
+    let mut base_rate: Option<f64> = None;
+    let mut reference: Option<Vec<[f64; 2]>> = None;
+    for &jobs in jobs_list {
+        let ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base);
+        let t0 = std::time::Instant::now();
+        let objs = evaluate_parallel(&ev, &genomes, jobs);
+        let rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+        let agree = match &reference {
+            None => {
+                reference = Some(objs);
+                true
+            }
+            Some(r) => *r == objs,
+        };
+        let speedup = base_rate.map(|b| rate / b).unwrap_or(1.0);
+        if base_rate.is_none() {
+            base_rate = Some(rate);
+        }
+        rows.push(vec![
+            format!("{jobs}"),
+            format!("{rate:.1}"),
+            format!("{speedup:.2}x"),
+            format!("bit-identical: {agree}"),
+        ]);
+    }
+    render_table(
+        &format!(
+            "Circuit-backend jobs scaling [{name}] ({n_genomes} chromosomes, incremental synth)"
+        ),
+        &["jobs", "genomes/s", "vs jobs=1", "notes"],
         &rows,
     )
 }

@@ -55,6 +55,11 @@ pub struct PipelineOpts {
     /// incremental cone-local re-synthesis (default) or from-scratch per
     /// chromosome. Classification output is bit-identical either way.
     pub synth: SynthMode,
+    /// Worker threads of the GA evaluation fan-out (`--jobs`); `0` =
+    /// auto (env `PMLP_JOBS`, else the machine's parallelism). Results
+    /// are bit-identical for every value — jobs only sets how wide each
+    /// generation evaluates.
+    pub jobs: usize,
     /// Synthesize + analyze at most this many Pareto designs (the
     /// hardware step dominates runtime for large MLPs).
     pub max_hw_points: usize,
@@ -70,6 +75,7 @@ impl Default for PipelineOpts {
         PipelineOpts {
             backend: EvalBackend::Auto,
             synth: SynthMode::Incremental,
+            jobs: 0,
             max_hw_points: 4,
             synth_baseline: true,
             approx_argmax: true,
@@ -236,24 +242,33 @@ impl Pipeline {
                 );
             }
         };
+        let jobs = self.opts.jobs;
         let (front, population, backend_used) = if self.opts.backend == EvalBackend::Circuit {
             // Circuit-in-the-loop: every chromosome is synthesized and
             // classified at the gate level through the wave engine,
-            // incrementally (template cone-patch) or from scratch.
+            // incrementally (template cone-patch) or from scratch. The
+            // GA fans each generation across `jobs` workers, each owning
+            // its own synthesis arena + wave cache.
             let ev =
                 CircuitEvaluator::new(qmlp, &qtrain, base_acc_train).with_mode(self.opts.synth);
-            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
+            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
+                .with_seeds(seeds.clone())
+                .with_jobs(jobs);
             let result = ga.run(log_gen);
             (result.front, result.population, "circuit")
         } else if have_artifact {
             let rt = runtime.as_ref().unwrap();
             let ev = PjrtEvaluator::new(rt, &cfg.dataset.name, qmlp, &qtrain, base_acc_train)?;
-            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
+            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
+                .with_seeds(seeds.clone())
+                .with_jobs(jobs);
             let result = ga.run(log_gen);
             (result.front, result.population, "pjrt")
         } else {
             let ev = NativeEvaluator::new(qmlp, &qtrain, base_acc_train);
-            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev).with_seeds(seeds.clone());
+            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
+                .with_seeds(seeds.clone())
+                .with_jobs(jobs);
             let result = ga.run(log_gen);
             (result.front, result.population, "native")
         };

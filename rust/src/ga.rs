@@ -13,20 +13,95 @@
 //! the non-dominated accuracy/area front.
 
 use crate::config::GaSpec;
-use crate::util::{BitVec, Rng};
+use crate::util::{threads, BitVec, Rng};
+use std::collections::HashMap;
 
-/// Batch evaluator of chromosomes → objective pairs
-/// `[accuracy_loss, area_estimate]` (both minimized).
+/// One evaluation worker's scratch state.
+///
+/// A worker owns whatever mutable machinery its backend needs per thread
+/// — the circuit-in-the-loop backend parks an incremental-synthesis
+/// arena and a wave cache here — and scores one genome at a time.
+/// Contract: `eval_one` must be a *pure function of the genome and the
+/// shared read-only state*; per-worker scratch may only accelerate it,
+/// never change it. That contract is what makes the parallel fan-out
+/// bit-identical to serial evaluation (pinned by
+/// `rust/tests/ga_determinism.rs`).
+pub trait EvalWorker {
+    /// Score one genome as `[accuracy_loss, area_estimate]` (minimized).
+    fn eval_one(&mut self, genome: &BitVec) -> [f64; 2];
+}
+
+/// Chromosome evaluator: shared read-only state (`Sync`) plus a factory
+/// of per-worker scratch evaluators.
 ///
 /// Implemented by the native integer-model evaluator, by the PJRT
 /// evaluator that runs the AOT-compiled Layer-2/Layer-1 program, and by
 /// the circuit-in-the-loop evaluator that wave-simulates the synthesized
-/// netlist (`crate::runtime::evaluator`). Parallelism lives *inside*
-/// `evaluate` (thread pool or XLA), so the trait itself needs no `Sync`
-/// bound — PJRT handles are not `Sync`.
-pub trait Evaluator {
-    /// Evaluate a batch of genomes. Must return one `[f64; 2]` per input.
-    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]>;
+/// netlist (`crate::runtime::evaluator`). [`Nsga2`] fans each
+/// generation's offspring across a `util::threads` worker pool
+/// ([`evaluate_parallel`]); each worker evaluates genomes through its
+/// own [`EvalWorker`], and results are reduced back in genome order, so
+/// the outcome is independent of scheduling.
+pub trait Evaluator: Sync {
+    /// Create one worker's scratch evaluator (borrowing the shared
+    /// state). Called once per worker thread per evaluated batch.
+    fn worker(&self) -> Box<dyn EvalWorker + '_>;
+
+    /// Optional whole-batch fast path. Backends whose parallelism lives
+    /// elsewhere (the PJRT evaluator dispatches population tiles to XLA)
+    /// return `Some`; everyone else inherits `None` and takes the
+    /// worker fan-out.
+    fn evaluate_batch(&self, genomes: &[BitVec]) -> Option<Vec<[f64; 2]>> {
+        let _ = genomes;
+        None
+    }
+
+    /// Evaluate a batch of genomes (one `[f64; 2]` per input), fanning
+    /// out over the default worker count. Convenience surface for tests
+    /// and benches; [`Nsga2`] calls [`evaluate_parallel`] with its
+    /// configured `jobs` instead.
+    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
+        evaluate_parallel(self, genomes, threads::default_jobs())
+    }
+}
+
+/// Population-parallel evaluation: dedup the batch (NSGA-II offspring
+/// routinely repeat chromosomes), fan the unique genomes across `jobs`
+/// workers — each with its own [`EvalWorker`] scratch — and scatter the
+/// results back in genome order.
+///
+/// Bit-identical to serial evaluation for any `jobs`: unique genomes are
+/// claimed off an atomic cursor but written back by index, dedup follows
+/// first-occurrence order, and `EvalWorker::eval_one` is pure per genome
+/// (see the trait contract).
+pub fn evaluate_parallel<E: Evaluator + ?Sized>(
+    ev: &E,
+    genomes: &[BitVec],
+    jobs: usize,
+) -> Vec<[f64; 2]> {
+    if let Some(objs) = ev.evaluate_batch(genomes) {
+        assert_eq!(objs.len(), genomes.len(), "evaluator returned wrong arity");
+        return objs;
+    }
+    // Dedup in first-occurrence order; `which[k]` maps batch position ->
+    // unique index.
+    let mut uniq: Vec<&BitVec> = Vec::new();
+    let mut slot: HashMap<&BitVec, usize> = HashMap::new();
+    let mut which = Vec::with_capacity(genomes.len());
+    for g in genomes {
+        let k = *slot.entry(g).or_insert_with(|| {
+            uniq.push(g);
+            uniq.len() - 1
+        });
+        which.push(k);
+    }
+    let uniq_objs = threads::par_map_with(
+        uniq.len(),
+        jobs.max(1),
+        || ev.worker(),
+        |w, i| w.eval_one(uniq[i]),
+    );
+    which.into_iter().map(|k| uniq_objs[k]).collect()
 }
 
 /// One individual of the population.
@@ -162,6 +237,10 @@ pub struct Nsga2<'a> {
     pub spec: GaSpec,
     pub genome_len: usize,
     pub evaluator: &'a dyn Evaluator,
+    /// Worker threads of the evaluation fan-out; `0` = auto
+    /// ([`threads::default_jobs`]). Any value yields bit-identical
+    /// results — jobs only sets how wide each generation evaluates.
+    pub jobs: usize,
     /// Extra domain-informed individuals injected into the initial
     /// population (e.g. [`crate::accum::truncation_seeds`]).
     pub seeds: Vec<BitVec>,
@@ -169,13 +248,27 @@ pub struct Nsga2<'a> {
 
 impl<'a> Nsga2<'a> {
     pub fn new(spec: GaSpec, genome_len: usize, evaluator: &'a dyn Evaluator) -> Self {
-        Nsga2 { spec, genome_len, evaluator, seeds: Vec::new() }
+        Nsga2 { spec, genome_len, evaluator, jobs: 0, seeds: Vec::new() }
     }
 
     /// Builder-style seed injection.
     pub fn with_seeds(mut self, seeds: Vec<BitVec>) -> Self {
         self.seeds = seeds;
         self
+    }
+
+    /// Builder-style worker count (`0` = auto).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    fn resolved_jobs(&self) -> usize {
+        if self.jobs == 0 {
+            threads::default_jobs()
+        } else {
+            self.jobs
+        }
     }
 
     /// Run the optimization; `log` receives one line per generation.
@@ -204,7 +297,8 @@ impl<'a> Nsga2<'a> {
                 (0..self.genome_len).map(|_| rng.chance(keep)).collect();
             genomes.push(BitVec::from_bools(&bools));
         }
-        let objs = self.evaluator.evaluate(&genomes);
+        let jobs = self.resolved_jobs();
+        let objs = evaluate_parallel(self.evaluator, &genomes, jobs);
         let mut pop: Vec<Individual> = genomes
             .into_iter()
             .zip(objs)
@@ -235,7 +329,7 @@ impl<'a> Nsga2<'a> {
                     offspring_genomes.push(c2);
                 }
             }
-            let off_objs = self.evaluator.evaluate(&offspring_genomes);
+            let off_objs = evaluate_parallel(self.evaluator, &offspring_genomes, jobs);
             let offspring: Vec<Individual> = offspring_genomes
                 .into_iter()
                 .zip(off_objs)
@@ -365,17 +459,19 @@ mod tests {
     struct Toy {
         len: usize,
     }
+    struct ToyWorker<'a> {
+        ev: &'a Toy,
+    }
+    impl EvalWorker for ToyWorker<'_> {
+        fn eval_one(&mut self, g: &BitVec) -> [f64; 2] {
+            let half = self.ev.len / 2;
+            let zeros_front = (0..half).filter(|&i| !g.get(i)).count() as f64 / half as f64;
+            [0.3 * zeros_front, g.count_ones() as f64]
+        }
+    }
     impl Evaluator for Toy {
-        fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
-            genomes
-                .iter()
-                .map(|g| {
-                    let half = self.len / 2;
-                    let zeros_front =
-                        (0..half).filter(|&i| !g.get(i)).count() as f64 / half as f64;
-                    [0.3 * zeros_front, g.count_ones() as f64]
-                })
-                .collect()
+        fn worker(&self) -> Box<dyn EvalWorker + '_> {
+            Box::new(ToyWorker { ev: self })
         }
     }
 
@@ -507,5 +603,55 @@ mod tests {
         let o1: Vec<[f64; 2]> = r1.front.iter().map(|i| i.objs).collect();
         let o2: Vec<[f64; 2]> = r2.front.iter().map(|i| i.objs).collect();
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn evaluate_parallel_matches_serial_and_dedups() {
+        let toy = Toy { len: 32 };
+        let mut rng = Rng::new(23);
+        let mut genomes: Vec<BitVec> = (0..40)
+            .map(|_| {
+                let bools: Vec<bool> = (0..32).map(|_| rng.chance(0.5)).collect();
+                BitVec::from_bools(&bools)
+            })
+            .collect();
+        // Inject duplicates so the dedup/scatter path is exercised.
+        let dup = genomes[0].clone();
+        genomes.push(dup.clone());
+        genomes.insert(7, dup);
+        let serial = evaluate_parallel(&toy, &genomes, 1);
+        let parallel = evaluate_parallel(&toy, &genomes, 8);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial.len(), genomes.len());
+        assert_eq!(serial[0], serial[7]);
+        assert_eq!(serial[0], *serial.last().unwrap());
+    }
+
+    #[test]
+    fn jobs_do_not_change_ga_result() {
+        // The tentpole invariant at GA level: any worker count produces a
+        // bit-identical GaResult (fronts, objectives, history, logs).
+        let toy = Toy { len: 30 };
+        let mut log1 = Vec::new();
+        let mut log8 = Vec::new();
+        let r1 = Nsga2::new(spec(), 30, &toy).with_jobs(1).run(|g, snap| {
+            log1.push((g, snap.history.clone()));
+        });
+        let r8 = Nsga2::new(spec(), 30, &toy).with_jobs(8).run(|g, snap| {
+            log8.push((g, snap.history.clone()));
+        });
+        assert_eq!(log1, log8);
+        assert_eq!(r1.history, r8.history);
+        let pair = |r: &GaResult| -> (Vec<[f64; 2]>, Vec<BitVec>) {
+            (
+                r.population.iter().map(|i| i.objs).collect(),
+                r.population.iter().map(|i| i.genome.clone()).collect(),
+            )
+        };
+        assert_eq!(pair(&r1), pair(&r8));
+        let fronts = |r: &GaResult| -> Vec<(Vec<bool>, [f64; 2])> {
+            r.front.iter().map(|i| (i.genome.iter().collect(), i.objs)).collect()
+        };
+        assert_eq!(fronts(&r1), fronts(&r8));
     }
 }

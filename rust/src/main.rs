@@ -17,6 +17,8 @@
 //! --synth incremental|full (circuit backend: template + cone-local
 //! incremental re-synthesis, the default, or from-scratch per
 //! chromosome — bit-identical outputs),
+//! --jobs N (GA evaluation worker threads; 0 = auto; any value yields
+//! bit-identical results),
 //! --out <file> (JSON for `run`, text otherwise), --pop/--gens overrides.
 
 use anyhow::{anyhow, bail, Result};
@@ -81,6 +83,10 @@ impl Args {
         SynthMode::parse(s).ok_or_else(|| anyhow!("bad --synth '{s}' (incremental|full)"))
     }
 
+    fn jobs(&self) -> Result<usize> {
+        Ok(self.get("jobs").map(|v| v.parse()).transpose()?.unwrap_or(0))
+    }
+
     fn cfg(&self) -> Result<RunConfig> {
         let name = self.get("dataset").unwrap_or("cardio");
         let mut cfg = if let Some(path) = self.get("config") {
@@ -141,6 +147,7 @@ fn run() -> Result<()> {
             let opts = PipelineOpts {
                 backend: args.backend()?,
                 synth: args.synth()?,
+                jobs: args.jobs()?,
                 max_hw_points: args
                     .get("hw-points")
                     .map(|v| v.parse())
@@ -267,12 +274,15 @@ fn run() -> Result<()> {
                  usage: pmlp <command> [--flags]\n\n\
                  commands:\n  \
                  list                      built-in dataset configs\n  \
-                 run --dataset <name>      full pipeline [--backend auto|pjrt|native|circuit] [--pop N] [--gens N] [--out r.json]\n                            \
+                 run --dataset <name>      full pipeline [--backend auto|pjrt|native|circuit] [--jobs N] [--pop N] [--gens N] [--out r.json]\n                            \
                  (backend 'circuit' = circuit-in-the-loop: GA fitness measured on the\n                            \
                  synthesized gate-level netlist via the 64-lane wave simulator;\n                            \
                  --synth incremental|full selects template cone-local re-synthesis\n                            \
                  [default, same bits, re-synth cost scales with mutation size]\n                            \
-                 or from-scratch synthesis per chromosome)\n  \
+                 or from-scratch synthesis per chromosome;\n                            \
+                 --jobs N = GA evaluation worker threads, 0/auto by default —\n                            \
+                 each worker owns its own synth arena + wave cache and any\n                            \
+                 width produces bit-identical results)\n  \
                  train --dataset <name>    training + QAT only\n  \
                  gen-data --dataset <name> dump synthetic dataset CSV [--out f.csv]\n  \
                  repro --exp <id>          regenerate table2|table3|table4|table5|fig4|fig5|all [--scale smoke|small|paper]\n  \

@@ -6,10 +6,12 @@
 //!   chromosomes are packed into mask tensors and dispatched to the
 //!   AOT-compiled `masked_acc_<ds>` program (Layer-2 JAX calling the
 //!   Layer-1 Pallas masked-MAC kernel) through PJRT. Python is not
-//!   involved at run time.
-//! * [`NativeEvaluator`] — the pure-Rust integer model, thread-parallel.
-//!   Used for cross-checking the PJRT path bit-exactly and as the
-//!   fallback when artifacts are absent.
+//!   involved at run time. Parallelism lives inside XLA, so this backend
+//!   takes the whole-batch fast path (`evaluate_batch`) instead of the
+//!   worker fan-out.
+//! * [`NativeEvaluator`] — the pure-Rust integer model. Used for
+//!   cross-checking the PJRT path bit-exactly and as the fallback when
+//!   artifacts are absent.
 //! * [`CircuitEvaluator`] — circuit-in-the-loop: every chromosome is
 //!   synthesized to its bespoke gate-level netlist and the whole
 //!   evaluation set is classified through the bit-parallel wave simulator
@@ -20,23 +22,36 @@
 //!   against a shared template: synthesis and simulation only revisit
 //!   the fanout cones of the flipped mask bits.
 //!
+//! ## Population-parallel execution model
+//!
+//! The evaluators split into shared read-only state (the struct itself —
+//! model, genome map, area surrogate, packed train batches, the shared
+//! fitness memo) and per-worker scratch ([`crate::ga::EvalWorker`]).
+//! `Nsga2` fans each generation across a worker pool; every worker of
+//! the circuit backend *owns* an [`IncrementalSynth`] arena and a
+//! [`WaveCache`] (leased from a parked pool so they persist across
+//! generations), so the hot path takes no locks except single memo
+//! probes. Objectives are a pure function of the genome, which keeps
+//! parallel runs bit-identical to serial ones (`--jobs 1` == `--jobs N`,
+//! pinned by `rust/tests/ga_determinism.rs`).
+//!
 //! All return the objective pair `[accuracy_loss, estimated_area]` the
 //! NSGA-II optimizer minimizes (paper §III-D1/D2/D3).
 
 use crate::accum::GenomeMap;
 use crate::area::AreaModel;
 use crate::datasets::QuantDataset;
-use crate::ga::Evaluator;
+use crate::ga::{EvalWorker, Evaluator};
 use crate::model::QuantMlp;
 use crate::netlist::mlp::{build_mlp_circuit, build_mlp_template, ArgmaxMode, MlpCircuitOpts};
+use crate::netlist::Template;
 use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
 use crate::sim::wave::{self, InputWave, WaveCache};
 use crate::synth::incremental::IncrementalSynth;
 use crate::synth::{optimize, SynthMode};
-use crate::util::{threads, BitVec};
+use crate::util::{BitVec, ShardedMap};
 use anyhow::Result;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Flattened i32 views of a quantized MLP (what the artifacts consume).
 #[derive(Clone, Debug)]
@@ -73,6 +88,14 @@ impl QuantInts {
 }
 
 /// The PJRT-backed evaluator.
+///
+/// Shared-state thread safety (`ga::Evaluator: Sync`): the struct holds
+/// only plain data plus the `Executable` handle (a unit stub in default
+/// builds; `Sync` by an explicit impl over the thread-safe PJRT C API
+/// under the `xla` feature). Argument literals are materialized per
+/// dispatch rather than cached, so no PJRT literal handles live in
+/// shared state. The batch fast path is dispatched from one thread at a
+/// time by the GA anyway.
 pub struct PjrtEvaluator {
     exe: Arc<Executable>,
     /// Population tile of the artifact.
@@ -82,8 +105,13 @@ pub struct PjrtEvaluator {
     map: GenomeMap,
     area: AreaModel,
     base_acc: f64,
-    // Pre-built literals reused across every dispatch.
-    fixed_args: Vec<Literal>,
+    /// Padded input matrix (B x N0, row-major), rebuilt into a literal
+    /// per dispatch.
+    x_flat: Vec<i32>,
+    /// Padded labels (-1 rows are never correct).
+    labels: Vec<i32>,
+    /// Integer views of the quantized model.
+    ints: QuantInts,
     dims: (usize, usize, usize, usize), // (B, N0, H, O)
 }
 
@@ -126,17 +154,6 @@ impl PjrtEvaluator {
         }
 
         let ints = QuantInts::from_mlp(mlp);
-        let fixed_args = vec![
-            lit_i32(&x_flat, &[b as i64, n0 as i64])?,
-            lit_i32(&labels, &[b as i64])?,
-            lit_i32(&ints.w1_sign, &[h as i64, n0 as i64])?,
-            lit_i32(&ints.w1_shift, &[h as i64, n0 as i64])?,
-            lit_i32(&ints.b1_val, &[h as i64])?,
-            // mb1 slot is per-batch (index 5) — placeholder replaced per call.
-            lit_i32(&ints.w2_sign, &[o as i64, h as i64])?,
-            lit_i32(&ints.w2_shift, &[o as i64, h as i64])?,
-            lit_i32(&ints.b2_val, &[o as i64])?,
-        ];
         let map = GenomeMap::new(mlp);
         let area = AreaModel::new(&map);
         Ok(PjrtEvaluator {
@@ -147,7 +164,9 @@ impl PjrtEvaluator {
             map,
             area,
             base_acc,
-            fixed_args,
+            x_flat,
+            labels,
+            ints,
             dims: (b, n0, h, o),
         })
     }
@@ -159,7 +178,7 @@ impl PjrtEvaluator {
 
     /// Evaluate one tile of up to `p` genomes; returns train accuracies.
     fn eval_tile(&self, genomes: &[&BitVec]) -> Result<Vec<f64>> {
-        let (_, n0, h, o) = self.dims;
+        let (b, n0, h, o) = self.dims;
         let p = self.p;
         assert!(genomes.len() <= p);
         let exact = self.map.exact_genome();
@@ -184,15 +203,24 @@ impl PjrtEvaluator {
             }
         }
         // Positional argument order fixed by aot.py::lower_masked_acc.
+        // All literals (fixed tensors included) are materialized per
+        // dispatch — see the struct docs on `Sync`.
+        let x_lit = lit_i32(&self.x_flat, &[b as i64, n0 as i64])?;
+        let y_lit = lit_i32(&self.labels, &[b as i64])?;
+        let w1s_lit = lit_i32(&self.ints.w1_sign, &[h as i64, n0 as i64])?;
+        let w1k_lit = lit_i32(&self.ints.w1_shift, &[h as i64, n0 as i64])?;
+        let b1_lit = lit_i32(&self.ints.b1_val, &[h as i64])?;
+        let w2s_lit = lit_i32(&self.ints.w2_sign, &[o as i64, h as i64])?;
+        let w2k_lit = lit_i32(&self.ints.w2_shift, &[o as i64, h as i64])?;
+        let b2_lit = lit_i32(&self.ints.b2_val, &[o as i64])?;
         let mb1_lit = lit_i32(&mb1, &[p as i64, h as i64])?;
         let mb2_lit = lit_i32(&mb2, &[p as i64, o as i64])?;
         let m1_lit = lit_i32(&m1, &[p as i64, h as i64, n0 as i64])?;
         let m2_lit = lit_i32(&m2, &[p as i64, o as i64, h as i64])?;
         let act_lit = lit_i32_scalar(self.act_shift());
-        let f = &self.fixed_args;
         let all: Vec<&Literal> = vec![
-            &f[0], &f[1], &f[2], &f[3], &f[4], &mb1_lit, &f[5], &f[6], &f[7], &mb2_lit,
-            &m1_lit, &m2_lit, &act_lit,
+            &x_lit, &y_lit, &w1s_lit, &w1k_lit, &b1_lit, &mb1_lit, &w2s_lit, &w2k_lit,
+            &b2_lit, &mb2_lit, &m1_lit, &m2_lit, &act_lit,
         ];
         let outs = self.exe.run(&all)?;
         let counts = outs[0].to_vec::<i32>()?;
@@ -206,10 +234,9 @@ impl PjrtEvaluator {
     fn act_shift(&self) -> i32 {
         self.mlp.act_shift as i32
     }
-}
 
-impl Evaluator for PjrtEvaluator {
-    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
+    /// Tile-batched evaluation of an arbitrary genome slice.
+    fn eval_all(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
         let mut objs = Vec::with_capacity(genomes.len());
         for chunk in genomes.chunks(self.p) {
             let refs: Vec<&BitVec> = chunk.iter().collect();
@@ -226,14 +253,37 @@ impl Evaluator for PjrtEvaluator {
     }
 }
 
-/// The pure-Rust evaluator (threaded).
+struct PjrtWorker<'a> {
+    ev: &'a PjrtEvaluator,
+}
+
+impl EvalWorker for PjrtWorker<'_> {
+    fn eval_one(&mut self, genome: &BitVec) -> [f64; 2] {
+        self.ev.eval_all(std::slice::from_ref(genome))[0]
+    }
+}
+
+impl Evaluator for PjrtEvaluator {
+    fn worker(&self) -> Box<dyn EvalWorker + '_> {
+        Box::new(PjrtWorker { ev: self })
+    }
+
+    /// Whole-population fast path: tiles go to XLA, which parallelizes
+    /// internally — fanning single genomes across threads would only
+    /// shrink the tiles.
+    fn evaluate_batch(&self, genomes: &[BitVec]) -> Option<Vec<[f64; 2]>> {
+        Some(self.eval_all(genomes))
+    }
+}
+
+/// The pure-Rust evaluator. Stateless per worker — all scratch it needs
+/// is the mask expansion, rebuilt per genome.
 pub struct NativeEvaluator {
     pub mlp: QuantMlp,
     pub train: QuantDataset,
     pub map: GenomeMap,
     pub area: AreaModel,
     pub base_acc: f64,
-    pub threads: usize,
 }
 
 impl NativeEvaluator {
@@ -246,20 +296,27 @@ impl NativeEvaluator {
             map,
             area,
             base_acc,
-            threads: threads::default_threads(),
         }
     }
 }
 
+struct NativeWorker<'a> {
+    ev: &'a NativeEvaluator,
+}
+
+impl EvalWorker for NativeWorker<'_> {
+    fn eval_one(&mut self, genome: &BitVec) -> [f64; 2] {
+        let ev = self.ev;
+        let masks = ev.map.to_masks(genome);
+        let acc = ev.mlp.accuracy(&ev.train, Some(&masks));
+        let loss = (ev.base_acc - acc).max(0.0);
+        [loss, ev.area.estimate(genome) as f64]
+    }
+}
+
 impl Evaluator for NativeEvaluator {
-    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
-        threads::par_map(genomes.len(), self.threads, |i| {
-            let masks = self.map.to_masks(&genomes[i]);
-            let acc = self.mlp.accuracy(&self.train, Some(&masks));
-            let loss = (self.base_acc - acc).max(0.0);
-            let area = self.area.estimate(&genomes[i]) as f64;
-            [loss, area]
-        })
+    fn worker(&self) -> Box<dyn EvalWorker + '_> {
+        Box::new(NativeWorker { ev: self })
     }
 }
 
@@ -275,39 +332,41 @@ impl Evaluator for NativeEvaluator {
 ///   the bespoke circuit ([`build_mlp_circuit`]), run
 ///   [`crate::synth::optimize`] (the constant sweep that realizes the
 ///   approximation) and wave-classify the train set, 64 samples per
-///   pass; thread-parallel across genomes.
+///   pass. Workers are stateless; parallelism is across genomes.
 /// * [`SynthMode::Incremental`] — the template path (the default): one
 ///   parameterized netlist ([`build_mlp_template`], `Param` site `p` =
-///   genome bit `p`) is built lazily on first use, then every chromosome
-///   is an [`IncrementalSynth::set_params`] delta that re-simplifies
-///   only the fanout cones of the flipped mask bits against the
-///   persistent structural-hash arena. Simulation rides the same arena
-///   through a [`WaveCache`]: a node's lane words are computed once,
-///   ever, per train batch, so per-chromosome cost scales with
-///   *mutation size* instead of netlist size.
+///   genome bit `p`) is built lazily on first use and shared read-only;
+///   **each worker owns** an [`IncrementalSynth`] arena plus an
+///   arena-aligned [`WaveCache`], so every chromosome is a
+///   [`IncrementalSynth::set_params`] delta that re-simplifies and
+///   re-simulates only the fanout cones of its flipped mask bits —
+///   lock-free after the state is leased. Worker states park in a pool
+///   between generations, so arenas and lane-word caches keep amortizing
+///   across the whole GA run.
 ///
 /// The area objective stays the FA surrogate of [`AreaModel`] so fronts
 /// from all three backends are directly comparable (and the coordinator's
 /// exact-genome fallback injects the same units).
 ///
-/// Results are memoized per genome: NSGA-II's crossover/mutation streams
-/// revisit identical chromosomes across generations, and each cache hit
-/// skips synthesis + simulation entirely.
+/// Results are memoized across generations in a [`ShardedMap`] keyed on
+/// the **full genome bit vector** — never a truncated hash, which could
+/// silently return another chromosome's fitness on collision. Each cache
+/// hit skips synthesis + simulation entirely.
 pub struct CircuitEvaluator {
     pub mlp: QuantMlp,
     pub map: GenomeMap,
     pub area: AreaModel,
     pub base_acc: f64,
-    pub threads: usize,
     mode: SynthMode,
     /// Train samples packed once into 64-lane input waves.
     batches: Vec<InputWave>,
     labels: Vec<usize>,
-    cache: Mutex<HashMap<BitVec, [f64; 2]>>,
-    /// Lazily-built incremental state (template + arena + wave cache);
-    /// the engine is a sequential state machine, so incremental batches
-    /// are processed under this lock in submission order.
-    incr: Mutex<Option<IncrState>>,
+    /// Cross-generation fitness memo (full-genome keys).
+    memo: ShardedMap<BitVec, [f64; 2]>,
+    /// The shared parameterized netlist, built on first incremental use.
+    template: OnceLock<Template>,
+    /// Parked per-worker incremental states, reused across generations.
+    incr_pool: Mutex<Vec<IncrState>>,
 }
 
 struct IncrState {
@@ -315,12 +374,12 @@ struct IncrState {
     wave: WaveCache,
 }
 
-/// Reset the incremental state when the append-only arena (and its
-/// per-batch lane-word caches) outgrows the template by this factor.
-/// Dedup makes growth decelerate sharply on GA streams, so the cap is a
-/// memory backstop for pathologically diverse genome sequences; a reset
-/// costs one from-scratch pass on the next batch, and the per-genome
-/// memo cache survives it.
+/// Reset a worker's incremental state when its append-only arena (and
+/// the per-batch lane-word caches riding on it) outgrows the template by
+/// this factor. Dedup makes growth decelerate sharply on GA streams, so
+/// the cap is a memory backstop for pathologically diverse genome
+/// sequences; a reset costs one from-scratch pass on that worker's next
+/// genome, and the shared memo survives it.
 const ARENA_GROWTH_LIMIT: usize = 8;
 
 impl CircuitEvaluator {
@@ -339,12 +398,12 @@ impl CircuitEvaluator {
             map,
             area,
             base_acc,
-            threads: threads::default_threads(),
             mode: SynthMode::Incremental,
             batches,
             labels: train.y.clone(),
-            cache: Mutex::new(HashMap::new()),
-            incr: Mutex::new(None),
+            memo: ShardedMap::new(),
+            template: OnceLock::new(),
+            incr_pool: Mutex::new(Vec::new()),
         }
     }
 
@@ -356,6 +415,24 @@ impl CircuitEvaluator {
 
     pub fn mode(&self) -> SynthMode {
         self.mode
+    }
+
+    /// Entries in the cross-generation fitness memo.
+    pub fn memo_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// The shared template (built once; read-only afterwards).
+    fn template(&self) -> &Template {
+        self.template.get_or_init(|| {
+            let tpl = build_mlp_template(&self.mlp, &ArgmaxMode::Exact);
+            assert_eq!(
+                tpl.n_params,
+                self.map.len(),
+                "template param sites drifted from the genome map"
+            );
+            tpl
+        })
     }
 
     fn objectives(&self, genome: &BitVec, acc: f64) -> [f64; 2] {
@@ -385,82 +462,80 @@ impl CircuitEvaluator {
         let preds = wave::classify(&opt, &self.batches, "class", 1);
         self.objectives(genome, self.accuracy_of(&preds))
     }
+}
 
-    /// Incremental scoring of a deduplicated genome batch, sequential
-    /// over the shared template/arena state. The first genome ever seen
-    /// pays one from-scratch pass; every later one costs its cone.
-    fn score_incremental(&self, uniq: &[&BitVec]) -> Vec<[f64; 2]> {
-        let mut guard = self.incr.lock().unwrap();
-        let st = guard.get_or_insert_with(|| {
-            let tpl = build_mlp_template(&self.mlp, &ArgmaxMode::Exact);
-            assert_eq!(
-                tpl.n_params,
-                self.map.len(),
-                "template param sites drifted from the genome map"
-            );
-            IncrState {
-                synth: IncrementalSynth::new(tpl),
-                wave: WaveCache::new(self.batches.clone()),
+/// One evaluation worker of the circuit backend. In incremental mode it
+/// leases an [`IncrState`] (arena + wave cache) from the evaluator's
+/// pool on first use and parks it back on drop, so states survive across
+/// generations without being shared between concurrent workers.
+struct CircuitWorker<'a> {
+    ev: &'a CircuitEvaluator,
+    st: Option<IncrState>,
+}
+
+impl CircuitWorker<'_> {
+    fn state(&mut self) -> &mut IncrState {
+        if self.st.is_none() {
+            // Lease a parked state; the lock guard drops before the
+            // (expensive) fresh construction below.
+            let parked = self.ev.incr_pool.lock().unwrap().pop();
+            let st = parked.unwrap_or_else(|| IncrState {
+                synth: IncrementalSynth::new(self.ev.template().clone()),
+                wave: WaveCache::new(self.ev.batches.clone()),
+            });
+            self.st = Some(st);
+        }
+        self.st.as_mut().unwrap()
+    }
+}
+
+impl EvalWorker for CircuitWorker<'_> {
+    fn eval_one(&mut self, genome: &BitVec) -> [f64; 2] {
+        let ev = self.ev;
+        if let Some(hit) = ev.memo.get(genome) {
+            return hit;
+        }
+        let objs = match ev.mode {
+            SynthMode::Full => ev.score_full(genome),
+            SynthMode::Incremental => {
+                let IncrState { synth, wave } = self.state();
+                synth.set_params(genome);
+                let arena = synth.arena();
+                let bus = &arena
+                    .outputs
+                    .iter()
+                    .find(|(name, _)| name == "class")
+                    .expect("template has a class output")
+                    .1;
+                let preds = wave.classify_bus(arena, bus);
+                ev.objectives(genome, ev.accuracy_of(&preds))
             }
+        };
+        ev.memo.insert(genome.clone(), objs);
+        // Memory backstop: drop (and later re-lease) this worker's state
+        // if the arena grew far beyond the template.
+        let oversized = self.st.as_ref().is_some_and(|st| {
+            st.synth.arena().len()
+                > ARENA_GROWTH_LIMIT * st.synth.template().nl.len().max(1)
         });
-        let IncrState { synth, wave } = st;
-        let mut out = Vec::with_capacity(uniq.len());
-        for &genome in uniq {
-            if let Some(hit) = self.cache.lock().unwrap().get(genome) {
-                out.push(*hit);
-                continue;
-            }
-            synth.set_params(genome);
-            let arena = synth.arena();
-            let bus = &arena
-                .outputs
-                .iter()
-                .find(|(name, _)| name == "class")
-                .expect("template has a class output")
-                .1;
-            let preds = wave.classify_bus(arena, bus);
-            let objs = self.objectives(genome, self.accuracy_of(&preds));
-            self.cache.lock().unwrap().insert(genome.clone(), objs);
-            out.push(objs);
-        }
-        // Memory backstop: drop (and later rebuild) the state if the
-        // arena grew far beyond the template.
-        let oversized =
-            synth.arena().len() > ARENA_GROWTH_LIMIT * synth.template().nl.len().max(1);
         if oversized {
-            *guard = None;
+            self.st = None;
         }
-        out
+        objs
+    }
+}
+
+impl Drop for CircuitWorker<'_> {
+    fn drop(&mut self) {
+        if let Some(st) = self.st.take() {
+            self.ev.incr_pool.lock().unwrap().push(st);
+        }
     }
 }
 
 impl Evaluator for CircuitEvaluator {
-    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
-        // Dedup within the batch first: NSGA-II offspring routinely
-        // repeat chromosomes, and concurrent workers would otherwise all
-        // miss the cache together and each pay a full synthesis.
-        let mut uniq: Vec<&BitVec> = Vec::new();
-        let mut slot: HashMap<&BitVec, usize> = HashMap::new();
-        let mut which = Vec::with_capacity(genomes.len());
-        for g in genomes {
-            let k = *slot.entry(g).or_insert_with(|| {
-                uniq.push(g);
-                uniq.len() - 1
-            });
-            which.push(k);
-        }
-        let uniq_objs = match self.mode {
-            SynthMode::Incremental => self.score_incremental(&uniq),
-            SynthMode::Full => threads::par_map(uniq.len(), self.threads, |i| {
-                if let Some(hit) = self.cache.lock().unwrap().get(uniq[i]) {
-                    return *hit;
-                }
-                let objs = self.score_full(uniq[i]);
-                self.cache.lock().unwrap().insert(uniq[i].clone(), objs);
-                objs
-            }),
-        };
-        which.into_iter().map(|k| uniq_objs[k]).collect()
+    fn worker(&self) -> Box<dyn EvalWorker + '_> {
+        Box::new(CircuitWorker { ev: self, st: None })
     }
 }
 
@@ -469,6 +544,7 @@ mod tests {
     use super::*;
     use crate::config::builtin;
     use crate::datasets;
+    use crate::ga::evaluate_parallel;
     use crate::model::float_mlp::TrainOpts;
     use crate::model::FloatMlp;
     use crate::util::Rng;
@@ -540,8 +616,10 @@ mod tests {
         let mut rng = Rng::new(3);
         let g = circuit.map.random_genome(&mut rng, 0.6);
         let first = circuit.evaluate(std::slice::from_ref(&g));
+        assert_eq!(circuit.memo_len(), 1, "memo must persist across calls");
         let second = circuit.evaluate(std::slice::from_ref(&g));
         assert_eq!(first, second);
+        assert_eq!(circuit.memo_len(), 1);
     }
 
     #[test]
@@ -567,5 +645,52 @@ mod tests {
         let a = full.evaluate(&genomes);
         let b = incr.evaluate(&genomes);
         assert_eq!(a, b, "full and incremental objectives must be identical");
+    }
+
+    #[test]
+    fn circuit_parallel_matches_serial_both_modes() {
+        // Per-worker arenas must not change objectives: 8-way fan-out ==
+        // one serial worker, bit for bit, in both synthesis modes. Fresh
+        // evaluators per jobs width so the memo cannot mask divergence.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(29);
+        let map = GenomeMap::new(&qmlp);
+        let mut genomes = vec![map.exact_genome()];
+        let mut g = map.random_genome(&mut rng, 0.75);
+        genomes.push(g.clone());
+        for _ in 0..10 {
+            for _ in 0..2 {
+                g.flip(rng.below(map.len()));
+            }
+            genomes.push(g.clone());
+        }
+        for mode in [SynthMode::Incremental, SynthMode::Full] {
+            let serial_ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(mode);
+            let par_ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(mode);
+            let serial = evaluate_parallel(&serial_ev, &genomes, 1);
+            let parallel = evaluate_parallel(&par_ev, &genomes, 8);
+            assert_eq!(serial, parallel, "mode {mode:?}: jobs must not change results");
+        }
+    }
+
+    #[test]
+    fn incremental_worker_states_park_and_reuse() {
+        // After a parallel evaluation the leased arenas return to the
+        // pool; a later evaluation leases them again instead of paying
+        // fresh from-scratch passes.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        let mut rng = Rng::new(41);
+        let genomes: Vec<_> = (0..6).map(|_| ev.map.random_genome(&mut rng, 0.8)).collect();
+        evaluate_parallel(&ev, &genomes, 3);
+        let parked = ev.incr_pool.lock().unwrap().len();
+        assert!(
+            (1..=3).contains(&parked),
+            "expected 1..=3 parked states, got {parked}"
+        );
+        let more: Vec<_> = (0..4).map(|_| ev.map.random_genome(&mut rng, 0.8)).collect();
+        evaluate_parallel(&ev, &more, 3);
+        let parked_after = ev.incr_pool.lock().unwrap().len();
+        assert!(parked_after <= 3, "pool bounded by max concurrent workers");
     }
 }

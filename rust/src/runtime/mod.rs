@@ -96,6 +96,14 @@ mod pjrt {
         exe: xla::PjRtLoadedExecutable,
     }
 
+    // SAFETY: a loaded PJRT executable is immutable once compiled, and the
+    // PJRT C API specifies execution as thread-safe (the CPU client
+    // serializes internally where required); this wrapper adds no interior
+    // mutability. Needed so the GA evaluators can be shared across
+    // evaluation workers (`ga::Evaluator: Sync`).
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
     impl Executable {
         /// Execute with positional literal arguments; returns the flattened
         /// tuple elements of the (single, tupled) result.

@@ -11,8 +11,10 @@ pub mod bitvec;
 pub mod fxhash;
 pub mod stats;
 pub mod threads;
+pub mod sharded;
 pub mod prop;
 
 pub use bitvec::BitVec;
 pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;
+pub use sharded::ShardedMap;

@@ -1,0 +1,139 @@
+//! Sharded concurrent hash map — the cross-generation fitness memo of
+//! the GA evaluation fan-out.
+//!
+//! NSGA-II's crossover/mutation streams revisit identical chromosomes
+//! across generations, so every evaluator memoizes genome → objectives.
+//! With population-parallel evaluation the memo is shared by all worker
+//! threads; a single `Mutex<HashMap>` would serialize them on every
+//! lookup. This map splits the key space over many independently locked
+//! shards (the Fx hash of the key picks the shard), so concurrent
+//! workers contend only when they hash to the same shard — "lock-free
+//! enough" for a memo whose critical sections are single probes.
+//!
+//! The key is stored **in full** (e.g. the entire genome `BitVec`) and
+//! compared by `Eq` on lookup, exactly like any `HashMap`. Hashing is
+//! only ever used to route to a shard/bucket — never as a substitute for
+//! the key itself, so two distinct genomes can never alias each other's
+//! fitness, no matter how they hash.
+
+use crate::util::fxhash::{FxHashMap, FxHasher};
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+/// Number of shards (power of two; modest — the map serves tens of
+/// worker threads, not thousands).
+const DEFAULT_SHARDS: usize = 64;
+
+/// A concurrent map sharded over independently locked Fx hash tables.
+pub struct ShardedMap<K, V> {
+    shards: Vec<Mutex<FxHashMap<K, V>>>,
+    mask: u64,
+}
+
+impl<K: Eq + Hash, V: Clone> ShardedMap<K, V> {
+    pub fn new() -> ShardedMap<K, V> {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
+
+    /// Build with an explicit shard count (rounded up to a power of two).
+    pub fn with_shards(n: usize) -> ShardedMap<K, V> {
+        let n = n.max(1).next_power_of_two();
+        ShardedMap {
+            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            mask: (n - 1) as u64,
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<FxHashMap<K, V>> {
+        let mut h = FxHasher::default();
+        key.hash(&mut h);
+        // Route on the hash's *upper* word: the inner FxHashMap buckets on
+        // the low bits of the same hash, so using those here would make
+        // every key within a shard collide into the same bucket group.
+        &self.shards[((h.finish() >> 32) & self.mask) as usize]
+    }
+
+    /// Clone out the value for `key`, if present.
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert (or overwrite) `key`.
+    pub fn insert(&self, key: K, value: V) {
+        self.shard(&key).lock().unwrap().insert(key, value);
+    }
+
+    /// Total entries across all shards (locks each shard once).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<K: Eq + Hash, V: Clone> Default for ShardedMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{threads, BitVec, Rng};
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let m: ShardedMap<u64, u64> = ShardedMap::with_shards(4);
+        assert!(m.is_empty());
+        for i in 0..1000u64 {
+            m.insert(i, i * 7);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&i), Some(i * 7));
+        }
+        assert_eq!(m.get(&1000), None);
+    }
+
+    #[test]
+    fn full_key_semantics_no_aliasing() {
+        // The memo must key on the *entire* genome: near-identical bit
+        // vectors (Hamming distance 1) get independent entries, and every
+        // lookup returns exactly the value stored under that exact key.
+        let mut rng = Rng::new(21);
+        let m: ShardedMap<BitVec, usize> = ShardedMap::new();
+        let mut genomes = Vec::new();
+        let base: Vec<bool> = (0..300).map(|_| rng.chance(0.5)).collect();
+        for i in 0..300 {
+            let mut g = BitVec::from_bools(&base);
+            g.flip(i);
+            m.insert(g.clone(), i);
+            genomes.push(g);
+        }
+        assert_eq!(m.len(), 300);
+        for (i, g) in genomes.iter().enumerate() {
+            assert_eq!(m.get(g), Some(i), "genome {i} aliased another entry");
+        }
+    }
+
+    #[test]
+    fn concurrent_inserts_all_land() {
+        let m: ShardedMap<usize, usize> = ShardedMap::new();
+        threads::par_map(512, 8, |i| m.insert(i, i + 1));
+        assert_eq!(m.len(), 512);
+        for i in 0..512 {
+            assert_eq!(m.get(&i), Some(i + 1));
+        }
+    }
+
+    #[test]
+    fn shard_count_rounds_up() {
+        let m: ShardedMap<u32, u32> = ShardedMap::with_shards(3);
+        m.insert(1, 2);
+        assert_eq!(m.get(&1), Some(2));
+        assert_eq!(m.len(), 1);
+    }
+}

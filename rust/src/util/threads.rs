@@ -2,7 +2,18 @@
 //!
 //! This is the parallel substrate of the GA evaluation loop and of the
 //! Table II synthesis sweep (no rayon in the vendored crate set). Work is
-//! distributed by chunking the index space; results come back in order.
+//! distributed through a shared atomic cursor (dynamic scheduling);
+//! results come back in index order, so any reduction over them is
+//! deterministic regardless of how items were interleaved across workers.
+//!
+//! Two entry points:
+//!
+//! * [`par_map`] — stateless `f(i)` per item;
+//! * [`par_map_with`] — each worker thread first builds its own scratch
+//!   state via `init()` and threads it through every item it claims.
+//!   This is what lets each GA evaluation worker own a private
+//!   incremental-synthesis arena + wave cache (`runtime::evaluator`)
+//!   without any locking on the hot path.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -16,39 +27,72 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Worker count of the GA evaluation fan-out when the caller asked for
+/// "auto" (`--jobs 0`): env `PMLP_JOBS` overrides (CI uses this to run
+/// the whole test suite at fixed serial/concurrent widths), otherwise
+/// [`default_threads`].
+pub fn default_jobs() -> usize {
+    if let Ok(v) = std::env::var("PMLP_JOBS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    default_threads()
+}
+
 /// Parallel map `f(i)` for `i in 0..n`, preserving order of results.
-///
-/// Uses dynamic (work-stealing-ish) scheduling through a shared atomic
-/// cursor so unevenly sized items (e.g. netlist synthesis of different
-/// chromosomes) balance well.
 pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    par_map_with(n, threads, || (), move |_, i| f(i))
+}
+
+/// Parallel map with per-worker scratch state: every worker thread calls
+/// `init()` once, then evaluates `f(&mut state, i)` for each index it
+/// claims off the shared cursor. Results preserve index order.
+///
+/// `S` needs no `Send`/`Sync` bound — each state is created, used and
+/// dropped entirely on its worker thread. With `threads <= 1` (or a
+/// single item) everything runs on the caller's thread through one
+/// state, so serial and parallel execution traverse identical per-item
+/// code paths.
+pub fn par_map_with<S, T, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     let threads = threads.max(1).min(n.max(1));
-    if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+    if threads <= 1 {
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let cursor = AtomicUsize::new(0);
     let out_ptr = SendPtr(out.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..threads {
+            let iref = &init;
             let fref = &f;
             let cref = &cursor;
             let optr = &out_ptr;
-            scope.spawn(move || loop {
-                let i = cref.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = fref(i);
-                // SAFETY: each index i is claimed exactly once by the
-                // atomic fetch_add, so no two threads write the same slot,
-                // and the scope guarantees the vec outlives the workers.
-                unsafe {
-                    *optr.0.add(i) = Some(v);
+            scope.spawn(move || {
+                let mut state = iref();
+                loop {
+                    let i = cref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = fref(&mut state, i);
+                    // SAFETY: each index i is claimed exactly once by the
+                    // atomic fetch_add, so no two threads write the same
+                    // slot, and the scope guarantees the vec outlives the
+                    // workers.
+                    unsafe {
+                        *optr.0.add(i) = Some(v);
+                    }
                 }
             });
         }
@@ -99,7 +143,46 @@ mod tests {
     }
 
     #[test]
+    fn par_map_with_threads_state() {
+        // Per-worker accumulators: every item is tagged with a state that
+        // only its own worker mutated, and results stay index-ordered.
+        let v = par_map_with(
+            200,
+            4,
+            || 0usize,
+            |seen, i| {
+                *seen += 1;
+                (i, *seen)
+            },
+        );
+        let mut per_worker_total = 0;
+        for (i, item) in v.iter().enumerate() {
+            assert_eq!(item.0, i);
+            per_worker_total = per_worker_total.max(item.1);
+        }
+        // Some worker processed at least ceil(200/4) items.
+        assert!(per_worker_total >= 200 / 4);
+    }
+
+    #[test]
+    fn par_map_with_serial_uses_one_state() {
+        let v = par_map_with(5, 1, || 0usize, |s, i| {
+            *s += 1;
+            (*s, i)
+        });
+        assert_eq!(v.iter().map(|p| p.0).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn par_map_with_matches_serial_results() {
+        let serial = par_map_with(300, 1, || (), |_, i| i * 3);
+        let parallel = par_map_with(300, 8, || (), |_, i| i * 3);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+        assert!(default_jobs() >= 1);
     }
 }
