@@ -1,13 +1,46 @@
 //! Shared bench scaffolding: scale selection via `PMLP_BENCH_SCALE`
-//! (smoke|small|paper; default small) and a wall-clock banner.
+//! (smoke|small|paper; default small), backend/objective selection via
+//! `PMLP_BACKEND` (auto|pjrt|native|circuit) and `PMLP_OBJECTIVE`
+//! (fa|area|power; measured objectives need `PMLP_BACKEND=circuit`),
+//! and a wall-clock banner.
 
 use printed_mlp::bench::Scale;
+#[allow(unused_imports)]
+use printed_mlp::coordinator::EvalBackend;
+#[allow(unused_imports)]
+use printed_mlp::egfet::CostObjective;
 
 pub fn scale() -> Scale {
     std::env::var("PMLP_BENCH_SCALE")
         .ok()
         .and_then(|s| Scale::parse(&s))
         .unwrap_or(Scale::Small)
+}
+
+/// GA evaluation backend of the pipeline-driving harnesses
+/// (`PMLP_BACKEND`, default auto). A set-but-unrecognized value is a
+/// loud error, not a silent fallback — a typo must not regenerate
+/// figures with the wrong backend.
+#[allow(dead_code)]
+pub fn backend() -> EvalBackend {
+    match std::env::var("PMLP_BACKEND") {
+        Err(_) => EvalBackend::Auto,
+        Ok(s) => EvalBackend::parse(&s)
+            .unwrap_or_else(|| panic!("bad PMLP_BACKEND '{s}' (auto|pjrt|native|circuit)")),
+    }
+}
+
+/// GA cost objective of the pipeline-driving harnesses
+/// (`PMLP_OBJECTIVE`, default fa). Same loud-error policy as
+/// [`backend`]: `PMLP_OBJECTIVE=pwr` must not silently run the FA
+/// surrogate.
+#[allow(dead_code)]
+pub fn objective() -> CostObjective {
+    match std::env::var("PMLP_OBJECTIVE") {
+        Err(_) => CostObjective::Fa,
+        Ok(s) => CostObjective::parse(&s)
+            .unwrap_or_else(|| panic!("bad PMLP_OBJECTIVE '{s}' (fa|area|power)")),
+    }
 }
 
 pub fn timed(name: &str, f: impl FnOnce() -> String) {

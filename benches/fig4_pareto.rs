@@ -1,10 +1,14 @@
 //! Regenerates paper Fig. 4: accuracy-vs-area Pareto fronts of the
 //! genetic accumulation approximation, normalized to the QAT-only design.
+//!
+//! Backend and GA cost objective come from `PMLP_BACKEND` /
+//! `PMLP_OBJECTIVE` (e.g. `PMLP_BACKEND=circuit PMLP_OBJECTIVE=power`
+//! reruns the fronts with the measured-hardware objective in the loop).
 mod common;
 use printed_mlp::bench::Study;
-use printed_mlp::coordinator::EvalBackend;
 
 fn main() {
-    let mut study = Study::new(common::scale(), EvalBackend::Auto);
+    let mut study =
+        Study::new(common::scale(), common::backend()).with_objective(common::objective());
     common::timed("fig4", || printed_mlp::bench::fig4(&mut study));
 }

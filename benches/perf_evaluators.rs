@@ -3,17 +3,25 @@
 //! chromosome vs template + incremental cone-local re-synthesis, on a
 //! GA-like mutation chain) vs PJRT when artifacts exist — per dataset;
 //! the framework's hot path (EXPERIMENTS.md §Perf). The incremental row
-//! reports its speedup over the from-scratch circuit path.
+//! reports its speedup over the from-scratch circuit path, and the
+//! measured-power objective rows (`--objective power`) track the census
+//! + toggle roll-up against from-scratch survivor analysis (target:
+//! incremental ≥ 2× full on the mutation chain).
 //!
 //! The jobs-scaling section measures the population-parallel fan-out of
 //! the circuit backend (per-worker synthesis arenas + wave caches) at
 //! `--jobs` 1/2/4/8: genomes/sec per width, speedup vs serial, and a
 //! bit-identical check across widths. The tentpole target is ≥3× at 8
 //! workers over `--jobs 1`.
+//!
+//! Every measured rate is also written as a structured record to
+//! `BENCH_evaluators.json` (path override: `PMLP_BENCH_JSON`), which CI
+//! uploads as an artifact — the perf trajectory's data points.
 mod common;
-use printed_mlp::bench::Scale;
+use printed_mlp::bench::{BenchRecord, Scale};
 
 fn main() {
+    let mut records: Vec<BenchRecord> = Vec::new();
     common::timed("perf_evaluators", || {
         let (names, n): (Vec<&str>, usize) = match common::scale() {
             Scale::Smoke => (vec!["tiny"], 24),
@@ -25,11 +33,27 @@ fn main() {
         };
         let mut out = String::new();
         for name in &names {
-            out.push_str(&printed_mlp::bench::ablation_evaluators(name, n));
+            out.push_str(&printed_mlp::bench::ablation_evaluators_recorded(
+                name,
+                n,
+                &mut records,
+            ));
         }
         for name in &names {
-            out.push_str(&printed_mlp::bench::jobs_scaling(name, n_scaling, &[1, 2, 4, 8]));
+            out.push_str(&printed_mlp::bench::jobs_scaling_recorded(
+                name,
+                n_scaling,
+                &[1, 2, 4, 8],
+                &mut records,
+            ));
         }
         out
     });
+    let path = std::env::var("PMLP_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_evaluators.json".to_string());
+    let json = printed_mlp::bench::records_to_json(common::scale(), &records);
+    match std::fs::write(&path, json.to_string_pretty()) {
+        Ok(()) => println!("[bench perf_evaluators] wrote {} records to {path}", records.len()),
+        Err(e) => eprintln!("[bench perf_evaluators] could not write {path}: {e}"),
+    }
 }

@@ -1,10 +1,14 @@
 //! Regenerates paper Table V: battery operation of the approximate MLPs
 //! at the 0.6 V corner (Molex 30mW / Blue Spark 3mW / energy harvester).
+//!
+//! Backend and GA cost objective come from `PMLP_BACKEND` /
+//! `PMLP_OBJECTIVE` (e.g. `PMLP_BACKEND=circuit PMLP_OBJECTIVE=power`
+//! selects designs whose GA already minimized measured power).
 mod common;
 use printed_mlp::bench::Study;
-use printed_mlp::coordinator::EvalBackend;
 
 fn main() {
-    let mut study = Study::new(common::scale(), EvalBackend::Auto);
+    let mut study =
+        Study::new(common::scale(), common::backend()).with_objective(common::objective());
     common::timed("table5", || printed_mlp::bench::table5(&mut study));
 }

@@ -15,13 +15,14 @@ use crate::baselines::truncation::TruncMlp;
 use crate::config::{builtin, RunConfig};
 use crate::coordinator::{EvalBackend, Pipeline, PipelineOpts, PipelineResult};
 use crate::datasets;
-use crate::egfet::{analyze, Library};
+use crate::egfet::{analyze, CostObjective, Library};
 use crate::model::QuantMlp;
 use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
 use crate::report::render_table;
 use crate::sc::ScMlp;
 use crate::synth::optimize;
 use crate::train;
+use crate::util::json::Json;
 use crate::util::stats::{mean, spearman};
 use crate::util::{threads, Rng};
 use std::collections::HashMap;
@@ -97,12 +98,34 @@ fn paper_table3(name: &str) -> Option<(f64, f64, f64, f64, f64, f64)> {
 pub struct Study {
     pub scale: Scale,
     pub backend: EvalBackend,
+    pub objective: CostObjective,
     results: HashMap<String, PipelineResult>,
 }
 
 impl Study {
     pub fn new(scale: Scale, backend: EvalBackend) -> Study {
-        Study { scale, backend, results: HashMap::new() }
+        Study {
+            scale,
+            backend,
+            objective: CostObjective::Fa,
+            results: HashMap::new(),
+        }
+    }
+
+    /// Select the GA cost objective the study's pipelines optimize
+    /// (`pmlp repro --objective …`, env `PMLP_OBJECTIVE` for the bench
+    /// binaries). Measured objectives require the circuit backend —
+    /// checked here so harnesses fail at construction with a clear
+    /// message instead of deep inside the first pipeline run.
+    pub fn with_objective(mut self, objective: CostObjective) -> Study {
+        assert!(
+            !objective.is_measured() || self.backend == EvalBackend::Circuit,
+            "objective '{}' requires the circuit backend (got {:?})",
+            objective.label(),
+            self.backend
+        );
+        self.objective = objective;
+        self
     }
 
     /// Scaled run config for a dataset.
@@ -119,6 +142,7 @@ impl Study {
             let cfg = self.cfg(name);
             let opts = PipelineOpts {
                 backend: self.backend,
+                objective: self.objective,
                 max_hw_points: 4,
                 verbose: std::env::var("PMLP_VERBOSE").is_ok(),
                 ..Default::default()
@@ -128,6 +152,45 @@ impl Study {
         }
         &self.results[name]
     }
+}
+
+/// One throughput sample of an evaluator bench case — the structured
+/// side of `benches/perf_evaluators.rs`, serialized to
+/// `BENCH_evaluators.json` so CI can track the perf trajectory.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Which harness produced the sample (`ablation` / `jobs_scaling`).
+    pub bench: &'static str,
+    pub dataset: String,
+    /// Case label, e.g. `circuit/incr/power` or `jobs=8`.
+    pub case: String,
+    /// Genomes (chromosomes) evaluated per second.
+    pub genomes_per_sec: f64,
+}
+
+/// Serialize bench records (plus the scale they ran at) for the CI
+/// artifact.
+pub fn records_to_json(scale: Scale, records: &[BenchRecord]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("perf_evaluators")),
+        ("scale", Json::str(&format!("{scale:?}").to_lowercase())),
+        (
+            "records",
+            Json::arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("bench", Json::str(r.bench)),
+                            ("dataset", Json::str(&r.dataset)),
+                            ("case", Json::str(&r.case)),
+                            ("genomes_per_sec", Json::num(r.genomes_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 // ---------------------------------------------------------------------------
@@ -507,8 +570,26 @@ pub fn table5(study: &mut Study) -> String {
 /// engine targets and the population structure NSGA-II actually
 /// produces; the native row keeps the independent random stream.
 pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
+    ablation_evaluators_recorded(name, n_genomes, &mut Vec::new())
+}
+
+/// [`ablation_evaluators`] that also appends one [`BenchRecord`] per
+/// measured rate (the JSON side of `benches/perf_evaluators.rs`).
+pub fn ablation_evaluators_recorded(
+    name: &str,
+    n_genomes: usize,
+    records: &mut Vec<BenchRecord>,
+) -> String {
     use crate::ga::{evaluate_parallel, Evaluator};
     use crate::synth::SynthMode;
+    let mut record = |case: String, rate: f64| {
+        records.push(BenchRecord {
+            bench: "ablation",
+            dataset: name.to_string(),
+            case,
+            genomes_per_sec: rate,
+        });
+    };
     let cfg = builtin::by_name(name).expect("dataset");
     let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
     let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
@@ -522,6 +603,7 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
     let t0 = std::time::Instant::now();
     let objs_native = native.evaluate(&genomes);
     let native_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+    record("native".to_string(), native_rate);
 
     let mut rows = vec![vec![
         "native".to_string(),
@@ -559,6 +641,7 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
         .iter()
         .zip(&objs_full)
         .all(|(a, b)| (a[0] - b[0]).abs() < 1e-9 && a[1] == b[1]);
+    record("circuit/full/fa".to_string(), full_rate);
     rows.push(vec![
         "circuit/full".to_string(),
         format!("{full_rate:.1}"),
@@ -572,12 +655,47 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
     let objs_incr = evaluate_parallel(&incr_ev, &chain, 1);
     let incr_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
     let agree_full = objs_incr[..n_full] == objs_full[..];
+    record("circuit/incr/fa".to_string(), incr_rate);
     rows.push(vec![
         "circuit/incr".to_string(),
         format!("{incr_rate:.1}"),
         format!(
             "== full over {n_full}: {agree_full}; speedup {:.1}x",
             incr_rate / full_rate
+        ),
+    ]);
+
+    // Measured-hardware objective (`--objective power`) on the same
+    // mutation chain: full mode pays a from-scratch template synthesis
+    // plus a dedicated toggle-activity simulation per genome, while the
+    // incremental census + WaveCache toggle totals ride the passes the
+    // evaluator runs anyway — the acceptance target is incremental ≥ 2×
+    // full on this chain.
+    let fullp_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
+        .with_mode(SynthMode::Full)
+        .with_objective(CostObjective::Power);
+    let t0 = std::time::Instant::now();
+    let objs_fullp = evaluate_parallel(&fullp_ev, &chain[..n_full], 1);
+    let fullp_rate = n_full as f64 / t0.elapsed().as_secs_f64();
+    record("circuit/full/power".to_string(), fullp_rate);
+    rows.push(vec![
+        "circuit/full/power".to_string(),
+        format!("{fullp_rate:.1}"),
+        format!("measured-power objective over {n_full}"),
+    ]);
+    let incrp_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
+        .with_objective(CostObjective::Power);
+    let t0 = std::time::Instant::now();
+    let objs_incrp = evaluate_parallel(&incrp_ev, &chain, 1);
+    let incrp_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+    let agree_power = objs_incrp[..n_full] == objs_fullp[..];
+    record("circuit/incr/power".to_string(), incrp_rate);
+    rows.push(vec![
+        "circuit/incr/power".to_string(),
+        format!("{incrp_rate:.1}"),
+        format!(
+            "== full over {n_full}: {agree_power}; speedup {:.1}x (target >=2x)",
+            incrp_rate / fullp_rate
         ),
     ]);
 
@@ -593,6 +711,7 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
                     .iter()
                     .zip(&objs_pjrt)
                     .all(|(a, b)| (a[0] - b[0]).abs() < 1e-9 && a[1] == b[1]);
+                record("pjrt".to_string(), rate);
                 rows.push(vec![
                     "pjrt".to_string(),
                     format!("{rate:.0}"),
@@ -619,6 +738,16 @@ pub fn ablation_evaluators(name: &str, n_genomes: usize) -> String {
 /// substantial and the fan-out has something to win on). Objectives are
 /// asserted bit-identical across widths.
 pub fn jobs_scaling(name: &str, n_genomes: usize, jobs_list: &[usize]) -> String {
+    jobs_scaling_recorded(name, n_genomes, jobs_list, &mut Vec::new())
+}
+
+/// [`jobs_scaling`] that also appends one [`BenchRecord`] per width.
+pub fn jobs_scaling_recorded(
+    name: &str,
+    n_genomes: usize,
+    jobs_list: &[usize],
+    records: &mut Vec<BenchRecord>,
+) -> String {
     use crate::ga::evaluate_parallel;
     let cfg = builtin::by_name(name).expect("dataset");
     let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
@@ -652,6 +781,12 @@ pub fn jobs_scaling(name: &str, n_genomes: usize, jobs_list: &[usize]) -> String
         if base_rate.is_none() {
             base_rate = Some(rate);
         }
+        records.push(BenchRecord {
+            bench: "jobs_scaling",
+            dataset: name.to_string(),
+            case: format!("jobs={jobs}"),
+            genomes_per_sec: rate,
+        });
         rows.push(vec![
             format!("{jobs}"),
             format!("{rate:.1}"),
@@ -666,4 +801,33 @@ pub fn jobs_scaling(name: &str, n_genomes: usize, jobs_list: &[usize]) -> String
         &["jobs", "genomes/s", "vs jobs=1", "notes"],
         &rows,
     )
+}
+
+/// Spearman rank correlation of the FA surrogate against the *measured*
+/// EGFET area objective (`--objective area`) on sampled genomes — the
+/// Table II harness re-targeted at the circuit-in-the-loop cost axis
+/// (same keep-probability sampling). A high rank correlation is what
+/// keeps `fa` an acceptable default objective: the surrogate walks the
+/// same Pareto-ordering the measured objective would, at none of the
+/// synthesis cost on the native/PJRT backends.
+pub fn spearman_fa_vs_measured(name: &str, n: usize) -> f64 {
+    let cfg = builtin::by_name(name).expect("dataset");
+    let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+    let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
+    let qmlp: &QuantMlp = &tm.qmlp;
+    let map = GenomeMap::new(qmlp);
+    let area_model = AreaModel::new(&map);
+    let ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, tm.acc_q_train)
+        .with_objective(CostObjective::Area);
+    let mut rng = Rng::new(0xA0EA ^ cfg.dataset.seed);
+    let genomes: Vec<_> = (0..n)
+        .map(|_| {
+            let keep = 0.35 + 0.6 * rng.f64();
+            map.random_genome(&mut rng, keep)
+        })
+        .collect();
+    let fa: Vec<f64> = genomes.iter().map(|g| area_model.estimate(g) as f64).collect();
+    use crate::ga::Evaluator;
+    let measured: Vec<f64> = ev.evaluate(&genomes).iter().map(|o| o[1]).collect();
+    spearman(&fa, &measured)
 }

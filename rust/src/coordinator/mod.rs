@@ -22,8 +22,8 @@ use crate::baselines::Int8Mlp;
 use crate::config::RunConfig;
 use crate::datasets;
 use crate::egfet::{
-    analyze_0p6v_measured, analyze_measured, classify_power_source, HwReport, Library,
-    PowerSource,
+    analyze_0p6v_measured, analyze_measured, classify_power_source, CostObjective, HwReport,
+    Library, PowerSource,
 };
 use crate::ga::{self, Nsga2};
 use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
@@ -47,6 +47,20 @@ pub enum EvalBackend {
     Circuit,
 }
 
+impl EvalBackend {
+    /// The one backend-name parser, shared by the CLI (`--backend`) and
+    /// the bench harnesses' `PMLP_BACKEND` env reader.
+    pub fn parse(s: &str) -> Option<EvalBackend> {
+        match s.to_lowercase().as_str() {
+            "auto" => Some(EvalBackend::Auto),
+            "pjrt" => Some(EvalBackend::Pjrt),
+            "native" => Some(EvalBackend::Native),
+            "circuit" => Some(EvalBackend::Circuit),
+            _ => None,
+        }
+    }
+}
+
 /// Pipeline options.
 #[derive(Clone, Debug)]
 pub struct PipelineOpts {
@@ -55,6 +69,11 @@ pub struct PipelineOpts {
     /// incremental cone-local re-synthesis (default) or from-scratch per
     /// chromosome. Classification output is bit-identical either way.
     pub synth: SynthMode,
+    /// Cost axis of the GA (`--objective`): the FA surrogate (default —
+    /// unit-compatible across all backends), or, with the circuit
+    /// backend only, measured EGFET area/power of each chromosome's
+    /// synthesized survivor.
+    pub objective: CostObjective,
     /// Worker threads of the GA evaluation fan-out (`--jobs`); `0` =
     /// auto (env `PMLP_JOBS`, else the machine's parallelism). Results
     /// are bit-identical for every value — jobs only sets how wide each
@@ -75,6 +94,7 @@ impl Default for PipelineOpts {
         PipelineOpts {
             backend: EvalBackend::Auto,
             synth: SynthMode::Incremental,
+            objective: CostObjective::Fa,
             jobs: 0,
             max_hw_points: 4,
             synth_baseline: true,
@@ -94,8 +114,12 @@ pub struct FinalDesign {
     pub acc_test_full: f64,
     /// Train accuracy (the GA's objective view).
     pub acc_train: f64,
-    /// FA-surrogate estimate (the GA's area view).
+    /// FA-surrogate estimate (recomputed for every design, whatever the
+    /// GA's cost objective was — keeps reports backend-comparable).
     pub area_fa: u64,
+    /// The GA's cost objective value for this design, in the units of
+    /// [`PipelineResult::objective`] (FA count, cm², or mW).
+    pub cost: f64,
     pub argmax_plan: ArgmaxPlan,
     /// Synthesized hardware without the argmax approximation (exact
     /// comparator tree) — Table IV's reference point.
@@ -117,11 +141,14 @@ pub struct PipelineResult {
     pub baseline_hw: Option<HwReport>,
     /// QAT-only (po2 + QRelu, exact accumulation/argmax) hardware (1 V).
     pub qat_hw: HwReport,
-    /// GA Pareto front as (accuracy-loss vs QAT train, FA estimate).
+    /// GA Pareto front as (accuracy-loss vs QAT train, cost) — the cost
+    /// axis is in `objective`'s units.
     pub front: Vec<ga::Individual>,
     pub designs: Vec<FinalDesign>,
     /// Which evaluator actually ran.
     pub backend_used: &'static str,
+    /// Which cost objective the GA minimized.
+    pub objective: CostObjective,
 }
 
 /// The coordinator.
@@ -139,6 +166,13 @@ impl Pipeline {
     pub fn run(&self) -> Result<PipelineResult> {
         let cfg = &self.cfg;
         let name = cfg.dataset.name.clone();
+        if self.opts.objective.is_measured() && self.opts.backend != EvalBackend::Circuit {
+            anyhow::bail!(
+                "--objective {} is measured on the synthesized survivor and requires \
+                 --backend circuit",
+                self.opts.objective.label()
+            );
+        }
         let log = |msg: &str| {
             if self.opts.verbose {
                 eprintln!("[{name}] {msg}");
@@ -243,19 +277,30 @@ impl Pipeline {
             }
         };
         let jobs = self.opts.jobs;
-        let (front, population, backend_used) = if self.opts.backend == EvalBackend::Circuit {
+        let exact = map.exact_genome();
+        let exact_fa = crate::area::AreaModel::new(&map).exact_estimate() as f64;
+        let use_circuit = self.opts.backend == EvalBackend::Circuit;
+        let (front, population, backend_used, exact_objs) = if use_circuit {
             // Circuit-in-the-loop: every chromosome is synthesized and
             // classified at the gate level through the wave engine,
             // incrementally (template cone-patch) or from scratch. The
             // GA fans each generation across `jobs` workers, each owning
-            // its own synthesis arena + wave cache.
-            let ev =
-                CircuitEvaluator::new(qmlp, &qtrain, base_acc_train).with_mode(self.opts.synth);
+            // its own synthesis arena + wave cache — including the
+            // measured-objective census/toggle state, so `--objective
+            // area|power` stays bit-identical across widths.
+            let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train)
+                .with_mode(self.opts.synth)
+                .with_objective(self.opts.objective);
             let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
                 .with_seeds(seeds.clone())
                 .with_jobs(jobs);
             let result = ga.run(log_gen);
-            (result.front, result.population, "circuit")
+            // Score the exact genome through the same evaluator so the
+            // zero-approximation fallback injected below carries the
+            // active objective's units (FA, cm² or mW).
+            let exact_objs =
+                ga::evaluate_parallel(&ev, std::slice::from_ref(&exact), 1)[0];
+            (result.front, result.population, "circuit", exact_objs)
         } else if have_artifact {
             let rt = runtime.as_ref().unwrap();
             let ev = PjrtEvaluator::new(rt, &cfg.dataset.name, qmlp, &qtrain, base_acc_train)?;
@@ -263,14 +308,14 @@ impl Pipeline {
                 .with_seeds(seeds.clone())
                 .with_jobs(jobs);
             let result = ga.run(log_gen);
-            (result.front, result.population, "pjrt")
+            (result.front, result.population, "pjrt", [0.0, exact_fa])
         } else {
             let ev = NativeEvaluator::new(qmlp, &qtrain, base_acc_train);
             let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
                 .with_seeds(seeds.clone())
                 .with_jobs(jobs);
             let result = ga.run(log_gen);
-            (result.front, result.population, "native")
+            (result.front, result.population, "native", [0.0, exact_fa])
         };
         log(&format!(
             "GA: front size {} (population {})",
@@ -283,11 +328,10 @@ impl Pipeline {
         // Always include the exact (QAT-only accumulation) genome as a
         // zero-approximation fallback so a <=5%-vs-baseline design exists
         // whenever QAT itself is within budget.
-        let exact = map.exact_genome();
         if !selected.iter().any(|i| i.genome == exact) {
-            let exact_area = crate::area::AreaModel::new(&map).exact_estimate() as f64;
-            selected.push(ga::Individual { genome: exact, objs: [0.0, exact_area] });
+            selected.push(ga::Individual { genome: exact, objs: exact_objs });
         }
+        let area_model = crate::area::AreaModel::new(&map);
         let mut designs = Vec::new();
         for ind in selected {
             let masks = map.to_masks(&ind.genome);
@@ -331,7 +375,8 @@ impl Pipeline {
                 acc_test_accum,
                 acc_test_full,
                 acc_train: base_acc_train - ind.objs[0],
-                area_fa: ind.objs[1] as u64,
+                area_fa: area_model.estimate(&ind.genome),
+                cost: ind.objs[1],
                 argmax_plan: plan,
                 hw_exact_argmax,
                 hw_full,
@@ -350,6 +395,7 @@ impl Pipeline {
             front,
             designs,
             backend_used,
+            objective: self.opts.objective,
         })
     }
 }

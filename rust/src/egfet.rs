@@ -106,6 +106,54 @@ impl Library {
     }
 }
 
+/// Which cost the GA's second objective minimizes
+/// (`pmlp run --objective fa|area|power`).
+///
+/// `fa` is the paper's full-adder surrogate ([`crate::area::AreaModel`]) —
+/// the default, and the only choice the native/PJRT backends support
+/// (their fronts stay unit-compatible across backends). The measured
+/// objectives require `--backend circuit`: every chromosome is
+/// synthesized anyway, so the evaluator can score it on the EGFET
+/// [`Library`] roll-up of its actual survivor netlist
+/// ([`analyze_histogram`]) instead of the surrogate — area in cm², or
+/// dynamic power in mW under the train-set stimulus's measured toggle
+/// activity (the quantity the paper's NSGA-II actually selects on).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostObjective {
+    /// Full-adder surrogate count (unitless; backend-portable).
+    Fa,
+    /// Measured EGFET cell area of the synthesized survivor, cm².
+    Area,
+    /// Measured power of the synthesized survivor, mW, with the dynamic
+    /// share scaled by wave-measured toggle activity.
+    Power,
+}
+
+impl CostObjective {
+    pub fn parse(s: &str) -> Option<CostObjective> {
+        match s.to_lowercase().as_str() {
+            "fa" => Some(CostObjective::Fa),
+            "area" => Some(CostObjective::Area),
+            "power" => Some(CostObjective::Power),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CostObjective::Fa => "fa",
+            CostObjective::Area => "area",
+            CostObjective::Power => "power",
+        }
+    }
+
+    /// True for the objectives measured on the synthesized survivor
+    /// (which only the circuit backend can provide).
+    pub fn is_measured(&self) -> bool {
+        !matches!(self, CostObjective::Fa)
+    }
+}
+
 /// Result of the hardware analysis of one synthesized netlist.
 #[derive(Clone, Debug)]
 pub struct HwReport {
@@ -131,8 +179,7 @@ pub fn analyze(nl: &Netlist, lib: &Library, clock_ms: f64, activity: f64) -> HwR
     let mut power_uw = 0.0f64;
     // Per-node arrival time (topological order).
     let mut arrival = vec![0.0f64; nl.gates.len()];
-    let dyn_share = 0.55;
-    let act_scale = 1.0 - dyn_share + dyn_share * (activity / 0.25).min(4.0);
+    let act_scale = activity_scale(activity);
     for (i, g) in nl.gates.iter().enumerate() {
         if let Some(cell) = lib.cell(g) {
             area += cell.area_cm2;
@@ -158,6 +205,45 @@ pub fn analyze(nl: &Netlist, lib: &Library, clock_ms: f64, activity: f64) -> HwR
         clock_ms,
         library: lib.name.clone(),
     }
+}
+
+/// Scale factor applied to each cell's nominal power: the dynamic share
+/// (~55%) grows linearly with toggle activity around the nominal 0.25.
+/// Shared by [`analyze`] and [`analyze_histogram`] so the two power
+/// models can never drift.
+fn activity_scale(activity: f64) -> f64 {
+    let dyn_share = 0.55;
+    1.0 - dyn_share + dyn_share * (activity / 0.25).min(4.0)
+}
+
+/// Allocation-free area/power roll-up over a survivor **cell histogram**
+/// — the measured-objective core of the circuit-in-the-loop GA. Returns
+/// `(area_cm2, power_mw)`.
+///
+/// Computes the same sums as [`analyze`] grouped by cell kind instead of
+/// walking the netlist (and skips the timing pass), so the evaluator can
+/// score a chromosome from the incremental synthesizer's survivor census
+/// without materializing the netlist. Values agree with [`analyze`] up
+/// to floating-point summation order (grouped-by-kind here vs gate order
+/// there — last-ulp differences only; pinned at 1e-9 relative by tests).
+pub fn analyze_histogram(counts: &CellCounts, lib: &Library, activity: f64) -> (f64, f64) {
+    let act_scale = activity_scale(activity);
+    let mut area = 0.0f64;
+    let mut power_uw = 0.0f64;
+    for (n, cell) in [
+        (counts.not, &lib.not),
+        (counts.and, &lib.and),
+        (counts.or, &lib.or),
+        (counts.xor, &lib.xor),
+        (counts.nand, &lib.nand),
+        (counts.nor, &lib.nor),
+        (counts.xnor, &lib.xnor),
+        (counts.mux, &lib.mux),
+    ] {
+        area += n as f64 * cell.area_cm2;
+        power_uw += n as f64 * cell.power_uw * act_scale;
+    }
+    (area, power_uw / 1000.0)
 }
 
 /// Analyze at 0.6 V with the paper's Table V policy: try the low-power
@@ -336,6 +422,53 @@ mod tests {
         let quiet = analyze(&nl, &lib, 200.0, 0.0);
         let busy = analyze(&nl, &lib, 200.0, 0.5);
         assert!(busy.power_mw > quiet.power_mw);
+    }
+
+    #[test]
+    fn histogram_rollup_matches_full_analysis() {
+        // Same sums, grouped by kind: the roll-up must agree with the
+        // netlist walk to float summation order on both corners and
+        // across activity factors.
+        let nl = small_netlist();
+        let hist = nl.cell_histogram();
+        for lib in [Library::egfet_1v(), Library::egfet_0p6v(), Library::egfet_0p6v_upsized()] {
+            for act in [0.0, 0.25, 0.5, 1.5] {
+                let full = analyze(&nl, &lib, 200.0, act);
+                let (area, power) = analyze_histogram(&hist, &lib, act);
+                assert!(
+                    (area - full.area_cm2).abs() <= 1e-12 * full.area_cm2.max(1.0),
+                    "area {} vs {}",
+                    area,
+                    full.area_cm2
+                );
+                assert!(
+                    (power - full.power_mw).abs() <= 1e-12 * full.power_mw.max(1.0),
+                    "power {} vs {}",
+                    power,
+                    full.power_mw
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_rollup_empty_is_zero() {
+        let (area, power) =
+            analyze_histogram(&Default::default(), &Library::egfet_1v(), 0.25);
+        assert_eq!(area, 0.0);
+        assert_eq!(power, 0.0);
+    }
+
+    #[test]
+    fn cost_objective_parsing() {
+        assert_eq!(CostObjective::parse("fa"), Some(CostObjective::Fa));
+        assert_eq!(CostObjective::parse("AREA"), Some(CostObjective::Area));
+        assert_eq!(CostObjective::parse("power"), Some(CostObjective::Power));
+        assert_eq!(CostObjective::parse("watts"), None);
+        assert!(!CostObjective::Fa.is_measured());
+        assert!(CostObjective::Area.is_measured());
+        assert!(CostObjective::Power.is_measured());
+        assert_eq!(CostObjective::Power.label(), "power");
     }
 
     #[test]

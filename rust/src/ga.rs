@@ -4,7 +4,11 @@
 //! summand bits) against two objectives, both minimized:
 //!
 //! 1. classification accuracy *loss* w.r.t. the QAT model (train set);
-//! 2. estimated area (full-adder surrogate, [`crate::area::AreaModel`]).
+//! 2. a hardware cost: by default the full-adder area surrogate
+//!    ([`crate::area::AreaModel`]); the circuit-in-the-loop backend can
+//!    swap in *measured* EGFET area or dynamic power of each
+//!    chromosome's synthesized survivor
+//!    (`--objective fa|area|power`, [`crate::egfet::CostObjective`]).
 //!
 //! Per the paper: the initial population is biased toward
 //! non-approximated bits, candidates whose accuracy loss exceeds 15% are
@@ -27,7 +31,9 @@ use std::collections::HashMap;
 /// bit-identical to serial evaluation (pinned by
 /// `rust/tests/ga_determinism.rs`).
 pub trait EvalWorker {
-    /// Score one genome as `[accuracy_loss, area_estimate]` (minimized).
+    /// Score one genome as `[accuracy_loss, cost]` (both minimized; the
+    /// cost axis is the backend's configured objective — FA surrogate by
+    /// default).
     fn eval_one(&mut self, genome: &BitVec) -> [f64; 2];
 }
 
@@ -603,6 +609,59 @@ mod tests {
         let o1: Vec<[f64; 2]> = r1.front.iter().map(|i| i.objs).collect();
         let o2: Vec<[f64; 2]> = r2.front.iter().map(|i| i.objs).collect();
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn panicking_worker_propagates_and_evaluator_survives() {
+        // The generation-level panic audit: one chromosome whose
+        // evaluation panics must fail the whole `evaluate_parallel` call
+        // loudly (scope join re-raises — never a hang), and the shared
+        // evaluator state must stay usable for the next generation.
+        struct Bomb {
+            memo: crate::util::ShardedMap<BitVec, [f64; 2]>,
+        }
+        struct BombWorker<'a> {
+            ev: &'a Bomb,
+        }
+        impl EvalWorker for BombWorker<'_> {
+            fn eval_one(&mut self, g: &BitVec) -> [f64; 2] {
+                if let Some(hit) = self.ev.memo.get(g) {
+                    return hit;
+                }
+                if g.count_ones() == 0 {
+                    panic!("all-zero genome");
+                }
+                let objs = [0.0, g.count_ones() as f64];
+                self.ev.memo.insert(g.clone(), objs);
+                objs
+            }
+        }
+        impl Evaluator for Bomb {
+            fn worker(&self) -> Box<dyn EvalWorker + '_> {
+                Box::new(BombWorker { ev: self })
+            }
+        }
+
+        let ev = Bomb { memo: crate::util::ShardedMap::new() };
+        let mut genomes: Vec<BitVec> = (1..=24)
+            .map(|i| {
+                let bools: Vec<bool> = (0..16).map(|b| b < i % 16 + 1).collect();
+                BitVec::from_bools(&bools)
+            })
+            .collect();
+        genomes.insert(13, BitVec::zeros(16));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            evaluate_parallel(&ev, &genomes, 4)
+        }));
+        assert!(r.is_err(), "a panicking evaluation must propagate");
+        // Same evaluator, sane batch: the memo (possibly poisoned
+        // mid-probe) must keep serving.
+        genomes.remove(13);
+        let objs = evaluate_parallel(&ev, &genomes, 4);
+        assert_eq!(objs.len(), genomes.len());
+        for (g, o) in genomes.iter().zip(&objs) {
+            assert_eq!(o[1], g.count_ones() as f64);
+        }
     }
 
     #[test]

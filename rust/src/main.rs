@@ -26,6 +26,7 @@ use printed_mlp::bench::{self, Scale, Study};
 use printed_mlp::config::{builtin, RunConfig};
 use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
 use printed_mlp::datasets;
+use printed_mlp::egfet::CostObjective;
 use printed_mlp::report;
 use printed_mlp::synth::SynthMode;
 use std::collections::HashMap;
@@ -69,18 +70,19 @@ impl Args {
     }
 
     fn backend(&self) -> Result<EvalBackend> {
-        Ok(match self.get("backend").unwrap_or("auto") {
-            "auto" => EvalBackend::Auto,
-            "pjrt" => EvalBackend::Pjrt,
-            "native" => EvalBackend::Native,
-            "circuit" => EvalBackend::Circuit,
-            other => bail!("bad --backend '{other}' (auto|pjrt|native|circuit)"),
-        })
+        let s = self.get("backend").unwrap_or("auto");
+        EvalBackend::parse(s)
+            .ok_or_else(|| anyhow!("bad --backend '{s}' (auto|pjrt|native|circuit)"))
     }
 
     fn synth(&self) -> Result<SynthMode> {
         let s = self.get("synth").unwrap_or("incremental");
         SynthMode::parse(s).ok_or_else(|| anyhow!("bad --synth '{s}' (incremental|full)"))
+    }
+
+    fn objective(&self) -> Result<CostObjective> {
+        let s = self.get("objective").unwrap_or("fa");
+        CostObjective::parse(s).ok_or_else(|| anyhow!("bad --objective '{s}' (fa|area|power)"))
     }
 
     fn jobs(&self) -> Result<usize> {
@@ -147,6 +149,7 @@ fn run() -> Result<()> {
             let opts = PipelineOpts {
                 backend: args.backend()?,
                 synth: args.synth()?,
+                objective: args.objective()?,
                 jobs: args.jobs()?,
                 max_hw_points: args
                     .get("hw-points")
@@ -188,8 +191,10 @@ fn run() -> Result<()> {
             }
             let summary = report::render_table(
                 &format!(
-                    "pipeline [{}] (backend: {})",
-                    result.cfg.dataset.name, result.backend_used
+                    "pipeline [{}] (backend: {}, objective: {})",
+                    result.cfg.dataset.name,
+                    result.backend_used,
+                    result.objective.label()
                 ),
                 &["design", "test acc", "1V hardware", "battery"],
                 &rows,
@@ -237,7 +242,14 @@ fn run() -> Result<()> {
             let exp = args.get("exp").unwrap_or("all");
             let scale = args.scale()?;
             let backend = args.backend()?;
-            let mut study = Study::new(scale, backend);
+            let objective = args.objective()?;
+            if objective.is_measured() && backend != EvalBackend::Circuit {
+                bail!(
+                    "--objective {} requires --backend circuit",
+                    objective.label()
+                );
+            }
+            let mut study = Study::new(scale, backend).with_objective(objective);
             let mut out = String::new();
             let want = |id: &str| exp == "all" || exp == id;
             if want("table2") {
@@ -280,6 +292,11 @@ fn run() -> Result<()> {
                  --synth incremental|full selects template cone-local re-synthesis\n                            \
                  [default, same bits, re-synth cost scales with mutation size]\n                            \
                  or from-scratch synthesis per chromosome;\n                            \
+                 --objective fa|area|power selects the GA's cost axis: the\n                            \
+                 full-adder surrogate [default, backend-portable] or — circuit\n                            \
+                 backend only — measured EGFET cell area / dynamic power of\n                            \
+                 each chromosome's synthesized survivor (toggle activity\n                            \
+                 measured on the train stimulus, paper's VCS step);\n                            \
                  --jobs N = GA evaluation worker threads, 0/auto by default —\n                            \
                  each worker owns its own synth arena + wave cache and any\n                            \
                  width produces bit-identical results)\n  \

@@ -160,17 +160,7 @@ impl Netlist {
     pub fn cell_histogram(&self) -> CellCounts {
         let mut c = CellCounts::default();
         for g in &self.gates {
-            match g {
-                Gate::Not(_) => c.not += 1,
-                Gate::And(..) => c.and += 1,
-                Gate::Or(..) => c.or += 1,
-                Gate::Xor(..) => c.xor += 1,
-                Gate::Nand(..) => c.nand += 1,
-                Gate::Nor(..) => c.nor += 1,
-                Gate::Xnor(..) => c.xnor += 1,
-                Gate::Mux(..) => c.mux += 1,
-                _ => {}
-            }
+            c.add(g);
         }
         c
     }
@@ -214,6 +204,23 @@ pub struct CellCounts {
 impl CellCounts {
     pub fn total(&self) -> usize {
         self.not + self.and + self.or + self.xor + self.nand + self.nor + self.xnor + self.mux
+    }
+
+    /// Count one gate (no-op for inputs/constants/params) — shared by
+    /// [`Netlist::cell_histogram`] and the incremental survivor census
+    /// of `synth::incremental`, so the two bucketings can never drift.
+    pub fn add(&mut self, g: &Gate) {
+        match g {
+            Gate::Not(_) => self.not += 1,
+            Gate::And(..) => self.and += 1,
+            Gate::Or(..) => self.or += 1,
+            Gate::Xor(..) => self.xor += 1,
+            Gate::Nand(..) => self.nand += 1,
+            Gate::Nor(..) => self.nor += 1,
+            Gate::Xnor(..) => self.xnor += 1,
+            Gate::Mux(..) => self.mux += 1,
+            Gate::Input(_) | Gate::Const(_) | Gate::Param(_) => {}
+        }
     }
 }
 

@@ -62,6 +62,7 @@ pub fn result_to_json(r: &PipelineResult) -> Json {
                 ("acc_test_full", Json::num(d.acc_test_full)),
                 ("acc_train", Json::num(d.acc_train)),
                 ("area_fa", Json::num(d.area_fa as f64)),
+                ("cost", Json::num(d.cost)),
                 ("area_cm2", Json::num(d.hw_full.area_cm2)),
                 ("power_mw", Json::num(d.hw_full.power_mw)),
                 ("delay_ms", Json::num(d.hw_full.delay_ms)),
@@ -88,6 +89,7 @@ pub fn result_to_json(r: &PipelineResult) -> Json {
             ]),
         ),
         ("backend", Json::str(r.backend_used)),
+        ("objective", Json::str(r.objective.label())),
         ("acc_float_test", Json::num(r.trained.acc_float_test)),
         ("acc_qat_test", Json::num(r.trained.acc_q_test)),
         ("baseline_acc_test", Json::num(r.baseline_acc_test)),

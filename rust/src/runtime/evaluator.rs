@@ -35,23 +35,27 @@
 //! parallel runs bit-identical to serial ones (`--jobs 1` == `--jobs N`,
 //! pinned by `rust/tests/ga_determinism.rs`).
 //!
-//! All return the objective pair `[accuracy_loss, estimated_area]` the
-//! NSGA-II optimizer minimizes (paper §III-D1/D2/D3).
+//! All return the objective pair `[accuracy_loss, cost]` the NSGA-II
+//! optimizer minimizes (paper §III-D1/D2/D3). The cost axis is the FA
+//! area surrogate by default; the circuit backend can score *measured*
+//! EGFET area or dynamic power of each chromosome's synthesized survivor
+//! instead (`--objective`, [`CostObjective`]).
 
 use crate::accum::GenomeMap;
 use crate::area::AreaModel;
 use crate::datasets::QuantDataset;
+use crate::egfet::{self, CostObjective, Library};
 use crate::ga::{EvalWorker, Evaluator};
 use crate::model::QuantMlp;
 use crate::netlist::mlp::{build_mlp_circuit, build_mlp_template, ArgmaxMode, MlpCircuitOpts};
-use crate::netlist::Template;
+use crate::netlist::{CellCounts, NodeId, Template};
 use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
 use crate::sim::wave::{self, InputWave, WaveCache};
 use crate::synth::incremental::IncrementalSynth;
 use crate::synth::{optimize, SynthMode};
 use crate::util::{BitVec, ShardedMap};
 use anyhow::Result;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 /// Flattened i32 views of a quantized MLP (what the artifacts consume).
 #[derive(Clone, Debug)]
@@ -344,9 +348,21 @@ impl Evaluator for NativeEvaluator {
 ///   between generations, so arenas and lane-word caches keep amortizing
 ///   across the whole GA run.
 ///
-/// The area objective stays the FA surrogate of [`AreaModel`] so fronts
-/// from all three backends are directly comparable (and the coordinator's
-/// exact-genome fallback injects the same units).
+/// The cost objective defaults to the FA surrogate of [`AreaModel`] so
+/// fronts from all three backends are directly comparable (and the
+/// coordinator's exact-genome fallback injects the same units). Because
+/// this backend synthesizes every chromosome anyway, it can instead
+/// select on what the paper's NSGA-II actually measures
+/// ([`CostObjective`], `--objective area|power`): the EGFET cell area or
+/// dynamic power of the synthesized survivor, rolled up allocation-free
+/// from the incremental census ([`egfet::analyze_histogram`]) with
+/// toggle activity read off the worker's [`WaveCache`] (per-node toggle
+/// totals accumulate as a side effect of classification — no extra
+/// simulation). Both synthesis modes score measured objectives on the
+/// *template* synthesis flow (`optimize(template.instantiate(g))` is the
+/// full-mode reference), so `--synth full` and `--synth incremental`
+/// stay bit-identical, and the cost equals `egfet::analyze` of the
+/// survivor up to float summation order (pinned by tests).
 ///
 /// Results are memoized across generations in a [`ShardedMap`] keyed on
 /// the **full genome bit vector** — never a truncated hash, which could
@@ -358,7 +374,13 @@ pub struct CircuitEvaluator {
     pub area: AreaModel,
     pub base_acc: f64,
     mode: SynthMode,
-    /// Train samples packed once into 64-lane input waves.
+    /// Which cost the second objective reports ([`CostObjective::Fa`] by
+    /// default; fixed for the evaluator's lifetime — the memo caches it).
+    objective: CostObjective,
+    /// EGFET corner the measured objectives roll up against.
+    lib: Library,
+    /// Train samples packed once into 64-lane input waves — classify
+    /// batches and (for measured scoring) the activity stimulus.
     batches: Vec<InputWave>,
     labels: Vec<usize>,
     /// Cross-generation fitness memo (full-genome keys).
@@ -399,6 +421,8 @@ impl CircuitEvaluator {
             area,
             base_acc,
             mode: SynthMode::Incremental,
+            objective: CostObjective::Fa,
+            lib: Library::egfet_1v(),
             batches,
             labels: train.y.clone(),
             memo: ShardedMap::new(),
@@ -413,8 +437,19 @@ impl CircuitEvaluator {
         self
     }
 
+    /// Select the cost objective (`--objective`). Measured objectives are
+    /// scored at the 1 V evaluation corner.
+    pub fn with_objective(mut self, objective: CostObjective) -> CircuitEvaluator {
+        self.objective = objective;
+        self
+    }
+
     pub fn mode(&self) -> SynthMode {
         self.mode
+    }
+
+    pub fn objective(&self) -> CostObjective {
+        self.objective
     }
 
     /// Entries in the cross-generation fitness memo.
@@ -435,9 +470,15 @@ impl CircuitEvaluator {
         })
     }
 
+    /// The single definition of the accuracy-loss objective, shared by
+    /// every scoring path so the full-vs-incremental bit-identity pin
+    /// can never drift on a one-sided edit.
+    fn loss_of(&self, acc: f64) -> f64 {
+        (self.base_acc - acc).max(0.0)
+    }
+
     fn objectives(&self, genome: &BitVec, acc: f64) -> [f64; 2] {
-        let loss = (self.base_acc - acc).max(0.0);
-        [loss, self.area.estimate(genome) as f64]
+        [self.loss_of(acc), self.area.estimate(genome) as f64]
     }
 
     fn accuracy_of(&self, preds: &[u64]) -> f64 {
@@ -449,18 +490,72 @@ impl CircuitEvaluator {
         correct as f64 / self.labels.len().max(1) as f64
     }
 
+    /// The measured cost of a survivor given its per-type census, live
+    /// cell ids and the arena-aligned toggle table. The activity ratio is
+    /// formed from the exact integers `sim::toggle_activity` counts
+    /// (total toggles over `cells * (n_vectors - 1)` slots), so the
+    /// result is bit-identical to `analyze_histogram` fed by
+    /// `egfet::measured_activity` of the materialized survivor.
+    fn measured_cost(&self, hist: &CellCounts, live: &[NodeId], toggles: &[u64]) -> f64 {
+        let n_vec = self.labels.len();
+        let activity = if n_vec < 2 {
+            egfet::NOMINAL_ACTIVITY
+        } else if live.is_empty() {
+            0.0
+        } else {
+            let total: u64 = live.iter().map(|&i| toggles[i as usize]).sum();
+            let slots = live.len() as u64 * (n_vec as u64 - 1);
+            total as f64 / slots as f64
+        };
+        self.cost_of(hist, activity)
+    }
+
+    /// Roll a census + activity up into the configured measured cost.
+    fn cost_of(&self, hist: &CellCounts, activity: f64) -> f64 {
+        let (area_cm2, power_mw) = egfet::analyze_histogram(hist, &self.lib, activity);
+        match self.objective {
+            CostObjective::Area => area_cm2,
+            CostObjective::Power => power_mw,
+            CostObjective::Fa => unreachable!("measured cost with FA objective"),
+        }
+    }
+
     /// From-scratch scoring: build + optimize the chromosome's netlist
     /// and classify the train set through it (single-threaded:
     /// parallelism is across genomes).
+    ///
+    /// With the FA objective this path builds the *masked* circuit
+    /// ([`build_mlp_circuit`]) — deliberately independent of the template
+    /// IR, so full-vs-incremental agreement cross-checks the template.
+    /// Measured objectives instead synthesize from scratch through the
+    /// shared template (`optimize(template.instantiate(g))` — the
+    /// reference the incremental engine is pinned against), because the
+    /// cost axis is defined on that survivor; the masked build is only
+    /// function-identical, not cell-identical (e.g. dropped biases leave
+    /// a folded zero row in the template's CSA trees).
     fn score_full(&self, genome: &BitVec) -> [f64; 2] {
-        let masks = self.map.to_masks(genome);
-        let nl = build_mlp_circuit(
-            &self.mlp,
-            &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Exact },
-        );
-        let (opt, _) = optimize(&nl);
+        if !self.objective.is_measured() {
+            let masks = self.map.to_masks(genome);
+            let nl = build_mlp_circuit(
+                &self.mlp,
+                &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Exact },
+            );
+            let (opt, _) = optimize(&nl);
+            let preds = wave::classify(&opt, &self.batches, "class", 1);
+            return self.objectives(genome, self.accuracy_of(&preds));
+        }
+        let (opt, _) = optimize(&self.template().instantiate(genome));
         let preds = wave::classify(&opt, &self.batches, "class", 1);
-        self.objectives(genome, self.accuracy_of(&preds))
+        let loss = self.loss_of(self.accuracy_of(&preds));
+        // Area ignores the activity factor entirely, so only the power
+        // objective pays the dedicated toggle-activity simulation.
+        let activity = match self.objective {
+            CostObjective::Power if self.labels.len() >= 2 => {
+                wave::toggle_activity_batches(&opt, &self.batches)
+            }
+            _ => egfet::NOMINAL_ACTIVITY,
+        };
+        [loss, self.cost_of(&opt.cell_histogram(), activity)]
     }
 }
 
@@ -477,8 +572,17 @@ impl CircuitWorker<'_> {
     fn state(&mut self) -> &mut IncrState {
         if self.st.is_none() {
             // Lease a parked state; the lock guard drops before the
-            // (expensive) fresh construction below.
-            let parked = self.ev.incr_pool.lock().unwrap().pop();
+            // (expensive) fresh construction below. Poisoning is
+            // recovered from, not inherited: the pool Vec is always
+            // structurally sound (push/pop only), and inheriting would
+            // turn one worker's panic into a cascade across the pool —
+            // see the panic-in-worker audit in `util::threads`.
+            let parked = self
+                .ev
+                .incr_pool
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .pop();
             let st = parked.unwrap_or_else(|| IncrState {
                 synth: IncrementalSynth::new(self.ev.template().clone()),
                 wave: WaveCache::new(self.ev.batches.clone()),
@@ -508,7 +612,21 @@ impl EvalWorker for CircuitWorker<'_> {
                     .expect("template has a class output")
                     .1;
                 let preds = wave.classify_bus(arena, bus);
-                ev.objectives(genome, ev.accuracy_of(&preds))
+                let acc = ev.accuracy_of(&preds);
+                if ev.objective.is_measured() {
+                    // The census fell out of `set_params`' survivor walk
+                    // and the toggle totals out of classification — the
+                    // measured cost is a pure roll-up, no extra synthesis
+                    // or simulation.
+                    let cost = ev.measured_cost(
+                        synth.survivor_histogram(),
+                        synth.live_cell_ids(),
+                        wave.node_toggles(),
+                    );
+                    [ev.loss_of(acc), cost]
+                } else {
+                    ev.objectives(genome, acc)
+                }
             }
         };
         ev.memo.insert(genome.clone(), objs);
@@ -527,9 +645,28 @@ impl EvalWorker for CircuitWorker<'_> {
 
 impl Drop for CircuitWorker<'_> {
     fn drop(&mut self) {
-        if let Some(st) = self.st.take() {
-            self.ev.incr_pool.lock().unwrap().push(st);
+        let Some(st) = self.st.take() else { return };
+        // A worker unwinding out of its own panic may hold a
+        // half-mutated arena (e.g. `set_params` interrupted after the
+        // binding was recorded but before the cone was re-simplified);
+        // re-parking it would let a later lease diff against the
+        // already-updated binding, skip the stale cones, and serve
+        // silently wrong fitness. Discard the state instead —
+        // correctness over amortization; the next lease pays one
+        // from-scratch pass.
+        if std::thread::panicking() {
+            return;
         }
+        // Never unwrap in drop: a sibling worker's panic can poison the
+        // pool lock while *this* worker exits cleanly, and a panic here
+        // during that sibling's unwind would be a double panic — an
+        // immediate abort. The pool Vec itself is always structurally
+        // sound (push/pop only).
+        self.ev
+            .incr_pool
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(st);
     }
 }
 
@@ -671,6 +808,136 @@ mod tests {
             let parallel = evaluate_parallel(&par_ev, &genomes, 8);
             assert_eq!(serial, parallel, "mode {mode:?}: jobs must not change results");
         }
+    }
+
+    /// A GA-like mutation chain starting from the exact genome.
+    fn mutation_chain(map: &GenomeMap, rng: &mut Rng, n: usize) -> Vec<BitVec> {
+        let mut genomes = vec![map.exact_genome()];
+        let mut g = map.random_genome(rng, 0.75);
+        genomes.push(g.clone());
+        while genomes.len() < n {
+            for _ in 0..3 {
+                g.flip(rng.below(map.len()));
+            }
+            genomes.push(g.clone());
+        }
+        genomes
+    }
+
+    #[test]
+    fn measured_objectives_full_and_incremental_agree() {
+        // The measured cost is defined on the template synthesis flow, so
+        // from-scratch and cone-local re-synthesis must produce exactly
+        // the same [loss, cost] pairs on a mutation chain — for both
+        // measured objectives.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(53);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 8);
+        for objective in [CostObjective::Area, CostObjective::Power] {
+            let full = CircuitEvaluator::new(&qmlp, &qtrain, base)
+                .with_mode(SynthMode::Full)
+                .with_objective(objective);
+            let incr =
+                CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(objective);
+            assert_eq!(incr.objective(), objective);
+            let a = full.evaluate(&genomes);
+            let b = incr.evaluate(&genomes);
+            assert_eq!(a, b, "objective {objective:?}: modes must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn measured_cost_equals_fresh_survivor_rollup() {
+        // The acceptance pin at evaluator level: the cost of every genome
+        // equals `analyze_histogram` of a from-scratch synthesized
+        // survivor under wave-measured activity (bit-exact), and matches
+        // `egfet::analyze` of that survivor to float summation order.
+        use crate::egfet::{analyze, analyze_histogram, measured_activity, Library};
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(61);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 6);
+        let vectors: Vec<Vec<bool>> = qtrain
+            .x
+            .iter()
+            .map(|row| wave::encode_features(row, qmlp.l1.in_bits))
+            .collect();
+        let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+        let lib = Library::egfet_1v();
+        for objective in [CostObjective::Area, CostObjective::Power] {
+            let ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(objective);
+            let objs = ev.evaluate(&genomes);
+            for (genome, o) in genomes.iter().zip(&objs) {
+                let (surv, _) = optimize(&tpl.instantiate(genome));
+                let act = measured_activity(&surv, &vectors);
+                let (area_cm2, power_mw) =
+                    analyze_histogram(&surv.cell_histogram(), &lib, act);
+                let want = match objective {
+                    CostObjective::Area => area_cm2,
+                    CostObjective::Power => power_mw,
+                    CostObjective::Fa => unreachable!(),
+                };
+                assert_eq!(o[1], want, "{objective:?} cost must be bit-exact");
+                let hw = analyze(&surv, &lib, 200.0, act);
+                let full = match objective {
+                    CostObjective::Area => hw.area_cm2,
+                    CostObjective::Power => hw.power_mw,
+                    CostObjective::Fa => unreachable!(),
+                };
+                assert!(
+                    (o[1] - full).abs() <= 1e-9 * full.max(1.0),
+                    "{objective:?}: {} vs analyze {}",
+                    o[1],
+                    full
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn measured_parallel_matches_serial() {
+        // --jobs determinism with the measured state living in the
+        // per-worker arena/cache lease. Fresh evaluators per width so the
+        // shared memo cannot mask divergence.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(67);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 12);
+        for mode in [SynthMode::Incremental, SynthMode::Full] {
+            let serial_ev = CircuitEvaluator::new(&qmlp, &qtrain, base)
+                .with_mode(mode)
+                .with_objective(CostObjective::Power);
+            let par_ev = CircuitEvaluator::new(&qmlp, &qtrain, base)
+                .with_mode(mode)
+                .with_objective(CostObjective::Power);
+            let serial = evaluate_parallel(&serial_ev, &genomes, 1);
+            let parallel = evaluate_parallel(&par_ev, &genomes, 8);
+            assert_eq!(serial, parallel, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn poisoned_worker_pool_recovers() {
+        // Deliberately poison the lease pool (as a panicking worker
+        // would), then evaluate: leasing must recover instead of
+        // cascading the panic, and results stay correct.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let ev = CircuitEvaluator::new(&qmlp, &qtrain, base)
+            .with_objective(CostObjective::Power);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = ev.incr_pool.lock().unwrap();
+            panic!("poison the pool");
+        }));
+        assert!(ev.incr_pool.lock().is_err(), "pool must be poisoned");
+        let mut rng = Rng::new(71);
+        let genomes: Vec<_> =
+            (0..4).map(|_| ev.map.random_genome(&mut rng, 0.8)).collect();
+        let a = evaluate_parallel(&ev, &genomes, 3);
+        let fresh = CircuitEvaluator::new(&qmlp, &qtrain, base)
+            .with_objective(CostObjective::Power);
+        let b = evaluate_parallel(&fresh, &genomes, 1);
+        assert_eq!(a, b, "poisoned pool must not change results");
     }
 
     #[test]

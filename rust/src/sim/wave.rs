@@ -174,12 +174,20 @@ pub fn classify(nl: &Netlist, batches: &[InputWave], out_bus: &str, n_threads: u
 pub struct WaveCache {
     batches: Vec<InputWave>,
     values: Vec<Vec<u64>>,
+    /// Per-node toggle totals over the whole vector sequence, aligned
+    /// with netlist/arena node ids like `values`. Each node's count is
+    /// computed exactly once, when the node is first extended into the
+    /// cache: `n_lanes - 1` internal transitions per batch (popcount of
+    /// `(w ^ (w >> 1)) & mask`) plus one carried transition per batch
+    /// boundary — the same integers `toggle_activity` counts, so summing
+    /// over a survivor's cells reproduces its activity bit-exactly.
+    toggles: Vec<u64>,
 }
 
 impl WaveCache {
     pub fn new(batches: Vec<InputWave>) -> WaveCache {
         let values = batches.iter().map(|_| Vec::new()).collect();
-        WaveCache { batches, values }
+        WaveCache { batches, values, toggles: Vec::new() }
     }
 
     /// Total number of input vectors across all batches.
@@ -192,18 +200,60 @@ impl WaveCache {
         self.values.first().map(Vec::len).unwrap_or(0)
     }
 
+    /// Per-node toggle totals over the full batch sequence (indexed by
+    /// node id, valid up to [`Self::cached_nodes`]). Sum over a live
+    /// cone's cells and divide by `cells * (n_vectors - 1)` to get the
+    /// exact [`toggle_activity`] of the corresponding survivor netlist —
+    /// the measured dynamic-power path of the circuit-in-the-loop GA.
+    pub fn node_toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
     /// Evaluate `bus` for every vector. `nl` must be the same
     /// append-only netlist on every call (longer is fine, shorter or
-    /// rewritten is not — node ids are the cache key).
+    /// rewritten is not — node ids are the cache key). Extends the
+    /// lane-word and toggle caches to `nl`'s length as a side effect.
     pub fn classify_bus(&mut self, nl: &Netlist, bus: &[NodeId]) -> Vec<u64> {
+        self.extend(nl);
         let mut out = Vec::with_capacity(self.n_vectors());
-        for (batch, values) in self.batches.iter().zip(&mut self.values) {
-            extend_wave_into(nl, &batch.words, values);
+        for (batch, values) in self.batches.iter().zip(&self.values) {
             for lane in 0..batch.n_lanes {
                 out.push(lane_bus_u64(values, bus, lane));
             }
         }
         out
+    }
+
+    /// Extend every per-batch lane-word buffer to `nl`'s current length
+    /// (evaluating only appended nodes) and accumulate the new nodes'
+    /// toggle counts across the batch sequence.
+    fn extend(&mut self, nl: &Netlist) {
+        let done = self.toggles.len();
+        for (batch, values) in self.batches.iter().zip(&mut self.values) {
+            extend_wave_into(nl, &batch.words, values);
+        }
+        let len = nl.gates.len();
+        self.toggles.resize(len, 0);
+        for i in done..len {
+            let mut t = 0u64;
+            let mut prev_last = 0u64;
+            let mut first = true;
+            for (batch, values) in self.batches.iter().zip(&self.values) {
+                let w = values[i];
+                let n = batch.n_lanes;
+                // Transition lane L -> L+1 sits at bit L of w ^ (w >> 1);
+                // n lanes have n-1 internal transitions (cf.
+                // `toggle_activity`, kept in lockstep).
+                let mask = if n >= 2 { !0u64 >> (64 - (n - 1)) } else { 0 };
+                t += ((w ^ (w >> 1)) & mask).count_ones() as u64;
+                if !first {
+                    t += (prev_last ^ w) & 1;
+                }
+                prev_last = w >> (n - 1);
+                first = false;
+            }
+            self.toggles[i] = t;
+        }
     }
 }
 
@@ -211,7 +261,18 @@ impl WaveCache {
 /// replacement of the scalar implementation: the toggle and slot counts
 /// are identical integers, only computed 64 lanes at a time.
 pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
-    if vectors.len() < 2 || nl.cell_count() == 0 {
+    let batches: Vec<InputWave> = vectors.chunks(LANES).map(pack_vectors).collect();
+    toggle_activity_batches(nl, &batches)
+}
+
+/// [`toggle_activity`] over already-packed batches (consecutive vectors
+/// in adjacent lanes, dataset order across batches) — callers that keep
+/// a packed train stimulus (the circuit-in-the-loop evaluator) measure
+/// activity without materializing per-vector `Vec<bool>` rows. Same
+/// integers, same division: bit-identical to the unpacked entry point.
+pub fn toggle_activity_batches(nl: &Netlist, batches: &[InputWave]) -> f64 {
+    let n_vec: usize = batches.iter().map(|b| b.n_lanes).sum();
+    if n_vec < 2 || nl.cell_count() == 0 {
         return 0.0;
     }
     let cells: Vec<usize> = nl
@@ -225,8 +286,7 @@ pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
     let mut prev: Vec<u64> = Vec::new();
     let mut prev_lanes = 0usize;
     let mut toggles = 0u64;
-    for chunk in vectors.chunks(LANES) {
-        let batch = pack_vectors(chunk);
+    for batch in batches {
         eval_wave_into(nl, &batch.words, &mut cur);
         let n = batch.n_lanes;
         // Transition lane L -> L+1 appears at bit L of (w ^ (w >> 1));
@@ -244,7 +304,7 @@ pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
         std::mem::swap(&mut cur, &mut prev);
         prev_lanes = n;
     }
-    let slots = cells.len() as u64 * (vectors.len() as u64 - 1);
+    let slots = cells.len() as u64 * (n_vec as u64 - 1);
     toggles as f64 / slots as f64
 }
 
@@ -556,6 +616,97 @@ mod tests {
         let y = nl.and(x, one);
         let got2 = cache.classify_bus(&nl, &[y]);
         assert_eq!(got2, expect);
+    }
+
+    /// Scalar golden model of per-node toggle counts: evaluate every
+    /// vector and count value flips node by node.
+    fn node_toggles_scalar(nl: &Netlist, vectors: &[Vec<bool>]) -> Vec<u64> {
+        let mut out = vec![0u64; nl.len()];
+        if vectors.len() < 2 {
+            return out;
+        }
+        let mut prev = eval_nodes(nl, &vectors[0]);
+        for v in &vectors[1..] {
+            let cur = eval_nodes(nl, v);
+            for (i, t) in out.iter_mut().enumerate() {
+                *t += (cur[i] != prev[i]) as u64;
+            }
+            prev = cur;
+        }
+        out
+    }
+
+    #[test]
+    fn prop_wave_cache_node_toggles_match_scalar() {
+        // The measured-power substrate: per-node toggle totals the cache
+        // accumulates at extension time must equal the scalar per-node
+        // flip counts — for every node, any batch-boundary residue, and
+        // across append-only netlist growth.
+        prop::check("wave-cache node toggles == scalar", |rng, _| {
+            let mut nl = random_netlist(rng);
+            let n_vec = 2 + rng.below(200);
+            let vectors = random_vectors(rng, n_vec, nl.n_inputs as usize);
+            let batches: Vec<InputWave> =
+                vectors.chunks(LANES).map(pack_vectors).collect();
+            let mut cache = WaveCache::new(batches);
+            let first_len = nl.len();
+            cache.classify_bus(&nl, &nl.outputs[0].1.clone());
+            // Grow the netlist (append-only) and re-query: the appended
+            // nodes' toggles are computed on extension, the old ones kept.
+            let len = nl.len();
+            let a = rng.below(len) as NodeId;
+            let b = rng.below(len) as NodeId;
+            let x = nl.xor(a, b);
+            let y = nl.not(x);
+            cache.classify_bus(&nl, &[y]);
+            let got = cache.node_toggles();
+            let want = node_toggles_scalar(&nl, &vectors);
+            if got.len() != nl.len() {
+                return Err(format!("toggle table len {} != {}", got.len(), nl.len()));
+            }
+            for i in 0..nl.len() {
+                if got[i] != want[i] {
+                    return Err(format!(
+                        "node {i}: cache {} != scalar {} over {n_vec} vectors \
+                         (first extension at len {first_len})",
+                        got[i], want[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wave_cache_activity_matches_toggle_activity_exactly() {
+        // Summing cached per-cell toggles and dividing by
+        // cells * (n_vec - 1) must be bit-identical (f64 ==) to
+        // `toggle_activity` — the equality the measured power objective
+        // rests on. Garbage-prone netlist + 65-vector tail batch.
+        let nl = garbage_prone_netlist();
+        for n_vec in [2usize, 63, 64, 65, 129] {
+            let vectors: Vec<Vec<bool>> =
+                (0..n_vec).map(|i| vec![i % 3 == 0]).collect();
+            let batches: Vec<InputWave> =
+                vectors.chunks(LANES).map(pack_vectors).collect();
+            let mut cache = WaveCache::new(batches);
+            cache.classify_bus(&nl, &nl.outputs[0].1.clone());
+            let cells: Vec<usize> = nl
+                .gates
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| g.is_cell())
+                .map(|(i, _)| i)
+                .collect();
+            let total: u64 = cells.iter().map(|&i| cache.node_toggles()[i]).sum();
+            let slots = cells.len() as u64 * (n_vec as u64 - 1);
+            let from_cache = total as f64 / slots as f64;
+            assert_eq!(
+                from_cache,
+                toggle_activity(&nl, &vectors),
+                "n_vec={n_vec}"
+            );
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //!    canonical structure, and repr convergence never skips a node whose
 //!    inputs changed).
 
-use crate::netlist::{Gate, Netlist, NodeId, Template};
+use crate::netlist::{CellCounts, Gate, Netlist, NodeId, Template};
 use crate::synth::{dce, Repr, Rewriter, SynthStats};
 use crate::util::BitVec;
 use std::cmp::Reverse;
@@ -55,6 +55,13 @@ pub struct IncrementalSynth {
     /// Scratch stamps for live-cone walks over the arena.
     live_stamp: Vec<u32>,
     live_mark: u32,
+    /// Survivor census of the current binding, refreshed by the same
+    /// hash-free DCE walk that produces `cells_out` (no extra passes):
+    /// per-cell-type counts plus the live cell node ids — what the
+    /// measured-hardware objectives consume (`egfet::analyze_histogram`
+    /// + per-node toggle sums over `sim::wave::WaveCache`).
+    hist: CellCounts,
+    live_cells: Vec<NodeId>,
 }
 
 impl IncrementalSynth {
@@ -71,6 +78,8 @@ impl IncrementalSynth {
             stamp: 0,
             live_stamp: Vec::new(),
             live_mark: 0,
+            hist: CellCounts::default(),
+            live_cells: Vec::new(),
             tpl,
         }
     }
@@ -103,7 +112,26 @@ impl IncrementalSynth {
             self.cone_pass(&flipped);
         }
         self.refresh_outputs();
-        SynthStats { cells_in: self.tpl.nl.cell_count(), cells_out: self.live_cells() }
+        self.census();
+        SynthStats { cells_in: self.tpl.nl.cell_count(), cells_out: self.live_cells.len() }
+    }
+
+    /// Per-cell-type counts of the current survivor — exactly
+    /// `dce(arena).cell_histogram()` (pinned by the property suite),
+    /// without materializing the netlist. Valid after `set_params`.
+    pub fn survivor_histogram(&self) -> &CellCounts {
+        debug_assert!(self.ready, "set_params before survivor_histogram");
+        &self.hist
+    }
+
+    /// Arena node ids of the current survivor's cells (the live output
+    /// cone, cells only; deterministic walk order, not sorted). Aligned
+    /// with any arena-keyed side table — `sim::wave::WaveCache::node_toggles`,
+    /// which is how the evaluator sums survivor toggle activity without
+    /// re-simulating. Valid after `set_params`.
+    pub fn live_cell_ids(&self) -> &[NodeId] {
+        debug_assert!(self.ready, "set_params before live_cell_ids");
+        &self.live_cells
     }
 
     /// Materialize the compact survivor netlist of the current binding
@@ -172,16 +200,20 @@ impl IncrementalSynth {
         rw.resolve_outputs(&tpl.nl.outputs, repr);
     }
 
-    /// Count live cells of the current output cone (the `cells_out` a
-    /// from-scratch DCE would report) without materializing the netlist.
-    fn live_cells(&mut self) -> usize {
-        let IncrementalSynth { rw, live_stamp, live_mark, .. } = self;
+    /// Census of the current output cone: live cell ids and per-type
+    /// counts (the `cells_out` + `cell_histogram` a from-scratch DCE
+    /// would report) without materializing the netlist. One hash-free
+    /// walk; the stamp array and the live list are reused buffers, so
+    /// steady-state re-synthesis stays allocation-free.
+    fn census(&mut self) {
+        let IncrementalSynth { rw, live_stamp, live_mark, hist, live_cells, .. } = self;
         let arena = &rw.out;
         *live_mark += 1;
         let mark = *live_mark;
         live_stamp.resize(arena.len(), 0);
+        *hist = CellCounts::default();
+        live_cells.clear();
         let mut stack: Vec<NodeId> = Vec::new();
-        let mut count = 0usize;
         for (_, bus) in &arena.outputs {
             for &b in bus {
                 if live_stamp[b as usize] != mark {
@@ -193,7 +225,8 @@ impl IncrementalSynth {
         while let Some(id) = stack.pop() {
             let g = &arena.gates[id as usize];
             if g.is_cell() {
-                count += 1;
+                hist.add(g);
+                live_cells.push(id);
             }
             for op in g.operands() {
                 if live_stamp[op as usize] != mark {
@@ -202,7 +235,6 @@ impl IncrementalSynth {
                 }
             }
         }
-        count
     }
 }
 
@@ -321,10 +353,36 @@ mod tests {
                         stats_inc.cells_out, stats_fresh.cells_out
                     ));
                 }
-                let (_, sstats) = inc.survivor();
+                let (surv, sstats) = inc.survivor();
                 if sstats != stats_fresh {
                     return Err(format!(
                         "step {step}: survivor stats {sstats:?} != fresh {stats_fresh:?}"
+                    ));
+                }
+                // The measured-objective census: per-type counts must
+                // match a from-scratch DCE'd census exactly (both the
+                // materialized survivor's and the fresh pass's — the
+                // survivor is the same netlist up to renumbering), and
+                // the live-cell list must agree with `cells_out`.
+                let hist = *inc.survivor_histogram();
+                if hist != surv.cell_histogram() {
+                    return Err(format!(
+                        "step {step}: census {hist:?} != survivor {:?}",
+                        surv.cell_histogram()
+                    ));
+                }
+                if hist != fresh.cell_histogram() {
+                    return Err(format!(
+                        "step {step}: census {hist:?} != fresh {:?}",
+                        fresh.cell_histogram()
+                    ));
+                }
+                if hist.total() != stats_inc.cells_out
+                    || inc.live_cell_ids().len() != stats_inc.cells_out
+                {
+                    return Err(format!(
+                        "step {step}: census totals drifted from cells_out {}",
+                        stats_inc.cells_out
                     ));
                 }
                 check_equiv(&inc, &fresh, &batch)

@@ -18,7 +18,7 @@
 
 use crate::util::fxhash::{FxHashMap, FxHasher};
 use std::hash::{Hash, Hasher};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Number of shards (power of two; modest — the map serves tens of
 /// worker threads, not thousands).
@@ -53,19 +53,33 @@ impl<K: Eq + Hash, V: Clone> ShardedMap<K, V> {
         &self.shards[((h.finish() >> 32) & self.mask) as usize]
     }
 
+    /// Lock a shard, recovering from poisoning. A shard can only be
+    /// poisoned by a panic inside one of the single-probe critical
+    /// sections below — in practice a panicking `V::Clone` during `get`,
+    /// since our key types' `Hash`/`Eq` don't panic — which leaves the
+    /// underlying map untouched and structurally sound. Inheriting the
+    /// poison would turn one worker's panic into a panic storm across
+    /// every thread that shares the memo (and, worse, into an abort when
+    /// a waiting worker's cleanup runs during unwinding), so the memo
+    /// deliberately keeps serving after a worker dies; the original
+    /// panic still propagates through `util::threads`' scope join.
+    fn lock_shard(shard: &Mutex<FxHashMap<K, V>>) -> MutexGuard<'_, FxHashMap<K, V>> {
+        shard.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Clone out the value for `key`, if present.
     pub fn get(&self, key: &K) -> Option<V> {
-        self.shard(key).lock().unwrap().get(key).cloned()
+        Self::lock_shard(self.shard(key)).get(key).cloned()
     }
 
     /// Insert (or overwrite) `key`.
     pub fn insert(&self, key: K, value: V) {
-        self.shard(&key).lock().unwrap().insert(key, value);
+        Self::lock_shard(self.shard(&key)).insert(key, value);
     }
 
     /// Total entries across all shards (locks each shard once).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| Self::lock_shard(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -127,6 +141,39 @@ mod tests {
         for i in 0..512 {
             assert_eq!(m.get(&i), Some(i + 1));
         }
+    }
+
+    #[test]
+    fn poisoned_shard_keeps_serving() {
+        // A worker that dies mid-probe (here: a panicking `Clone` during
+        // `get`) poisons its shard; the memo must keep working for every
+        // other worker instead of cascading the panic — the
+        // panic-in-worker audit of the GA evaluation fan-out.
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        #[derive(Debug)]
+        struct Fragile(Arc<AtomicBool>);
+        impl Clone for Fragile {
+            fn clone(&self) -> Fragile {
+                if self.0.load(Ordering::SeqCst) {
+                    panic!("armed clone");
+                }
+                Fragile(self.0.clone())
+            }
+        }
+
+        let armed = Arc::new(AtomicBool::new(false));
+        let m: ShardedMap<u64, Fragile> = ShardedMap::with_shards(1);
+        m.insert(1, Fragile(armed.clone()));
+        armed.store(true, Ordering::SeqCst);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| m.get(&1)));
+        assert!(r.is_err(), "armed clone must panic");
+        armed.store(false, Ordering::SeqCst);
+        // The (single) shard is now poisoned; probes must still work.
+        assert!(m.get(&1).is_some());
+        m.insert(2, Fragile(armed.clone()));
+        assert_eq!(m.len(), 2);
     }
 
     #[test]

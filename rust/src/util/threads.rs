@@ -58,6 +58,16 @@ where
 /// single item) everything runs on the caller's thread through one
 /// state, so serial and parallel execution traverse identical per-item
 /// code paths.
+///
+/// Panic behavior: a panicking `init`/`f` kills only its own worker; the
+/// remaining workers keep draining the cursor, and `std::thread::scope`
+/// re-raises the panic on the calling thread after every worker has
+/// joined. The map can therefore never hang on a panic — callers see it
+/// propagate (pinned by tests here and in `crate::ga`). Worker states
+/// whose `Drop` runs during that unwinding must not panic themselves
+/// (a second panic aborts the process) — which is why the evaluator
+/// pool leases and the sharded memo recover from mutex poisoning
+/// instead of unwrapping.
 pub fn par_map_with<S, T, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
 where
     T: Send,
@@ -178,6 +188,32 @@ mod tests {
         let serial = par_map_with(300, 1, || (), |_, i| i * 3);
         let parallel = par_map_with(300, 8, || (), |_, i| i * 3);
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn worker_panic_propagates_instead_of_hanging() {
+        // One poisoned item out of many: the panic must reach the caller
+        // (scope join re-raises it) rather than deadlocking the map, and
+        // a subsequent map on the same thread must be unaffected.
+        let r = std::panic::catch_unwind(|| {
+            par_map(64, 4, |i| {
+                if i == 37 {
+                    panic!("poisoned item");
+                }
+                i * 2
+            })
+        });
+        assert!(r.is_err(), "worker panic must propagate");
+        let v = par_map(8, 4, |i| i + 1);
+        assert_eq!(v, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn init_panic_propagates() {
+        let r = std::panic::catch_unwind(|| {
+            par_map_with(16, 4, || panic!("init bomb"), |_: &mut (), i| i)
+        });
+        assert!(r.is_err());
     }
 
     #[test]

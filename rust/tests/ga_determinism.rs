@@ -12,6 +12,7 @@
 
 use printed_mlp::config::builtin;
 use printed_mlp::datasets;
+use printed_mlp::egfet::CostObjective;
 use printed_mlp::ga::{Evaluator, GaResult, Nsga2};
 use printed_mlp::model::float_mlp::TrainOpts;
 use printed_mlp::model::{FloatMlp, QuantMlp};
@@ -96,6 +97,40 @@ fn circuit_full_jobs_1_vs_8_bit_identical() {
     let serial = run_at(&serial_ev, glen, &[], 1);
     let parallel = run_at(&par_ev, glen, &[], 8);
     assert_eq!(serial, parallel);
+}
+
+#[test]
+fn circuit_power_objective_jobs_1_vs_8_bit_identical() {
+    // Measured-hardware objective (`--objective power`): the survivor
+    // census + toggle-activity state lives in per-worker arena/cache
+    // leases, so any evaluation width must still produce a bit-identical
+    // GaResult. Fresh evaluators per width (own memo + arena pool).
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let serial_ev =
+        CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Power);
+    let par_ev =
+        CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Power);
+    let serial = run_at(&serial_ev, glen, &[], 1);
+    let parallel = run_at(&par_ev, glen, &[], 8);
+    assert_eq!(serial, parallel);
+}
+
+#[test]
+fn circuit_power_objective_modes_agree_at_width_8() {
+    // Full-mode measured scoring synthesizes from scratch through the
+    // same template flow, so both synthesis strategies walk the same GA
+    // trajectory even on the measured cost axis — across widths.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let incr_ev =
+        CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Power);
+    let full_ev = CircuitEvaluator::new(&qmlp, &qtrain, base)
+        .with_mode(SynthMode::Full)
+        .with_objective(CostObjective::Power);
+    let a = run_at(&incr_ev, glen, &[], 8);
+    let b = run_at(&full_ev, glen, &[], 1);
+    assert_eq!(a, b);
 }
 
 #[test]
