@@ -6,7 +6,11 @@
 //! reports its speedup over the from-scratch circuit path, and the
 //! measured-power objective rows (`--objective power`) track the census
 //! + toggle roll-up against from-scratch survivor analysis (target:
-//! incremental ≥ 2× full on the mutation chain).
+//! incremental ≥ 2× full on the mutation chain). The
+//! `circuit/incr/area+power` row times the joint three-objective
+//! evaluator on the same chain so the const-generic arity
+//! generalization's overhead stays visible (target: < 10% vs the single
+//! measured objective).
 //!
 //! The jobs-scaling section measures the population-parallel fan-out of
 //! the circuit backend (per-worker synthesis arenas + wave caches) at

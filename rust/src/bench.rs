@@ -13,7 +13,7 @@ use crate::baselines::exact::Int8Mlp;
 use crate::baselines::prune;
 use crate::baselines::truncation::TruncMlp;
 use crate::config::{builtin, RunConfig};
-use crate::coordinator::{EvalBackend, Pipeline, PipelineOpts, PipelineResult};
+use crate::coordinator::{EvalBackend, FrontPoint, Pipeline, PipelineOpts, PipelineResult};
 use crate::datasets;
 use crate::egfet::{analyze, CostObjective, Library};
 use crate::model::QuantMlp;
@@ -114,9 +114,10 @@ impl Study {
 
     /// Select the GA cost objective the study's pipelines optimize
     /// (`pmlp repro --objective …`, env `PMLP_OBJECTIVE` for the bench
-    /// binaries). Measured objectives require the circuit backend —
-    /// checked here so harnesses fail at construction with a clear
-    /// message instead of deep inside the first pipeline run.
+    /// binaries; `area+power` runs the joint three-objective front).
+    /// Measured objectives require the circuit backend — checked here so
+    /// harnesses fail at construction with a clear message instead of
+    /// deep inside the first pipeline run.
     pub fn with_objective(mut self, objective: CostObjective) -> Study {
         assert!(
             !objective.is_measured() || self.backend == EvalBackend::Circuit,
@@ -191,6 +192,44 @@ pub fn records_to_json(scale: Scale, records: &[BenchRecord]) -> Json {
             ),
         ),
     ])
+}
+
+/// The `(loss, objs[axis])` 2-D projection of an arity-erased Pareto
+/// front, reduced to its non-dominated subset and sorted by loss.
+///
+/// A member of a 3-D `(loss, area, power)` front can be *dominated* in a
+/// 2-D slice — it earns its place on the axis the slice drops — so
+/// projecting is filter-then-sort, not just a coordinate pick. This is
+/// how the fig4/table5 harnesses turn the joint `area+power` front back
+/// into the paper's two-axis views (loss×area and loss×power).
+pub fn front_projection(front: &[FrontPoint], axis: usize) -> Vec<(f64, f64)> {
+    let pts: Vec<(f64, f64)> = front.iter().map(|p| (p.objs[0], p.objs[axis])).collect();
+    let dominated = |a: (f64, f64), b: (f64, f64)| {
+        (b.0 <= a.0 && b.1 <= a.1) && (b.0 < a.0 || b.1 < a.1)
+    };
+    let mut out: Vec<(f64, f64)> = pts
+        .iter()
+        .copied()
+        .filter(|&a| !pts.iter().any(|&b| dominated(a, b)))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out.dedup();
+    out
+}
+
+/// Render one 2-D projection of a joint-front run as a table section
+/// (no-op text for 2-D runs — the projection equals the front itself
+/// there, which fig4/table5 already print through the designs).
+fn projection_section(r: &PipelineResult, name: &str, axis: usize, axis_label: &str) -> String {
+    let rows: Vec<Vec<String>> = front_projection(&r.front, axis)
+        .into_iter()
+        .map(|(loss, cost)| vec![format!("{loss:.4}"), format!("{cost:.4}")])
+        .collect();
+    render_table(
+        &format!("[{name}] (loss, {axis_label}) projection of the 3-D area+power front"),
+        &["acc loss (train)", axis_label],
+        &rows,
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -338,6 +377,11 @@ pub fn fig4(study: &mut Study) -> String {
             &["test acc", "Δacc vs QAT", "area/QAT", "FA est"],
             &rows,
         ));
+        // A joint-objective run carries a 3-D (loss, area, power) front;
+        // Fig. 4's view of it is the loss×area slice.
+        if r.objective == CostObjective::AreaPower {
+            out.push_str(&projection_section(r, name, 1, "area cm2"));
+        }
     }
     if !avg_red_2pct.is_empty() {
         out.push_str(&format!(
@@ -506,8 +550,15 @@ pub fn fig5(study: &mut Study) -> String {
 /// power source able to drive it.
 pub fn table5(study: &mut Study) -> String {
     let mut rows = Vec::new();
+    let mut projections = String::new();
     for name in study.scale.dataset_names() {
         let r = study.pipeline(name);
+        // Battery operation is a power story: on a joint-objective run,
+        // also print the loss×power slice of the 3-D front the GA
+        // actually selected on.
+        if r.objective == CostObjective::AreaPower {
+            projections.push_str(&projection_section(r, name, 2, "power mW"));
+        }
         let base_hw = r.baseline_hw.as_ref().expect("baseline");
         // The paper's own Table V rows sit at up to ~5.2% loss
         // (Arrhythmia: 0.588 vs baseline 0.620); designs between 5% and
@@ -553,6 +604,7 @@ pub fn table5(study: &mut Study) -> String {
         &rows,
     );
     out.push_str("\n'*' = loss in (5%, 8%] of baseline; '**' = best approximated design (loss above 8%; the synthetic-dataset QAT gap exceeds the budget).\npaper: avg 151x area / 808x power vs [8]; Arrhythmia (1450 params) battery-powered -> 20x larger than SOTA's largest (72 params).\n");
+    out.push_str(&projections);
     out
 }
 
@@ -696,6 +748,31 @@ pub fn ablation_evaluators_recorded(
         format!(
             "== full over {n_full}: {agree_power}; speedup {:.1}x (target >=2x)",
             incrp_rate / fullp_rate
+        ),
+    ]);
+
+    // Joint three-objective (`--objective area+power`) on the same
+    // mutation chain: identical roll-up, one extra axis filled — this
+    // row tracks the const-generic arity generalization's overhead
+    // against the single measured objective (target: < 10%, i.e. the
+    // extra objective is bookkeeping, not re-synthesis). The loss and
+    // power axes must match the dedicated power run exactly.
+    let incrj_ev =
+        crate::runtime::evaluator::CircuitEvaluator::new_joint(qmlp, &qtrain, base);
+    let t0 = std::time::Instant::now();
+    let objs_incrj = evaluate_parallel(&incrj_ev, &chain, 1);
+    let incrj_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+    let agree_joint = objs_incrj
+        .iter()
+        .zip(&objs_incrp)
+        .all(|(j, p)| j[0] == p[0] && j[2] == p[1]);
+    record("circuit/incr/area+power".to_string(), incrj_rate);
+    rows.push(vec![
+        "circuit/incr/area+power".to_string(),
+        format!("{incrj_rate:.1}"),
+        format!(
+            "3-objective; axes == incr/power: {agree_joint}; {:.2}x of incr/power (target >=0.9x)",
+            incrj_rate / incrp_rate
         ),
     ]);
 

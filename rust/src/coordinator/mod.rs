@@ -69,10 +69,11 @@ pub struct PipelineOpts {
     /// incremental cone-local re-synthesis (default) or from-scratch per
     /// chromosome. Classification output is bit-identical either way.
     pub synth: SynthMode,
-    /// Cost axis of the GA (`--objective`): the FA surrogate (default —
+    /// Cost axes of the GA (`--objective`): the FA surrogate (default —
     /// unit-compatible across all backends), or, with the circuit
-    /// backend only, measured EGFET area/power of each chromosome's
-    /// synthesized survivor.
+    /// backend only, measured EGFET area and/or power of each
+    /// chromosome's synthesized survivor (`area+power` runs the joint
+    /// three-objective front).
     pub objective: CostObjective,
     /// Worker threads of the GA evaluation fan-out (`--jobs`); `0` =
     /// auto (env `PMLP_JOBS`, else the machine's parallelism). Results
@@ -104,6 +105,52 @@ impl Default for PipelineOpts {
     }
 }
 
+/// One Pareto-front member with the GA's const-generic objective arity
+/// erased to a runtime-length vector: `objs[0]` is the accuracy loss,
+/// `objs[1..]` the cost axes in [`PipelineResult::objective`]'s units —
+/// one axis for `fa|area|power`, `[area_cm2, power_mw]` for the joint
+/// `area+power` mode. The GA core stays `[f64; M]`-typed; the erasure
+/// happens only at this reporting boundary, so one `PipelineResult`
+/// type carries fronts of any arity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontPoint {
+    pub genome: BitVec,
+    pub objs: Vec<f64>,
+}
+
+impl FrontPoint {
+    /// Erase a typed GA individual's objective array.
+    fn from_individual<const M: usize>(ind: &ga::Individual<M>) -> FrontPoint {
+        FrontPoint { genome: ind.genome.clone(), objs: ind.objs.to_vec() }
+    }
+}
+
+/// Erase a whole typed front/population.
+fn erase_front<const M: usize>(inds: &[ga::Individual<M>]) -> Vec<FrontPoint> {
+    inds.iter().map(FrontPoint::from_individual).collect()
+}
+
+/// Run the circuit-backend GA at arity `M` and erase the result:
+/// `(front, population, exact_genome_objs)`. One definition for every
+/// objective arity, so the run/score/erase flow can never diverge
+/// between the joint and single-cost modes; the exact genome is scored
+/// through the same evaluator so the coordinator's zero-approximation
+/// fallback carries the active objective's units.
+fn run_circuit_ga<const M: usize>(
+    ev: &CircuitEvaluator<M>,
+    spec: crate::config::GaSpec,
+    genome_len: usize,
+    seeds: Vec<BitVec>,
+    jobs: usize,
+    exact: &BitVec,
+    log_hist: &dyn Fn(usize, &[(f64, f64)]),
+) -> (Vec<FrontPoint>, Vec<FrontPoint>, Vec<f64>) {
+    let ga = Nsga2::new(spec, genome_len, ev).with_seeds(seeds).with_jobs(jobs);
+    let result = ga.run(|g, snap| log_hist(g, &snap.history));
+    let exact_objs = ga::evaluate_parallel(ev, std::slice::from_ref(exact), 1)[0];
+    (erase_front(&result.front), erase_front(&result.population), exact_objs.to_vec())
+}
+
 /// A fully analyzed final design.
 #[derive(Clone, Debug)]
 pub struct FinalDesign {
@@ -117,9 +164,10 @@ pub struct FinalDesign {
     /// FA-surrogate estimate (recomputed for every design, whatever the
     /// GA's cost objective was — keeps reports backend-comparable).
     pub area_fa: u64,
-    /// The GA's cost objective value for this design, in the units of
-    /// [`PipelineResult::objective`] (FA count, cm², or mW).
-    pub cost: f64,
+    /// The design's full GA objective vector (`objs[0]` = train
+    /// accuracy loss, `objs[1..]` = cost axes in
+    /// [`PipelineResult::objective`]'s units — FA count, cm² and/or mW).
+    pub objs: Vec<f64>,
     pub argmax_plan: ArgmaxPlan,
     /// Synthesized hardware without the argmax approximation (exact
     /// comparator tree) — Table IV's reference point.
@@ -141,13 +189,14 @@ pub struct PipelineResult {
     pub baseline_hw: Option<HwReport>,
     /// QAT-only (po2 + QRelu, exact accumulation/argmax) hardware (1 V).
     pub qat_hw: HwReport,
-    /// GA Pareto front as (accuracy-loss vs QAT train, cost) — the cost
-    /// axis is in `objective`'s units.
-    pub front: Vec<ga::Individual>,
+    /// GA Pareto front as (accuracy-loss vs QAT train, cost axes) — the
+    /// cost axes are in `objective`'s units; arity-erased
+    /// ([`FrontPoint`]), 3-D for the joint `area+power` objective.
+    pub front: Vec<FrontPoint>,
     pub designs: Vec<FinalDesign>,
     /// Which evaluator actually ran.
     pub backend_used: &'static str,
-    /// Which cost objective the GA minimized.
+    /// Which cost objective(s) the GA minimized.
     pub objective: CostObjective,
 }
 
@@ -268,11 +317,14 @@ impl Pipeline {
         let depths1: Vec<u8> = vec![t / 2, t, t.saturating_add(2), t.saturating_add(4)];
         let depths2: Vec<u8> = vec![0, 2, 4, 6];
         let seeds = crate::accum::truncation_seeds(&map, &depths1, &depths2);
-        let log_gen = |generation: usize, snap: &ga::GaResult| {
-            if self.opts.verbose {
-                let (b2, b5) = snap.history.last().copied().unwrap_or((0.0, 0.0));
+        // One generation logger shared by every arity — the history pair
+        // is (best cost@2%, best cost@5%) regardless of M.
+        let verbose = self.opts.verbose;
+        let log_hist = |generation: usize, history: &[(f64, f64)]| {
+            if verbose {
+                let (b2, b5) = history.last().copied().unwrap_or((0.0, 0.0));
                 eprintln!(
-                    "[{name}] gen {generation}: best area @2% loss = {b2:.0} FA, @5% = {b5:.0} FA"
+                    "[{name}] gen {generation}: best cost @2% loss = {b2:.4}, @5% = {b5:.4}"
                 );
             }
         };
@@ -287,35 +339,65 @@ impl Pipeline {
             // GA fans each generation across `jobs` workers, each owning
             // its own synthesis arena + wave cache — including the
             // measured-objective census/toggle state, so `--objective
-            // area|power` stays bit-identical across widths.
-            let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train)
-                .with_mode(self.opts.synth)
-                .with_objective(self.opts.objective);
-            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
-                .with_seeds(seeds.clone())
-                .with_jobs(jobs);
-            let result = ga.run(log_gen);
-            // Score the exact genome through the same evaluator so the
+            // area|power|area+power` stays bit-identical across widths.
+            // The joint objective instantiates the const-generic GA at
+            // arity 3 ([loss, area, power]); everything else at 2. The
+            // exact genome is scored through the same evaluator so the
             // zero-approximation fallback injected below carries the
-            // active objective's units (FA, cm² or mW).
-            let exact_objs =
-                ga::evaluate_parallel(&ev, std::slice::from_ref(&exact), 1)[0];
-            (result.front, result.population, "circuit", exact_objs)
+            // active objective's units (FA, cm² and/or mW).
+            let (front, population, exact_objs) =
+                if self.opts.objective == CostObjective::AreaPower {
+                    let ev = CircuitEvaluator::new_joint(qmlp, &qtrain, base_acc_train)
+                        .with_mode(self.opts.synth);
+                    run_circuit_ga(
+                        &ev,
+                        cfg.ga.clone(),
+                        map.len(),
+                        seeds.clone(),
+                        jobs,
+                        &exact,
+                        &log_hist,
+                    )
+                } else {
+                    let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train)
+                        .with_mode(self.opts.synth)
+                        .with_objective(self.opts.objective);
+                    run_circuit_ga(
+                        &ev,
+                        cfg.ga.clone(),
+                        map.len(),
+                        seeds.clone(),
+                        jobs,
+                        &exact,
+                        &log_hist,
+                    )
+                };
+            (front, population, "circuit", exact_objs)
         } else if have_artifact {
             let rt = runtime.as_ref().unwrap();
             let ev = PjrtEvaluator::new(rt, &cfg.dataset.name, qmlp, &qtrain, base_acc_train)?;
-            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
+            let ga = Nsga2::<2>::new(cfg.ga.clone(), map.len(), &ev)
                 .with_seeds(seeds.clone())
                 .with_jobs(jobs);
-            let result = ga.run(log_gen);
-            (result.front, result.population, "pjrt", [0.0, exact_fa])
+            let result = ga.run(|g, snap| log_hist(g, &snap.history));
+            (
+                erase_front(&result.front),
+                erase_front(&result.population),
+                "pjrt",
+                vec![0.0, exact_fa],
+            )
         } else {
             let ev = NativeEvaluator::new(qmlp, &qtrain, base_acc_train);
-            let ga = Nsga2::new(cfg.ga.clone(), map.len(), &ev)
+            let ga = Nsga2::<2>::new(cfg.ga.clone(), map.len(), &ev)
                 .with_seeds(seeds.clone())
                 .with_jobs(jobs);
-            let result = ga.run(log_gen);
-            (result.front, result.population, "native", [0.0, exact_fa])
+            let result = ga.run(|g, snap| log_hist(g, &snap.history));
+            (
+                erase_front(&result.front),
+                erase_front(&result.population),
+                "native",
+                vec![0.0, exact_fa],
+            )
         };
         log(&format!(
             "GA: front size {} (population {})",
@@ -329,7 +411,7 @@ impl Pipeline {
         // zero-approximation fallback so a <=5%-vs-baseline design exists
         // whenever QAT itself is within budget.
         if !selected.iter().any(|i| i.genome == exact) {
-            selected.push(ga::Individual { genome: exact, objs: exact_objs });
+            selected.push(FrontPoint { genome: exact, objs: exact_objs });
         }
         let area_model = crate::area::AreaModel::new(&map);
         let mut designs = Vec::new();
@@ -376,7 +458,7 @@ impl Pipeline {
                 acc_test_full,
                 acc_train: base_acc_train - ind.objs[0],
                 area_fa: area_model.estimate(&ind.genome),
-                cost: ind.objs[1],
+                objs: ind.objs.clone(),
                 argmax_plan: plan,
                 hw_exact_argmax,
                 hw_full,
@@ -401,12 +483,13 @@ impl Pipeline {
 }
 
 /// Pick a spread of designs along the front for hardware synthesis:
-/// always the best-area feasible point, plus evenly spaced others.
-fn select_designs(front: &[ga::Individual], max_points: usize) -> Vec<ga::Individual> {
+/// always the best-primary-cost feasible point, plus evenly spaced
+/// others (spread along objective 1 whatever the front's arity).
+fn select_designs(front: &[FrontPoint], max_points: usize) -> Vec<FrontPoint> {
     if front.is_empty() {
         return Vec::new();
     }
-    let mut sorted: Vec<ga::Individual> = front.to_vec();
+    let mut sorted: Vec<FrontPoint> = front.to_vec();
     sorted.sort_by(|a, b| a.objs[1].partial_cmp(&b.objs[1]).unwrap());
     if sorted.len() <= max_points {
         return sorted;
@@ -464,9 +547,9 @@ mod tests {
 
     #[test]
     fn select_designs_spreads() {
-        let mk = |a: f64, ar: f64| ga::Individual {
+        let mk = |a: f64, ar: f64| FrontPoint {
             genome: crate::util::BitVec::zeros(4),
-            objs: [a, ar],
+            objs: vec![a, ar],
         };
         let front: Vec<_> = (0..10).map(|i| mk(i as f64 * 0.01, 100.0 - i as f64)).collect();
         let sel = select_designs(&front, 3);

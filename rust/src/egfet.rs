@@ -106,8 +106,8 @@ impl Library {
     }
 }
 
-/// Which cost the GA's second objective minimizes
-/// (`pmlp run --objective fa|area|power`).
+/// Which cost(s) the GA minimizes next to the accuracy loss
+/// (`pmlp run --objective fa|area|power|area+power`).
 ///
 /// `fa` is the paper's full-adder surrogate ([`crate::area::AreaModel`]) —
 /// the default, and the only choice the native/PJRT backends support
@@ -118,6 +118,9 @@ impl Library {
 /// ([`analyze_histogram`]) instead of the surrogate — area in cm², or
 /// dynamic power in mW under the train-set stimulus's measured toggle
 /// activity (the quantity the paper's NSGA-II actually selects on).
+/// `area+power` is the joint mode: both measured axes at once, from the
+/// same single roll-up, driving a three-objective
+/// (loss, area, power) NSGA-II front ([`crate::ga::Nsga2`] at `M = 3`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CostObjective {
     /// Full-adder surrogate count (unitless; backend-portable).
@@ -127,6 +130,9 @@ pub enum CostObjective {
     /// Measured power of the synthesized survivor, mW, with the dynamic
     /// share scaled by wave-measured toggle activity.
     Power,
+    /// Joint measured area *and* power — both axes of one
+    /// [`analyze_histogram`] roll-up, optimized as a 3-D Pareto front.
+    AreaPower,
 }
 
 impl CostObjective {
@@ -135,6 +141,7 @@ impl CostObjective {
             "fa" => Some(CostObjective::Fa),
             "area" => Some(CostObjective::Area),
             "power" => Some(CostObjective::Power),
+            "area+power" => Some(CostObjective::AreaPower),
             _ => None,
         }
     }
@@ -144,6 +151,7 @@ impl CostObjective {
             CostObjective::Fa => "fa",
             CostObjective::Area => "area",
             CostObjective::Power => "power",
+            CostObjective::AreaPower => "area+power",
         }
     }
 
@@ -151,6 +159,22 @@ impl CostObjective {
     /// (which only the circuit backend can provide).
     pub fn is_measured(&self) -> bool {
         !matches!(self, CostObjective::Fa)
+    }
+
+    /// Total GA objective arity: the accuracy-loss axis plus this
+    /// objective's cost axes. This is the `M` the const-generic
+    /// [`crate::ga::Nsga2`] must be instantiated with.
+    pub fn arity(&self) -> usize {
+        match self {
+            CostObjective::AreaPower => 3,
+            _ => 2,
+        }
+    }
+
+    /// True when scoring needs a toggle-activity factor (any objective
+    /// with a power axis; area is activity-independent).
+    pub fn needs_activity(&self) -> bool {
+        matches!(self, CostObjective::Power | CostObjective::AreaPower)
     }
 }
 
@@ -464,11 +488,28 @@ mod tests {
         assert_eq!(CostObjective::parse("fa"), Some(CostObjective::Fa));
         assert_eq!(CostObjective::parse("AREA"), Some(CostObjective::Area));
         assert_eq!(CostObjective::parse("power"), Some(CostObjective::Power));
+        assert_eq!(CostObjective::parse("area+power"), Some(CostObjective::AreaPower));
+        assert_eq!(CostObjective::parse("Area+Power"), Some(CostObjective::AreaPower));
         assert_eq!(CostObjective::parse("watts"), None);
+        assert_eq!(CostObjective::parse("power+area"), None);
         assert!(!CostObjective::Fa.is_measured());
         assert!(CostObjective::Area.is_measured());
         assert!(CostObjective::Power.is_measured());
+        assert!(CostObjective::AreaPower.is_measured());
         assert_eq!(CostObjective::Power.label(), "power");
+        assert_eq!(CostObjective::AreaPower.label(), "area+power");
+    }
+
+    #[test]
+    fn cost_objective_arity_and_activity() {
+        for o in [CostObjective::Fa, CostObjective::Area, CostObjective::Power] {
+            assert_eq!(o.arity(), 2, "{o:?}");
+        }
+        assert_eq!(CostObjective::AreaPower.arity(), 3);
+        assert!(!CostObjective::Fa.needs_activity());
+        assert!(!CostObjective::Area.needs_activity());
+        assert!(CostObjective::Power.needs_activity());
+        assert!(CostObjective::AreaPower.needs_activity());
     }
 
     #[test]

@@ -1,20 +1,31 @@
 //! NSGA-II multi-objective genetic optimizer (paper §III-D1).
 //!
 //! Optimizes accumulation-approximation chromosomes (bit vectors over all
-//! summand bits) against two objectives, both minimized:
+//! summand bits) against `M` objectives, all minimized. The whole core —
+//! evaluation traits, non-dominated sorting, constrained domination,
+//! crowding distance and the environmental-selection loop — is
+//! const-generic over the objective arity `M` (default 2, the paper's
+//! accuracy/area pair), so any future cost axis (delay, energy) drops in
+//! without touching the algorithm:
 //!
-//! 1. classification accuracy *loss* w.r.t. the QAT model (train set);
-//! 2. a hardware cost: by default the full-adder area surrogate
-//!    ([`crate::area::AreaModel`]); the circuit-in-the-loop backend can
-//!    swap in *measured* EGFET area or dynamic power of each
-//!    chromosome's synthesized survivor
-//!    (`--objective fa|area|power`, [`crate::egfet::CostObjective`]).
+//! * objective 0 is always the classification accuracy *loss* w.r.t. the
+//!   QAT model (train set) — the accuracy-bound constraint applies to it;
+//! * objectives 1.. are hardware costs: by default the full-adder area
+//!   surrogate ([`crate::area::AreaModel`]); the circuit-in-the-loop
+//!   backend can swap in *measured* EGFET area and/or dynamic power of
+//!   each chromosome's synthesized survivor (`--objective
+//!   fa|area|power|area+power`, [`crate::egfet::CostObjective`] — the
+//!   joint `area+power` mode runs a three-objective front).
 //!
 //! Per the paper: the initial population is biased toward
 //! non-approximated bits, candidates whose accuracy loss exceeds 15% are
 //! discouraged (constrained domination à la Deb), random bit-flip
 //! mutation and uniform crossover traverse the space, and the outcome is
-//! the non-dominated accuracy/area front.
+//! the non-dominated accuracy/cost front. All M-generic routines are
+//! pinned against a naive brute-force oracle at M=2 and M=3
+//! (`rust/tests/nsga_oracle.rs`) and the M=2 instantiation is pinned
+//! bit-identical to the pre-generalization two-objective implementation
+//! (`rust/tests/nsga_backcompat.rs`).
 
 use crate::config::GaSpec;
 use crate::util::{threads, BitVec, Rng};
@@ -30,11 +41,11 @@ use std::collections::HashMap;
 /// never change it. That contract is what makes the parallel fan-out
 /// bit-identical to serial evaluation (pinned by
 /// `rust/tests/ga_determinism.rs`).
-pub trait EvalWorker {
-    /// Score one genome as `[accuracy_loss, cost]` (both minimized; the
-    /// cost axis is the backend's configured objective — FA surrogate by
-    /// default).
-    fn eval_one(&mut self, genome: &BitVec) -> [f64; 2];
+pub trait EvalWorker<const M: usize = 2> {
+    /// Score one genome as `[accuracy_loss, cost, ...]` (all minimized;
+    /// axis 0 is the loss the constraint applies to, axes 1.. are the
+    /// backend's configured cost objectives — FA surrogate by default).
+    fn eval_one(&mut self, genome: &BitVec) -> [f64; M];
 }
 
 /// Chromosome evaluator: shared read-only state (`Sync`) plus a factory
@@ -48,25 +59,25 @@ pub trait EvalWorker {
 /// ([`evaluate_parallel`]); each worker evaluates genomes through its
 /// own [`EvalWorker`], and results are reduced back in genome order, so
 /// the outcome is independent of scheduling.
-pub trait Evaluator: Sync {
+pub trait Evaluator<const M: usize = 2>: Sync {
     /// Create one worker's scratch evaluator (borrowing the shared
     /// state). Called once per worker thread per evaluated batch.
-    fn worker(&self) -> Box<dyn EvalWorker + '_>;
+    fn worker(&self) -> Box<dyn EvalWorker<M> + '_>;
 
     /// Optional whole-batch fast path. Backends whose parallelism lives
     /// elsewhere (the PJRT evaluator dispatches population tiles to XLA)
     /// return `Some`; everyone else inherits `None` and takes the
     /// worker fan-out.
-    fn evaluate_batch(&self, genomes: &[BitVec]) -> Option<Vec<[f64; 2]>> {
+    fn evaluate_batch(&self, genomes: &[BitVec]) -> Option<Vec<[f64; M]>> {
         let _ = genomes;
         None
     }
 
-    /// Evaluate a batch of genomes (one `[f64; 2]` per input), fanning
+    /// Evaluate a batch of genomes (one `[f64; M]` per input), fanning
     /// out over the default worker count. Convenience surface for tests
     /// and benches; [`Nsga2`] calls [`evaluate_parallel`] with its
     /// configured `jobs` instead.
-    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; 2]> {
+    fn evaluate(&self, genomes: &[BitVec]) -> Vec<[f64; M]> {
         evaluate_parallel(self, genomes, threads::default_jobs())
     }
 }
@@ -80,11 +91,11 @@ pub trait Evaluator: Sync {
 /// claimed off an atomic cursor but written back by index, dedup follows
 /// first-occurrence order, and `EvalWorker::eval_one` is pure per genome
 /// (see the trait contract).
-pub fn evaluate_parallel<E: Evaluator + ?Sized>(
+pub fn evaluate_parallel<const M: usize, E: Evaluator<M> + ?Sized>(
     ev: &E,
     genomes: &[BitVec],
     jobs: usize,
-) -> Vec<[f64; 2]> {
+) -> Vec<[f64; M]> {
     if let Some(objs) = ev.evaluate_batch(genomes) {
         assert_eq!(objs.len(), genomes.len(), "evaluator returned wrong arity");
         return objs;
@@ -112,29 +123,30 @@ pub fn evaluate_parallel<E: Evaluator + ?Sized>(
 
 /// One individual of the population.
 #[derive(Clone, Debug)]
-pub struct Individual {
+pub struct Individual<const M: usize = 2> {
     pub genome: BitVec,
-    /// `[accuracy_loss, area]`, minimized.
-    pub objs: [f64; 2],
+    /// `[accuracy_loss, cost, ...]`, all minimized.
+    pub objs: [f64; M],
 }
 
 /// Result of a GA run.
 #[derive(Clone, Debug)]
-pub struct GaResult {
+pub struct GaResult<const M: usize = 2> {
     /// Final population (rank-sorted).
-    pub population: Vec<Individual>,
+    pub population: Vec<Individual<M>>,
     /// Non-dominated feasible front.
-    pub front: Vec<Individual>,
-    /// Objective history: per generation, best feasible area at <=2% and
-    /// <=5% accuracy loss (for convergence logging).
+    pub front: Vec<Individual<M>>,
+    /// Objective history: per generation, best feasible primary cost
+    /// (objective 1) at <=2% and <=5% accuracy loss (for convergence
+    /// logging; arity-independent on purpose so logs stay comparable).
     pub history: Vec<(f64, f64)>,
 }
 
 /// Non-dominated sorting: returns the front index of every individual
 /// (0 = best front). Uses the constrained-domination rule with the
-/// accuracy-loss bound: feasible dominates infeasible; among infeasible,
-/// lower violation dominates.
-pub fn non_dominated_sort(objs: &[[f64; 2]], bound: f64) -> Vec<usize> {
+/// accuracy-loss bound on objective 0: feasible dominates infeasible;
+/// among infeasible, lower violation dominates.
+pub fn non_dominated_sort<const M: usize>(objs: &[[f64; M]], bound: f64) -> Vec<usize> {
     let n = objs.len();
     let mut dominated_by = vec![0usize; n];
     let mut dominates: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -170,8 +182,9 @@ pub fn non_dominated_sort(objs: &[[f64; 2]], bound: f64) -> Vec<usize> {
     rank
 }
 
-/// Deb's constrained-domination: feasibility first, Pareto second.
-fn dominates_constrained(a: &[f64; 2], b: &[f64; 2], bound: f64) -> bool {
+/// Deb's constrained-domination: feasibility first (violation of the
+/// accuracy bound on objective 0), Pareto second.
+pub fn dominates_constrained<const M: usize>(a: &[f64; M], b: &[f64; M], bound: f64) -> bool {
     let va = (a[0] - bound).max(0.0);
     let vb = (b[0] - bound).max(0.0);
     if va == 0.0 && vb > 0.0 {
@@ -186,19 +199,31 @@ fn dominates_constrained(a: &[f64; 2], b: &[f64; 2], bound: f64) -> bool {
     dominates(a, b)
 }
 
-/// Plain Pareto dominance (both objectives minimized).
-pub fn dominates(a: &[f64; 2], b: &[f64; 2]) -> bool {
-    (a[0] <= b[0] && a[1] <= b[1]) && (a[0] < b[0] || a[1] < b[1])
+/// Plain Pareto dominance (all objectives minimized): no axis worse,
+/// at least one strictly better.
+pub fn dominates<const M: usize>(a: &[f64; M], b: &[f64; M]) -> bool {
+    let mut strictly_better = false;
+    for k in 0..M {
+        if a[k] > b[k] {
+            return false;
+        }
+        if a[k] < b[k] {
+            strictly_better = true;
+        }
+    }
+    strictly_better
 }
 
-/// Crowding distance within one front (NSGA-II diversity measure).
-pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
+/// Crowding distance within one front (NSGA-II diversity measure):
+/// per-objective span-normalized nearest-neighbor gaps, summed over all
+/// M axes; extreme points of every axis get infinite distance.
+pub fn crowding_distance<const M: usize>(objs: &[[f64; M]], front: &[usize]) -> Vec<f64> {
     let m = front.len();
     let mut dist = vec![0.0f64; m];
     if m <= 2 {
         return vec![f64::INFINITY; m];
     }
-    for obj in 0..2 {
+    for obj in 0..M {
         let mut order: Vec<usize> = (0..m).collect();
         order.sort_by(|&a, &b| {
             objs[front[a]][obj].partial_cmp(&objs[front[b]][obj]).unwrap()
@@ -219,8 +244,8 @@ pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
 }
 
 /// Extract the feasible non-dominated front from a set of individuals.
-pub fn pareto_front(pop: &[Individual], bound: f64) -> Vec<Individual> {
-    let mut front: Vec<Individual> = Vec::new();
+pub fn pareto_front<const M: usize>(pop: &[Individual<M>], bound: f64) -> Vec<Individual<M>> {
+    let mut front: Vec<Individual<M>> = Vec::new();
     for ind in pop {
         if ind.objs[0] > bound {
             continue;
@@ -238,11 +263,12 @@ pub fn pareto_front(pop: &[Individual], bound: f64) -> Vec<Individual> {
     front
 }
 
-/// The optimizer.
-pub struct Nsga2<'a> {
+/// The optimizer, const-generic over objective arity `M` (objective 0
+/// is always the constrained accuracy loss).
+pub struct Nsga2<'a, const M: usize = 2> {
     pub spec: GaSpec,
     pub genome_len: usize,
-    pub evaluator: &'a dyn Evaluator,
+    pub evaluator: &'a dyn Evaluator<M>,
     /// Worker threads of the evaluation fan-out; `0` = auto
     /// ([`threads::default_jobs`]). Any value yields bit-identical
     /// results — jobs only sets how wide each generation evaluates.
@@ -252,8 +278,8 @@ pub struct Nsga2<'a> {
     pub seeds: Vec<BitVec>,
 }
 
-impl<'a> Nsga2<'a> {
-    pub fn new(spec: GaSpec, genome_len: usize, evaluator: &'a dyn Evaluator) -> Self {
+impl<'a, const M: usize> Nsga2<'a, M> {
+    pub fn new(spec: GaSpec, genome_len: usize, evaluator: &'a dyn Evaluator<M>) -> Self {
         Nsga2 { spec, genome_len, evaluator, jobs: 0, seeds: Vec::new() }
     }
 
@@ -278,7 +304,7 @@ impl<'a> Nsga2<'a> {
     }
 
     /// Run the optimization; `log` receives one line per generation.
-    pub fn run(&self, mut log: impl FnMut(usize, &GaResult)) -> GaResult {
+    pub fn run(&self, mut log: impl FnMut(usize, &GaResult<M>)) -> GaResult<M> {
         let mut rng = Rng::new(self.spec.seed ^ 0x4E53_4741);
         let pop_size = self.spec.population.max(4);
 
@@ -305,7 +331,7 @@ impl<'a> Nsga2<'a> {
         }
         let jobs = self.resolved_jobs();
         let objs = evaluate_parallel(self.evaluator, &genomes, jobs);
-        let mut pop: Vec<Individual> = genomes
+        let mut pop: Vec<Individual<M>> = genomes
             .into_iter()
             .zip(objs)
             .map(|(genome, objs)| Individual { genome, objs })
@@ -336,7 +362,7 @@ impl<'a> Nsga2<'a> {
                 }
             }
             let off_objs = evaluate_parallel(self.evaluator, &offspring_genomes, jobs);
-            let offspring: Vec<Individual> = offspring_genomes
+            let offspring: Vec<Individual<M>> = offspring_genomes
                 .into_iter()
                 .zip(off_objs)
                 .map(|(genome, objs)| Individual { genome, objs })
@@ -363,8 +389,8 @@ impl<'a> Nsga2<'a> {
     }
 }
 
-fn full_crowding(pop: &[Individual], ranks: &[usize]) -> Vec<f64> {
-    let objs: Vec<[f64; 2]> = pop.iter().map(|i| i.objs).collect();
+fn full_crowding<const M: usize>(pop: &[Individual<M>], ranks: &[usize]) -> Vec<f64> {
+    let objs: Vec<[f64; M]> = pop.iter().map(|i| i.objs).collect();
     let max_rank = ranks.iter().copied().max().unwrap_or(0);
     let mut crowd = vec![0.0; pop.len()];
     for r in 0..=max_rank {
@@ -417,11 +443,15 @@ fn mutate(rng: &mut Rng, g: &mut BitVec, rate: f64) {
 
 /// NSGA-II environmental selection: fill by fronts, break the last front
 /// by crowding distance.
-fn select(pop: Vec<Individual>, target: usize, bound: f64) -> Vec<Individual> {
-    let objs: Vec<[f64; 2]> = pop.iter().map(|i| i.objs).collect();
+fn select<const M: usize>(
+    pop: Vec<Individual<M>>,
+    target: usize,
+    bound: f64,
+) -> Vec<Individual<M>> {
+    let objs: Vec<[f64; M]> = pop.iter().map(|i| i.objs).collect();
     let ranks = non_dominated_sort(&objs, bound);
     let max_rank = ranks.iter().copied().max().unwrap_or(0);
-    let mut out: Vec<Individual> = Vec::with_capacity(target);
+    let mut out: Vec<Individual<M>> = Vec::with_capacity(target);
     for r in 0..=max_rank {
         let front: Vec<usize> = (0..pop.len()).filter(|&i| ranks[i] == r).collect();
         if out.len() + front.len() <= target {
@@ -444,8 +474,9 @@ fn select(pop: Vec<Individual>, target: usize, bound: f64) -> Vec<Individual> {
     out
 }
 
-/// Smallest area among individuals with accuracy loss <= `loss`.
-pub fn best_area_at(pop: &[Individual], loss: f64) -> f64 {
+/// Smallest primary cost (objective 1) among individuals with accuracy
+/// loss <= `loss`.
+pub fn best_area_at<const M: usize>(pop: &[Individual<M>], loss: f64) -> f64 {
     pop.iter()
         .filter(|i| i.objs[0] <= loss)
         .map(|i| i.objs[1])
@@ -496,7 +527,7 @@ mod tests {
     #[test]
     fn toy_converges_to_second_half_removal() {
         let toy = Toy { len: 40 };
-        let ga = Nsga2::new(spec(), 40, &toy);
+        let ga: Nsga2<2> = Nsga2::new(spec(), 40, &toy);
         let result = ga.run(|_, _| {});
         // Expect a zero-loss solution with area close to 20 (only first
         // half kept).
@@ -514,7 +545,7 @@ mod tests {
     #[test]
     fn front_is_mutually_non_dominating() {
         let toy = Toy { len: 30 };
-        let ga = Nsga2::new(spec(), 30, &toy);
+        let ga: Nsga2<2> = Nsga2::new(spec(), 30, &toy);
         let result = ga.run(|_, _| {});
         for a in &result.front {
             for b in &result.front {
@@ -532,7 +563,7 @@ mod tests {
     #[test]
     fn respects_accuracy_bound_in_front() {
         let toy = Toy { len: 30 };
-        let ga = Nsga2::new(spec(), 30, &toy);
+        let ga: Nsga2<2> = Nsga2::new(spec(), 30, &toy);
         let result = ga.run(|_, _| {});
         for ind in &result.front {
             assert!(ind.objs[0] <= 0.15 + 1e-12);
@@ -593,7 +624,7 @@ mod tests {
     fn history_tracks_generations() {
         let toy = Toy { len: 20 };
         let mut gens_seen = 0;
-        let ga = Nsga2::new(spec(), 20, &toy);
+        let ga: Nsga2<2> = Nsga2::new(spec(), 20, &toy);
         let result = ga.run(|g, _| {
             gens_seen = g + 1;
         });
@@ -604,8 +635,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let toy = Toy { len: 24 };
-        let r1 = Nsga2::new(spec(), 24, &toy).run(|_, _| {});
-        let r2 = Nsga2::new(spec(), 24, &toy).run(|_, _| {});
+        let r1 = Nsga2::<2>::new(spec(), 24, &toy).run(|_, _| {});
+        let r2 = Nsga2::<2>::new(spec(), 24, &toy).run(|_, _| {});
         let o1: Vec<[f64; 2]> = r1.front.iter().map(|i| i.objs).collect();
         let o2: Vec<[f64; 2]> = r2.front.iter().map(|i| i.objs).collect();
         assert_eq!(o1, o2);
@@ -693,10 +724,10 @@ mod tests {
         let toy = Toy { len: 30 };
         let mut log1 = Vec::new();
         let mut log8 = Vec::new();
-        let r1 = Nsga2::new(spec(), 30, &toy).with_jobs(1).run(|g, snap| {
+        let r1 = Nsga2::<2>::new(spec(), 30, &toy).with_jobs(1).run(|g, snap| {
             log1.push((g, snap.history.clone()));
         });
-        let r8 = Nsga2::new(spec(), 30, &toy).with_jobs(8).run(|g, snap| {
+        let r8 = Nsga2::<2>::new(spec(), 30, &toy).with_jobs(8).run(|g, snap| {
             log8.push((g, snap.history.clone()));
         });
         assert_eq!(log1, log8);

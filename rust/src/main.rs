@@ -82,7 +82,8 @@ impl Args {
 
     fn objective(&self) -> Result<CostObjective> {
         let s = self.get("objective").unwrap_or("fa");
-        CostObjective::parse(s).ok_or_else(|| anyhow!("bad --objective '{s}' (fa|area|power)"))
+        CostObjective::parse(s)
+            .ok_or_else(|| anyhow!("bad --objective '{s}' (fa|area|power|area+power)"))
     }
 
     fn jobs(&self) -> Result<usize> {
@@ -292,11 +293,14 @@ fn run() -> Result<()> {
                  --synth incremental|full selects template cone-local re-synthesis\n                            \
                  [default, same bits, re-synth cost scales with mutation size]\n                            \
                  or from-scratch synthesis per chromosome;\n                            \
-                 --objective fa|area|power selects the GA's cost axis: the\n                            \
-                 full-adder surrogate [default, backend-portable] or — circuit\n                            \
-                 backend only — measured EGFET cell area / dynamic power of\n                            \
-                 each chromosome's synthesized survivor (toggle activity\n                            \
-                 measured on the train stimulus, paper's VCS step);\n                            \
+                 --objective fa|area|power|area+power selects the GA's cost\n                            \
+                 axes: the full-adder surrogate [default, backend-portable]\n                            \
+                 or — circuit backend only — measured EGFET cell area /\n                            \
+                 dynamic power of each chromosome's synthesized survivor\n                            \
+                 (toggle activity measured on the train stimulus, paper's\n                            \
+                 VCS step); 'area+power' optimizes both measured axes\n                            \
+                 jointly as a three-objective (loss, area, power) front\n                            \
+                 from the same single synthesis pass;\n                            \
                  --jobs N = GA evaluation worker threads, 0/auto by default —\n                            \
                  each worker owns its own synth arena + wave cache and any\n                            \
                  width produces bit-identical results)\n  \

@@ -57,12 +57,24 @@ pub fn result_to_json(r: &PipelineResult) -> Json {
         .designs
         .iter()
         .map(|d| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("acc_test_accum", Json::num(d.acc_test_accum)),
                 ("acc_test_full", Json::num(d.acc_test_full)),
                 ("acc_train", Json::num(d.acc_train)),
                 ("area_fa", Json::num(d.area_fa as f64)),
-                ("cost", Json::num(d.cost)),
+                // The design's full GA objective vector: [loss, cost...]
+                // — two entries for fa/area/power, three (loss, area,
+                // power) for the joint objective.
+                ("objs", Json::arr(d.objs.iter().map(|&v| Json::num(v)).collect())),
+            ];
+            // "cost" keeps its pre-arity-refactor shape — a scalar — and
+            // therefore only exists on single-cost runs; joint-run
+            // consumers read the unambiguous "objs" vector instead of a
+            // key whose type would have to change under them.
+            if d.objs.len() == 2 {
+                fields.push(("cost", Json::num(d.objs[1])));
+            }
+            fields.extend([
                 ("area_cm2", Json::num(d.hw_full.area_cm2)),
                 ("power_mw", Json::num(d.hw_full.power_mw)),
                 ("delay_ms", Json::num(d.hw_full.delay_ms)),
@@ -75,7 +87,8 @@ pub fn result_to_json(r: &PipelineResult) -> Json {
                 ),
                 ("kept_bits", Json::num(d.genome.count_ones() as f64)),
                 ("genome_len", Json::num(d.genome.len() as f64)),
-            ])
+            ]);
+            Json::obj(fields)
         })
         .collect();
     let mut fields = vec![
@@ -104,10 +117,12 @@ pub fn result_to_json(r: &PipelineResult) -> Json {
         ("designs", Json::arr(designs)),
         (
             "front",
+            // Each member's full objective vector — length 2 for single
+            // cost objectives, 3 for the joint area+power front.
             Json::arr(
                 r.front
                     .iter()
-                    .map(|i| Json::arr(vec![Json::num(i.objs[0]), Json::num(i.objs[1])]))
+                    .map(|i| Json::arr(i.objs.iter().map(|&v| Json::num(v)).collect()))
                     .collect(),
             ),
         ),

@@ -35,11 +35,15 @@
 //! parallel runs bit-identical to serial ones (`--jobs 1` == `--jobs N`,
 //! pinned by `rust/tests/ga_determinism.rs`).
 //!
-//! All return the objective pair `[accuracy_loss, cost]` the NSGA-II
-//! optimizer minimizes (paper §III-D1/D2/D3). The cost axis is the FA
-//! area surrogate by default; the circuit backend can score *measured*
-//! EGFET area or dynamic power of each chromosome's synthesized survivor
-//! instead (`--objective`, [`CostObjective`]).
+//! All return the objective vector `[accuracy_loss, cost, ...]` the
+//! const-generic NSGA-II optimizer minimizes (paper §III-D1/D2/D3). The
+//! native and PJRT evaluators are fixed at arity 2 (loss + FA area
+//! surrogate); [`CircuitEvaluator`] is generic over the objective arity
+//! `M` and can score *measured* EGFET area and/or dynamic power of each
+//! chromosome's synthesized survivor (`--objective`, [`CostObjective`]):
+//! arity 2 for `fa|area|power`, arity 3 for the joint `area+power` mode,
+//! whose `[loss, area, power]` axes all fall out of one incremental
+//! pass.
 
 use crate::accum::GenomeMap;
 use crate::area::AreaModel;
@@ -261,14 +265,14 @@ struct PjrtWorker<'a> {
     ev: &'a PjrtEvaluator,
 }
 
-impl EvalWorker for PjrtWorker<'_> {
+impl EvalWorker<2> for PjrtWorker<'_> {
     fn eval_one(&mut self, genome: &BitVec) -> [f64; 2] {
         self.ev.eval_all(std::slice::from_ref(genome))[0]
     }
 }
 
-impl Evaluator for PjrtEvaluator {
-    fn worker(&self) -> Box<dyn EvalWorker + '_> {
+impl Evaluator<2> for PjrtEvaluator {
+    fn worker(&self) -> Box<dyn EvalWorker<2> + '_> {
         Box::new(PjrtWorker { ev: self })
     }
 
@@ -308,7 +312,7 @@ struct NativeWorker<'a> {
     ev: &'a NativeEvaluator,
 }
 
-impl EvalWorker for NativeWorker<'_> {
+impl EvalWorker<2> for NativeWorker<'_> {
     fn eval_one(&mut self, genome: &BitVec) -> [f64; 2] {
         let ev = self.ev;
         let masks = ev.map.to_masks(genome);
@@ -318,8 +322,8 @@ impl EvalWorker for NativeWorker<'_> {
     }
 }
 
-impl Evaluator for NativeEvaluator {
-    fn worker(&self) -> Box<dyn EvalWorker + '_> {
+impl Evaluator<2> for NativeEvaluator {
+    fn worker(&self) -> Box<dyn EvalWorker<2> + '_> {
         Box::new(NativeWorker { ev: self })
     }
 }
@@ -368,14 +372,26 @@ impl Evaluator for NativeEvaluator {
 /// the **full genome bit vector** — never a truncated hash, which could
 /// silently return another chromosome's fitness on collision. Each cache
 /// hit skips synthesis + simulation entirely.
-pub struct CircuitEvaluator {
+///
+/// The const parameter `M` is the GA objective arity the evaluator
+/// scores at (axis 0 = accuracy loss, axes 1.. = cost). It must match
+/// the configured [`CostObjective`]'s [`CostObjective::arity`] —
+/// enforced at construction, so an evaluator can never hand the
+/// optimizer a half-filled objective vector: [`CircuitEvaluator::new`]
+/// builds the classic two-objective evaluator, and
+/// [`CircuitEvaluator::new_joint`] the three-objective
+/// `[loss, area, power]` one (`--objective area+power`), whose two cost
+/// axes fall out of the *same* [`egfet::analyze_histogram`] roll-up of
+/// the same single incremental pass.
+pub struct CircuitEvaluator<const M: usize = 2> {
     pub mlp: QuantMlp,
     pub map: GenomeMap,
     pub area: AreaModel,
     pub base_acc: f64,
     mode: SynthMode,
-    /// Which cost the second objective reports ([`CostObjective::Fa`] by
-    /// default; fixed for the evaluator's lifetime — the memo caches it).
+    /// Which cost(s) objectives 1.. report ([`CostObjective::Fa`] by
+    /// default; fixed for the evaluator's lifetime — the memo caches it,
+    /// and its arity is pinned to `M` at construction).
     objective: CostObjective,
     /// EGFET corner the measured objectives roll up against.
     lib: Library,
@@ -384,7 +400,7 @@ pub struct CircuitEvaluator {
     batches: Vec<InputWave>,
     labels: Vec<usize>,
     /// Cross-generation fitness memo (full-genome keys).
-    memo: ShardedMap<BitVec, [f64; 2]>,
+    memo: ShardedMap<BitVec, [f64; M]>,
     /// The shared parameterized netlist, built on first incremental use.
     template: OnceLock<Template>,
     /// Parked per-worker incremental states, reused across generations.
@@ -404,9 +420,39 @@ struct IncrState {
 /// genome, and the shared memo survives it.
 const ARENA_GROWTH_LIMIT: usize = 8;
 
-impl CircuitEvaluator {
-    /// Defaults to [`SynthMode::Incremental`]; see [`Self::with_mode`].
-    pub fn new(mlp: &QuantMlp, train: &QuantDataset, base_acc: f64) -> CircuitEvaluator {
+impl CircuitEvaluator<2> {
+    /// The classic two-objective evaluator (loss + one cost axis).
+    /// Defaults to [`SynthMode::Incremental`] and [`CostObjective::Fa`];
+    /// see [`Self::with_mode`] / [`Self::with_objective`].
+    pub fn new(mlp: &QuantMlp, train: &QuantDataset, base_acc: f64) -> CircuitEvaluator<2> {
+        CircuitEvaluator::with_arity(mlp, train, base_acc, CostObjective::Fa)
+    }
+}
+
+impl CircuitEvaluator<3> {
+    /// The joint three-objective evaluator (`--objective area+power`):
+    /// `[loss, area_cm2, power_mw]`, both cost axes measured on the
+    /// synthesized survivor from the same single roll-up.
+    pub fn new_joint(mlp: &QuantMlp, train: &QuantDataset, base_acc: f64) -> CircuitEvaluator<3> {
+        CircuitEvaluator::with_arity(mlp, train, base_acc, CostObjective::AreaPower)
+    }
+}
+
+impl<const M: usize> CircuitEvaluator<M> {
+    /// Shared constructor; the objective's arity must equal `M`.
+    fn with_arity(
+        mlp: &QuantMlp,
+        train: &QuantDataset,
+        base_acc: f64,
+        objective: CostObjective,
+    ) -> CircuitEvaluator<M> {
+        assert_eq!(
+            objective.arity(),
+            M,
+            "objective '{}' scores {} axes, evaluator is arity {M}",
+            objective.label(),
+            objective.arity()
+        );
         let map = GenomeMap::new(mlp);
         let area = AreaModel::new(&map);
         let encoded: Vec<Vec<bool>> = train
@@ -421,7 +467,7 @@ impl CircuitEvaluator {
             area,
             base_acc,
             mode: SynthMode::Incremental,
-            objective: CostObjective::Fa,
+            objective,
             lib: Library::egfet_1v(),
             batches,
             labels: train.y.clone(),
@@ -432,14 +478,23 @@ impl CircuitEvaluator {
     }
 
     /// Select the synthesis strategy (both are bit-identical in output).
-    pub fn with_mode(mut self, mode: SynthMode) -> CircuitEvaluator {
+    pub fn with_mode(mut self, mode: SynthMode) -> CircuitEvaluator<M> {
         self.mode = mode;
         self
     }
 
     /// Select the cost objective (`--objective`). Measured objectives are
-    /// scored at the 1 V evaluation corner.
-    pub fn with_objective(mut self, objective: CostObjective) -> CircuitEvaluator {
+    /// scored at the 1 V evaluation corner. The objective's arity must
+    /// match the evaluator's — `area+power` lives on
+    /// [`CircuitEvaluator::new_joint`]'s arity-3 evaluator only.
+    pub fn with_objective(mut self, objective: CostObjective) -> CircuitEvaluator<M> {
+        assert_eq!(
+            objective.arity(),
+            M,
+            "objective '{}' scores {} axes, evaluator is arity {M}",
+            objective.label(),
+            objective.arity()
+        );
         self.objective = objective;
         self
     }
@@ -477,8 +532,14 @@ impl CircuitEvaluator {
         (self.base_acc - acc).max(0.0)
     }
 
-    fn objectives(&self, genome: &BitVec, acc: f64) -> [f64; 2] {
-        [self.loss_of(acc), self.area.estimate(genome) as f64]
+    /// Pack loss + the FA surrogate into the objective vector (the
+    /// non-measured path; only reachable on arity-2 evaluators — the
+    /// constructor pins `Fa` to `M == 2`).
+    fn objectives(&self, genome: &BitVec, acc: f64) -> [f64; M] {
+        let mut o = [0.0f64; M];
+        o[0] = self.loss_of(acc);
+        o[1..].copy_from_slice(&[self.area.estimate(genome) as f64]);
+        o
     }
 
     fn accuracy_of(&self, preds: &[u64]) -> f64 {
@@ -490,15 +551,15 @@ impl CircuitEvaluator {
         correct as f64 / self.labels.len().max(1) as f64
     }
 
-    /// The measured cost of a survivor given its per-type census, live
-    /// cell ids and the arena-aligned toggle table. The activity ratio is
-    /// formed from the exact integers `sim::toggle_activity` counts
-    /// (total toggles over `cells * (n_vectors - 1)` slots), so the
-    /// result is bit-identical to `analyze_histogram` fed by
+    /// The toggle-activity ratio of a survivor given its live cell ids
+    /// and the arena-aligned toggle table. Formed from the exact
+    /// integers `sim::toggle_activity` counts (total toggles over
+    /// `cells * (n_vectors - 1)` slots), so measured costs are
+    /// bit-identical to `analyze_histogram` fed by
     /// `egfet::measured_activity` of the materialized survivor.
-    fn measured_cost(&self, hist: &CellCounts, live: &[NodeId], toggles: &[u64]) -> f64 {
+    fn toggle_ratio(&self, live: &[NodeId], toggles: &[u64]) -> f64 {
         let n_vec = self.labels.len();
-        let activity = if n_vec < 2 {
+        if n_vec < 2 {
             egfet::NOMINAL_ACTIVITY
         } else if live.is_empty() {
             0.0
@@ -506,18 +567,26 @@ impl CircuitEvaluator {
             let total: u64 = live.iter().map(|&i| toggles[i as usize]).sum();
             let slots = live.len() as u64 * (n_vec as u64 - 1);
             total as f64 / slots as f64
-        };
-        self.cost_of(hist, activity)
+        }
     }
 
-    /// Roll a census + activity up into the configured measured cost.
-    fn cost_of(&self, hist: &CellCounts, activity: f64) -> f64 {
+    /// Roll a census + activity up into the measured objective vector:
+    /// one [`egfet::analyze_histogram`] call yields both area and power,
+    /// and the configured objective selects which of them fill axes 1..
+    /// (both, for the joint `area+power` mode). The slice copies keep
+    /// the packing arity-checked at runtime instead of indexing past a
+    /// narrower `M` (the constructor already pins `M` to the objective).
+    fn measured_objs(&self, loss: f64, hist: &CellCounts, activity: f64) -> [f64; M] {
         let (area_cm2, power_mw) = egfet::analyze_histogram(hist, &self.lib, activity);
+        let mut o = [0.0f64; M];
+        o[0] = loss;
         match self.objective {
-            CostObjective::Area => area_cm2,
-            CostObjective::Power => power_mw,
-            CostObjective::Fa => unreachable!("measured cost with FA objective"),
+            CostObjective::Area => o[1..].copy_from_slice(&[area_cm2]),
+            CostObjective::Power => o[1..].copy_from_slice(&[power_mw]),
+            CostObjective::AreaPower => o[1..].copy_from_slice(&[area_cm2, power_mw]),
+            CostObjective::Fa => unreachable!("measured objectives with FA objective"),
         }
+        o
     }
 
     /// From-scratch scoring: build + optimize the chromosome's netlist
@@ -533,7 +602,7 @@ impl CircuitEvaluator {
     /// cost axis is defined on that survivor; the masked build is only
     /// function-identical, not cell-identical (e.g. dropped biases leave
     /// a folded zero row in the template's CSA trees).
-    fn score_full(&self, genome: &BitVec) -> [f64; 2] {
+    fn score_full(&self, genome: &BitVec) -> [f64; M] {
         if !self.objective.is_measured() {
             let masks = self.map.to_masks(genome);
             let nl = build_mlp_circuit(
@@ -547,15 +616,14 @@ impl CircuitEvaluator {
         let (opt, _) = optimize(&self.template().instantiate(genome));
         let preds = wave::classify(&opt, &self.batches, "class", 1);
         let loss = self.loss_of(self.accuracy_of(&preds));
-        // Area ignores the activity factor entirely, so only the power
-        // objective pays the dedicated toggle-activity simulation.
-        let activity = match self.objective {
-            CostObjective::Power if self.labels.len() >= 2 => {
-                wave::toggle_activity_batches(&opt, &self.batches)
-            }
-            _ => egfet::NOMINAL_ACTIVITY,
+        // Area ignores the activity factor entirely, so only objectives
+        // with a power axis pay the dedicated toggle-activity simulation.
+        let activity = if self.objective.needs_activity() && self.labels.len() >= 2 {
+            wave::toggle_activity_batches(&opt, &self.batches)
+        } else {
+            egfet::NOMINAL_ACTIVITY
         };
-        [loss, self.cost_of(&opt.cell_histogram(), activity)]
+        self.measured_objs(loss, &opt.cell_histogram(), activity)
     }
 }
 
@@ -563,12 +631,12 @@ impl CircuitEvaluator {
 /// leases an [`IncrState`] (arena + wave cache) from the evaluator's
 /// pool on first use and parks it back on drop, so states survive across
 /// generations without being shared between concurrent workers.
-struct CircuitWorker<'a> {
-    ev: &'a CircuitEvaluator,
+struct CircuitWorker<'a, const M: usize> {
+    ev: &'a CircuitEvaluator<M>,
     st: Option<IncrState>,
 }
 
-impl CircuitWorker<'_> {
+impl<const M: usize> CircuitWorker<'_, M> {
     fn state(&mut self) -> &mut IncrState {
         if self.st.is_none() {
             // Lease a parked state; the lock guard drops before the
@@ -593,8 +661,8 @@ impl CircuitWorker<'_> {
     }
 }
 
-impl EvalWorker for CircuitWorker<'_> {
-    fn eval_one(&mut self, genome: &BitVec) -> [f64; 2] {
+impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
+    fn eval_one(&mut self, genome: &BitVec) -> [f64; M] {
         let ev = self.ev;
         if let Some(hit) = ev.memo.get(genome) {
             return hit;
@@ -616,14 +684,11 @@ impl EvalWorker for CircuitWorker<'_> {
                 if ev.objective.is_measured() {
                     // The census fell out of `set_params`' survivor walk
                     // and the toggle totals out of classification — the
-                    // measured cost is a pure roll-up, no extra synthesis
-                    // or simulation.
-                    let cost = ev.measured_cost(
-                        synth.survivor_histogram(),
-                        synth.live_cell_ids(),
-                        wave.node_toggles(),
-                    );
-                    [ev.loss_of(acc), cost]
+                    // measured axes are a pure roll-up, no extra
+                    // synthesis or simulation (the joint area+power mode
+                    // fills both axes from the same call).
+                    let act = ev.toggle_ratio(synth.live_cell_ids(), wave.node_toggles());
+                    ev.measured_objs(ev.loss_of(acc), synth.survivor_histogram(), act)
                 } else {
                     ev.objectives(genome, acc)
                 }
@@ -643,7 +708,7 @@ impl EvalWorker for CircuitWorker<'_> {
     }
 }
 
-impl Drop for CircuitWorker<'_> {
+impl<const M: usize> Drop for CircuitWorker<'_, M> {
     fn drop(&mut self) {
         let Some(st) = self.st.take() else { return };
         // A worker unwinding out of its own panic may hold a
@@ -670,8 +735,8 @@ impl Drop for CircuitWorker<'_> {
     }
 }
 
-impl Evaluator for CircuitEvaluator {
-    fn worker(&self) -> Box<dyn EvalWorker + '_> {
+impl<const M: usize> Evaluator<M> for CircuitEvaluator<M> {
+    fn worker(&self) -> Box<dyn EvalWorker<M> + '_> {
         Box::new(CircuitWorker { ev: self, st: None })
     }
 }
@@ -876,14 +941,14 @@ mod tests {
                 let want = match objective {
                     CostObjective::Area => area_cm2,
                     CostObjective::Power => power_mw,
-                    CostObjective::Fa => unreachable!(),
+                    _ => unreachable!(),
                 };
                 assert_eq!(o[1], want, "{objective:?} cost must be bit-exact");
                 let hw = analyze(&surv, &lib, 200.0, act);
                 let full = match objective {
                     CostObjective::Area => hw.area_cm2,
                     CostObjective::Power => hw.power_mw,
-                    CostObjective::Fa => unreachable!(),
+                    _ => unreachable!(),
                 };
                 assert!(
                     (o[1] - full).abs() <= 1e-9 * full.max(1.0),
@@ -915,6 +980,65 @@ mod tests {
             let parallel = evaluate_parallel(&par_ev, &genomes, 8);
             assert_eq!(serial, parallel, "mode {mode:?}");
         }
+    }
+
+    #[test]
+    fn joint_objective_modes_agree_and_axes_match_single_runs() {
+        // The 3-objective evaluator must (a) be bit-identical between
+        // synthesis modes, and (b) score exactly the axes the dedicated
+        // single-objective evaluators score: objs == [loss, area-run
+        // cost, power-run cost] for every genome — the joint mode is the
+        // same roll-up, just not thrown half away.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(83);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 8);
+        let joint_full = CircuitEvaluator::new_joint(&qmlp, &qtrain, base)
+            .with_mode(SynthMode::Full);
+        let joint_incr = CircuitEvaluator::new_joint(&qmlp, &qtrain, base);
+        assert_eq!(joint_incr.objective(), CostObjective::AreaPower);
+        let a = joint_full.evaluate(&genomes);
+        let b = joint_incr.evaluate(&genomes);
+        assert_eq!(a, b, "joint objective: modes must be bit-identical");
+
+        let area_ev =
+            CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Area);
+        let power_ev =
+            CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Power);
+        let area_objs = area_ev.evaluate(&genomes);
+        let power_objs = power_ev.evaluate(&genomes);
+        for (k, j) in b.iter().enumerate() {
+            assert_eq!(j[0], area_objs[k][0], "genome {k}: loss axis");
+            assert_eq!(j[1], area_objs[k][1], "genome {k}: area axis");
+            assert_eq!(j[2], power_objs[k][1], "genome {k}: power axis");
+        }
+    }
+
+    #[test]
+    fn joint_parallel_matches_serial() {
+        // --jobs determinism at arity 3: the joint census/toggle state
+        // rides the same per-worker lease, so any width is bit-identical
+        // to serial. Fresh evaluators per width (own memo + pool).
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(89);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 12);
+        for mode in [SynthMode::Incremental, SynthMode::Full] {
+            let serial_ev =
+                CircuitEvaluator::new_joint(&qmlp, &qtrain, base).with_mode(mode);
+            let par_ev = CircuitEvaluator::new_joint(&qmlp, &qtrain, base).with_mode(mode);
+            let serial = evaluate_parallel(&serial_ev, &genomes, 1);
+            let parallel = evaluate_parallel(&par_ev, &genomes, 8);
+            assert_eq!(serial, parallel, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "objective 'area+power' scores 3 axes")]
+    fn joint_objective_rejected_on_two_objective_evaluator() {
+        let (qmlp, qtrain, base) = tiny_setup();
+        let _ = CircuitEvaluator::new(&qmlp, &qtrain, base)
+            .with_objective(CostObjective::AreaPower);
     }
 
     #[test]

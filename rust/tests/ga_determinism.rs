@@ -40,23 +40,32 @@ fn ga_spec() -> printed_mlp::config::GaSpec {
 
 /// Everything observable about a run, in comparable form: the final
 /// population and front (genome bits + objectives), the history, and
-/// the log stream the generation callback saw.
-type RunFingerprint = (
-    Vec<(Vec<bool>, [f64; 2])>,
-    Vec<(Vec<bool>, [f64; 2])>,
+/// the log stream the generation callback saw. Generic over the GA's
+/// objective arity, like the core it fingerprints.
+type RunFingerprint<const M: usize> = (
+    Vec<(Vec<bool>, [f64; M])>,
+    Vec<(Vec<bool>, [f64; M])>,
     Vec<(f64, f64)>,
     Vec<(usize, Vec<(f64, f64)>)>,
 );
 
-fn fingerprint(result: &GaResult, log: Vec<(usize, Vec<(f64, f64)>)>) -> RunFingerprint {
-    let pack = |inds: &[printed_mlp::ga::Individual]| -> Vec<(Vec<bool>, [f64; 2])> {
+fn fingerprint<const M: usize>(
+    result: &GaResult<M>,
+    log: Vec<(usize, Vec<(f64, f64)>)>,
+) -> RunFingerprint<M> {
+    let pack = |inds: &[printed_mlp::ga::Individual<M>]| -> Vec<(Vec<bool>, [f64; M])> {
         inds.iter().map(|i| (i.genome.iter().collect(), i.objs)).collect()
     };
     (pack(&result.population), pack(&result.front), result.history.clone(), log)
 }
 
 /// Run the GA at a given worker width and fingerprint the outcome.
-fn run_at(ev: &dyn Evaluator, genome_len: usize, seeds: &[BitVec], jobs: usize) -> RunFingerprint {
+fn run_at<const M: usize>(
+    ev: &dyn Evaluator<M>,
+    genome_len: usize,
+    seeds: &[BitVec],
+    jobs: usize,
+) -> RunFingerprint<M> {
     let mut log = Vec::new();
     let result = Nsga2::new(ga_spec(), genome_len, ev)
         .with_seeds(seeds.to_vec())
@@ -70,8 +79,8 @@ fn native_backend_jobs_1_vs_8_bit_identical() {
     let (qmlp, qtrain, base) = tiny_setup();
     let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
     let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
-    let serial = run_at(&ev, glen, &[], 1);
-    let parallel = run_at(&ev, glen, &[], 8);
+    let serial = run_at::<2>(&ev, glen, &[], 1);
+    let parallel = run_at::<2>(&ev, glen, &[], 8);
     assert_eq!(serial, parallel);
 }
 
@@ -83,8 +92,8 @@ fn circuit_incremental_jobs_1_vs_8_bit_identical() {
     let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
     let serial_ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
     let par_ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
-    let serial = run_at(&serial_ev, glen, &[], 1);
-    let parallel = run_at(&par_ev, glen, &[], 8);
+    let serial = run_at::<2>(&serial_ev, glen, &[], 1);
+    let parallel = run_at::<2>(&par_ev, glen, &[], 8);
     assert_eq!(serial, parallel);
 }
 
@@ -94,8 +103,8 @@ fn circuit_full_jobs_1_vs_8_bit_identical() {
     let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
     let serial_ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
     let par_ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
-    let serial = run_at(&serial_ev, glen, &[], 1);
-    let parallel = run_at(&par_ev, glen, &[], 8);
+    let serial = run_at::<2>(&serial_ev, glen, &[], 1);
+    let parallel = run_at::<2>(&par_ev, glen, &[], 8);
     assert_eq!(serial, parallel);
 }
 
@@ -111,8 +120,8 @@ fn circuit_power_objective_jobs_1_vs_8_bit_identical() {
         CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Power);
     let par_ev =
         CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Power);
-    let serial = run_at(&serial_ev, glen, &[], 1);
-    let parallel = run_at(&par_ev, glen, &[], 8);
+    let serial = run_at::<2>(&serial_ev, glen, &[], 1);
+    let parallel = run_at::<2>(&par_ev, glen, &[], 8);
     assert_eq!(serial, parallel);
 }
 
@@ -128,8 +137,38 @@ fn circuit_power_objective_modes_agree_at_width_8() {
     let full_ev = CircuitEvaluator::new(&qmlp, &qtrain, base)
         .with_mode(SynthMode::Full)
         .with_objective(CostObjective::Power);
-    let a = run_at(&incr_ev, glen, &[], 8);
-    let b = run_at(&full_ev, glen, &[], 1);
+    let a = run_at::<2>(&incr_ev, glen, &[], 8);
+    let b = run_at::<2>(&full_ev, glen, &[], 1);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn circuit_joint_objective_jobs_1_vs_8_bit_identical() {
+    // The three-objective `--objective area+power` front: the joint
+    // census + toggle state rides the same per-worker lease as the
+    // single measured objectives, so jobs 1 and jobs 8 must produce a
+    // bit-identical 3-D GaResult. Fresh evaluators per width.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let serial_ev = CircuitEvaluator::new_joint(&qmlp, &qtrain, base);
+    let par_ev = CircuitEvaluator::new_joint(&qmlp, &qtrain, base);
+    let serial = run_at::<3>(&serial_ev, glen, &[], 1);
+    let parallel = run_at::<3>(&par_ev, glen, &[], 8);
+    assert_eq!(serial, parallel);
+}
+
+#[test]
+fn circuit_joint_objective_modes_agree_at_width_8() {
+    // Full-mode joint scoring synthesizes from scratch through the same
+    // template flow and fills both cost axes from the same roll-up, so
+    // both synthesis strategies walk the same 3-D GA trajectory.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let incr_ev = CircuitEvaluator::new_joint(&qmlp, &qtrain, base);
+    let full_ev =
+        CircuitEvaluator::new_joint(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
+    let a = run_at::<3>(&incr_ev, glen, &[], 8);
+    let b = run_at::<3>(&full_ev, glen, &[], 1);
     assert_eq!(a, b);
 }
 
@@ -142,8 +181,8 @@ fn backends_agree_with_each_other_at_any_width() {
     let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
     let native = NativeEvaluator::new(&qmlp, &qtrain, base);
     let circuit = CircuitEvaluator::new(&qmlp, &qtrain, base);
-    let a = run_at(&native, glen, &[], 1);
-    let b = run_at(&circuit, glen, &[], 8);
+    let a = run_at::<2>(&native, glen, &[], 1);
+    let b = run_at::<2>(&circuit, glen, &[], 8);
     assert_eq!(a, b);
 }
 
@@ -166,7 +205,7 @@ fn pjrt_backend_jobs_1_vs_8_bit_identical() {
     let (qmlp, qtrain, base) = tiny_setup();
     let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
     let ev = PjrtEvaluator::new(&rt, "tiny", &qmlp, &qtrain, base).expect("pjrt evaluator");
-    let serial = run_at(&ev, glen, &[], 1);
-    let parallel = run_at(&ev, glen, &[], 8);
+    let serial = run_at::<2>(&ev, glen, &[], 1);
+    let parallel = run_at::<2>(&ev, glen, &[], 8);
     assert_eq!(serial, parallel);
 }

@@ -1,9 +1,12 @@
 //! Acceptance suite of the measured-hardware objective pipeline:
 //! `pmlp run --backend circuit --objective power` must produce a Pareto
 //! front whose cost axis equals the EGFET analysis of the synthesized
-//! survivor for every front member, the measured objectives must refuse
-//! backends that cannot provide them, and the FA surrogate must stay
-//! rank-faithful to the measured area it stands in for.
+//! survivor for every front member, the joint `--objective area+power`
+//! mode must produce a 3-D front whose area *and* power axes are both
+//! pinned to the same roll-up (with Pareto-sane 2-D projections), the
+//! measured objectives must refuse backends that cannot provide them,
+//! and the FA surrogate must stay rank-faithful to the measured area it
+//! stands in for.
 
 use printed_mlp::config::builtin;
 use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
@@ -67,12 +70,13 @@ fn power_front_cost_equals_survivor_analysis_end_to_end() {
             hw.power_mw
         );
     }
-    // Designs carry the measured cost alongside the (recomputed) FA
-    // surrogate, so reports stay comparable across objectives. Front
-    // members sit within the accuracy bound, so their survivors cannot
-    // be empty — measured power is strictly positive.
+    // Designs carry the full measured objective vector alongside the
+    // (recomputed) FA surrogate, so reports stay comparable across
+    // objectives. Front members sit within the accuracy bound, so their
+    // survivors cannot be empty — measured power is strictly positive.
     for d in &r.designs {
-        assert!(d.cost > 0.0, "design cost {} must be measured power", d.cost);
+        assert_eq!(d.objs.len(), 2, "power runs carry [loss, power]");
+        assert!(d.objs[1] > 0.0, "design cost {} must be measured power", d.objs[1]);
     }
 }
 
@@ -99,15 +103,106 @@ fn measured_area_front_matches_survivor_area() {
 }
 
 #[test]
+fn joint_front_axes_pinned_to_survivor_rollup_and_projections_non_dominated() {
+    // The three-objective acceptance pin: `--objective area+power` must
+    // produce a 3-D front whose area AND power axes both equal the
+    // `analyze_histogram` roll-up of the re-synthesized survivor
+    // bit-exactly (same template flow, same full-train-set stimulus),
+    // and whose 2-D slices behave like Pareto fronts: the projected
+    // front (`bench::front_projection`) is mutually non-dominating, and
+    // every 3-D member either survives the projection or is dominated
+    // in it by a member that does — dominated only because the dropped
+    // axis is what earned its seat.
+    let cfg = tiny_cfg();
+    let opts = PipelineOpts {
+        backend: EvalBackend::Circuit,
+        objective: CostObjective::AreaPower,
+        max_hw_points: 2,
+        ..Default::default()
+    };
+    let r = Pipeline::new(cfg.clone(), opts).run().expect("pipeline");
+    assert_eq!(r.backend_used, "circuit");
+    assert_eq!(r.objective, CostObjective::AreaPower);
+    assert!(!r.front.is_empty());
+
+    let qmlp = &r.trained.qmlp;
+    let (_, qtrain, _) = datasets::load(&cfg.dataset);
+    let vectors: Vec<Vec<bool>> = qtrain
+        .x
+        .iter()
+        .map(|row| wave::encode_features(row, qmlp.l1.in_bits))
+        .collect();
+    let tpl = build_mlp_template(qmlp, &ArgmaxMode::Exact);
+    let lib = Library::egfet_1v();
+    for (k, ind) in r.front.iter().enumerate() {
+        assert_eq!(ind.objs.len(), 3, "joint front member {k} must carry 3 axes");
+        let (surv, _) = optimize(&tpl.instantiate(&ind.genome));
+        let act = measured_activity(&surv, &vectors);
+        let (area_cm2, power_mw) = analyze_histogram(&surv.cell_histogram(), &lib, act);
+        assert_eq!(
+            ind.objs[1], area_cm2,
+            "front member {k}: area axis must equal the survivor roll-up bit-exactly"
+        );
+        assert_eq!(
+            ind.objs[2], power_mw,
+            "front member {k}: power axis must equal the survivor roll-up bit-exactly"
+        );
+        let hw = analyze(&surv, &lib, cfg.hw.clock_ms, act);
+        assert!(
+            (ind.objs[1] - hw.area_cm2).abs() <= 1e-9 * hw.area_cm2.max(1.0)
+                && (ind.objs[2] - hw.power_mw).abs() <= 1e-9 * hw.power_mw.max(1.0),
+            "front member {k}: axes must match egfet::analyze to summation order"
+        );
+    }
+    // 3-D mutual non-domination of the front itself.
+    for a in &r.front {
+        for b in &r.front {
+            let dom = a.objs.iter().zip(&b.objs).all(|(x, y)| x <= y)
+                && a.objs.iter().zip(&b.objs).any(|(x, y)| x < y);
+            assert!(!dom, "3-D front contains dominated point {:?} < {:?}", b.objs, a.objs);
+        }
+    }
+    // Each 2-D slice: the projected front is mutually non-dominating,
+    // and covers the whole 3-D front (member kept or 2-D-dominated by a
+    // kept point).
+    for axis in [1usize, 2] {
+        let proj = printed_mlp::bench::front_projection(&r.front, axis);
+        assert!(!proj.is_empty());
+        let dom2 = |a: (f64, f64), b: (f64, f64)| {
+            (a.0 <= b.0 && a.1 <= b.1) && (a.0 < b.0 || a.1 < b.1)
+        };
+        for &a in &proj {
+            for &b in &proj {
+                assert!(!dom2(a, b), "axis {axis}: projection keeps dominated {b:?}");
+            }
+        }
+        for ind in &r.front {
+            let p = (ind.objs[0], ind.objs[axis]);
+            let covered = proj.contains(&p) || proj.iter().any(|&q| dom2(q, p));
+            assert!(covered, "axis {axis}: member {p:?} neither kept nor dominated");
+        }
+    }
+    // Designs carry all three axes.
+    for d in &r.designs {
+        assert_eq!(d.objs.len(), 3, "joint-run designs carry [loss, area, power]");
+    }
+}
+
+#[test]
 fn measured_objective_requires_circuit_backend() {
     for backend in [EvalBackend::Auto, EvalBackend::Native] {
-        let opts = PipelineOpts {
-            backend,
-            objective: CostObjective::Power,
-            ..Default::default()
-        };
-        let err = Pipeline::new(tiny_cfg(), opts).run();
-        assert!(err.is_err(), "{backend:?} must reject measured objectives");
+        for objective in [CostObjective::Power, CostObjective::AreaPower] {
+            let opts = PipelineOpts {
+                backend,
+                objective,
+                ..Default::default()
+            };
+            let err = Pipeline::new(tiny_cfg(), opts).run();
+            assert!(
+                err.is_err(),
+                "{backend:?} must reject measured objective {objective:?}"
+            );
+        }
     }
 }
 

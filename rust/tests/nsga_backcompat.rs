@@ -1,0 +1,414 @@
+//! Back-compat regression: the const-generic NSGA-II instantiated at
+//! `M = 2` must be **bit-identical** to the pre-generalization
+//! two-objective implementation.
+//!
+//! The `legacy` module below is a frozen verbatim copy of the
+//! `[f64; 2]`-hard-wired GA core as it stood before the arity refactor
+//! (PR 4's `ga.rs`): non-dominated sort, constrained domination,
+//! crowding, environmental selection, tournament/crossover/mutation and
+//! the full `run` loop, including its RNG seeding and draw order. Both
+//! GAs are driven by the same evaluators through the same
+//! `evaluate_parallel` engine, so any divergence in fronts, population,
+//! history or the per-generation log stream is a behavior change in the
+//! generic code — exactly what this suite exists to catch.
+//!
+//! Coverage follows the issue: seeded two-objective runs through the
+//! circuit backend with `--objective fa` and `--objective area`, each
+//! checked at `--jobs 1` and `--jobs 8`.
+
+use printed_mlp::config::{builtin, GaSpec};
+use printed_mlp::datasets;
+use printed_mlp::egfet::CostObjective;
+use printed_mlp::ga::{evaluate_parallel, Evaluator, GaResult, Nsga2};
+use printed_mlp::model::float_mlp::TrainOpts;
+use printed_mlp::model::{FloatMlp, QuantMlp};
+use printed_mlp::runtime::evaluator::CircuitEvaluator;
+use printed_mlp::util::{BitVec, Rng};
+
+/// The pre-refactor two-objective NSGA-II, frozen. Do not "improve" this
+/// code: its value is that it does not change.
+mod legacy {
+    use super::*;
+
+    #[derive(Clone, Debug)]
+    pub struct Individual {
+        pub genome: BitVec,
+        pub objs: [f64; 2],
+    }
+
+    #[derive(Clone, Debug)]
+    pub struct LegacyResult {
+        pub population: Vec<Individual>,
+        pub front: Vec<Individual>,
+        pub history: Vec<(f64, f64)>,
+    }
+
+    fn non_dominated_sort(objs: &[[f64; 2]], bound: f64) -> Vec<usize> {
+        let n = objs.len();
+        let mut dominated_by = vec![0usize; n];
+        let mut dominates_lists: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                if dominates_constrained(&objs[i], &objs[j], bound) {
+                    dominates_lists[i].push(j);
+                } else if dominates_constrained(&objs[j], &objs[i], bound) {
+                    dominated_by[i] += 1;
+                }
+            }
+        }
+        let mut rank = vec![usize::MAX; n];
+        let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+        let mut r = 0;
+        while !current.is_empty() {
+            let mut next = Vec::new();
+            for &i in &current {
+                rank[i] = r;
+                for &j in &dominates_lists[i] {
+                    dominated_by[j] -= 1;
+                    if dominated_by[j] == 0 {
+                        next.push(j);
+                    }
+                }
+            }
+            current = next;
+            r += 1;
+        }
+        rank
+    }
+
+    fn dominates_constrained(a: &[f64; 2], b: &[f64; 2], bound: f64) -> bool {
+        let va = (a[0] - bound).max(0.0);
+        let vb = (b[0] - bound).max(0.0);
+        if va == 0.0 && vb > 0.0 {
+            return true;
+        }
+        if va > 0.0 && vb == 0.0 {
+            return false;
+        }
+        if va > 0.0 && vb > 0.0 {
+            return va < vb;
+        }
+        dominates(a, b)
+    }
+
+    fn dominates(a: &[f64; 2], b: &[f64; 2]) -> bool {
+        (a[0] <= b[0] && a[1] <= b[1]) && (a[0] < b[0] || a[1] < b[1])
+    }
+
+    fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
+        let m = front.len();
+        let mut dist = vec![0.0f64; m];
+        if m <= 2 {
+            return vec![f64::INFINITY; m];
+        }
+        for obj in 0..2 {
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| {
+                objs[front[a]][obj].partial_cmp(&objs[front[b]][obj]).unwrap()
+            });
+            dist[order[0]] = f64::INFINITY;
+            dist[order[m - 1]] = f64::INFINITY;
+            let span = objs[front[order[m - 1]]][obj] - objs[front[order[0]]][obj];
+            if span <= 0.0 {
+                continue;
+            }
+            for w in 1..m - 1 {
+                let prev = objs[front[order[w - 1]]][obj];
+                let next = objs[front[order[w + 1]]][obj];
+                dist[order[w]] += (next - prev) / span;
+            }
+        }
+        dist
+    }
+
+    fn pareto_front(pop: &[Individual], bound: f64) -> Vec<Individual> {
+        let mut front: Vec<Individual> = Vec::new();
+        for ind in pop {
+            if ind.objs[0] > bound {
+                continue;
+            }
+            if pop.iter().any(|o| o.objs[0] <= bound && dominates(&o.objs, &ind.objs)) {
+                continue;
+            }
+            if front.iter().any(|f| f.objs == ind.objs) {
+                continue;
+            }
+            front.push(ind.clone());
+        }
+        front.sort_by(|a, b| a.objs[0].partial_cmp(&b.objs[0]).unwrap());
+        front
+    }
+
+    fn full_crowding(pop: &[Individual], ranks: &[usize]) -> Vec<f64> {
+        let objs: Vec<[f64; 2]> = pop.iter().map(|i| i.objs).collect();
+        let max_rank = ranks.iter().copied().max().unwrap_or(0);
+        let mut crowd = vec![0.0; pop.len()];
+        for r in 0..=max_rank {
+            let front: Vec<usize> = (0..pop.len()).filter(|&i| ranks[i] == r).collect();
+            let d = crowding_distance(&objs, &front);
+            for (k, &i) in front.iter().enumerate() {
+                crowd[i] = d[k];
+            }
+        }
+        crowd
+    }
+
+    fn tournament(rng: &mut Rng, ranks: &[usize], crowd: &[f64]) -> usize {
+        let a = rng.below(ranks.len());
+        let b = rng.below(ranks.len());
+        if ranks[a] < ranks[b] || (ranks[a] == ranks[b] && crowd[a] > crowd[b]) {
+            a
+        } else {
+            b
+        }
+    }
+
+    fn uniform_crossover(rng: &mut Rng, a: &BitVec, b: &BitVec) -> (BitVec, BitVec) {
+        let mut c1 = a.clone();
+        let mut c2 = b.clone();
+        for i in 0..a.len() {
+            if rng.chance(0.5) {
+                let (va, vb) = (a.get(i), b.get(i));
+                c1.set(i, vb);
+                c2.set(i, va);
+            }
+        }
+        (c1, c2)
+    }
+
+    fn mutate(rng: &mut Rng, g: &mut BitVec, rate: f64) {
+        let expected = rate * g.len() as f64;
+        let n_flips = {
+            let base = expected.floor() as usize;
+            base + usize::from(rng.chance(expected - base as f64))
+        };
+        for _ in 0..n_flips {
+            let i = rng.below(g.len());
+            g.flip(i);
+        }
+    }
+
+    fn select(pop: Vec<Individual>, target: usize, bound: f64) -> Vec<Individual> {
+        let objs: Vec<[f64; 2]> = pop.iter().map(|i| i.objs).collect();
+        let ranks = non_dominated_sort(&objs, bound);
+        let max_rank = ranks.iter().copied().max().unwrap_or(0);
+        let mut out: Vec<Individual> = Vec::with_capacity(target);
+        for r in 0..=max_rank {
+            let front: Vec<usize> = (0..pop.len()).filter(|&i| ranks[i] == r).collect();
+            if out.len() + front.len() <= target {
+                for &i in &front {
+                    out.push(pop[i].clone());
+                }
+            } else {
+                let d = crowding_distance(&objs, &front);
+                let mut order: Vec<usize> = (0..front.len()).collect();
+                order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+                for &k in order.iter().take(target - out.len()) {
+                    out.push(pop[front[k]].clone());
+                }
+                break;
+            }
+            if out.len() == target {
+                break;
+            }
+        }
+        out
+    }
+
+    fn best_area_at(pop: &[Individual], loss: f64) -> f64 {
+        pop.iter()
+            .filter(|i| i.objs[0] <= loss)
+            .map(|i| i.objs[1])
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The pre-refactor `Nsga2::run`, verbatim (evaluation delegated to
+    /// the crate's `evaluate_parallel`, as before the refactor).
+    pub fn run(
+        spec: &GaSpec,
+        genome_len: usize,
+        evaluator: &dyn Evaluator<2>,
+        seeds: &[BitVec],
+        jobs: usize,
+        mut log: impl FnMut(usize, &LegacyResult),
+    ) -> LegacyResult {
+        let mut rng = Rng::new(spec.seed ^ 0x4E53_4741);
+        let pop_size = spec.population.max(4);
+
+        let mut genomes: Vec<BitVec> = Vec::with_capacity(pop_size);
+        genomes.push(BitVec::ones(genome_len));
+        for seed in seeds.iter().take(pop_size.saturating_sub(1)) {
+            assert_eq!(seed.len(), genome_len, "seed length mismatch");
+            genomes.push(seed.clone());
+        }
+        while genomes.len() < pop_size {
+            let keep = if rng.chance(0.7) {
+                spec.init_keep_prob - 0.1 * rng.f64()
+            } else {
+                0.45 + 0.5 * rng.f64()
+            };
+            let bools: Vec<bool> = (0..genome_len).map(|_| rng.chance(keep)).collect();
+            genomes.push(BitVec::from_bools(&bools));
+        }
+        let objs = evaluate_parallel(evaluator, &genomes, jobs);
+        let mut pop: Vec<Individual> = genomes
+            .into_iter()
+            .zip(objs)
+            .map(|(genome, objs)| Individual { genome, objs })
+            .collect();
+
+        let mut history = Vec::new();
+        for generation in 0..spec.generations {
+            let ranks = non_dominated_sort(
+                &pop.iter().map(|i| i.objs).collect::<Vec<_>>(),
+                spec.acc_loss_bound,
+            );
+            let crowd = full_crowding(&pop, &ranks);
+            let mut offspring_genomes = Vec::with_capacity(pop_size);
+            while offspring_genomes.len() < pop_size {
+                let p1 = tournament(&mut rng, &ranks, &crowd);
+                let p2 = tournament(&mut rng, &ranks, &crowd);
+                let (mut c1, mut c2) = if rng.chance(spec.crossover_rate) {
+                    uniform_crossover(&mut rng, &pop[p1].genome, &pop[p2].genome)
+                } else {
+                    (pop[p1].genome.clone(), pop[p2].genome.clone())
+                };
+                mutate(&mut rng, &mut c1, spec.mutation_rate);
+                mutate(&mut rng, &mut c2, spec.mutation_rate);
+                offspring_genomes.push(c1);
+                if offspring_genomes.len() < pop_size {
+                    offspring_genomes.push(c2);
+                }
+            }
+            let off_objs = evaluate_parallel(evaluator, &offspring_genomes, jobs);
+            let offspring: Vec<Individual> = offspring_genomes
+                .into_iter()
+                .zip(off_objs)
+                .map(|(genome, objs)| Individual { genome, objs })
+                .collect();
+
+            pop.extend(offspring);
+            pop = select(pop, pop_size, spec.acc_loss_bound);
+
+            let best2 = best_area_at(&pop, 0.02);
+            let best5 = best_area_at(&pop, 0.05);
+            history.push((best2, best5));
+            let snapshot = LegacyResult {
+                front: pareto_front(&pop, spec.acc_loss_bound),
+                population: Vec::new(),
+                history: history.clone(),
+            };
+            log(generation, &snapshot);
+        }
+
+        let front = pareto_front(&pop, spec.acc_loss_bound);
+        LegacyResult { population: pop, front, history }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------------
+
+fn tiny_setup() -> (QuantMlp, printed_mlp::datasets::QuantDataset, f64) {
+    let cfg = builtin::tiny();
+    let (split, qtrain, _) = datasets::load(&cfg.dataset);
+    let mut mlp = FloatMlp::init(cfg.topology, 1);
+    mlp.train(&split.train, &TrainOpts { epochs: 20, ..Default::default() });
+    let qmlp = QuantMlp::from_float(&mlp, &qtrain);
+    let base = qmlp.accuracy(&qtrain, None);
+    (qmlp, qtrain, base)
+}
+
+fn ga_spec() -> GaSpec {
+    let mut spec = builtin::tiny().ga;
+    spec.population = 16;
+    spec.generations = 3;
+    spec
+}
+
+/// Everything observable about a run, in comparable form.
+type Fingerprint = (
+    Vec<(Vec<bool>, [f64; 2])>,
+    Vec<(Vec<bool>, [f64; 2])>,
+    Vec<(f64, f64)>,
+    Vec<(usize, Vec<(f64, f64)>)>,
+);
+
+fn fingerprint_generic(result: &GaResult<2>, log: Vec<(usize, Vec<(f64, f64)>)>) -> Fingerprint {
+    let pack = |inds: &[printed_mlp::ga::Individual<2>]| -> Vec<(Vec<bool>, [f64; 2])> {
+        inds.iter().map(|i| (i.genome.iter().collect(), i.objs)).collect()
+    };
+    (pack(&result.population), pack(&result.front), result.history.clone(), log)
+}
+
+fn fingerprint_legacy(
+    result: &legacy::LegacyResult,
+    log: Vec<(usize, Vec<(f64, f64)>)>,
+) -> Fingerprint {
+    let pack = |inds: &[legacy::Individual]| -> Vec<(Vec<bool>, [f64; 2])> {
+        inds.iter().map(|i| (i.genome.iter().collect(), i.objs)).collect()
+    };
+    (pack(&result.population), pack(&result.front), result.history.clone(), log)
+}
+
+/// Domain-informed seed chromosomes, as the coordinator injects them.
+fn seeds(qmlp: &QuantMlp) -> Vec<BitVec> {
+    let map = printed_mlp::accum::GenomeMap::new(qmlp);
+    let t = qmlp.act_shift as u8;
+    printed_mlp::accum::truncation_seeds(&map, &[t / 2, t], &[0, 2])
+}
+
+/// Run generic-vs-legacy on fresh circuit evaluators and assert
+/// bit-identity of the full fingerprint.
+fn check_backcompat(objective: CostObjective, jobs: usize) {
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let seeds = seeds(&qmlp);
+    let spec = ga_spec();
+
+    let generic_ev =
+        CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(objective);
+    let mut generic_log = Vec::new();
+    let generic = Nsga2::<2>::new(spec.clone(), glen, &generic_ev)
+        .with_seeds(seeds.clone())
+        .with_jobs(jobs)
+        .run(|g, snap| generic_log.push((g, snap.history.clone())));
+
+    let legacy_ev =
+        CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(objective);
+    let mut legacy_log = Vec::new();
+    let legacy = legacy::run(&spec, glen, &legacy_ev, &seeds, jobs.max(1), |g, snap| {
+        legacy_log.push((g, snap.history.clone()))
+    });
+
+    assert_eq!(
+        fingerprint_generic(&generic, generic_log),
+        fingerprint_legacy(&legacy, legacy_log),
+        "objective {objective:?} jobs {jobs}: generic GA diverged from the frozen \
+         pre-refactor implementation"
+    );
+}
+
+#[test]
+fn generic_matches_legacy_fa_jobs_1() {
+    check_backcompat(CostObjective::Fa, 1);
+}
+
+#[test]
+fn generic_matches_legacy_fa_jobs_8() {
+    check_backcompat(CostObjective::Fa, 8);
+}
+
+#[test]
+fn generic_matches_legacy_measured_area_jobs_1() {
+    check_backcompat(CostObjective::Area, 1);
+}
+
+#[test]
+fn generic_matches_legacy_measured_area_jobs_8() {
+    check_backcompat(CostObjective::Area, 8);
+}

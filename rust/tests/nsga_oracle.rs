@@ -1,0 +1,305 @@
+//! Brute-force oracle suite for the const-generic NSGA-II core.
+//!
+//! `ga::non_dominated_sort` uses Deb's O(n²) domination-count algorithm
+//! with a BFS front peel, and `ga::crowding_distance` a per-axis
+//! sort-and-gap pass. Both are now generic over the objective arity `M`;
+//! this suite pins them — at M=2 and M=3 — against naive O(n²·M)
+//! reference implementations written independently below (iterative
+//! front peeling; scalar per-axis gap accumulation), over seeded random
+//! objective sets that deliberately include:
+//!
+//! * duplicated points (identical objective vectors must share a front
+//!   and split crowding symmetrically),
+//! * constraint-violating points (accuracy loss above the bound —
+//!   Deb's feasibility-first rule),
+//! * degenerate axes (a constant objective contributes nothing to
+//!   crowding and must not divide by its zero span).
+//!
+//! All comparisons are exact (`==` on ranks, bitwise on distances): the
+//! oracle recomputes the same real-number quantities in the same IEEE
+//! order per axis, so any divergence is a logic change, not float noise.
+
+use printed_mlp::ga::{crowding_distance, dominates, dominates_constrained, non_dominated_sort};
+use printed_mlp::util::prop::{self, PropConfig};
+use printed_mlp::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Naive references
+// ---------------------------------------------------------------------------
+
+/// Deb's constrained domination, restated from the definition.
+fn ref_dominates_constrained<const M: usize>(a: &[f64; M], b: &[f64; M], bound: f64) -> bool {
+    let va = (a[0] - bound).max(0.0);
+    let vb = (b[0] - bound).max(0.0);
+    match (va > 0.0, vb > 0.0) {
+        (false, true) => true,
+        (true, false) => false,
+        (true, true) => va < vb,
+        (false, false) => {
+            (0..M).all(|k| a[k] <= b[k]) && (0..M).any(|k| a[k] < b[k])
+        }
+    }
+}
+
+/// Iterative front peeling: rank r = the points no *unranked* point
+/// constrained-dominates. O(n² · M) per level, no counting tricks.
+fn ref_rank<const M: usize>(objs: &[[f64; M]], bound: f64) -> Vec<usize> {
+    let n = objs.len();
+    let mut rank = vec![usize::MAX; n];
+    let mut assigned = 0;
+    let mut r = 0;
+    while assigned < n {
+        let level: Vec<usize> = (0..n)
+            .filter(|&i| {
+                rank[i] == usize::MAX
+                    && (0..n).all(|j| {
+                        j == i
+                            || rank[j] != usize::MAX
+                            || !ref_dominates_constrained(&objs[j], &objs[i], bound)
+                    })
+            })
+            .collect();
+        assert!(!level.is_empty(), "front peeling stuck at rank {r}");
+        for &i in &level {
+            rank[i] = r;
+        }
+        assigned += level.len();
+        r += 1;
+    }
+    rank
+}
+
+/// Scalar crowding distance: per axis, stable-sort the front by the
+/// axis value (ties keep front order, like any stable sort), give the
+/// two boundary points infinite distance, and add the span-normalized
+/// neighbor gap to each interior point. Axes with zero span are skipped.
+fn ref_crowding<const M: usize>(objs: &[[f64; M]], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let mut dist = vec![0.0f64; m];
+    for axis in 0..M {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][axis].partial_cmp(&objs[front[b]][axis]).unwrap()
+        });
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = objs[front[order[m - 1]]][axis] - objs[front[order[0]]][axis];
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let gap = objs[front[order[w + 1]]][axis] - objs[front[order[w - 1]]][axis];
+            dist[order[w]] += gap / span;
+        }
+    }
+    dist
+}
+
+// ---------------------------------------------------------------------------
+// Random objective-set generator (the adversarial shapes the issue names)
+// ---------------------------------------------------------------------------
+
+/// A seeded random objective set: mostly uniform points, with injected
+/// duplicates, constraint violators (axis 0 above `bound`) and — with
+/// some probability — one axis collapsed to a constant.
+fn gen_objs<const M: usize>(rng: &mut Rng, bound: f64) -> Vec<[f64; M]> {
+    let n = 1 + rng.below(36);
+    let mut objs: Vec<[f64; M]> = (0..n)
+        .map(|_| {
+            let mut o = [0.0f64; M];
+            for v in o.iter_mut() {
+                *v = rng.f64() * 2.0; // axis 0 straddles typical bounds
+            }
+            // Force a visible share of constraint violators.
+            if rng.chance(0.25) {
+                o[0] = bound + rng.f64();
+            }
+            o
+        })
+        .collect();
+    // Duplicate some points verbatim (NSGA-II offspring repeat a lot).
+    let n0 = objs.len();
+    for _ in 0..rng.below(4) {
+        let src = objs[rng.below(n0)];
+        objs.push(src);
+    }
+    // Occasionally flatten one axis to a constant (degenerate span).
+    if rng.chance(0.3) {
+        let axis = rng.below(M);
+        let v = rng.f64();
+        for o in objs.iter_mut() {
+            o[axis] = v;
+        }
+    }
+    // Occasionally flatten *everything* (all-equal points).
+    if rng.chance(0.1) {
+        let proto = objs[0];
+        for o in objs.iter_mut() {
+            *o = proto;
+        }
+    }
+    rng.shuffle(&mut objs);
+    objs
+}
+
+/// The full oracle check for one arity: ranks equal the peeled
+/// reference, and crowding distances are bitwise-equal per front.
+fn check_arity<const M: usize>(name: &'static str) {
+    prop::check_with(
+        PropConfig { cases: 120, seed: 0x0A0C1E ^ M as u64 },
+        name,
+        |rng, _| {
+            let bound = 0.5 + rng.f64();
+            let objs = gen_objs::<M>(rng, bound);
+            let got = non_dominated_sort(&objs, bound);
+            let want = ref_rank(&objs, bound);
+            if got != want {
+                return Err(format!("ranks diverge:\n got {got:?}\nwant {want:?}\nobjs {objs:?}"));
+            }
+            let max_rank = *want.iter().max().unwrap();
+            for r in 0..=max_rank {
+                let front: Vec<usize> =
+                    (0..objs.len()).filter(|&i| want[i] == r).collect();
+                let got_d = crowding_distance(&objs, &front);
+                let want_d = ref_crowding(&objs, &front);
+                // Bitwise equality, infinities included.
+                let same = got_d.len() == want_d.len()
+                    && got_d
+                        .iter()
+                        .zip(&want_d)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err(format!(
+                        "crowding diverges on front {r}:\n got {got_d:?}\nwant {want_d:?}\nfront {front:?}\nobjs {objs:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sort_and_crowding_match_bruteforce_m2() {
+    check_arity::<2>("nsga oracle M=2");
+}
+
+#[test]
+fn sort_and_crowding_match_bruteforce_m3() {
+    check_arity::<3>("nsga oracle M=3");
+}
+
+#[test]
+fn dominance_truth_table_m3() {
+    // Hand-checked 3-D cases: equality never dominates, one strictly
+    // better axis with the rest equal does, and a single worse axis
+    // breaks dominance no matter how much better the others are.
+    let a = [0.1, 1.0, 2.0];
+    assert!(!dominates(&a, &a), "a point must not dominate itself");
+    assert!(dominates(&[0.1, 1.0, 1.9], &a));
+    assert!(dominates(&[0.1, 0.9, 2.0], &a));
+    assert!(!dominates(&[0.1, 0.9, 2.1], &a), "worse power axis");
+    assert!(!dominates(&a, &[0.1, 0.9, 2.1]), "better power, worse area");
+    assert!(dominates(&[0.0, 0.0, 0.0], &a));
+}
+
+#[test]
+fn constrained_dominance_matches_reference_m3() {
+    prop::check_with(
+        PropConfig { cases: 200, ..Default::default() },
+        "constrained dominance M=3",
+        |rng, _| {
+            let bound = rng.f64();
+            let mk = |rng: &mut Rng| {
+                let mut o = [0.0f64; 3];
+                for v in o.iter_mut() {
+                    *v = rng.f64() * 2.0;
+                }
+                o
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let got = dominates_constrained(&a, &b, bound);
+            let want = ref_dominates_constrained(&a, &b, bound);
+            if got != want {
+                return Err(format!("{a:?} vs {b:?} @bound {bound}: {got} != {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn duplicated_points_share_rank_and_stable_ties_pin_crowding() {
+    // Two identical points never dominate each other: same front. Put
+    // the duplicate pair strictly inside the front on both axes; the
+    // stable per-axis sort keeps the pair in front order, so the first
+    // copy reads the gap toward the cheaper neighbor and the second
+    // toward the pricier one — distinct finite distances. Pinned here
+    // (and bitwise against the oracle) so the tie-breaking contract
+    // (stable sort by axis value) stays fixed.
+    let objs: Vec<[f64; 2]> = vec![[0.0, 2.0], [0.1, 1.0], [0.1, 1.0], [0.2, 0.5]];
+    let ranks = non_dominated_sort(&objs, 1.0);
+    assert_eq!(ranks, vec![0, 0, 0, 0]);
+    let front: Vec<usize> = (0..4).collect();
+    let d = crowding_distance(&objs, &front);
+    let want = ref_crowding(&objs, &front);
+    assert!(d.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+    assert!(d[0].is_infinite());
+    assert!(d[3].is_infinite());
+    assert!(d[1].is_finite() && d[2].is_finite());
+    assert!(
+        d[1] < d[2],
+        "stable ties: first duplicate neighbors the cheaper side ({} vs {})",
+        d[1],
+        d[2]
+    );
+}
+
+#[test]
+fn degenerate_axis_contributes_nothing() {
+    // A constant axis must be skipped (zero span), leaving crowding
+    // driven entirely by the live axes — identical to dropping the axis.
+    let objs3: Vec<[f64; 3]> = vec![
+        [0.0, 5.0, 0.7],
+        [0.1, 4.0, 0.7],
+        [0.2, 3.0, 0.7],
+        [0.3, 2.0, 0.7],
+    ];
+    let objs2: Vec<[f64; 2]> = objs3.iter().map(|o| [o[0], o[1]]).collect();
+    let front: Vec<usize> = (0..4).collect();
+    let d3 = crowding_distance(&objs3, &front);
+    let d2 = crowding_distance(&objs2, &front);
+    assert_eq!(d3, d2, "constant third axis must not change crowding");
+    // All-degenerate: every axis constant -> all distances stay at the
+    // boundary-infinity / zero baseline, no NaN from 0/0.
+    let flat: Vec<[f64; 3]> = vec![[1.0, 1.0, 1.0]; 5];
+    let d = crowding_distance(&flat, &[0, 1, 2, 3, 4]);
+    assert!(d.iter().all(|v| !v.is_nan()));
+    assert_eq!(d, ref_crowding(&flat, &[0, 1, 2, 3, 4]));
+}
+
+#[test]
+fn violators_always_rank_behind_feasible_points() {
+    // Feasibility first: any feasible point outranks every violator,
+    // and violators order among themselves by violation size only.
+    let bound = 0.15;
+    let objs: Vec<[f64; 3]> = vec![
+        [0.90, 0.1, 0.1], // big violation, tiny cost
+        [0.14, 9.0, 9.0], // feasible, horrible cost
+        [0.20, 0.2, 0.2], // small violation
+        [0.00, 5.0, 5.0], // feasible
+    ];
+    let ranks = non_dominated_sort(&objs, bound);
+    assert_eq!(ranks, ref_rank(&objs, bound));
+    assert!(ranks[1] < ranks[2] && ranks[1] < ranks[0]);
+    assert!(ranks[3] < ranks[2] && ranks[3] < ranks[0]);
+    assert!(ranks[2] < ranks[0], "smaller violation ranks first");
+}

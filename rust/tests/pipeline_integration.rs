@@ -69,8 +69,8 @@ fn circuit_and_native_backends_agree_on_front_semantics() {
     cfg.ga.generations = 2;
     let rn = Pipeline::new(cfg.clone(), smoke_opts(EvalBackend::Native)).run().unwrap();
     let rc = Pipeline::new(cfg, smoke_opts(EvalBackend::Circuit)).run().unwrap();
-    let on: Vec<[f64; 2]> = rn.front.iter().map(|i| i.objs).collect();
-    let oc: Vec<[f64; 2]> = rc.front.iter().map(|i| i.objs).collect();
+    let on: Vec<Vec<f64>> = rn.front.iter().map(|i| i.objs.clone()).collect();
+    let oc: Vec<Vec<f64>> = rc.front.iter().map(|i| i.objs.clone()).collect();
     assert_eq!(on, oc);
 }
 
@@ -86,8 +86,8 @@ fn circuit_synth_modes_bit_identical_fronts() {
     full_opts.synth = SynthMode::Full;
     let rf = Pipeline::new(cfg.clone(), full_opts).run().unwrap();
     let ri = Pipeline::new(cfg, smoke_opts(EvalBackend::Circuit)).run().unwrap();
-    let of: Vec<[f64; 2]> = rf.front.iter().map(|i| i.objs).collect();
-    let oi: Vec<[f64; 2]> = ri.front.iter().map(|i| i.objs).collect();
+    let of: Vec<Vec<f64>> = rf.front.iter().map(|i| i.objs.clone()).collect();
+    let oi: Vec<Vec<f64>> = ri.front.iter().map(|i| i.objs.clone()).collect();
     assert_eq!(of, oi);
 }
 

@@ -97,7 +97,7 @@ fn pjrt_ga_smoke() {
     spec.population = 16;
     spec.generations = 3;
     let glen = pjrt.genome_map().len();
-    let ga = printed_mlp::ga::Nsga2::new(spec, glen, &pjrt);
+    let ga: printed_mlp::ga::Nsga2<2> = printed_mlp::ga::Nsga2::new(spec, glen, &pjrt);
     let result = ga.run(|_, _| {});
     assert!(!result.front.is_empty());
     // The exact anchor guarantees a zero-loss point on the front.
