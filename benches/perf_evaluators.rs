@@ -18,6 +18,10 @@
 //! bit-identical check across widths. The tentpole target is ≥3× at 8
 //! workers over `--jobs 1`.
 //!
+//! The telemetry section re-runs the `circuit/incr` mutation chain with
+//! collection disabled vs enabled (`util::telemetry`) — the row pair
+//! that pins instrumentation overhead on the hottest path at < 5%.
+//!
 //! Every measured rate is also written as a structured record to
 //! `BENCH_evaluators.json` (path override: `PMLP_BENCH_JSON`), which CI
 //! uploads as an artifact — the perf trajectory's data points.
@@ -48,6 +52,13 @@ fn main() {
                 name,
                 n_scaling,
                 &[1, 2, 4, 8],
+                &mut records,
+            ));
+        }
+        for name in &names {
+            out.push_str(&printed_mlp::bench::telemetry_overhead_recorded(
+                name,
+                n,
                 &mut records,
             ));
         }

@@ -880,6 +880,88 @@ pub fn jobs_scaling_recorded(
     )
 }
 
+/// Telemetry overhead row pair: the `circuit/incr` mutation-chain
+/// workload of the evaluator ablation, once with collection disabled
+/// (`telemetry::set_enabled(false)`) and once enabled — pinning the
+/// instrumentation cost on the hottest path (acceptance target: < 5%).
+/// Fresh evaluator per arm (own memo + arena pool) and identical
+/// objectives asserted, so the pair measures instrumentation, not cache
+/// luck.
+pub fn telemetry_overhead(name: &str, n_genomes: usize) -> String {
+    telemetry_overhead_recorded(name, n_genomes, &mut Vec::new())
+}
+
+/// [`telemetry_overhead`] that also appends one [`BenchRecord`] per arm.
+pub fn telemetry_overhead_recorded(
+    name: &str,
+    n_genomes: usize,
+    records: &mut Vec<BenchRecord>,
+) -> String {
+    use crate::ga::evaluate_parallel;
+    use crate::util::telemetry;
+    let cfg = builtin::by_name(name).expect("dataset");
+    let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+    let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
+    let qmlp: &QuantMlp = &tm.qmlp;
+    let base = tm.acc_q_train;
+    let map = GenomeMap::new(qmlp);
+    let mut rng = Rng::new(7);
+    // Same GA-like mutation chain shape as `ablation_evaluators` — the
+    // workload where per-genome work is smallest and the relative
+    // instrumentation cost therefore largest.
+    let chain: Vec<crate::util::BitVec> = {
+        let mut g = map.random_genome(&mut rng, 0.8);
+        let mut v = Vec::with_capacity(n_genomes);
+        v.push(g.clone());
+        while v.len() < n_genomes {
+            for _ in 0..4 {
+                g.flip(rng.below(map.len()));
+            }
+            v.push(g.clone());
+        }
+        v
+    };
+    let was_enabled = telemetry::enabled();
+    let arm = |enabled: bool| -> (f64, Vec<[f64; 2]>) {
+        telemetry::set_enabled(enabled);
+        let ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base);
+        let t0 = std::time::Instant::now();
+        let objs = evaluate_parallel(&ev, &chain, 1);
+        (n_genomes as f64 / t0.elapsed().as_secs_f64(), objs)
+    };
+    let (off_rate, objs_off) = arm(false);
+    let (on_rate, objs_on) = arm(true);
+    telemetry::set_enabled(was_enabled);
+    let agree = objs_off == objs_on;
+    let overhead_pct = (off_rate / on_rate - 1.0) * 100.0;
+    for (case, rate) in
+        [("circuit/incr/fa/telemetry=off", off_rate), ("circuit/incr/fa/telemetry=on", on_rate)]
+    {
+        records.push(BenchRecord {
+            bench: "telemetry",
+            dataset: name.to_string(),
+            case: case.to_string(),
+            genomes_per_sec: rate,
+        });
+    }
+    render_table(
+        &format!("Telemetry overhead [{name}] ({n_genomes} chromosomes, circuit/incr, jobs=1)"),
+        &["case", "chromosomes/s", "notes"],
+        &[
+            vec![
+                "telemetry=off".to_string(),
+                format!("{off_rate:.1}"),
+                String::new(),
+            ],
+            vec![
+                "telemetry=on".to_string(),
+                format!("{on_rate:.1}"),
+                format!("objectives equal: {agree}; overhead {overhead_pct:.1}% (target < 5%)"),
+            ],
+        ],
+    )
+}
+
 /// Spearman rank correlation of the FA surrogate against the *measured*
 /// EGFET area objective (`--objective area`) on sampled genomes — the
 /// Table II harness re-targeted at the circuit-in-the-loop cost axis

@@ -32,6 +32,7 @@ use crate::runtime::{PjrtEvaluator, Runtime};
 use crate::sim::wave;
 use crate::synth::{optimize, SynthMode};
 use crate::train::{self, TrainedModel};
+use crate::util::telemetry::{self, Counter, Gauge};
 use crate::util::BitVec;
 use anyhow::Result;
 
@@ -148,6 +149,7 @@ fn run_circuit_ga<const M: usize>(
     let ga = Nsga2::new(spec, genome_len, ev).with_seeds(seeds).with_jobs(jobs);
     let result = ga.run(|g, snap| log_hist(g, &snap.history));
     let exact_objs = ga::evaluate_parallel(ev, std::slice::from_ref(exact), 1)[0];
+    telemetry::gauge(Gauge::MemoEntries, ev.memo_len() as u64);
     (erase_front(&result.front), erase_front(&result.population), exact_objs.to_vec())
 }
 
@@ -222,14 +224,21 @@ impl Pipeline {
                 self.opts.objective.label()
             );
         }
+        // `verbose` keeps its pre-facade meaning (pipeline progress is
+        // opt-in per call site); `PMLP_LOG` gates the whole facade, so
+        // default-level output is byte-identical to the old `eprintln!`s.
         let log = |msg: &str| {
             if self.opts.verbose {
-                eprintln!("[{name}] {msg}");
+                telemetry::info(&name, msg);
             }
         };
+        let _sp_pipeline = crate::span!("pipeline");
 
         // ---- 1. dataset ------------------------------------------------
-        let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+        let (split, qtrain, qtest) = {
+            let _sp = crate::span!("dataset");
+            datasets::load(&cfg.dataset)
+        };
         log(&format!(
             "dataset: {} train / {} test samples, {} features, {} classes",
             qtrain.n_samples(),
@@ -251,6 +260,7 @@ impl Pipeline {
             anyhow::bail!("PJRT backend requested but artifacts missing (run `make artifacts`)");
         }
 
+        let _sp_train = crate::span!("train");
         let trained = if have_artifact {
             // Float pre-train natively with the same restart search as
             // the native path, QAT via the AOT train_step (Layer-2
@@ -271,6 +281,7 @@ impl Pipeline {
         } else {
             train::train_native(cfg, &split, &qtrain, &qtest)
         };
+        drop(_sp_train);
         log(&format!(
             "trained: float test acc {:.3}, QAT test acc {:.3}",
             trained.acc_float_test, trained.acc_q_test
@@ -291,16 +302,21 @@ impl Pipeline {
             .collect();
         let int8 = Int8Mlp::from_float(&trained.float);
         let baseline_acc_test = int8.accuracy(&qtest);
-        let baseline_hw = if self.opts.synth_baseline {
-            let nl = int8.build_circuit(ArgmaxMode::Exact);
-            let (opt, _) = optimize(&nl);
-            Some(analyze_measured(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus))
-        } else {
-            None
+        let (baseline_hw, qat_hw) = {
+            let _sp = crate::span!("baseline_hw");
+            let baseline_hw = if self.opts.synth_baseline {
+                let nl = int8.build_circuit(ArgmaxMode::Exact);
+                let (opt, _) = optimize(&nl);
+                Some(analyze_measured(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus))
+            } else {
+                None
+            };
+            let qat_nl = build_mlp_circuit(qmlp, &MlpCircuitOpts::default());
+            let (qat_opt, _) = optimize(&qat_nl);
+            let qat_hw =
+                analyze_measured(&qat_opt, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus);
+            (baseline_hw, qat_hw)
         };
-        let qat_nl = build_mlp_circuit(qmlp, &MlpCircuitOpts::default());
-        let (qat_opt, _) = optimize(&qat_nl);
-        let qat_hw = analyze_measured(&qat_opt, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus);
         if let Some(hw) = &baseline_hw {
             log(&format!(
                 "baseline: {:.1} cm2 / {:.1} mW; QAT-only: {:.2} cm2 / {:.2} mW",
@@ -323,8 +339,9 @@ impl Pipeline {
         let log_hist = |generation: usize, history: &[(f64, f64)]| {
             if verbose {
                 let (b2, b5) = history.last().copied().unwrap_or((0.0, 0.0));
-                eprintln!(
-                    "[{name}] gen {generation}: best cost @2% loss = {b2:.4}, @5% = {b5:.4}"
+                telemetry::info(
+                    &name,
+                    &format!("gen {generation}: best cost @2% loss = {b2:.4}, @5% = {b5:.4}"),
                 );
             }
         };
@@ -332,6 +349,7 @@ impl Pipeline {
         let exact = map.exact_genome();
         let exact_fa = crate::area::AreaModel::new(&map).exact_estimate() as f64;
         let use_circuit = self.opts.backend == EvalBackend::Circuit;
+        let _sp_ga = crate::span!("ga");
         let (front, population, backend_used, exact_objs) = if use_circuit {
             // Circuit-in-the-loop: every chromosome is synthesized and
             // classified at the gate level through the wave engine,
@@ -399,6 +417,8 @@ impl Pipeline {
                 vec![0.0, exact_fa],
             )
         };
+        drop(_sp_ga);
+        telemetry::gauge(Gauge::GaFrontSize, front.len() as u64);
         log(&format!(
             "GA: front size {} (population {})",
             front.len(),
@@ -415,6 +435,7 @@ impl Pipeline {
         }
         let area_model = crate::area::AreaModel::new(&map);
         let mut designs = Vec::new();
+        let _sp_designs = crate::span!("designs");
         for ind in selected {
             let masks = map.to_masks(&ind.genome);
             let acc_test_accum = qmlp.accuracy(&qtest, Some(&masks));
@@ -466,6 +487,8 @@ impl Pipeline {
                 power_source,
             });
         }
+        drop(_sp_designs);
+        telemetry::count(Counter::CoordDesignsSynthesized, designs.len() as u64);
         log(&format!("synthesized {} final designs", designs.len()));
 
         Ok(PipelineResult {

@@ -28,6 +28,7 @@
 //! (`rust/tests/nsga_backcompat.rs`).
 
 use crate::config::GaSpec;
+use crate::util::telemetry::{self, Counter, Gauge};
 use crate::util::{threads, BitVec, Rng};
 use std::collections::HashMap;
 
@@ -96,6 +97,8 @@ pub fn evaluate_parallel<const M: usize, E: Evaluator<M> + ?Sized>(
     genomes: &[BitVec],
     jobs: usize,
 ) -> Vec<[f64; M]> {
+    telemetry::count(Counter::GaEvaluateCalls, 1);
+    telemetry::count(Counter::GaGenomesIn, genomes.len() as u64);
     if let Some(objs) = ev.evaluate_batch(genomes) {
         assert_eq!(objs.len(), genomes.len(), "evaluator returned wrong arity");
         return objs;
@@ -112,6 +115,8 @@ pub fn evaluate_parallel<const M: usize, E: Evaluator<M> + ?Sized>(
         });
         which.push(k);
     }
+    telemetry::count(Counter::GaGenomesUnique, uniq.len() as u64);
+    let _sp = crate::span!("evaluate");
     let uniq_objs = threads::par_map_with(
         uniq.len(),
         jobs.max(1),
@@ -339,6 +344,8 @@ impl<'a, const M: usize> Nsga2<'a, M> {
 
         let mut history = Vec::new();
         for generation in 0..self.spec.generations {
+            let _sp = crate::span!("generation");
+            telemetry::count(Counter::GaGenerations, 1);
             // --- variation: binary tournament -> crossover -> mutation
             let ranks = non_dominated_sort(
                 &pop.iter().map(|i| i.objs).collect::<Vec<_>>(),
@@ -361,7 +368,21 @@ impl<'a, const M: usize> Nsga2<'a, M> {
                     offspring_genomes.push(c2);
                 }
             }
+            let n_off = offspring_genomes.len();
+            let t0 = std::time::Instant::now();
             let off_objs = evaluate_parallel(self.evaluator, &offspring_genomes, jobs);
+            if telemetry::log_enabled(telemetry::Level::Debug) {
+                let dt = t0.elapsed().as_secs_f64().max(1e-9);
+                telemetry::debug(
+                    "ga",
+                    &format!(
+                        "gen {generation}: {n_off} genomes in {:.1} ms \
+                         ({:.0} genomes/s, jobs {jobs})",
+                        dt * 1e3,
+                        n_off as f64 / dt
+                    ),
+                );
+            }
             let offspring: Vec<Individual<M>> = offspring_genomes
                 .into_iter()
                 .zip(off_objs)
@@ -371,6 +392,7 @@ impl<'a, const M: usize> Nsga2<'a, M> {
             // --- environmental selection on the merged population
             pop.extend(offspring);
             pop = select(pop, pop_size, self.spec.acc_loss_bound);
+            telemetry::gauge(Gauge::GaPopulation, pop.len() as u64);
 
             // --- logging
             let best2 = best_area_at(&pop, 0.02);

@@ -29,7 +29,61 @@ use printed_mlp::datasets;
 use printed_mlp::egfet::CostObjective;
 use printed_mlp::report;
 use printed_mlp::synth::SynthMode;
+use printed_mlp::util::telemetry;
 use std::collections::HashMap;
+
+/// The `--profile` stderr report: counters, work stats, the dirty-cone
+/// histogram, and span wall-time roll-ups, as aligned tables.
+fn render_profile(m: &telemetry::Metrics) -> String {
+    let mut out = String::new();
+    let kv = |pairs: &[(&'static str, u64)]| -> Vec<Vec<String>> {
+        pairs.iter().map(|(n, v)| vec![n.to_string(), v.to_string()]).collect()
+    };
+    out.push_str(&report::render_table(
+        "profile: counters (deterministic across --jobs)",
+        &["counter", "count"],
+        &kv(&m.counters),
+    ));
+    out.push_str(&report::render_table(
+        "profile: work (scheduling-dependent)",
+        &["stat", "count"],
+        &kv(&m.work),
+    ));
+    let hist: Vec<Vec<String>> = m
+        .cone_hist
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v > 0)
+        .map(|(k, &v)| {
+            let range = match k {
+                0 => "0".to_string(),
+                _ if k == telemetry::CONE_HIST_BUCKETS - 1 => format!("{}+", 1u64 << (k - 1)),
+                _ => format!("{}..{}", 1u64 << (k - 1), (1u64 << k) - 1),
+            };
+            vec![range, v.to_string()]
+        })
+        .collect();
+    if !hist.is_empty() {
+        out.push_str(&report::render_table(
+            "profile: dirty-cone size histogram (nodes recomputed per pass)",
+            &["cone size", "passes"],
+            &hist,
+        ));
+    }
+    let timers: Vec<Vec<String>> = m
+        .timers
+        .iter()
+        .map(|(path, calls, ms)| vec![path.clone(), calls.to_string(), format!("{ms:.1}")])
+        .collect();
+    if !timers.is_empty() {
+        out.push_str(&report::render_table(
+            "profile: spans (wall clock, non-deterministic)",
+            &["span", "calls", "total ms"],
+            &timers,
+        ));
+    }
+    out
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -46,7 +100,7 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
+        let mut it = std::env::args().skip(1).peekable();
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = HashMap::new();
         while let Some(k) = it.next() {
@@ -54,7 +108,12 @@ impl Args {
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got '{k}'"))?
                 .to_string();
-            let val = it.next().unwrap_or_else(|| "true".to_string());
+            // Valueless flags (`--profile`, `--no-baseline`) must not
+            // swallow a following `--flag` as their value.
+            let val = match it.peek() {
+                Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
             flags.insert(key, val);
         }
         Ok(Args { cmd, flags })
@@ -205,6 +264,24 @@ fn run() -> Result<()> {
                 std::fs::write(path, report::result_to_json(&result).to_string_pretty())?;
                 eprintln!("(JSON written to {path})");
             }
+            // Structured run report: --metrics-out <file> (or env
+            // PMLP_METRICS_OUT), plus --profile for the human table.
+            let metrics_path = args
+                .get("metrics-out")
+                .map(str::to_string)
+                .or_else(|| std::env::var("PMLP_METRICS_OUT").ok().filter(|s| !s.is_empty()));
+            let want_profile = args.get("profile").is_some();
+            if metrics_path.is_some() || want_profile {
+                let metrics = telemetry::snapshot();
+                if let Some(path) = &metrics_path {
+                    let doc = telemetry::metrics_json(&metrics).to_string_pretty();
+                    std::fs::write(path, doc)?;
+                    eprintln!("(metrics written to {path})");
+                }
+                if want_profile {
+                    eprint!("{}", render_profile(&metrics));
+                }
+            }
             Ok(())
         }
         "train" => {
@@ -288,6 +365,13 @@ fn run() -> Result<()> {
                  commands:\n  \
                  list                      built-in dataset configs\n  \
                  run --dataset <name>      full pipeline [--backend auto|pjrt|native|circuit] [--jobs N] [--pop N] [--gens N] [--out r.json]\n                            \
+                 [--metrics-out m.json] [--profile]\n                            \
+                 (--metrics-out / env PMLP_METRICS_OUT writes the stable-schema\n                            \
+                 telemetry document [counters, work stats, span wall times —\n                            \
+                 schema 'pmlp.metrics/1', see DESIGN.md §6]; --profile prints\n                            \
+                 the same as human tables on stderr; env PMLP_LOG=off|info|debug\n                            \
+                 sets the log level [default info]; counters are bit-identical\n                            \
+                 for any --jobs width, wall times are not;\n                            \
                  (backend 'circuit' = circuit-in-the-loop: GA fitness measured on the\n                            \
                  synthesized gate-level netlist via the 64-lane wave simulator;\n                            \
                  --synth incremental|full selects template cone-local re-synthesis\n                            \

@@ -57,6 +57,7 @@ use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
 use crate::sim::wave::{self, InputWave, WaveCache};
 use crate::synth::incremental::IncrementalSynth;
 use crate::synth::{optimize, SynthMode};
+use crate::util::telemetry::{self, Counter, Work};
 use crate::util::{BitVec, ShardedMap};
 use anyhow::Result;
 use std::sync::{Arc, Mutex, OnceLock, PoisonError};
@@ -651,9 +652,12 @@ impl<const M: usize> CircuitWorker<'_, M> {
                 .lock()
                 .unwrap_or_else(PoisonError::into_inner)
                 .pop();
-            let st = parked.unwrap_or_else(|| IncrState {
-                synth: IncrementalSynth::new(self.ev.template().clone()),
-                wave: WaveCache::new(self.ev.batches.clone()),
+            let st = parked.unwrap_or_else(|| {
+                telemetry::work(Work::EvalStatesCreated, 1);
+                IncrState {
+                    synth: IncrementalSynth::new(self.ev.template().clone()),
+                    wave: WaveCache::new(self.ev.batches.clone()),
+                }
             });
             self.st = Some(st);
         }
@@ -665,8 +669,14 @@ impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
     fn eval_one(&mut self, genome: &BitVec) -> [f64; M] {
         let ev = self.ev;
         if let Some(hit) = ev.memo.get(genome) {
+            // Batch dedup means each unique genome is probed once per
+            // batch and insertions land at batch boundaries, so hit/miss
+            // totals are a pure function of the genome stream — these
+            // stay `Counter`s despite living on worker threads.
+            telemetry::count(Counter::MemoHits, 1);
             return hit;
         }
+        telemetry::count(Counter::MemoMisses, 1);
         let objs = match ev.mode {
             SynthMode::Full => ev.score_full(genome),
             SynthMode::Incremental => {
@@ -702,6 +712,7 @@ impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
                 > ARENA_GROWTH_LIMIT * st.synth.template().nl.len().max(1)
         });
         if oversized {
+            telemetry::work(Work::EvalArenaResets, 1);
             self.st = None;
         }
         objs

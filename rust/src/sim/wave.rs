@@ -22,6 +22,7 @@
 //! lanes, so they never leak into results.
 
 use crate::netlist::{Gate, Netlist, NodeId};
+use crate::util::telemetry::{self, Counter, Work};
 use crate::util::threads;
 
 /// Lane count of one wave word.
@@ -144,6 +145,11 @@ pub fn lane_bus_u64(values: &[u64], bus: &[NodeId], lane: usize) -> u64 {
 /// dispatching batches across `n_threads` workers. Results come back in
 /// dataset order, one `u64` bus value per input vector.
 pub fn classify(nl: &Netlist, batches: &[InputWave], out_bus: &str, n_threads: usize) -> Vec<u64> {
+    telemetry::count(Counter::WaveClassifyCalls, 1);
+    telemetry::count(
+        Counter::WaveVectorsClassified,
+        batches.iter().map(|b| b.n_lanes as u64).sum(),
+    );
     let bus = &nl
         .outputs
         .iter()
@@ -214,6 +220,8 @@ impl WaveCache {
     /// rewritten is not — node ids are the cache key). Extends the
     /// lane-word and toggle caches to `nl`'s length as a side effect.
     pub fn classify_bus(&mut self, nl: &Netlist, bus: &[NodeId]) -> Vec<u64> {
+        telemetry::count(Counter::WaveClassifyCalls, 1);
+        telemetry::count(Counter::WaveVectorsClassified, self.n_vectors() as u64);
         self.extend(nl);
         let mut out = Vec::with_capacity(self.n_vectors());
         for (batch, values) in self.batches.iter().zip(&self.values) {
@@ -229,6 +237,16 @@ impl WaveCache {
     /// toggle counts across the batch sequence.
     fn extend(&mut self, nl: &Netlist) {
         let done = self.toggles.len();
+        // How far this cache extends is a function of the worker arena's
+        // history (which genomes this worker happened to serve), so these
+        // are scheduling-dependent `Work` stats, not `Counter`s.
+        let fresh = nl.gates.len().saturating_sub(done);
+        if fresh > 0 {
+            telemetry::work(Work::WaveCacheExtends, 1);
+            telemetry::work(Work::WaveNodesSimulated, fresh as u64);
+        } else {
+            telemetry::work(Work::WaveCacheHits, 1);
+        }
         for (batch, values) in self.batches.iter().zip(&mut self.values) {
             extend_wave_into(nl, &batch.words, values);
         }
@@ -271,6 +289,7 @@ pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
 /// activity without materializing per-vector `Vec<bool>` rows. Same
 /// integers, same division: bit-identical to the unpacked entry point.
 pub fn toggle_activity_batches(nl: &Netlist, batches: &[InputWave]) -> f64 {
+    telemetry::count(Counter::WaveActivitySims, 1);
     let n_vec: usize = batches.iter().map(|b| b.n_lanes).sum();
     if n_vec < 2 || nl.cell_count() == 0 {
         return 0.0;

@@ -36,6 +36,7 @@
 
 use crate::netlist::{CellCounts, Gate, Netlist, NodeId, Template};
 use crate::synth::{dce, Repr, Rewriter, SynthStats};
+use crate::util::telemetry::{self, Counter, Work};
 use crate::util::BitVec;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -99,6 +100,7 @@ impl IncrementalSynth {
     /// fanout cones of the flipped literals. Returns survivor stats.
     pub fn set_params(&mut self, params: &BitVec) -> SynthStats {
         assert_eq!(params.len(), self.tpl.n_params, "param count mismatch");
+        telemetry::count(Counter::SynthSetParams, 1);
         if !self.ready {
             self.cur = params.clone();
             self.full_pass();
@@ -146,6 +148,9 @@ impl IncrementalSynth {
     }
 
     fn full_pass(&mut self) {
+        // Whether a binding needs a full pass depends on whether this
+        // worker's state has served before — scheduling-dependent `Work`.
+        telemetry::work(Work::SynthFullPasses, 1);
         let IncrementalSynth { tpl, rw, repr, cur, .. } = self;
         repr.clear();
         for g in &tpl.nl.gates {
@@ -177,13 +182,16 @@ impl IncrementalSynth {
                 heap.push(Reverse(id));
             }
         }
+        let (mut pops, mut rewrites) = (0u64, 0u64);
         while let Some(Reverse(id)) = heap.pop() {
+            pops += 1;
             let g = &tpl.nl.gates[id as usize];
             let new = match *g {
                 Gate::Param(p) => Repr::Const(cur.get(p as usize)),
                 _ => rw.rewrite_gate(g, |i| repr[i as usize]),
             };
             if new != repr[id as usize] {
+                rewrites += 1;
                 repr[id as usize] = new;
                 for &c in tpl.consumers(id) {
                     if dirty_stamp[c as usize] != stamp {
@@ -193,6 +201,14 @@ impl IncrementalSynth {
                 }
             }
         }
+        // Cone shape depends on the worker state's previous binding, so
+        // these are scheduling-dependent `Work` stats. One flush per pass
+        // keeps the worklist loop itself telemetry-free.
+        telemetry::work(Work::SynthConePasses, 1);
+        telemetry::work(Work::SynthConeNodes, pops);
+        telemetry::work(Work::SynthRewrites, rewrites);
+        telemetry::work(Work::SynthConvergencePrunes, pops - rewrites);
+        telemetry::cone_size(pops as usize);
     }
 
     fn refresh_outputs(&mut self) {

@@ -12,6 +12,7 @@ pub mod fxhash;
 pub mod stats;
 pub mod threads;
 pub mod sharded;
+pub mod telemetry;
 pub mod prop;
 
 pub use bitvec::BitVec;

@@ -17,6 +17,7 @@
 //! fitness, no matter how they hash.
 
 use crate::util::fxhash::{FxHashMap, FxHasher};
+use crate::util::telemetry::{self, Counter};
 use std::hash::{Hash, Hasher};
 use std::sync::{Mutex, MutexGuard, PoisonError};
 
@@ -69,11 +70,17 @@ impl<K: Eq + Hash, V: Clone> ShardedMap<K, V> {
 
     /// Clone out the value for `key`, if present.
     pub fn get(&self, key: &K) -> Option<V> {
-        Self::lock_shard(self.shard(key)).get(key).cloned()
+        telemetry::count(Counter::ShardedGets, 1);
+        let v = Self::lock_shard(self.shard(key)).get(key).cloned();
+        if v.is_some() {
+            telemetry::count(Counter::ShardedHits, 1);
+        }
+        v
     }
 
     /// Insert (or overwrite) `key`.
     pub fn insert(&self, key: K, value: V) {
+        telemetry::count(Counter::ShardedInserts, 1);
         Self::lock_shard(self.shard(&key)).insert(key, value);
     }
 

@@ -1,0 +1,742 @@
+//! Std-only observability: counters, gauges, spans, and a leveled
+//! logging facade for the GA/synthesis/wave pipeline.
+//!
+//! Three kinds of signal, with *different determinism contracts*
+//! (documented in DESIGN.md §6 and pinned by `rust/tests/telemetry.rs`
+//! plus the counter suite in `rust/tests/ga_determinism.rs`):
+//!
+//! * **Counters** ([`Counter`]) count logical events that are a pure
+//!   function of the evaluated work — genomes scored, memo probes,
+//!   classify passes. Every instrumented event happens exactly once per
+//!   logical item regardless of how items are scheduled across workers,
+//!   so counter totals are **bit-identical between `--jobs 1` and
+//!   `--jobs N`**, exactly like the `GaResult` itself.
+//! * **Work stats** ([`Work`]) attribute *physical* work — dirty-cone
+//!   sizes, rewrites, convergence prunes, lane-words simulated. These
+//!   depend on which worker's arena served which genome, i.e. on
+//!   scheduling, and are explicitly **not** part of the determinism
+//!   contract (same as wall time). They are the per-stage cost
+//!   attribution the perf roadmap items feed on.
+//! * **Timers** — hierarchical spans ([`span`] / the `span!` macro)
+//!   roll wall time up per dotted phase path. Wall time is never
+//!   deterministic.
+//!
+//! ## Collection model (the per-worker counter blocks)
+//!
+//! Hot-path increments go to a plain thread-local [`Block`] — no atomics,
+//! no locks, a few nanoseconds each. `util::threads::par_map_with`
+//! merges every worker's block into the *calling thread's* block at the
+//! writeback barrier (after the scope joins, before results are
+//! returned), so totals always flow up the fan-out tree to the thread
+//! that started the work. Because counter events are pure per item and
+//! the merge is a commutative sum, the merged totals are independent of
+//! worker count and scheduling. Tests read their own thread's block
+//! ([`thread_block`]) and are therefore immune to concurrently running
+//! tests in the same process.
+//!
+//! The global registry (relaxed atomics for counters/work/gauges, a
+//! mutex-protected map for timers) is only touched by [`flush_thread`] /
+//! [`snapshot`] / span drops — never on the per-genome hot path.
+//!
+//! ## Run report
+//!
+//! [`snapshot`] + [`metrics_json`] produce the stable-schema
+//! `metrics.json` document (`pmlp run --metrics-out`, env
+//! `PMLP_METRICS_OUT`); every counter/work/gauge name is always present
+//! (zeros included) so downstream tooling can rely on the keys.
+//!
+//! ## Logging facade
+//!
+//! `PMLP_LOG=off|info|debug` (default `info`) gates [`info`]/[`debug`],
+//! which absorb the pipeline's scattered `eprintln!`s. The default level
+//! keeps the CLI's stderr byte-identical to the pre-facade output.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Version tag of the `metrics.json` schema (see DESIGN.md §6).
+pub const SCHEMA: &str = "pmlp.metrics/1";
+
+// ---------------------------------------------------------------------------
+// registry layout
+// ---------------------------------------------------------------------------
+
+/// Deterministic counters: totals are bit-identical for any `--jobs`
+/// width (pure per logical item; see the module docs). Keep the enum,
+/// [`N_COUNTERS`] and [`COUNTER_NAMES`] in lockstep — pinned by a test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// NSGA-II generations completed.
+    GaGenerations,
+    /// `ga::evaluate_parallel` invocations.
+    GaEvaluateCalls,
+    /// Genomes submitted for evaluation (pre-dedup).
+    GaGenomesIn,
+    /// Unique genomes actually fanned out (post-dedup).
+    GaGenomesUnique,
+    /// Circuit-evaluator fitness-memo hits.
+    MemoHits,
+    /// Circuit-evaluator fitness-memo misses (paid synthesis+sim).
+    MemoMisses,
+    /// `ShardedMap::get` probes.
+    ShardedGets,
+    /// `ShardedMap::get` probes that found an entry.
+    ShardedHits,
+    /// `ShardedMap::insert` calls.
+    ShardedInserts,
+    /// `IncrementalSynth::set_params` bindings (one per memo miss).
+    SynthSetParams,
+    /// Wave classification passes (`classify` / `classify_bus`).
+    WaveClassifyCalls,
+    /// Input vectors classified across all passes.
+    WaveVectorsClassified,
+    /// Dedicated toggle-activity simulations.
+    WaveActivitySims,
+    /// Final designs synthesized + analyzed by the coordinator.
+    CoordDesignsSynthesized,
+}
+
+pub const N_COUNTERS: usize = 14;
+
+/// Dotted counter names, indexed by `Counter as usize` — the keys of the
+/// `counters` section of `metrics.json`.
+pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
+    "ga.generations",
+    "ga.evaluate_calls",
+    "ga.genomes_in",
+    "ga.genomes_unique",
+    "evaluator.memo_hits",
+    "evaluator.memo_misses",
+    "sharded.gets",
+    "sharded.hits",
+    "sharded.inserts",
+    "synth.set_params",
+    "wave.classify_calls",
+    "wave.vectors_classified",
+    "wave.activity_sims",
+    "coordinator.designs_synthesized",
+];
+
+/// Scheduling-dependent work attribution (NOT covered by the jobs
+/// determinism contract — which worker's arena serves a genome decides
+/// how much physical work it costs). Reported under `work` in
+/// `metrics.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Work {
+    /// From-scratch template passes (first binding of a worker state).
+    SynthFullPasses,
+    /// Cone-local re-synthesis passes (non-empty param deltas).
+    SynthConePasses,
+    /// Template nodes popped off dirty-cone worklists.
+    SynthConeNodes,
+    /// Popped nodes whose representative actually changed.
+    SynthRewrites,
+    /// Popped nodes whose representative converged (consumers pruned).
+    SynthConvergencePrunes,
+    /// Arena nodes newly wave-simulated (cache extensions).
+    WaveNodesSimulated,
+    /// `WaveCache` extensions that evaluated at least one new node.
+    WaveCacheExtends,
+    /// `WaveCache` extensions fully served from cached lane words.
+    WaveCacheHits,
+    /// Fresh incremental worker states constructed (pool misses).
+    EvalStatesCreated,
+    /// Worker states dropped by the arena-growth backstop.
+    EvalArenaResets,
+}
+
+pub const N_WORK: usize = 10;
+
+/// Dotted work-stat names, indexed by `Work as usize`.
+pub const WORK_NAMES: [&str; N_WORK] = [
+    "synth.full_passes",
+    "synth.cone_passes",
+    "synth.cone_nodes",
+    "synth.rewrites",
+    "synth.convergence_prunes",
+    "wave.nodes_simulated",
+    "wave.cache_extends",
+    "wave.cache_hits",
+    "evaluator.states_created",
+    "evaluator.arena_resets",
+];
+
+/// Power-of-two buckets of the dirty-cone size histogram: bucket 0
+/// counts empty cones, bucket `k >= 1` counts cones with
+/// `2^(k-1) ..= 2^k - 1` recomputed nodes (last bucket absorbs the
+/// overflow). Serialized as the `synth.cone_hist` array under `work`.
+pub const CONE_HIST_BUCKETS: usize = 16;
+
+/// Last-value gauges (relaxed atomics; no determinism claim — they are
+/// point-in-time readings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// Population size after the most recent generation.
+    GaPopulation,
+    /// Size of the most recent GA Pareto front.
+    GaFrontSize,
+    /// Entries in the circuit evaluator's fitness memo after its GA run.
+    MemoEntries,
+}
+
+pub const N_GAUGES: usize = 3;
+
+/// Gauge names, indexed by `Gauge as usize`.
+pub const GAUGE_NAMES: [&str; N_GAUGES] =
+    ["ga.population", "ga.front_size", "evaluator.memo_entries"];
+
+// ---------------------------------------------------------------------------
+// per-worker counter blocks
+// ---------------------------------------------------------------------------
+
+/// One thread's accumulated counts — the per-worker counter block.
+/// `util::threads::par_map_with` sums worker blocks into the caller's
+/// at writeback; [`flush_thread`] sums a thread's block into the global
+/// registry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Block {
+    pub counters: [u64; N_COUNTERS],
+    pub work: [u64; N_WORK],
+    pub cone_hist: [u64; CONE_HIST_BUCKETS],
+}
+
+impl Default for Block {
+    fn default() -> Block {
+        Block {
+            counters: [0; N_COUNTERS],
+            work: [0; N_WORK],
+            cone_hist: [0; CONE_HIST_BUCKETS],
+        }
+    }
+}
+
+impl Block {
+    /// Elementwise sum — the (commutative, order-independent) merge.
+    pub fn add(&mut self, other: &Block) {
+        for (a, b) in self.counters.iter_mut().zip(&other.counters) {
+            *a += *b;
+        }
+        for (a, b) in self.work.iter_mut().zip(&other.work) {
+            *a += *b;
+        }
+        for (a, b) in self.cone_hist.iter_mut().zip(&other.cone_hist) {
+            *a += *b;
+        }
+    }
+
+    /// Elementwise difference vs an earlier copy of the same block —
+    /// how tests capture exactly their own run's counts.
+    pub fn delta(&self, since: &Block) -> Block {
+        let mut out = Block::default();
+        for (o, (a, b)) in out.counters.iter_mut().zip(self.counters.iter().zip(&since.counters))
+        {
+            *o = a.wrapping_sub(*b);
+        }
+        for (o, (a, b)) in out.work.iter_mut().zip(self.work.iter().zip(&since.work)) {
+            *o = a.wrapping_sub(*b);
+        }
+        for (o, (a, b)) in
+            out.cone_hist.iter_mut().zip(self.cone_hist.iter().zip(&since.cone_hist))
+        {
+            *o = a.wrapping_sub(*b);
+        }
+        out
+    }
+
+    /// The deterministic counters, paired with their names (what the
+    /// jobs-determinism tests compare).
+    pub fn counters_named(&self) -> Vec<(&'static str, u64)> {
+        COUNTER_NAMES.iter().zip(&self.counters).map(|(n, v)| (*n, *v)).collect()
+    }
+}
+
+thread_local! {
+    static BLOCK: RefCell<Block> = RefCell::new(Block::default());
+    /// Dotted path of the currently open span stack on this thread.
+    static SPAN_PATH: RefCell<String> = const { RefCell::new(String::new()) };
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Toggle collection (counters, work stats, gauges, spans). Logging is
+/// governed by `PMLP_LOG`, not by this switch. Used by the overhead
+/// bench row pair; collection is on by default.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Bump a deterministic counter by `n` (thread-local; merged upward at
+/// the `par_map_with` writeback).
+#[inline]
+pub fn count(c: Counter, n: u64) {
+    if !enabled() {
+        return;
+    }
+    BLOCK.with(|b| b.borrow_mut().counters[c as usize] += n);
+}
+
+/// Bump a scheduling-dependent work stat by `n`.
+#[inline]
+pub fn work(w: Work, n: u64) {
+    if !enabled() {
+        return;
+    }
+    BLOCK.with(|b| b.borrow_mut().work[w as usize] += n);
+}
+
+/// Record one dirty-cone pass of `nodes` recomputed nodes into the
+/// power-of-two size histogram.
+#[inline]
+pub fn cone_size(nodes: usize) {
+    if !enabled() {
+        return;
+    }
+    let bucket = ((usize::BITS - nodes.leading_zeros()) as usize).min(CONE_HIST_BUCKETS - 1);
+    BLOCK.with(|b| b.borrow_mut().cone_hist[bucket] += 1);
+}
+
+/// Copy of the current thread's block (tests: capture before/after a
+/// run and [`Block::delta`] the two).
+pub fn thread_block() -> Block {
+    BLOCK.with(|b| b.borrow().clone())
+}
+
+/// Take (and zero) the current thread's block — the worker side of the
+/// `par_map_with` merge.
+pub fn take_thread_block() -> Block {
+    BLOCK.with(|b| std::mem::take(&mut *b.borrow_mut()))
+}
+
+/// Sum a merged delta into the current thread's block — the caller side
+/// of the `par_map_with` merge.
+pub fn merge_into_thread(delta: &Block) {
+    BLOCK.with(|b| b.borrow_mut().add(delta));
+}
+
+// ---------------------------------------------------------------------------
+// global registry (relaxed atomics + timer map)
+// ---------------------------------------------------------------------------
+
+fn counter_totals() -> &'static [AtomicU64; N_COUNTERS] {
+    static T: OnceLock<[AtomicU64; N_COUNTERS]> = OnceLock::new();
+    T.get_or_init(|| std::array::from_fn(|_| AtomicU64::new(0)))
+}
+
+fn work_totals() -> &'static [AtomicU64; N_WORK] {
+    static T: OnceLock<[AtomicU64; N_WORK]> = OnceLock::new();
+    T.get_or_init(|| std::array::from_fn(|_| AtomicU64::new(0)))
+}
+
+fn cone_totals() -> &'static [AtomicU64; CONE_HIST_BUCKETS] {
+    static T: OnceLock<[AtomicU64; CONE_HIST_BUCKETS]> = OnceLock::new();
+    T.get_or_init(|| std::array::from_fn(|_| AtomicU64::new(0)))
+}
+
+fn gauge_cells() -> &'static [AtomicU64; N_GAUGES] {
+    static T: OnceLock<[AtomicU64; N_GAUGES]> = OnceLock::new();
+    T.get_or_init(|| std::array::from_fn(|_| AtomicU64::new(0)))
+}
+
+/// `(calls, total_ns)` per dotted span path.
+fn timers() -> &'static Mutex<BTreeMap<String, (u64, u64)>> {
+    static T: OnceLock<Mutex<BTreeMap<String, (u64, u64)>>> = OnceLock::new();
+    T.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Lock the timer map, recovering from poisoning (a span drop during a
+/// worker's unwind must never double-panic; the map is structurally
+/// sound under any interleaving — same policy as the sharded memo).
+fn lock_timers() -> MutexGuard<'static, BTreeMap<String, (u64, u64)>> {
+    timers().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Set a last-value gauge (relaxed store into the global registry).
+pub fn gauge(g: Gauge, v: u64) {
+    if !enabled() {
+        return;
+    }
+    gauge_cells()[g as usize].store(v, Ordering::Relaxed);
+}
+
+/// Fold the current thread's block into the global registry (relaxed
+/// adds) and zero it. Called by [`snapshot`]; worker threads never call
+/// this — their blocks merge into the spawning thread instead.
+pub fn flush_thread() {
+    let b = take_thread_block();
+    for (t, v) in counter_totals().iter().zip(&b.counters) {
+        t.fetch_add(*v, Ordering::Relaxed);
+    }
+    for (t, v) in work_totals().iter().zip(&b.work) {
+        t.fetch_add(*v, Ordering::Relaxed);
+    }
+    for (t, v) in cone_totals().iter().zip(&b.cone_hist) {
+        t.fetch_add(*v, Ordering::Relaxed);
+    }
+}
+
+/// Zero every counter, work stat, gauge, timer, and the current
+/// thread's block. Test/bench scaffolding.
+pub fn reset() {
+    let _ = take_thread_block();
+    for t in counter_totals() {
+        t.store(0, Ordering::Relaxed);
+    }
+    for t in work_totals() {
+        t.store(0, Ordering::Relaxed);
+    }
+    for t in cone_totals() {
+        t.store(0, Ordering::Relaxed);
+    }
+    for t in gauge_cells() {
+        t.store(0, Ordering::Relaxed);
+    }
+    lock_timers().clear();
+}
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+/// An open span; records `(calls += 1, total_ns += elapsed)` under its
+/// dotted path when dropped. Created by [`span`] / the `span!` macro.
+pub struct Span {
+    armed: bool,
+    prev_len: usize,
+    start: Instant,
+}
+
+/// Open a hierarchical span. Nesting builds the dotted path: a span
+/// `"ga"` opened while `"pipeline"` is active rolls up under
+/// `"pipeline.ga"`. Keep the guard alive for the phase:
+/// `let _sp = span!("train");`.
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { armed: false, prev_len: 0, start: Instant::now() };
+    }
+    let prev_len = SPAN_PATH.with(|p| {
+        let mut p = p.borrow_mut();
+        let prev = p.len();
+        if !p.is_empty() {
+            p.push('.');
+        }
+        p.push_str(name);
+        prev
+    });
+    Span { armed: true, prev_len, start: Instant::now() }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let elapsed_ns = self.start.elapsed().as_nanos() as u64;
+        let path = SPAN_PATH.with(|p| {
+            let mut p = p.borrow_mut();
+            let full = p.clone();
+            p.truncate(self.prev_len);
+            full
+        });
+        let mut t = lock_timers();
+        let cell = t.entry(path).or_insert((0, 0));
+        cell.0 += 1;
+        cell.1 += elapsed_ns;
+    }
+}
+
+/// `span!("phase")` — sugar for [`span`], usable anywhere in the crate
+/// (`crate::span!`) and by downstream users (`printed_mlp::span!`).
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::util::telemetry::span($name)
+    };
+}
+
+// ---------------------------------------------------------------------------
+// leveled logging facade
+// ---------------------------------------------------------------------------
+
+/// Log level of the facade (`PMLP_LOG`). Ordered: `Off < Info < Debug`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_lowercase().as_str() {
+            "off" | "none" | "0" => Some(Level::Off),
+            "info" | "1" => Some(Level::Info),
+            "debug" | "2" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// The facade's level: `PMLP_LOG` if set (warns loudly on a bad value,
+/// per the env-reader policy), else `info` — which keeps the CLI's
+/// stderr byte-identical to the pre-facade output.
+pub fn log_level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("PMLP_LOG") {
+        Ok(v) => Level::parse(&v).unwrap_or_else(|| {
+            eprintln!("warning: bad PMLP_LOG '{v}' (off|info|debug); using info");
+            Level::Info
+        }),
+        Err(_) => Level::Info,
+    })
+}
+
+/// Whether messages at `level` are emitted.
+pub fn log_enabled(level: Level) -> bool {
+    level != Level::Off && level <= log_level()
+}
+
+/// Emit `[tag] msg` to stderr at info level.
+pub fn info(tag: &str, msg: &str) {
+    if log_enabled(Level::Info) {
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+/// Emit `[tag] msg` to stderr at debug level.
+pub fn debug(tag: &str, msg: &str) {
+    if log_enabled(Level::Debug) {
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot + run report
+// ---------------------------------------------------------------------------
+
+/// A point-in-time reading of the whole registry.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub counters: Vec<(&'static str, u64)>,
+    pub work: Vec<(&'static str, u64)>,
+    pub cone_hist: Vec<u64>,
+    pub gauges: Vec<(&'static str, u64)>,
+    /// `(dotted path, calls, total wall milliseconds)`.
+    pub timers: Vec<(String, u64, f64)>,
+}
+
+/// Flush the calling thread's block into the global registry and read
+/// everything back. All fan-out work started (and joined) by this
+/// thread is included — worker blocks merged upward at each
+/// `par_map_with` writeback.
+pub fn snapshot() -> Metrics {
+    flush_thread();
+    let counters = COUNTER_NAMES
+        .iter()
+        .zip(counter_totals())
+        .map(|(n, a)| (*n, a.load(Ordering::Relaxed)))
+        .collect();
+    let work = WORK_NAMES
+        .iter()
+        .zip(work_totals())
+        .map(|(n, a)| (*n, a.load(Ordering::Relaxed)))
+        .collect();
+    let cone_hist = cone_totals().iter().map(|a| a.load(Ordering::Relaxed)).collect();
+    let gauges = GAUGE_NAMES
+        .iter()
+        .zip(gauge_cells())
+        .map(|(n, a)| (*n, a.load(Ordering::Relaxed)))
+        .collect();
+    let timers = lock_timers()
+        .iter()
+        .map(|(path, (calls, ns))| (path.clone(), *calls, *ns as f64 / 1e6))
+        .collect();
+    Metrics { counters, work, cone_hist, gauges, timers }
+}
+
+/// Serialize a snapshot as the stable-schema `metrics.json` document
+/// (schema [`SCHEMA`], layout documented in DESIGN.md §6). Every
+/// counter/work/gauge key is always present; objects are `BTreeMap`s,
+/// so the byte output is deterministic for a given snapshot.
+pub fn metrics_json(m: &Metrics) -> Json {
+    let pairs = |v: &[(&'static str, u64)]| -> Json {
+        Json::Obj(v.iter().map(|(n, x)| (n.to_string(), Json::Num(*x as f64))).collect())
+    };
+    let mut work_obj = match pairs(&m.work) {
+        Json::Obj(o) => o,
+        _ => unreachable!(),
+    };
+    work_obj.insert(
+        "synth.cone_hist".to_string(),
+        Json::Arr(m.cone_hist.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    let timers = Json::Obj(
+        m.timers
+            .iter()
+            .map(|(path, calls, ms)| {
+                (
+                    path.clone(),
+                    Json::obj(vec![
+                        ("calls", Json::Num(*calls as f64)),
+                        ("total_ms", Json::Num(*ms)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("counters", pairs(&m.counters)),
+        ("work", Json::Obj(work_obj)),
+        ("gauges", pairs(&m.gauges)),
+        ("timers_ms", timers),
+        ("log_level", Json::str(log_level().label())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_tables_match_enum_arity() {
+        // The last variant of each enum must index the last name slot.
+        assert_eq!(Counter::CoordDesignsSynthesized as usize, N_COUNTERS - 1);
+        assert_eq!(Work::EvalArenaResets as usize, N_WORK - 1);
+        assert_eq!(Gauge::MemoEntries as usize, N_GAUGES - 1);
+        assert_eq!(COUNTER_NAMES.len(), N_COUNTERS);
+        assert_eq!(WORK_NAMES.len(), N_WORK);
+        assert_eq!(GAUGE_NAMES.len(), N_GAUGES);
+    }
+
+    #[test]
+    fn block_add_and_delta_are_elementwise() {
+        let mut a = Block::default();
+        a.counters[Counter::MemoHits as usize] = 3;
+        a.work[Work::SynthRewrites as usize] = 5;
+        a.cone_hist[2] = 7;
+        let mut b = Block::default();
+        b.counters[Counter::MemoHits as usize] = 10;
+        b.add(&a);
+        assert_eq!(b.counters[Counter::MemoHits as usize], 13);
+        assert_eq!(b.work[Work::SynthRewrites as usize], 5);
+        assert_eq!(b.cone_hist[2], 7);
+        let d = b.delta(&a);
+        assert_eq!(d.counters[Counter::MemoHits as usize], 10);
+        assert_eq!(d.work[Work::SynthRewrites as usize], 0);
+        assert_eq!(d.cone_hist[2], 0);
+    }
+
+    #[test]
+    fn thread_block_captures_counts() {
+        let before = thread_block();
+        count(Counter::GaGenomesIn, 4);
+        count(Counter::GaGenomesIn, 2);
+        work(Work::WaveCacheHits, 1);
+        let d = thread_block().delta(&before);
+        assert_eq!(d.counters[Counter::GaGenomesIn as usize], 6);
+        assert_eq!(d.work[Work::WaveCacheHits as usize], 1);
+    }
+
+    #[test]
+    fn cone_hist_buckets_by_power_of_two() {
+        let before = thread_block();
+        cone_size(0); // bucket 0
+        cone_size(1); // bucket 1
+        cone_size(2); // bucket 2
+        cone_size(3); // bucket 2
+        cone_size(8); // bucket 4
+        cone_size(usize::MAX); // clamped into the last bucket
+        let d = thread_block().delta(&before);
+        assert_eq!(d.cone_hist[0], 1);
+        assert_eq!(d.cone_hist[1], 1);
+        assert_eq!(d.cone_hist[2], 2);
+        assert_eq!(d.cone_hist[4], 1);
+        assert_eq!(d.cone_hist[CONE_HIST_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn spans_roll_up_under_nested_paths() {
+        {
+            let _outer = span("tspan_outer");
+            {
+                let _inner = span("tspan_inner");
+            }
+        }
+        let t = lock_timers();
+        let (calls, ns) = t.get("tspan_outer").copied().expect("outer span recorded");
+        assert!(calls >= 1);
+        let (icalls, _) = t.get("tspan_outer.tspan_inner").copied().expect("nested path");
+        assert!(icalls >= 1);
+        // Elapsed is monotonic (can be 0 ns on coarse clocks, never bogus).
+        let _ = ns;
+    }
+
+    #[test]
+    fn span_path_restored_after_drop() {
+        {
+            let _a = span("tspan_a");
+        }
+        // Path must be back to this thread's pre-span state, so a later
+        // span roots at the same depth.
+        {
+            let _b = span("tspan_b");
+        }
+        let t = lock_timers();
+        assert!(t.contains_key("tspan_b"), "second span must not nest under a dropped one");
+    }
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("off"), Some(Level::Off));
+        assert_eq!(Level::parse("INFO"), Some(Level::Info));
+        assert_eq!(Level::parse("Debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("2"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Off < Level::Info && Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn metrics_json_has_stable_sections() {
+        let m = Metrics {
+            counters: COUNTER_NAMES.iter().map(|n| (*n, 1u64)).collect(),
+            work: WORK_NAMES.iter().map(|n| (*n, 2u64)).collect(),
+            cone_hist: vec![0; CONE_HIST_BUCKETS],
+            gauges: GAUGE_NAMES.iter().map(|n| (*n, 3u64)).collect(),
+            timers: vec![("pipeline.ga".to_string(), 4, 5.5)],
+        };
+        let j = metrics_json(&m);
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        let counters = j.get("counters").and_then(Json::as_obj).expect("counters obj");
+        assert_eq!(counters.len(), N_COUNTERS);
+        let work = j.get("work").and_then(Json::as_obj).expect("work obj");
+        assert_eq!(work.len(), N_WORK + 1, "work stats + the cone histogram");
+        assert_eq!(
+            work.get("synth.cone_hist").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(CONE_HIST_BUCKETS)
+        );
+        let timers = j.get("timers_ms").and_then(Json::as_obj).expect("timers obj");
+        assert_eq!(
+            timers.get("pipeline.ga").and_then(|t| t.get("calls")).and_then(Json::as_f64),
+            Some(4.0)
+        );
+        // Round-trip through the serializer/parser pair is lossless.
+        let back = Json::parse(&j.to_string_pretty()).expect("parses");
+        assert_eq!(back, j);
+    }
+}

@@ -15,7 +15,9 @@
 //!   incremental-synthesis arena + wave cache (`runtime::evaluator`)
 //!   without any locking on the hot path.
 
+use crate::util::telemetry;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
 
 /// Number of worker threads to use (env `PMLP_THREADS` overrides).
 pub fn default_threads() -> usize {
@@ -82,12 +84,22 @@ where
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let cursor = AtomicUsize::new(0);
     let out_ptr = SendPtr(out.as_mut_ptr());
+    // Writeback point of the telemetry counter blocks: each worker's
+    // thread-local block is summed in here when it finishes draining the
+    // cursor, and the total flows into the *calling* thread's block after
+    // the scope joins. Counter events are pure per item and the sum is
+    // commutative, so the merged totals are identical for any worker
+    // count — the jobs-1 == jobs-N contract of `util::telemetry`.
+    // (A panicking worker's block is lost, but the panic re-raises on the
+    // caller anyway, so no run report is ever built from it.)
+    let merged = Mutex::new(telemetry::Block::default());
     std::thread::scope(|scope| {
         for _ in 0..threads {
             let iref = &init;
             let fref = &f;
             let cref = &cursor;
             let optr = &out_ptr;
+            let mref = &merged;
             scope.spawn(move || {
                 let mut state = iref();
                 loop {
@@ -104,9 +116,13 @@ where
                         *optr.0.add(i) = Some(v);
                     }
                 }
+                let block = telemetry::take_thread_block();
+                mref.lock().unwrap_or_else(PoisonError::into_inner).add(&block);
             });
         }
     });
+    let merged = merged.into_inner().unwrap_or_else(PoisonError::into_inner);
+    telemetry::merge_into_thread(&merged);
     out.into_iter().map(|x| x.expect("worker filled slot")).collect()
 }
 
@@ -214,6 +230,26 @@ mod tests {
             par_map_with(16, 4, || panic!("init bomb"), |_: &mut (), i| i)
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn telemetry_counts_merge_width_independent() {
+        // Worker counter blocks merge into the calling thread's block at
+        // writeback, so the caller-visible delta is identical whether the
+        // 257 items ran serially or across 8 workers.
+        use crate::util::telemetry::{self, Counter};
+        let run = |threads: usize| {
+            let before = telemetry::thread_block();
+            par_map(257, threads, |i| {
+                telemetry::count(Counter::MemoHits, 1);
+                i
+            });
+            telemetry::thread_block().delta(&before)
+        };
+        let serial = run(1);
+        let parallel = run(8);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial.counters[Counter::MemoHits as usize], 257);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use printed_mlp::model::{FloatMlp, QuantMlp};
 use printed_mlp::runtime::evaluator::{CircuitEvaluator, NativeEvaluator};
 use printed_mlp::runtime::{PjrtEvaluator, Runtime};
 use printed_mlp::synth::SynthMode;
+use printed_mlp::util::telemetry;
 use printed_mlp::util::BitVec;
 
 fn tiny_setup() -> (QuantMlp, printed_mlp::datasets::QuantDataset, f64) {
@@ -184,6 +185,77 @@ fn backends_agree_with_each_other_at_any_width() {
     let a = run_at::<2>(&native, glen, &[], 1);
     let b = run_at::<2>(&circuit, glen, &[], 8);
     assert_eq!(a, b);
+}
+
+/// Telemetry counters this thread accumulated over one GA run at the
+/// given width. Worker blocks merge into the calling thread's block at
+/// the `par_map_with` writeback, so the before/after delta captures
+/// exactly this run's counts — isolated from concurrently running tests
+/// (each test runs on its own thread with its own block).
+fn counters_during<const M: usize>(
+    ev: &dyn Evaluator<M>,
+    genome_len: usize,
+    jobs: usize,
+) -> Vec<(&'static str, u64)> {
+    let before = telemetry::thread_block();
+    let _ = run_at::<M>(ev, genome_len, &[], jobs);
+    telemetry::thread_block().delta(&before).counters_named()
+}
+
+fn counter_of(counters: &[(&'static str, u64)], name: &str) -> u64 {
+    counters.iter().find(|(n, _)| *n == name).unwrap_or_else(|| panic!("no counter {name}")).1
+}
+
+#[test]
+fn native_counters_jobs_1_vs_8_bit_identical() {
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
+    let serial = counters_during::<2>(&ev, glen, 1);
+    let parallel = counters_during::<2>(&ev, glen, 8);
+    assert_eq!(serial, parallel);
+    // 1 initial evaluation + one per generation.
+    assert_eq!(counter_of(&serial, "ga.generations"), 3);
+    assert_eq!(counter_of(&serial, "ga.evaluate_calls"), 4);
+    assert!(counter_of(&serial, "ga.genomes_in") >= 4 * 16);
+}
+
+#[test]
+fn circuit_incremental_counters_jobs_1_vs_8_bit_identical() {
+    // Fresh evaluator per width (own memo + arena pool), like the
+    // GaResult tests above: identical counts cannot come from shared
+    // caches. Memo hit/miss totals are width-invariant because batch
+    // dedup probes each unique genome once and inserts land at batch
+    // boundaries — the heart of the determinism contract.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let serial_ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+    let par_ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+    let serial = counters_during::<2>(&serial_ev, glen, 1);
+    let parallel = counters_during::<2>(&par_ev, glen, 8);
+    assert_eq!(serial, parallel);
+    assert!(counter_of(&serial, "evaluator.memo_misses") > 0);
+    assert!(counter_of(&serial, "synth.set_params") > 0);
+    assert!(counter_of(&serial, "wave.vectors_classified") > 0);
+    assert!(counter_of(&serial, "sharded.gets") > 0);
+    // Every unique genome is probed exactly once per batch.
+    assert_eq!(
+        counter_of(&serial, "evaluator.memo_hits") + counter_of(&serial, "evaluator.memo_misses"),
+        counter_of(&serial, "ga.genomes_unique")
+    );
+}
+
+#[test]
+fn circuit_full_counters_jobs_1_vs_8_bit_identical() {
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let serial_ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
+    let par_ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
+    let serial = counters_during::<2>(&serial_ev, glen, 1);
+    let parallel = counters_during::<2>(&par_ev, glen, 8);
+    assert_eq!(serial, parallel);
+    assert!(counter_of(&serial, "evaluator.memo_misses") > 0);
+    assert!(counter_of(&serial, "wave.classify_calls") > 0);
 }
 
 #[test]

@@ -1,0 +1,114 @@
+//! Telemetry subsystem integration suite: the `metrics.json` schema
+//! round-trip through `util::json`, the per-worker counter-block merge
+//! at the `par_map_with` writeback, and the global enable switch.
+//!
+//! Counter *values* asserted here always come from this thread's
+//! before/after block delta — never from the process-global registry —
+//! so concurrently running tests in this binary can't perturb them. The
+//! tests that toggle the (process-global) enable switch or read the
+//! global registry serialize on `GATE`.
+
+use printed_mlp::util::json::Json;
+use printed_mlp::util::telemetry::{self, Counter, Work};
+use printed_mlp::util::threads;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[test]
+fn metrics_json_schema_round_trips() {
+    let _g = gate();
+    // Populate every section so the round-trip exercises real content.
+    telemetry::count(Counter::GaGenomesIn, 42);
+    telemetry::work(Work::SynthRewrites, 7);
+    telemetry::cone_size(5);
+    {
+        let _outer = telemetry::span("it_roundtrip");
+        let _inner = telemetry::span("inner");
+    }
+    let metrics = telemetry::snapshot();
+    let json = telemetry::metrics_json(&metrics);
+    let text = json.to_string_pretty();
+    let back = Json::parse(&text).expect("metrics.json must parse");
+    assert_eq!(back, json, "round-trip through util::json must be lossless");
+
+    // The documented schema: version tag + every key always present.
+    assert_eq!(back.get("schema").and_then(Json::as_str), Some(telemetry::SCHEMA));
+    let counters = back.get("counters").and_then(Json::as_obj).expect("counters section");
+    for name in telemetry::COUNTER_NAMES {
+        assert!(counters.contains_key(name), "missing counter key '{name}'");
+    }
+    let work = back.get("work").and_then(Json::as_obj).expect("work section");
+    for name in telemetry::WORK_NAMES {
+        assert!(work.contains_key(name), "missing work key '{name}'");
+    }
+    assert_eq!(
+        work.get("synth.cone_hist").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(telemetry::CONE_HIST_BUCKETS)
+    );
+    let gauges = back.get("gauges").and_then(Json::as_obj).expect("gauges section");
+    for name in telemetry::GAUGE_NAMES {
+        assert!(gauges.contains_key(name), "missing gauge key '{name}'");
+    }
+    let timers = back.get("timers_ms").and_then(Json::as_obj).expect("timers section");
+    let span = timers.get("it_roundtrip").expect("span recorded");
+    assert!(span.get("calls").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0);
+    assert!(span.get("total_ms").is_some());
+    assert!(timers.contains_key("it_roundtrip.inner"), "nested span path");
+    assert!(back.get("log_level").and_then(Json::as_str).is_some());
+
+    // The values this test contributed are visible in the global totals
+    // (other tests can only add, never subtract).
+    let ga_in = counters.get("ga.genomes_in").and_then(Json::as_f64).unwrap();
+    assert!(ga_in >= 42.0);
+}
+
+#[test]
+fn worker_counter_blocks_merge_width_independent() {
+    let _g = gate();
+    let run = |threads: usize| {
+        let before = telemetry::thread_block();
+        threads::par_map(257, threads, |i| {
+            telemetry::count(Counter::MemoHits, 1);
+            if i % 3 == 0 {
+                telemetry::work(Work::WaveCacheHits, 1);
+            }
+            i
+        });
+        telemetry::thread_block().delta(&before)
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    // Counters AND (for a fixed per-item workload like this synthetic
+    // one) work stats merge to identical totals at any width.
+    assert_eq!(serial, parallel);
+    assert_eq!(serial.counters[Counter::MemoHits as usize], 257);
+    assert_eq!(serial.work[Work::WaveCacheHits as usize], 86);
+}
+
+#[test]
+fn disabled_telemetry_collects_nothing() {
+    let _g = gate();
+    let before = telemetry::thread_block();
+    telemetry::set_enabled(false);
+    telemetry::count(Counter::GaGenomesIn, 5);
+    telemetry::work(Work::SynthRewrites, 5);
+    telemetry::cone_size(4);
+    telemetry::set_enabled(true);
+    assert_eq!(telemetry::thread_block(), before);
+}
+
+#[test]
+fn counters_named_pairs_names_with_values() {
+    let _g = gate();
+    let before = telemetry::thread_block();
+    telemetry::count(Counter::SynthSetParams, 9);
+    let named = telemetry::thread_block().delta(&before).counters_named();
+    assert_eq!(named.len(), telemetry::N_COUNTERS);
+    let (_, v) = named.iter().find(|(n, _)| *n == "synth.set_params").unwrap();
+    assert_eq!(*v, 9);
+}
