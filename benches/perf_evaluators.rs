@@ -10,7 +10,11 @@
 //! `circuit/incr/area+power` row times the joint three-objective
 //! evaluator on the same chain so the const-generic arity
 //! generalization's overhead stays visible (target: < 10% vs the single
-//! measured objective).
+//! measured objective). The `circuit/incr/{64-lane,256-lane,
+//! shared-cones}` row triple isolates the wave tentpole: legacy `u64`
+//! width (the committed baseline), `[u64; 4]` blocks, and blocks plus
+//! the generation-scoped shared-cone memo — CI's smoke leg asserts
+//! shared-cones ≥ 2× the 64-lane baseline.
 //!
 //! The jobs-scaling section measures the population-parallel fan-out of
 //! the circuit backend (per-worker synthesis arenas + wave caches) at

@@ -1,7 +1,9 @@
 //! Perf: netlist generation + synthesis + analysis throughput on the
 //! exact baseline circuits (the Table II sweep's inner loop), the
 //! simulation section (scalar `eval_nodes` vs the bit-parallel wave
-//! engine in vectors/sec — the wave engine's ≥20× target), and the
+//! engine at both lane widths — the legacy 64-lane `u64` path and the
+//! 256-lane `[u64; 4]` block path — in vectors/sec; the wave engine's
+//! ≥20× target), and the
 //! incremental re-synthesis section: template cone-patch re-synths/sec
 //! per flipped-param count vs from-scratch `optimize` (the ≥5× circuit-
 //! backend target rides on this).
@@ -24,9 +26,12 @@ use printed_mlp::synth::incremental::IncrementalSynth;
 use printed_mlp::synth::optimize;
 use printed_mlp::util::Rng;
 
-/// Simulation throughput of one netlist: (scalar vectors/s, wave
-/// vectors/s). Same random stimulus for both engines.
-fn sim_rates(nl: &Netlist, n_vectors: usize, seed: u64) -> (f64, f64) {
+/// Simulation throughput of one netlist: (scalar vectors/s, 64-lane
+/// wave vectors/s, 256-lane block vectors/s). Same random stimulus for
+/// all three engines; the 64-lane row exercises the legacy `u64` entry
+/// point (which must keep compiling and performing as the thin `W = 1`
+/// wrapper it now is), the block row the production `[u64; 4]` width.
+fn sim_rates(nl: &Netlist, n_vectors: usize, seed: u64) -> (f64, f64, f64) {
     let mut rng = Rng::new(seed);
     let vectors: Vec<Vec<bool>> = (0..n_vectors)
         .map(|_| (0..nl.n_inputs).map(|_| rng.chance(0.5)).collect())
@@ -47,7 +52,15 @@ fn sim_rates(nl: &Netlist, n_vectors: usize, seed: u64) -> (f64, f64) {
         wave::eval_wave_into(nl, &b.words, &mut words);
     }
     let wave_rate = n_vectors as f64 / t0.elapsed().as_secs_f64();
-    (scalar_rate, wave_rate)
+
+    let blocks: Vec<_> = vectors.chunks(wave::BLOCK_LANES).map(wave::pack_block).collect();
+    let t0 = std::time::Instant::now();
+    let mut block_values = Vec::new();
+    for b in &blocks {
+        wave::eval_blocks_into(nl, &b.blocks, &mut block_values);
+    }
+    let block_rate = n_vectors as f64 / t0.elapsed().as_secs_f64();
+    (scalar_rate, wave_rate, block_rate)
 }
 
 fn main() {
@@ -87,13 +100,15 @@ fn main() {
                 format!("{:.0}", hw.area_cm2),
             ]);
 
-            let (scalar_rate, wave_rate) = sim_rates(&opt, n_vectors, 7);
+            let (scalar_rate, wave_rate, block_rate) = sim_rates(&opt, n_vectors, 7);
             sim_rows.push(vec![
                 name.to_string(),
                 format!("{}", opt.cell_count()),
                 format!("{scalar_rate:.0}"),
                 format!("{wave_rate:.0}"),
+                format!("{block_rate:.0}"),
                 format!("{:.1}x", wave_rate / scalar_rate),
+                format!("{:.1}x", block_rate / wave_rate),
             ]);
 
             // ---- incremental vs from-scratch re-synthesis --------------
@@ -140,7 +155,15 @@ fn main() {
         );
         out.push_str(&printed_mlp::report::render_table(
             &format!("simulation throughput (synthesized netlists, {n_vectors} vectors)"),
-            &["dataset", "cells", "scalar vec/s", "wave vec/s", "speedup"],
+            &[
+                "dataset",
+                "cells",
+                "scalar vec/s",
+                "64-lane vec/s",
+                "256-lane vec/s",
+                "64L/scalar",
+                "256L/64L",
+            ],
             &sim_rows,
         ));
         out.push_str(&printed_mlp::report::render_table(

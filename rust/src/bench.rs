@@ -20,6 +20,7 @@ use crate::model::QuantMlp;
 use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
 use crate::report::render_table;
 use crate::sc::ScMlp;
+use crate::sim::wave::LaneWidth;
 use crate::synth::optimize;
 use crate::train;
 use crate::util::json::Json;
@@ -714,6 +715,58 @@ pub fn ablation_evaluators_recorded(
         format!(
             "== full over {n_full}: {agree_full}; speedup {:.1}x",
             incr_rate / full_rate
+        ),
+    ]);
+
+    // Lane-width / shared-cone ablation on the same chain at the same
+    // jobs=1 worker discipline. The 64-lane row (sharing off) is the
+    // pre-block engine — the committed baseline the acceptance target
+    // is measured against; the 256-lane row isolates the `[u64; 4]`
+    // block win; shared-cones stacks the generation-scoped cone memo on
+    // top. All three must agree bit-exactly with the default incr run.
+    // CI asserts shared-cones >= 2x the 64-lane row (smoke bench leg).
+    let w64_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
+        .with_lane_width(LaneWidth::W64)
+        .with_cone_sharing(false);
+    let t0 = std::time::Instant::now();
+    let objs_w64 = evaluate_parallel(&w64_ev, &chain, 1);
+    let w64_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+    record("circuit/incr/64-lane".to_string(), w64_rate);
+    rows.push(vec![
+        "circuit/incr/64-lane".to_string(),
+        format!("{w64_rate:.1}"),
+        format!("legacy width, sharing off; == incr: {}", objs_w64 == objs_incr),
+    ]);
+    let w256_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
+        .with_lane_width(LaneWidth::W256)
+        .with_cone_sharing(false);
+    let t0 = std::time::Instant::now();
+    let objs_w256 = evaluate_parallel(&w256_ev, &chain, 1);
+    let w256_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+    record("circuit/incr/256-lane".to_string(), w256_rate);
+    rows.push(vec![
+        "circuit/incr/256-lane".to_string(),
+        format!("{w256_rate:.1}"),
+        format!(
+            "block engine, sharing off; == incr: {}; {:.1}x of 64-lane",
+            objs_w256 == objs_incr,
+            w256_rate / w64_rate
+        ),
+    ]);
+    let shared_ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
+        .with_lane_width(LaneWidth::W256)
+        .with_cone_sharing(true);
+    let t0 = std::time::Instant::now();
+    let objs_shared = evaluate_parallel(&shared_ev, &chain, 1);
+    let shared_rate = n_genomes as f64 / t0.elapsed().as_secs_f64();
+    record("circuit/incr/shared-cones".to_string(), shared_rate);
+    rows.push(vec![
+        "circuit/incr/shared-cones".to_string(),
+        format!("{shared_rate:.1}"),
+        format!(
+            "blocks + cone memo; == incr: {}; {:.1}x of 64-lane (target >=2x)",
+            objs_shared == objs_incr,
+            shared_rate / w64_rate
         ),
     ]);
 

@@ -81,6 +81,16 @@ pub struct PipelineOpts {
     /// are bit-identical for every value — jobs only sets how wide each
     /// generation evaluates.
     pub jobs: usize,
+    /// Wave-simulator lane width of the circuit backend
+    /// (`--lane-width 64|256`): 256-lane `[u64; 4]` blocks (default) or
+    /// the legacy 64-lane single-word engine. Classifications are
+    /// bit-identical at either width — a pure throughput knob.
+    pub lane_width: wave::LaneWidth,
+    /// Generation-scoped shared-cone evaluation in the incremental
+    /// circuit backend (`--share-cones`, default on): structurally
+    /// identical dirty cones across a generation's chromosomes are
+    /// settled once per worker. Exact — affects work, never results.
+    pub share_cones: bool,
     /// Synthesize + analyze at most this many Pareto designs (the
     /// hardware step dominates runtime for large MLPs).
     pub max_hw_points: usize,
@@ -98,6 +108,8 @@ impl Default for PipelineOpts {
             synth: SynthMode::Incremental,
             objective: CostObjective::Fa,
             jobs: 0,
+            lane_width: wave::LaneWidth::default(),
+            share_cones: true,
             max_hw_points: 4,
             synth_baseline: true,
             approx_argmax: true,
@@ -366,7 +378,9 @@ impl Pipeline {
             let (front, population, exact_objs) =
                 if self.opts.objective == CostObjective::AreaPower {
                     let ev = CircuitEvaluator::new_joint(qmlp, &qtrain, base_acc_train)
-                        .with_mode(self.opts.synth);
+                        .with_mode(self.opts.synth)
+                        .with_lane_width(self.opts.lane_width)
+                        .with_cone_sharing(self.opts.share_cones);
                     run_circuit_ga(
                         &ev,
                         cfg.ga.clone(),
@@ -379,7 +393,9 @@ impl Pipeline {
                 } else {
                     let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train)
                         .with_mode(self.opts.synth)
-                        .with_objective(self.opts.objective);
+                        .with_objective(self.opts.objective)
+                        .with_lane_width(self.opts.lane_width)
+                        .with_cone_sharing(self.opts.share_cones);
                     run_circuit_ga(
                         &ev,
                         cfg.ga.clone(),

@@ -42,6 +42,12 @@ use std::collections::HashMap;
 /// never change it. That contract is what makes the parallel fan-out
 /// bit-identical to serial evaluation (pinned by
 /// `rust/tests/ga_determinism.rs`).
+///
+/// Workers live for exactly one [`evaluate_parallel`] batch — one GA
+/// generation — so a worker's drop hook doubles as the generation
+/// boundary. The circuit backend relies on this: its shared-cone memo
+/// (DESIGN.md §2/§4) is flushed on drop, scoping the memo to the
+/// generation by construction.
 pub trait EvalWorker<const M: usize = 2> {
     /// Score one genome as `[accuracy_loss, cost, ...]` (all minimized;
     /// axis 0 is the loss the constraint applies to, axes 1.. are the

@@ -19,6 +19,10 @@
 //! chromosome — bit-identical outputs),
 //! --jobs N (GA evaluation worker threads; 0 = auto; any value yields
 //! bit-identical results),
+//! --lane-width 64|256 (circuit backend: wave-simulator lanes per pass —
+//! 256-lane blocks by default, 64 is the legacy width; bit-identical),
+//! --share-cones on|off (circuit backend: generation-scoped shared-cone
+//! evaluation in the incremental engine, default on; bit-identical),
 //! --out <file> (JSON for `run`, text otherwise), --pop/--gens overrides.
 
 use anyhow::{anyhow, bail, Result};
@@ -28,6 +32,7 @@ use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
 use printed_mlp::datasets;
 use printed_mlp::egfet::CostObjective;
 use printed_mlp::report;
+use printed_mlp::sim::wave;
 use printed_mlp::synth::SynthMode;
 use printed_mlp::util::telemetry;
 use std::collections::HashMap;
@@ -149,6 +154,23 @@ impl Args {
         Ok(self.get("jobs").map(|v| v.parse()).transpose()?.unwrap_or(0))
     }
 
+    fn lane_width(&self) -> Result<wave::LaneWidth> {
+        match self.get("lane-width") {
+            None => Ok(wave::LaneWidth::default()),
+            Some(s) => {
+                wave::LaneWidth::parse(s).ok_or_else(|| anyhow!("bad --lane-width '{s}' (64|256)"))
+            }
+        }
+    }
+
+    fn share_cones(&self) -> Result<bool> {
+        match self.get("share-cones").unwrap_or("on") {
+            "on" | "true" => Ok(true),
+            "off" | "false" => Ok(false),
+            s => Err(anyhow!("bad --share-cones '{s}' (on|off)")),
+        }
+    }
+
     fn cfg(&self) -> Result<RunConfig> {
         let name = self.get("dataset").unwrap_or("cardio");
         let mut cfg = if let Some(path) = self.get("config") {
@@ -211,6 +233,8 @@ fn run() -> Result<()> {
                 synth: args.synth()?,
                 objective: args.objective()?,
                 jobs: args.jobs()?,
+                lane_width: args.lane_width()?,
+                share_cones: args.share_cones()?,
                 max_hw_points: args
                     .get("hw-points")
                     .map(|v| v.parse())
@@ -373,10 +397,16 @@ fn run() -> Result<()> {
                  sets the log level [default info]; counters are bit-identical\n                            \
                  for any --jobs width, wall times are not;\n                            \
                  (backend 'circuit' = circuit-in-the-loop: GA fitness measured on the\n                            \
-                 synthesized gate-level netlist via the 64-lane wave simulator;\n                            \
+                 synthesized gate-level netlist via the bit-parallel wave\n                            \
+                 simulator — 256 vectors per pass in [u64;4] lane blocks;\n                            \
+                 --lane-width 64|256 selects the lanes per pass [256 default,\n                            \
+                 64 = legacy single-word engine; bit-identical results];\n                            \
                  --synth incremental|full selects template cone-local re-synthesis\n                            \
                  [default, same bits, re-synth cost scales with mutation size]\n                            \
                  or from-scratch synthesis per chromosome;\n                            \
+                 --share-cones on|off [default on] shares structurally identical\n                            \
+                 dirty-cone results across a generation's chromosomes in the\n                            \
+                 incremental engine — work-saving only, bit-identical results;\n                            \
                  --objective fa|area|power|area+power selects the GA's cost\n                            \
                  axes: the full-adder surrogate [default, backend-portable]\n                            \
                  or — circuit backend only — measured EGFET cell area /\n                            \

@@ -121,19 +121,29 @@ pub fn build_mlp_template(mlp: &QuantMlp, argmax: &ArgmaxMode) -> Template {
     let mut next_param = 0u32;
     let x: Vec<Bus> = (0..mlp.topo.n_in).map(|_| nl.input_bus(mlp.l1.in_bits)).collect();
 
+    // One cone group per neuron (adder trees + activation), recorded as
+    // `(node_lo, node_hi, param_lo, param_hi)` while building and
+    // registered on the template below — the sharing unit of the
+    // cross-chromosome cone memo (`synth::incremental`).
+    let mut groups: Vec<(u32, u32, u32, u32)> = Vec::new();
+
     // ---- hidden layer ---------------------------------------------------
     let mut h: Vec<Bus> = Vec::with_capacity(mlp.topo.n_hidden);
     for n in 0..mlp.topo.n_hidden {
+        let (node_lo, param_lo) = (nl.len() as u32, next_param);
         let z = neuron_preact_template(&mut nl, &mlp.l1, n, &x, &mut next_param);
         h.push(qrelu(&mut nl, &z, mlp.act_shift, ACT_BITS));
+        groups.push((node_lo, nl.len() as u32, param_lo, next_param));
     }
 
     // ---- output layer ----------------------------------------------------
     let width = mlp.output_width();
     let mut z2: Vec<Bus> = Vec::with_capacity(mlp.topo.n_out);
     for m in 0..mlp.topo.n_out {
+        let (node_lo, param_lo) = (nl.len() as u32, next_param);
         let z = neuron_preact_template(&mut nl, &mlp.l2, m, &h, &mut next_param);
         z2.push(sign_extend(&mut nl, &z, width));
+        groups.push((node_lo, nl.len() as u32, param_lo, next_param));
     }
 
     // ---- activation of the output layer (argmax) -------------------------
@@ -155,7 +165,11 @@ pub fn build_mlp_template(mlp: &QuantMlp, argmax: &ArgmaxMode) -> Template {
             nl.output("class", class);
         }
     }
-    Template::new(nl, next_param as usize)
+    let mut tpl = Template::new(nl, next_param as usize);
+    for (node_lo, node_hi, param_lo, param_hi) in groups {
+        tpl.register_cone_group(node_lo, node_hi, param_lo, param_hi);
+    }
+    tpl
 }
 
 /// One neuron's pre-activation bus: two CSA trees (pos/neg) + subtract.
@@ -387,6 +401,24 @@ mod tests {
         let map = GenomeMap::new(&qmlp);
         let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
         assert_eq!(tpl.n_params, map.len(), "param sites must be genome bits");
+    }
+
+    #[test]
+    fn template_cone_groups_cover_every_param_site() {
+        // One group per neuron; param ranges tile the genome exactly
+        // (the shared-cone memo keys on group-local bindings, so a gap
+        // or overlap would silently break sharing).
+        let (qmlp, _) = tiny_qmlp();
+        let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+        assert_eq!(tpl.cone_groups.len(), qmlp.topo.n_hidden + qmlp.topo.n_out);
+        let mut next = 0u32;
+        for g in &tpl.cone_groups {
+            assert_eq!(g.param_lo, next, "param ranges must tile the genome");
+            assert!(g.node_lo < g.node_hi);
+            assert!(!g.frontier.is_empty(), "every neuron reads external inputs");
+            next = g.param_hi;
+        }
+        assert_eq!(next as usize, tpl.n_params);
     }
 
     #[test]

@@ -224,6 +224,32 @@ impl CellCounts {
     }
 }
 
+/// One *cone group* of a [`Template`]: a contiguous run of template
+/// nodes (one bespoke neuron: preactivation adder tree + activation)
+/// together with the contiguous run of `Param` sites bound inside it.
+///
+/// Cone groups are the sharing unit of cross-chromosome evaluation
+/// (`synth::incremental`'s generation-scoped memo): given identical
+/// frontier representatives and an identical group param binding, the
+/// re-synthesized interior of the group is identical too — sibling
+/// chromosomes that differ only in *other* neurons' mask bits can reuse
+/// the whole group verbatim. The builder registers groups; the template
+/// validates the ranges.
+#[derive(Clone, Debug)]
+pub struct ConeGroup {
+    /// Template nodes `node_lo..node_hi` (contiguous, exclusive end).
+    pub node_lo: NodeId,
+    pub node_hi: NodeId,
+    /// Param indices `param_lo..param_hi` — exactly the `Param` sites
+    /// whose nodes lie inside the node range.
+    pub param_lo: u32,
+    pub param_hi: u32,
+    /// External operand nodes (ids `< node_lo`) read by the group's
+    /// gates — deduped, ascending. The group's interior is a pure
+    /// function of these nodes' representatives plus the param binding.
+    pub frontier: Vec<NodeId>,
+}
+
 /// A parameterized netlist: a fixed gate graph whose [`Gate::Param`]
 /// leaves are boolean literal sites bound at instantiation time.
 ///
@@ -243,6 +269,10 @@ pub struct Template {
     pub n_params: usize,
     /// Node id of `Param(p)`, indexed by `p`.
     pub param_nodes: Vec<NodeId>,
+    /// Builder-registered cone groups, ascending and non-overlapping
+    /// (empty when the builder declared none — sharing is then simply
+    /// unavailable).
+    pub cone_groups: Vec<ConeGroup>,
     /// CSR fanout: consumers of node `i` are
     /// `fan_dst[fan_off[i]..fan_off[i + 1]]`.
     fan_off: Vec<u32>,
@@ -286,7 +316,58 @@ impl Template {
                 *c += 1;
             }
         }
-        Template { nl, n_params, param_nodes, fan_off, fan_dst }
+        Template { nl, n_params, param_nodes, cone_groups: Vec::new(), fan_off, fan_dst }
+    }
+
+    /// Register a cone group covering template nodes
+    /// `node_lo..node_hi` and param indices `param_lo..param_hi`.
+    /// Groups must be registered in ascending, non-overlapping order;
+    /// the param range must be exactly the `Param` sites inside the
+    /// node range. Computes the group's frontier (external operands).
+    pub fn register_cone_group(
+        &mut self,
+        node_lo: NodeId,
+        node_hi: NodeId,
+        param_lo: u32,
+        param_hi: u32,
+    ) {
+        assert!(
+            node_lo <= node_hi && (node_hi as usize) <= self.nl.gates.len(),
+            "cone group node range {node_lo}..{node_hi} out of bounds"
+        );
+        assert!(param_lo <= param_hi && (param_hi as usize) <= self.n_params);
+        if let Some(prev) = self.cone_groups.last() {
+            assert!(
+                prev.node_hi <= node_lo && prev.param_hi <= param_lo,
+                "cone groups must be ascending and non-overlapping"
+            );
+        }
+        let mut frontier: Vec<NodeId> = Vec::new();
+        let mut params_seen = 0u32;
+        for id in node_lo..node_hi {
+            let g = &self.nl.gates[id as usize];
+            if let Gate::Param(p) = *g {
+                assert!(
+                    (param_lo..param_hi).contains(&p),
+                    "Param({p}) inside node range but outside param range \
+                     {param_lo}..{param_hi}"
+                );
+                params_seen += 1;
+            }
+            for op in g.operands() {
+                if op < node_lo {
+                    frontier.push(op);
+                }
+            }
+        }
+        assert_eq!(
+            params_seen,
+            param_hi - param_lo,
+            "param range {param_lo}..{param_hi} not fully inside node range"
+        );
+        frontier.sort_unstable();
+        frontier.dedup();
+        self.cone_groups.push(ConeGroup { node_lo, node_hi, param_lo, param_hi, frontier });
     }
 
     /// Consumers of node `id` (each consumer id is > `id` by the
@@ -379,6 +460,58 @@ mod tests {
         assert_eq!(inst.gates[p1 as usize], Gate::Const(false));
         // Cell structure untouched; only the literal sites were bound.
         assert_eq!(inst.cell_count(), tpl.nl.cell_count());
+    }
+
+    #[test]
+    fn cone_group_registration_computes_frontier() {
+        // Two "neurons" sharing an input: each group's frontier is the
+        // external nodes it reads, params split contiguously.
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let g0_lo = nl.len() as NodeId;
+        let p0 = nl.param(0);
+        let y0 = nl.and(a, p0);
+        let g0_hi = nl.len() as NodeId;
+        let p1 = nl.param(1);
+        let y1 = nl.mux(b, y0, p1);
+        let g1_hi = nl.len() as NodeId;
+        nl.output("y", vec![y0, y1]);
+        let mut tpl = Template::new(nl, 2);
+        tpl.register_cone_group(g0_lo, g0_hi, 0, 1);
+        tpl.register_cone_group(g0_hi, g1_hi, 1, 2);
+        assert_eq!(tpl.cone_groups.len(), 2);
+        assert_eq!(tpl.cone_groups[0].frontier, vec![a]);
+        // Group 1 reads input b and group 0's output y0.
+        assert_eq!(tpl.cone_groups[1].frontier, vec![b, y0]);
+        let _ = p1;
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn cone_groups_must_not_overlap() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let p0 = nl.param(0);
+        nl.and(a, p0);
+        let hi = nl.len() as NodeId;
+        let mut tpl = Template::new(nl, 1);
+        tpl.register_cone_group(0, hi, 0, 1);
+        tpl.register_cone_group(0, hi, 0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not fully inside")]
+    fn cone_group_param_range_must_match_nodes() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let p0 = nl.param(0);
+        let x = nl.and(a, p0);
+        nl.param(1);
+        let _ = x;
+        let mut tpl = Template::new(nl, 2);
+        // Claims both params but the node range only contains Param(0).
+        tpl.register_cone_group(1, 3, 0, 2);
     }
 
     #[test]

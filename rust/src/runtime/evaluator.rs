@@ -17,10 +17,14 @@
 //!   evaluation set is classified through the bit-parallel wave simulator
 //!   (`crate::sim::wave`), so the GA's accuracy objective is measured on
 //!   the *actual hardware function*, not the integer model. Affordable
-//!   because the wave engine advances 64 vectors per pass and, in the
-//!   default [`SynthMode::Incremental`], because chromosomes are deltas
-//!   against a shared template: synthesis and simulation only revisit
-//!   the fanout cones of the flipped mask bits.
+//!   because the wave engine advances one `[u64; 4]` lane block — 256
+//!   vectors — per pass (64 under `--lane-width 64`, the debug width)
+//!   and, in the default [`SynthMode::Incremental`], because chromosomes
+//!   are deltas against a shared template: synthesis and simulation only
+//!   revisit the fanout cones of the flipped mask bits, and structurally
+//!   identical cones repeated across a generation's chromosomes are
+//!   settled once per worker via the generation-scoped shared-cone memo
+//!   (see `synth::incremental`).
 //!
 //! ## Population-parallel execution model
 //!
@@ -29,9 +33,9 @@
 //! fitness memo) and per-worker scratch ([`crate::ga::EvalWorker`]).
 //! `Nsga2` fans each generation across a worker pool; every worker of
 //! the circuit backend *owns* an [`IncrementalSynth`] arena and a
-//! [`WaveCache`] (leased from a parked pool so they persist across
-//! generations), so the hot path takes no locks except single memo
-//! probes. Objectives are a pure function of the genome, which keeps
+//! lane-block [`BlockCache`] (leased from a parked pool so they persist
+//! across generations), so the hot path takes no locks except single
+//! memo probes. Objectives are a pure function of the genome, which keeps
 //! parallel runs bit-identical to serial ones (`--jobs 1` == `--jobs N`,
 //! pinned by `rust/tests/ga_determinism.rs`).
 //!
@@ -52,9 +56,9 @@ use crate::egfet::{self, CostObjective, Library};
 use crate::ga::{EvalWorker, Evaluator};
 use crate::model::QuantMlp;
 use crate::netlist::mlp::{build_mlp_circuit, build_mlp_template, ArgmaxMode, MlpCircuitOpts};
-use crate::netlist::{CellCounts, NodeId, Template};
+use crate::netlist::{CellCounts, Netlist, NodeId, Template};
 use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
-use crate::sim::wave::{self, InputWave, WaveCache};
+use crate::sim::wave::{self, BlockCache, BlockWave, LaneWidth, BLOCK_WORDS};
 use crate::synth::incremental::IncrementalSynth;
 use crate::synth::{optimize, SynthMode};
 use crate::util::telemetry::{self, Counter, Work};
@@ -340,18 +344,22 @@ impl Evaluator<2> for NativeEvaluator {
 /// * [`SynthMode::Full`] — the from-scratch path: per chromosome, build
 ///   the bespoke circuit ([`build_mlp_circuit`]), run
 ///   [`crate::synth::optimize`] (the constant sweep that realizes the
-///   approximation) and wave-classify the train set, 64 samples per
-///   pass. Workers are stateless; parallelism is across genomes.
+///   approximation) and wave-classify the train set, one lane block
+///   (256 samples at the default width) per pass. Workers are
+///   stateless; parallelism is across genomes.
 /// * [`SynthMode::Incremental`] — the template path (the default): one
 ///   parameterized netlist ([`build_mlp_template`], `Param` site `p` =
 ///   genome bit `p`) is built lazily on first use and shared read-only;
 ///   **each worker owns** an [`IncrementalSynth`] arena plus an
-///   arena-aligned [`WaveCache`], so every chromosome is a
+///   arena-aligned lane-block [`BlockCache`], so every chromosome is a
 ///   [`IncrementalSynth::set_params`] delta that re-simplifies and
 ///   re-simulates only the fanout cones of its flipped mask bits —
-///   lock-free after the state is leased. Worker states park in a pool
-///   between generations, so arenas and lane-word caches keep amortizing
-///   across the whole GA run.
+///   lock-free after the state is leased. Within a generation, workers
+///   additionally share structurally-identical cone results through the
+///   engine's shared-cone memo (flushed at worker drop — the generation
+///   boundary). Worker states park in a pool between generations, so
+///   arenas and lane-block caches keep amortizing across the whole GA
+///   run.
 ///
 /// The cost objective defaults to the FA surrogate of [`AreaModel`] so
 /// fronts from all three backends are directly comparable (and the
@@ -361,7 +369,7 @@ impl Evaluator<2> for NativeEvaluator {
 /// ([`CostObjective`], `--objective area|power`): the EGFET cell area or
 /// dynamic power of the synthesized survivor, rolled up allocation-free
 /// from the incremental census ([`egfet::analyze_histogram`]) with
-/// toggle activity read off the worker's [`WaveCache`] (per-node toggle
+/// toggle activity read off the worker's [`BlockCache`] (per-node toggle
 /// totals accumulate as a side effect of classification — no extra
 /// simulation). Both synthesis modes score measured objectives on the
 /// *template* synthesis flow (`optimize(template.instantiate(g))` is the
@@ -396,9 +404,22 @@ pub struct CircuitEvaluator<const M: usize = 2> {
     objective: CostObjective,
     /// EGFET corner the measured objectives roll up against.
     lib: Library,
-    /// Train samples packed once into 64-lane input waves — classify
-    /// batches and (for measured scoring) the activity stimulus.
-    batches: Vec<InputWave>,
+    /// Encoded train rows (circuit primary-input bit order), kept so the
+    /// stimulus can be re-packed when [`Self::with_lane_width`] changes
+    /// the wave width.
+    encoded: Vec<Vec<bool>>,
+    /// Train samples packed once at the evaluator's lane width —
+    /// classify batches and (for measured scoring) the activity
+    /// stimulus.
+    batches: Stimulus,
+    /// Simulator lane width (throughput knob only — classifications are
+    /// per-vector integers, so widths are bit-identical by construction
+    /// and pinned so by tests).
+    lane_width: LaneWidth,
+    /// Whether incremental workers share structurally-identical cone
+    /// results within a generation (`--share-cones`; default on — exact,
+    /// work-saving only).
+    share_cones: bool,
     labels: Vec<usize>,
     /// Cross-generation fitness memo (full-genome keys).
     memo: ShardedMap<BitVec, [f64; M]>,
@@ -408,13 +429,80 @@ pub struct CircuitEvaluator<const M: usize = 2> {
     incr_pool: Mutex<Vec<IncrState>>,
 }
 
+/// The packed train set at one of the two supported lane widths. The
+/// width is fixed per evaluator, so the enum is matched once per
+/// classify/activity call — the generic block engine underneath is
+/// monomorphized per width.
+enum Stimulus {
+    W64(Vec<BlockWave<1>>),
+    W256(Vec<BlockWave<BLOCK_WORDS>>),
+}
+
+impl Stimulus {
+    fn pack(encoded: &[Vec<bool>], width: LaneWidth) -> Stimulus {
+        match width {
+            LaneWidth::W64 => {
+                Stimulus::W64(encoded.chunks(wave::LANES).map(|c| wave::pack_wave(c)).collect())
+            }
+            LaneWidth::W256 => Stimulus::W256(
+                encoded.chunks(wave::BLOCK_LANES).map(|c| wave::pack_wave(c)).collect(),
+            ),
+        }
+    }
+
+    fn classify(&self, nl: &Netlist, out_bus: &str, n_threads: usize) -> Vec<u64> {
+        match self {
+            Stimulus::W64(b) => wave::classify_blocks(nl, b, out_bus, n_threads),
+            Stimulus::W256(b) => wave::classify_blocks(nl, b, out_bus, n_threads),
+        }
+    }
+
+    fn toggle_activity(&self, nl: &Netlist) -> f64 {
+        match self {
+            Stimulus::W64(b) => wave::toggle_activity_blocks(nl, b),
+            Stimulus::W256(b) => wave::toggle_activity_blocks(nl, b),
+        }
+    }
+
+    /// A fresh arena-aligned wave cache over this stimulus.
+    fn cache(&self) -> EvalCache {
+        match self {
+            Stimulus::W64(b) => EvalCache::W64(BlockCache::new(b.clone())),
+            Stimulus::W256(b) => EvalCache::W256(BlockCache::new(b.clone())),
+        }
+    }
+}
+
+/// A worker's lane-block cache at the evaluator's width (the width-erased
+/// face of [`BlockCache`] the lease pool stores).
+enum EvalCache {
+    W64(BlockCache<1>),
+    W256(BlockCache<BLOCK_WORDS>),
+}
+
+impl EvalCache {
+    fn classify_bus(&mut self, nl: &Netlist, bus: &[NodeId]) -> Vec<u64> {
+        match self {
+            EvalCache::W64(c) => c.classify_bus(nl, bus),
+            EvalCache::W256(c) => c.classify_bus(nl, bus),
+        }
+    }
+
+    fn node_toggles(&self) -> &[u64] {
+        match self {
+            EvalCache::W64(c) => c.node_toggles(),
+            EvalCache::W256(c) => c.node_toggles(),
+        }
+    }
+}
+
 struct IncrState {
     synth: IncrementalSynth,
-    wave: WaveCache,
+    wave: EvalCache,
 }
 
 /// Reset a worker's incremental state when its append-only arena (and
-/// the per-batch lane-word caches riding on it) outgrows the template by
+/// the per-batch lane-block caches riding on it) outgrows the template by
 /// this factor. Dedup makes growth decelerate sharply on GA streams, so
 /// the cap is a memory backstop for pathologically diverse genome
 /// sequences; a reset costs one from-scratch pass on that worker's next
@@ -461,7 +549,8 @@ impl<const M: usize> CircuitEvaluator<M> {
             .iter()
             .map(|row| wave::encode_features(row, mlp.l1.in_bits))
             .collect();
-        let batches = encoded.chunks(wave::LANES).map(wave::pack_vectors).collect();
+        let lane_width = LaneWidth::default();
+        let batches = Stimulus::pack(&encoded, lane_width);
         CircuitEvaluator {
             mlp: mlp.clone(),
             map,
@@ -470,7 +559,10 @@ impl<const M: usize> CircuitEvaluator<M> {
             mode: SynthMode::Incremental,
             objective,
             lib: Library::egfet_1v(),
+            encoded,
             batches,
+            lane_width,
+            share_cones: true,
             labels: train.y.clone(),
             memo: ShardedMap::new(),
             template: OnceLock::new(),
@@ -500,12 +592,45 @@ impl<const M: usize> CircuitEvaluator<M> {
         self
     }
 
+    /// Select the simulator lane width (`--lane-width`). Defaults to the
+    /// 256-lane production blocks; 64 is the legacy/debug width. Pure
+    /// throughput knob: every scoring path reduces to per-vector
+    /// integers, so both widths are bit-identical (pinned by tests and
+    /// `rust/tests/ga_determinism.rs`). Re-packs the stimulus; call
+    /// before the first evaluation (parked worker caches are built at
+    /// the width current when they lease).
+    pub fn with_lane_width(mut self, width: LaneWidth) -> CircuitEvaluator<M> {
+        if width != self.lane_width {
+            self.lane_width = width;
+            self.batches = Stimulus::pack(&self.encoded, width);
+        }
+        self
+    }
+
+    /// Enable/disable generation-scoped shared-cone evaluation in the
+    /// incremental engine (`--share-cones`; default on). Exact — memo
+    /// hits replay the byte-identical cone result a re-synthesis would
+    /// derive — so this only changes work counters, never objectives
+    /// (pinned by `rust/tests/ga_determinism.rs`).
+    pub fn with_cone_sharing(mut self, on: bool) -> CircuitEvaluator<M> {
+        self.share_cones = on;
+        self
+    }
+
     pub fn mode(&self) -> SynthMode {
         self.mode
     }
 
     pub fn objective(&self) -> CostObjective {
         self.objective
+    }
+
+    pub fn lane_width(&self) -> LaneWidth {
+        self.lane_width
+    }
+
+    pub fn cone_sharing(&self) -> bool {
+        self.share_cones
     }
 
     /// Entries in the cross-generation fitness memo.
@@ -611,16 +736,16 @@ impl<const M: usize> CircuitEvaluator<M> {
                 &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Exact },
             );
             let (opt, _) = optimize(&nl);
-            let preds = wave::classify(&opt, &self.batches, "class", 1);
+            let preds = self.batches.classify(&opt, "class", 1);
             return self.objectives(genome, self.accuracy_of(&preds));
         }
         let (opt, _) = optimize(&self.template().instantiate(genome));
-        let preds = wave::classify(&opt, &self.batches, "class", 1);
+        let preds = self.batches.classify(&opt, "class", 1);
         let loss = self.loss_of(self.accuracy_of(&preds));
         // Area ignores the activity factor entirely, so only objectives
         // with a power axis pay the dedicated toggle-activity simulation.
         let activity = if self.objective.needs_activity() && self.labels.len() >= 2 {
-            wave::toggle_activity_batches(&opt, &self.batches)
+            self.batches.toggle_activity(&opt)
         } else {
             egfet::NOMINAL_ACTIVITY
         };
@@ -654,10 +779,9 @@ impl<const M: usize> CircuitWorker<'_, M> {
                 .pop();
             let st = parked.unwrap_or_else(|| {
                 telemetry::work(Work::EvalStatesCreated, 1);
-                IncrState {
-                    synth: IncrementalSynth::new(self.ev.template().clone()),
-                    wave: WaveCache::new(self.ev.batches.clone()),
-                }
+                let mut synth = IncrementalSynth::new(self.ev.template().clone());
+                synth.set_share_cones(self.ev.share_cones);
+                IncrState { synth, wave: self.ev.batches.cache() }
             });
             self.st = Some(st);
         }
@@ -721,7 +845,7 @@ impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
 
 impl<const M: usize> Drop for CircuitWorker<'_, M> {
     fn drop(&mut self) {
-        let Some(st) = self.st.take() else { return };
+        let Some(mut st) = self.st.take() else { return };
         // A worker unwinding out of its own panic may hold a
         // half-mutated arena (e.g. `set_params` interrupted after the
         // binding was recorded but before the cone was re-simplified);
@@ -733,6 +857,12 @@ impl<const M: usize> Drop for CircuitWorker<'_, M> {
         if std::thread::panicking() {
             return;
         }
+        // Worker drop is the generation boundary (`evaluate_parallel`
+        // creates and drops workers per call), so flush the shared-cone
+        // memo here: sharing amortizes *within* a generation, and the
+        // flush bounds memo memory without affecting results (hits are
+        // exact replays, so flush timing only changes work counters).
+        st.synth.flush_shared_cones();
         // Never unwrap in drop: a sibling worker's panic can poison the
         // pool lock while *this* worker exits cleanly, and a panic here
         // during that sibling's unwind would be a double panic — an
@@ -898,6 +1028,33 @@ mod tests {
             genomes.push(g.clone());
         }
         genomes
+    }
+
+    #[test]
+    fn lane_widths_and_cone_sharing_are_bit_identical() {
+        // The tentpole's two switches are pure throughput knobs: every
+        // (lane width, cone sharing) combination must produce
+        // byte-identical objectives on the same GA-like stream — here
+        // against a serial 64-lane sharing-off reference, fanned 4 wide.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(97);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 10);
+        let reference = CircuitEvaluator::new(&qmlp, &qtrain, base)
+            .with_lane_width(LaneWidth::W64)
+            .with_cone_sharing(false);
+        let want = evaluate_parallel(&reference, &genomes, 1);
+        for width in [LaneWidth::W64, LaneWidth::W256] {
+            for share in [false, true] {
+                let ev = CircuitEvaluator::new(&qmlp, &qtrain, base)
+                    .with_lane_width(width)
+                    .with_cone_sharing(share);
+                assert_eq!(ev.lane_width(), width);
+                assert_eq!(ev.cone_sharing(), share);
+                let got = evaluate_parallel(&ev, &genomes, 4);
+                assert_eq!(got, want, "width {width:?} share {share}");
+            }
+        }
     }
 
     #[test]

@@ -1,25 +1,30 @@
 //! Bit-parallel "wave" simulation engine.
 //!
-//! Every netlist node holds one `u64` *lane word*: bit `L` of the word is
-//! the node's value under input vector `L` of the current batch, so a
-//! single forward pass over the (topologically ordered) gate list
-//! advances 64 vectors at once. Gate evaluation is plain word arithmetic
-//! — `Gate::And` is `a & b`, `Gate::Mux(s, a, b)` is
-//! `(s & b) | (!s & a)` — which makes the pass memory-bound rather than
-//! branch-bound and is where the ≥20× speedup over the scalar engine
-//! comes from (`benches/perf_synth.rs` tracks it).
+//! Every netlist node holds one *lane block* `[u64; W]`: bit `L % 64` of
+//! word `L / 64` is the node's value under input vector `L` of the
+//! current batch, so a single forward pass over the (topologically
+//! ordered) gate list advances `W * 64` vectors at once. Gate evaluation
+//! is plain word arithmetic — `Gate::And` is `a & b`, `Gate::Mux(s, a, b)`
+//! is `(s & b) | (!s & a)` — applied element-wise over the block; the
+//! block width is a `const` generic, so the per-word loops unroll and
+//! auto-vectorize. The production width is [`BLOCK_WORDS`] `= 4`
+//! (256 vectors per pass, [`BLOCK_LANES`]); the original single-word
+//! engine is exactly the `W = 1` instantiation, and every legacy `u64`
+//! entry point below is a thin wrapper over it, so the two widths can
+//! never diverge.
 //!
 //! On top of the core pass:
-//! * [`classify`] — thread-parallel batched output extraction for whole
-//!   datasets (the circuit-in-the-loop GA evaluator's hot path);
+//! * [`classify_blocks`] / [`classify`] — thread-parallel batched output
+//!   extraction for whole datasets (the circuit-in-the-loop GA
+//!   evaluator's hot path);
 //! * [`toggle_activity`] — popcount toggle counting: consecutive vectors
-//!   sit in adjacent lanes, so a cell's toggles within a batch are
-//!   `popcount((w ^ (w >> 1)) & mask)`, with one cross-word bit carried
-//!   between batches.
+//!   sit in adjacent lanes, so a cell's toggles within one word are
+//!   `popcount((w ^ (w >> 1)) & mask)`, with one bit carried across each
+//!   word boundary inside a block and one across each batch boundary.
 //!
 //! Lanes `>= n_lanes` of a partial batch hold unspecified values (e.g.
-//! `Const(true)` fills all 64 lanes); every consumer masks to the active
-//! lanes, so they never leak into results.
+//! `Const(true)` fills every lane of the block); every consumer masks to
+//! the active lanes, so they never leak into results.
 
 use crate::netlist::{Gate, Netlist, NodeId};
 use crate::util::telemetry::{self, Counter, Work};
@@ -28,8 +33,69 @@ use crate::util::threads;
 /// Lane count of one wave word.
 pub const LANES: usize = 64;
 
+/// Words per production lane block (the `--lane-width 256` engine).
+pub const BLOCK_WORDS: usize = 4;
+
+/// Lane count of one production lane block.
+pub const BLOCK_LANES: usize = BLOCK_WORDS * LANES;
+
+/// Runtime selector between the two compiled lane widths
+/// (`pmlp run --lane-width 64|256`). `W256` is the default; `W64` is the
+/// escape hatch that runs the exact legacy single-word engine. Both
+/// widths are bit-identical in every result — all outputs are
+/// per-vector integers — so the flag is a pure throughput knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneWidth {
+    /// One `u64` word per node: 64 vectors per pass (`W = 1`).
+    W64,
+    /// One `[u64; 4]` block per node: 256 vectors per pass (`W = 4`).
+    W256,
+}
+
+impl Default for LaneWidth {
+    fn default() -> LaneWidth {
+        LaneWidth::W256
+    }
+}
+
+impl LaneWidth {
+    pub fn parse(s: &str) -> Option<LaneWidth> {
+        match s {
+            "64" => Some(LaneWidth::W64),
+            "256" => Some(LaneWidth::W256),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LaneWidth::W64 => "64",
+            LaneWidth::W256 => "256",
+        }
+    }
+
+    /// Lanes per batch at this width.
+    pub fn lanes(&self) -> usize {
+        match self {
+            LaneWidth::W64 => LANES,
+            LaneWidth::W256 => BLOCK_LANES,
+        }
+    }
+}
+
+/// One packed batch of up to `W * 64` input vectors: `blocks[i]` holds
+/// primary-input bit `i` across lanes (bit `L % 64` of word `L / 64` =
+/// vector `L`).
+#[derive(Clone, Debug)]
+pub struct BlockWave<const W: usize> {
+    pub blocks: Vec<[u64; W]>,
+    /// Number of active lanes (`1..=W * 64`).
+    pub n_lanes: usize,
+}
+
 /// One packed batch of up to [`LANES`] input vectors: `words[i]` holds
-/// primary-input bit `i` across lanes (bit `L` = vector `L`).
+/// primary-input bit `i` across lanes (bit `L` = vector `L`). The legacy
+/// single-word form of [`BlockWave`]`<1>`.
 #[derive(Clone, Debug)]
 pub struct InputWave {
     pub words: Vec<u64>,
@@ -37,25 +103,59 @@ pub struct InputWave {
     pub n_lanes: usize,
 }
 
-/// Pack a slice of up to 64 equal-length input vectors into lane words.
+impl InputWave {
+    /// View this batch as a width-1 block wave (the generic engine's
+    /// input type).
+    pub fn to_block(&self) -> BlockWave<1> {
+        BlockWave {
+            blocks: self.words.iter().map(|&w| [w]).collect(),
+            n_lanes: self.n_lanes,
+        }
+    }
+}
+
+/// Pack a slice of up to `W * 64` equal-length input vectors into lane
+/// blocks.
+pub fn pack_wave<V: AsRef<[bool]>, const W: usize>(vectors: &[V]) -> BlockWave<W> {
+    assert!(
+        !vectors.is_empty() && vectors.len() <= W * LANES,
+        "pack_wave takes 1..={} vectors, got {}",
+        W * LANES,
+        vectors.len()
+    );
+    let n_bits = vectors[0].as_ref().len();
+    let mut blocks = vec![[0u64; W]; n_bits];
+    for (lane, v) in vectors.iter().enumerate() {
+        let v = v.as_ref();
+        assert_eq!(v.len(), n_bits, "ragged input vectors");
+        let (word, bit) = (lane / LANES, lane % LANES);
+        for (i, &b) in v.iter().enumerate() {
+            if b {
+                blocks[i][word] |= 1u64 << bit;
+            }
+        }
+    }
+    BlockWave { blocks, n_lanes: vectors.len() }
+}
+
+/// [`pack_wave`] at the production width (256 lanes per batch).
+pub fn pack_block<V: AsRef<[bool]>>(vectors: &[V]) -> BlockWave<BLOCK_WORDS> {
+    pack_wave(vectors)
+}
+
+/// Pack a slice of up to 64 equal-length input vectors into lane words
+/// (thin wrapper over the `W = 1` block packer).
 pub fn pack_vectors<V: AsRef<[bool]>>(vectors: &[V]) -> InputWave {
     assert!(
         !vectors.is_empty() && vectors.len() <= LANES,
         "pack_vectors takes 1..=64 vectors, got {}",
         vectors.len()
     );
-    let n_bits = vectors[0].as_ref().len();
-    let mut words = vec![0u64; n_bits];
-    for (lane, v) in vectors.iter().enumerate() {
-        let v = v.as_ref();
-        assert_eq!(v.len(), n_bits, "ragged input vectors");
-        for (i, &b) in v.iter().enumerate() {
-            if b {
-                words[i] |= 1u64 << lane;
-            }
-        }
+    let bw: BlockWave<1> = pack_wave(vectors);
+    InputWave {
+        words: bw.blocks.iter().map(|b| b[0]).collect(),
+        n_lanes: bw.n_lanes,
     }
-    InputWave { words, n_lanes: vectors.len() }
 }
 
 /// Encode a feature row into the circuits' primary-input bit order
@@ -71,31 +171,43 @@ pub fn encode_features(features: &[u32], bits: u32) -> Vec<bool> {
     v
 }
 
-/// One wave forward pass: fill `values` with every node's lane word.
-/// `inputs[i]` is the lane word of primary input `i`. The buffer is
+/// One wave forward pass: fill `values` with every node's lane block.
+/// `inputs[i]` is the lane block of primary input `i`. The buffer is
 /// cleared and refilled, so batch loops perform no per-batch allocation.
-pub fn eval_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
+pub fn eval_blocks_into<const W: usize>(
+    nl: &Netlist,
+    inputs: &[[u64; W]],
+    values: &mut Vec<[u64; W]>,
+) {
     values.clear();
-    extend_wave_into(nl, inputs, values);
+    extend_blocks_into(nl, inputs, values);
 }
 
-/// Cone-local word re-evaluation: extend a lane-word buffer over a
+/// Cone-local block re-evaluation: extend a lane-block buffer over a
 /// netlist that *grew* since the buffer was filled. Nodes
-/// `0..values.len()` keep their cached words; only `values.len()..` are
+/// `0..values.len()` keep their cached blocks; only `values.len()..` are
 /// evaluated.
 ///
 /// Sound only for append-only netlists under a fixed stimulus — exactly
 /// the synthesis arena of `synth::incremental`, where a node's gate and
-/// operands never change after creation, so its lane word under the
+/// operands never change after creation, so its lane block under the
 /// fixed train-set batch is a constant. This is what lets the
 /// circuit-in-the-loop evaluator reuse every unchanged node's words
 /// across chromosomes and simulate only the re-synthesized cone.
-pub fn extend_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
+pub fn extend_blocks_into<const W: usize>(
+    nl: &Netlist,
+    inputs: &[[u64; W]],
+    values: &mut Vec<[u64; W]>,
+) {
     let done = values.len();
-    assert!(done <= nl.gates.len(), "lane-word cache longer than netlist");
+    assert!(done <= nl.gates.len(), "lane-block cache longer than netlist");
+    if done == nl.gates.len() {
+        return;
+    }
+    telemetry::work(Work::WaveBlockPasses, 1);
     values.reserve(nl.gates.len() - done);
     for g in &nl.gates[done..] {
-        let w = match *g {
+        let w: [u64; W] = match *g {
             Gate::Input(idx) => {
                 *inputs.get(idx as usize).unwrap_or_else(|| {
                     panic!("input {idx} missing ({} provided)", inputs.len())
@@ -103,26 +215,66 @@ pub fn extend_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
             }
             Gate::Const(c) => {
                 if c {
-                    !0u64
+                    [!0u64; W]
                 } else {
-                    0
+                    [0u64; W]
                 }
             }
             Gate::Param(p) => panic!("Param({p}) in simulation — instantiate first"),
-            Gate::Not(a) => !values[a as usize],
-            Gate::And(a, b) => values[a as usize] & values[b as usize],
-            Gate::Or(a, b) => values[a as usize] | values[b as usize],
-            Gate::Xor(a, b) => values[a as usize] ^ values[b as usize],
-            Gate::Nand(a, b) => !(values[a as usize] & values[b as usize]),
-            Gate::Nor(a, b) => !(values[a as usize] | values[b as usize]),
-            Gate::Xnor(a, b) => !(values[a as usize] ^ values[b as usize]),
+            Gate::Not(a) => {
+                let x = values[a as usize];
+                std::array::from_fn(|k| !x[k])
+            }
+            Gate::And(a, b) => {
+                let (x, y) = (values[a as usize], values[b as usize]);
+                std::array::from_fn(|k| x[k] & y[k])
+            }
+            Gate::Or(a, b) => {
+                let (x, y) = (values[a as usize], values[b as usize]);
+                std::array::from_fn(|k| x[k] | y[k])
+            }
+            Gate::Xor(a, b) => {
+                let (x, y) = (values[a as usize], values[b as usize]);
+                std::array::from_fn(|k| x[k] ^ y[k])
+            }
+            Gate::Nand(a, b) => {
+                let (x, y) = (values[a as usize], values[b as usize]);
+                std::array::from_fn(|k| !(x[k] & y[k]))
+            }
+            Gate::Nor(a, b) => {
+                let (x, y) = (values[a as usize], values[b as usize]);
+                std::array::from_fn(|k| !(x[k] | y[k]))
+            }
+            Gate::Xnor(a, b) => {
+                let (x, y) = (values[a as usize], values[b as usize]);
+                std::array::from_fn(|k| !(x[k] ^ y[k]))
+            }
             Gate::Mux(s, a, b) => {
-                let sel = values[s as usize];
-                (sel & values[b as usize]) | (!sel & values[a as usize])
+                let (sel, x, y) =
+                    (values[s as usize], values[a as usize], values[b as usize]);
+                std::array::from_fn(|k| (sel[k] & y[k]) | (!sel[k] & x[k]))
             }
         };
         values.push(w);
     }
+}
+
+/// One wave forward pass over a single-word batch — thin wrapper over
+/// the `W = 1` block engine.
+pub fn eval_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
+    values.clear();
+    extend_wave_into(nl, inputs, values);
+}
+
+/// [`extend_blocks_into`] for the legacy single-word buffers — converts
+/// to `W = 1` blocks, extends through the generic engine, and converts
+/// back, so the two code paths cannot diverge.
+pub fn extend_wave_into(nl: &Netlist, inputs: &[u64], values: &mut Vec<u64>) {
+    let block_inputs: Vec<[u64; 1]> = inputs.iter().map(|&w| [w]).collect();
+    let mut blocks: Vec<[u64; 1]> = values.iter().map(|&w| [w]).collect();
+    extend_blocks_into(nl, &block_inputs, &mut blocks);
+    values.clear();
+    values.extend(blocks.iter().map(|b| b[0]));
 }
 
 /// Allocating convenience wrapper around [`eval_wave_into`].
@@ -133,6 +285,20 @@ pub fn eval_wave(nl: &Netlist, batch: &InputWave) -> Vec<u64> {
 }
 
 /// Read one lane of an output bus as an unsigned integer (LSB first).
+pub fn lane_bus_block<const W: usize>(
+    values: &[[u64; W]],
+    bus: &[NodeId],
+    lane: usize,
+) -> u64 {
+    debug_assert!(bus.len() <= 64 && lane < W * LANES);
+    let (word, bit) = (lane / LANES, lane % LANES);
+    bus.iter()
+        .enumerate()
+        .map(|(i, &n)| ((values[n as usize][word] >> bit) & 1) << i)
+        .sum()
+}
+
+/// Read one lane of an output bus from single-word values (LSB first).
 pub fn lane_bus_u64(values: &[u64], bus: &[NodeId], lane: usize) -> u64 {
     debug_assert!(bus.len() <= 64 && lane < LANES);
     bus.iter()
@@ -144,7 +310,12 @@ pub fn lane_bus_u64(values: &[u64], bus: &[NodeId], lane: usize) -> u64 {
 /// Evaluate the named output bus for every vector of a packed dataset,
 /// dispatching batches across `n_threads` workers. Results come back in
 /// dataset order, one `u64` bus value per input vector.
-pub fn classify(nl: &Netlist, batches: &[InputWave], out_bus: &str, n_threads: usize) -> Vec<u64> {
+pub fn classify_blocks<const W: usize>(
+    nl: &Netlist,
+    batches: &[BlockWave<W>],
+    out_bus: &str,
+    n_threads: usize,
+) -> Vec<u64> {
     telemetry::count(Counter::WaveClassifyCalls, 1);
     telemetry::count(
         Counter::WaveVectorsClassified,
@@ -159,41 +330,84 @@ pub fn classify(nl: &Netlist, batches: &[InputWave], out_bus: &str, n_threads: u
     let per_batch = threads::par_map(batches.len(), n_threads, |bi| {
         let batch = &batches[bi];
         let mut values = Vec::new();
-        eval_wave_into(nl, &batch.words, &mut values);
+        eval_blocks_into(nl, &batch.blocks, &mut values);
         (0..batch.n_lanes)
-            .map(|lane| lane_bus_u64(&values, bus, lane))
+            .map(|lane| lane_bus_block(&values, bus, lane))
             .collect::<Vec<u64>>()
     });
     per_batch.into_iter().flatten().collect()
 }
 
-/// Persistent lane-word caches over a monotonically growing netlist —
+/// [`classify_blocks`] over legacy single-word batches (thin wrapper).
+pub fn classify(nl: &Netlist, batches: &[InputWave], out_bus: &str, n_threads: usize) -> Vec<u64> {
+    let blocks: Vec<BlockWave<1>> = batches.iter().map(InputWave::to_block).collect();
+    classify_blocks(nl, &blocks, out_bus, n_threads)
+}
+
+/// Toggle count of one lane block *inside* a batch of `n` active lanes:
+/// per word, `popcount((w ^ (w >> 1)) & mask)` over the word's active
+/// transitions, plus one carried bit per fully-active word boundary
+/// inside the block. Lane `L -> L+1` transitions only exist for
+/// `L + 1 < n`, so the tail word's mask shrinks with the residue and
+/// garbage lanes never count.
+#[inline]
+fn block_internal_toggles<const W: usize>(w: &[u64; W], n: usize) -> u64 {
+    let mut t = 0u64;
+    for k in 0..W {
+        let lo = k * LANES;
+        if n <= lo {
+            break;
+        }
+        let active = (n - lo).min(LANES);
+        if active >= 2 {
+            let mask = !0u64 >> (LANES - (active - 1));
+            t += ((w[k] ^ (w[k] >> 1)) & mask).count_ones() as u64;
+        }
+        // The word-boundary transition (lane 64k+63 -> 64k+64) exists
+        // when word k is fully active and word k+1 holds active lanes.
+        if active == LANES && n > lo + LANES {
+            t += ((w[k] >> (LANES - 1)) ^ w[k + 1]) & 1;
+        }
+    }
+    t
+}
+
+/// The last *active* lane's bit of a block with `n` active lanes — the
+/// value carried into the next batch's lane-0 comparison.
+#[inline]
+fn block_last_bit<const W: usize>(w: &[u64; W], n: usize) -> u64 {
+    debug_assert!(n >= 1 && n <= W * LANES);
+    (w[(n - 1) / LANES] >> ((n - 1) % LANES)) & 1
+}
+
+/// Persistent lane-block caches over a monotonically growing netlist —
 /// the simulation half of incremental re-synthesis.
 ///
 /// One buffer per packed input batch, each aligned with the synthesis
-/// arena's node ids. [`WaveCache::classify_bus`] extends every buffer to
-/// the arena's current length (evaluating only nodes appended since the
-/// last call — see [`extend_wave_into`]) and then reads the requested
-/// output bus per lane. Across a GA run this makes simulation cost scale
-/// with the re-synthesized cone, not the netlist: a node's words are
-/// computed once, ever, per batch.
-pub struct WaveCache {
-    batches: Vec<InputWave>,
-    values: Vec<Vec<u64>>,
+/// arena's node ids. [`BlockCache::classify_bus`] extends every buffer
+/// to the arena's current length (evaluating only nodes appended since
+/// the last call — see [`extend_blocks_into`]) and then reads the
+/// requested output bus per lane. Across a GA run this makes simulation
+/// cost scale with the re-synthesized cone, not the netlist: a node's
+/// blocks are computed once, ever, per batch.
+pub struct BlockCache<const W: usize> {
+    batches: Vec<BlockWave<W>>,
+    values: Vec<Vec<[u64; W]>>,
     /// Per-node toggle totals over the whole vector sequence, aligned
     /// with netlist/arena node ids like `values`. Each node's count is
     /// computed exactly once, when the node is first extended into the
-    /// cache: `n_lanes - 1` internal transitions per batch (popcount of
-    /// `(w ^ (w >> 1)) & mask`) plus one carried transition per batch
-    /// boundary — the same integers `toggle_activity` counts, so summing
-    /// over a survivor's cells reproduces its activity bit-exactly.
+    /// cache: the block-internal transitions per batch
+    /// ([`block_internal_toggles`]) plus one carried transition per
+    /// batch boundary — the same integers `toggle_activity` counts, so
+    /// summing over a survivor's cells reproduces its activity
+    /// bit-exactly.
     toggles: Vec<u64>,
 }
 
-impl WaveCache {
-    pub fn new(batches: Vec<InputWave>) -> WaveCache {
+impl<const W: usize> BlockCache<W> {
+    pub fn new(batches: Vec<BlockWave<W>>) -> BlockCache<W> {
         let values = batches.iter().map(|_| Vec::new()).collect();
-        WaveCache { batches, values, toggles: Vec::new() }
+        BlockCache { batches, values, toggles: Vec::new() }
     }
 
     /// Total number of input vectors across all batches.
@@ -201,7 +415,7 @@ impl WaveCache {
         self.batches.iter().map(|b| b.n_lanes).sum()
     }
 
-    /// Words cached per batch (== the arena length last seen).
+    /// Blocks cached per batch (== the arena length last seen).
     pub fn cached_nodes(&self) -> usize {
         self.values.first().map(Vec::len).unwrap_or(0)
     }
@@ -218,7 +432,7 @@ impl WaveCache {
     /// Evaluate `bus` for every vector. `nl` must be the same
     /// append-only netlist on every call (longer is fine, shorter or
     /// rewritten is not — node ids are the cache key). Extends the
-    /// lane-word and toggle caches to `nl`'s length as a side effect.
+    /// lane-block and toggle caches to `nl`'s length as a side effect.
     pub fn classify_bus(&mut self, nl: &Netlist, bus: &[NodeId]) -> Vec<u64> {
         telemetry::count(Counter::WaveClassifyCalls, 1);
         telemetry::count(Counter::WaveVectorsClassified, self.n_vectors() as u64);
@@ -226,13 +440,13 @@ impl WaveCache {
         let mut out = Vec::with_capacity(self.n_vectors());
         for (batch, values) in self.batches.iter().zip(&self.values) {
             for lane in 0..batch.n_lanes {
-                out.push(lane_bus_u64(values, bus, lane));
+                out.push(lane_bus_block(values, bus, lane));
             }
         }
         out
     }
 
-    /// Extend every per-batch lane-word buffer to `nl`'s current length
+    /// Extend every per-batch lane-block buffer to `nl`'s current length
     /// (evaluating only appended nodes) and accumulate the new nodes'
     /// toggle counts across the batch sequence.
     fn extend(&mut self, nl: &Netlist) {
@@ -248,7 +462,7 @@ impl WaveCache {
             telemetry::work(Work::WaveCacheHits, 1);
         }
         for (batch, values) in self.batches.iter().zip(&mut self.values) {
-            extend_wave_into(nl, &batch.words, values);
+            extend_blocks_into(nl, &batch.blocks, values);
         }
         let len = nl.gates.len();
         self.toggles.resize(len, 0);
@@ -257,17 +471,13 @@ impl WaveCache {
             let mut prev_last = 0u64;
             let mut first = true;
             for (batch, values) in self.batches.iter().zip(&self.values) {
-                let w = values[i];
+                let w = &values[i];
                 let n = batch.n_lanes;
-                // Transition lane L -> L+1 sits at bit L of w ^ (w >> 1);
-                // n lanes have n-1 internal transitions (cf.
-                // `toggle_activity`, kept in lockstep).
-                let mask = if n >= 2 { !0u64 >> (64 - (n - 1)) } else { 0 };
-                t += ((w ^ (w >> 1)) & mask).count_ones() as u64;
+                t += block_internal_toggles(w, n);
                 if !first {
-                    t += (prev_last ^ w) & 1;
+                    t += prev_last ^ (w[0] & 1);
                 }
-                prev_last = w >> (n - 1);
+                prev_last = block_last_bit(w, n);
                 first = false;
             }
             self.toggles[i] = t;
@@ -275,20 +485,56 @@ impl WaveCache {
     }
 }
 
-/// Average toggle activity per cell over a vector sequence — bit-exact
-/// replacement of the scalar implementation: the toggle and slot counts
-/// are identical integers, only computed 64 lanes at a time.
-pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
-    let batches: Vec<InputWave> = vectors.chunks(LANES).map(pack_vectors).collect();
-    toggle_activity_batches(nl, &batches)
+/// Persistent lane-word caches at the legacy 64-lane width — a thin
+/// wrapper over [`BlockCache`]`<1>` with the original `InputWave` API.
+pub struct WaveCache(BlockCache<1>);
+
+impl WaveCache {
+    pub fn new(batches: Vec<InputWave>) -> WaveCache {
+        WaveCache(BlockCache::new(batches.iter().map(InputWave::to_block).collect()))
+    }
+
+    /// Total number of input vectors across all batches.
+    pub fn n_vectors(&self) -> usize {
+        self.0.n_vectors()
+    }
+
+    /// Words cached per batch (== the arena length last seen).
+    pub fn cached_nodes(&self) -> usize {
+        self.0.cached_nodes()
+    }
+
+    /// See [`BlockCache::node_toggles`].
+    pub fn node_toggles(&self) -> &[u64] {
+        self.0.node_toggles()
+    }
+
+    /// See [`BlockCache::classify_bus`].
+    pub fn classify_bus(&mut self, nl: &Netlist, bus: &[NodeId]) -> Vec<u64> {
+        self.0.classify_bus(nl, bus)
+    }
 }
 
-/// [`toggle_activity`] over already-packed batches (consecutive vectors
-/// in adjacent lanes, dataset order across batches) — callers that keep
-/// a packed train stimulus (the circuit-in-the-loop evaluator) measure
-/// activity without materializing per-vector `Vec<bool>` rows. Same
-/// integers, same division: bit-identical to the unpacked entry point.
-pub fn toggle_activity_batches(nl: &Netlist, batches: &[InputWave]) -> f64 {
+/// Average toggle activity per cell over a vector sequence — bit-exact
+/// replacement of the scalar implementation: the toggle and slot counts
+/// are identical integers, only computed [`BLOCK_LANES`] lanes at a
+/// time.
+pub fn toggle_activity(nl: &Netlist, vectors: &[Vec<bool>]) -> f64 {
+    let batches: Vec<BlockWave<BLOCK_WORDS>> =
+        vectors.chunks(BLOCK_LANES).map(pack_block).collect();
+    toggle_activity_blocks(nl, &batches)
+}
+
+/// [`toggle_activity`] over already-packed lane blocks (consecutive
+/// vectors in adjacent lanes, dataset order across batches) — callers
+/// that keep a packed train stimulus (the circuit-in-the-loop evaluator)
+/// measure activity without materializing per-vector `Vec<bool>` rows.
+/// Same integers, same division: bit-identical to the unpacked entry
+/// point at any `W`.
+pub fn toggle_activity_blocks<const W: usize>(
+    nl: &Netlist,
+    batches: &[BlockWave<W>],
+) -> f64 {
     telemetry::count(Counter::WaveActivitySims, 1);
     let n_vec: usize = batches.iter().map(|b| b.n_lanes).sum();
     if n_vec < 2 || nl.cell_count() == 0 {
@@ -301,23 +547,20 @@ pub fn toggle_activity_batches(nl: &Netlist, batches: &[InputWave]) -> f64 {
         .filter(|(_, g)| g.is_cell())
         .map(|(i, _)| i)
         .collect();
-    let mut cur: Vec<u64> = Vec::new();
-    let mut prev: Vec<u64> = Vec::new();
+    let mut cur: Vec<[u64; W]> = Vec::new();
+    let mut prev: Vec<[u64; W]> = Vec::new();
     let mut prev_lanes = 0usize;
     let mut toggles = 0u64;
     for batch in batches {
-        eval_wave_into(nl, &batch.words, &mut cur);
+        eval_blocks_into(nl, &batch.blocks, &mut cur);
         let n = batch.n_lanes;
-        // Transition lane L -> L+1 appears at bit L of (w ^ (w >> 1));
-        // a batch of n lanes has n-1 internal transitions.
-        let mask = if n >= 2 { !0u64 >> (64 - (n - 1)) } else { 0 };
         for &ci in &cells {
-            let w = cur[ci];
-            toggles += ((w ^ (w >> 1)) & mask).count_ones() as u64;
+            let w = &cur[ci];
+            toggles += block_internal_toggles(w, n);
             if prev_lanes > 0 {
-                // Cross-batch transition: last lane of the previous batch
-                // against lane 0 of this one.
-                toggles += ((prev[ci] >> (prev_lanes - 1)) ^ w) & 1;
+                // Cross-batch transition: last active lane of the
+                // previous batch against lane 0 of this one.
+                toggles += block_last_bit(&prev[ci], prev_lanes) ^ (w[0] & 1);
             }
         }
         std::mem::swap(&mut cur, &mut prev);
@@ -325,6 +568,13 @@ pub fn toggle_activity_batches(nl: &Netlist, batches: &[InputWave]) -> f64 {
     }
     let slots = cells.len() as u64 * (n_vec as u64 - 1);
     toggles as f64 / slots as f64
+}
+
+/// [`toggle_activity_blocks`] over legacy single-word batches (thin
+/// wrapper).
+pub fn toggle_activity_batches(nl: &Netlist, batches: &[InputWave]) -> f64 {
+    let blocks: Vec<BlockWave<1>> = batches.iter().map(InputWave::to_block).collect();
+    toggle_activity_blocks(nl, &blocks)
 }
 
 #[cfg(test)]
@@ -428,15 +678,52 @@ mod tests {
     }
 
     #[test]
+    fn prop_block_lanes_bit_match_scalar() {
+        // The 256-lane engine lane-by-lane against the scalar reference,
+        // over vector counts that fill multiple blocks.
+        prop::check("block lanes == eval_nodes", |rng, _| {
+            let nl = random_netlist(rng);
+            let n_vec = 1 + rng.below(600);
+            let vectors = random_vectors(rng, n_vec, nl.n_inputs as usize);
+            for (ci, chunk) in vectors.chunks(BLOCK_LANES).enumerate() {
+                let batch = pack_block(chunk);
+                let mut values = Vec::new();
+                eval_blocks_into(&nl, &batch.blocks, &mut values);
+                for (lane, v) in chunk.iter().enumerate() {
+                    let scalar = eval_nodes(&nl, v);
+                    let (word, bit) = (lane / LANES, lane % LANES);
+                    for (i, w) in values.iter().enumerate() {
+                        let wave_bit = (w[word] >> bit) & 1 == 1;
+                        if wave_bit != scalar[i] {
+                            return Err(format!(
+                                "block {ci} lane {lane} node {i}: wave {wave_bit} != scalar {}",
+                                scalar[i]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_toggle_activity_matches_scalar() {
         prop::check("wave toggle == scalar toggle", |rng, _| {
             let nl = random_netlist(rng);
-            let n_vec = 2 + rng.below(200);
+            let n_vec = 2 + rng.below(600);
             let vectors = random_vectors(rng, n_vec, nl.n_inputs as usize);
             let fast = toggle_activity(&nl, &vectors);
             let slow = toggle_activity_scalar(&nl, &vectors);
             if (fast - slow).abs() > 1e-12 {
                 return Err(format!("wave {fast} vs scalar {slow} over {n_vec} vectors"));
+            }
+            // And the legacy 64-lane packing counts the same integers.
+            let batches: Vec<InputWave> =
+                vectors.chunks(LANES).map(pack_vectors).collect();
+            let legacy = toggle_activity_batches(&nl, &batches);
+            if legacy != fast {
+                return Err(format!("64-lane {legacy} != 256-lane {fast}"));
             }
             Ok(())
         });
@@ -453,6 +740,12 @@ mod tests {
             let got = classify(&nl, &batches, "y", 2);
             if got.len() != n_vec {
                 return Err(format!("expected {n_vec} results, got {}", got.len()));
+            }
+            let block_batches: Vec<BlockWave<BLOCK_WORDS>> =
+                vectors.chunks(BLOCK_LANES).map(pack_block).collect();
+            let got_blocks = classify_blocks(&nl, &block_batches, "y", 2);
+            if got_blocks != got {
+                return Err("block classify diverges from 64-lane classify".to_string());
             }
             let bus = &nl.outputs[0].1;
             for (k, v) in vectors.iter().enumerate() {
@@ -493,7 +786,8 @@ mod tests {
     #[test]
     fn cross_word_boundary_toggles_counted() {
         // 65 alternating vectors around a NOT gate: 64 toggles over 64
-        // transitions, one of which crosses the 64-lane word boundary.
+        // transitions, one of which crosses the 64-lane word boundary
+        // inside a single 256-lane block.
         let mut nl = Netlist::new();
         let a = nl.input();
         let n = nl.not(a);
@@ -502,6 +796,21 @@ mod tests {
         assert_eq!(toggle_activity(&nl, &vectors), 1.0);
         // And a constant sequence crossing the boundary stays at zero.
         let vectors = vec![vec![true]; 130];
+        assert_eq!(toggle_activity(&nl, &vectors), 0.0);
+    }
+
+    #[test]
+    fn cross_block_boundary_toggles_counted() {
+        // 257 alternating vectors: 256 toggles over 256 transitions, 3 of
+        // which cross word boundaries inside the first block and one of
+        // which crosses the 256-lane block boundary.
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let n = nl.not(a);
+        nl.output("y", vec![n]);
+        let vectors: Vec<Vec<bool>> = (0..257).map(|i| vec![i % 2 == 1]).collect();
+        assert_eq!(toggle_activity(&nl, &vectors), 1.0);
+        let vectors = vec![vec![true]; 513];
         assert_eq!(toggle_activity(&nl, &vectors), 0.0);
     }
 
@@ -616,6 +925,42 @@ mod tests {
     }
 
     #[test]
+    fn block_tail_lanes_do_not_leak_for_any_residue() {
+        // The 256-lane analogue: sizes congruent to 0, 1, 63, 64, 65 and
+        // 255 (mod 256) — every word boundary inside a block plus the
+        // block boundary itself, with constant-poisoned garbage lanes.
+        let nl = garbage_prone_netlist();
+        for n_vec in [
+            1usize, 2, 63, 64, 65, 255, 256, 257, 319, 320, 321, 511, 512, 513, 767,
+        ] {
+            let vectors: Vec<Vec<bool>> =
+                (0..n_vec).map(|i| vec![i % 3 == 0]).collect();
+            let batches: Vec<BlockWave<BLOCK_WORDS>> =
+                vectors.chunks(BLOCK_LANES).map(pack_block).collect();
+            let got = classify_blocks(&nl, &batches, "y", 1);
+            assert_eq!(got.len(), n_vec, "n_vec={n_vec}");
+            for (k, v) in vectors.iter().enumerate() {
+                let scalar = eval_nodes(&nl, v);
+                let expect: u64 = nl.outputs[0]
+                    .1
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &n)| ((scalar[n as usize] as u64) << i))
+                    .sum();
+                assert_eq!(got[k], expect, "n_vec={n_vec} vector {k}");
+            }
+            if n_vec >= 2 {
+                let fast = toggle_activity_blocks(&nl, &batches);
+                let slow = toggle_activity_scalar(&nl, &vectors);
+                assert!(
+                    (fast - slow).abs() < 1e-12,
+                    "n_vec={n_vec}: block {fast} != scalar {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn wave_cache_tail_lanes_clean_across_extension() {
         // WaveCache over a 65-vector stimulus (64 + 1-lane tail batch):
         // growing the arena and re-querying must keep tail lanes out of
@@ -635,6 +980,36 @@ mod tests {
         let y = nl.and(x, one);
         let got2 = cache.classify_bus(&nl, &[y]);
         assert_eq!(got2, expect);
+    }
+
+    #[test]
+    fn block_cache_tail_lanes_clean_across_extension() {
+        // The 256-lane analogue: a 257-vector stimulus (one full block +
+        // a 1-lane tail block), extended twice with constant-poisoned
+        // logic; classification and per-node toggles must stay scalar-
+        // exact at every step.
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let x = nl.not(a);
+        let vectors: Vec<Vec<bool>> = (0..257).map(|i| vec![i % 2 == 1]).collect();
+        let batches: Vec<BlockWave<BLOCK_WORDS>> =
+            vectors.chunks(BLOCK_LANES).map(pack_block).collect();
+        assert_eq!(batches.last().unwrap().n_lanes, 1);
+        let mut cache = BlockCache::new(batches);
+        assert_eq!(cache.n_vectors(), 257);
+        let got = cache.classify_bus(&nl, &[x]);
+        let expect: Vec<u64> = (0..257u64).map(|i| (i + 1) % 2).collect();
+        assert_eq!(got, expect);
+        // Append garbage-prone logic and re-query through the cache.
+        let one = nl.constant(true);
+        let y = nl.and(x, one);
+        let got2 = cache.classify_bus(&nl, &[y]);
+        assert_eq!(got2, expect);
+        assert_eq!(cache.cached_nodes(), nl.len());
+        // The NOT toggles on every one of the 256 transitions; the
+        // garbage-prone AND mirrors it exactly.
+        let want = node_toggles_scalar(&nl, &vectors);
+        assert_eq!(cache.node_toggles(), want.as_slice());
     }
 
     /// Scalar golden model of per-node toggle counts: evaluate every
@@ -660,16 +1035,21 @@ mod tests {
         // The measured-power substrate: per-node toggle totals the cache
         // accumulates at extension time must equal the scalar per-node
         // flip counts — for every node, any batch-boundary residue, and
-        // across append-only netlist growth.
+        // across append-only netlist growth. Checked at both widths.
         prop::check("wave-cache node toggles == scalar", |rng, _| {
             let mut nl = random_netlist(rng);
-            let n_vec = 2 + rng.below(200);
+            let n_vec = 2 + rng.below(600);
             let vectors = random_vectors(rng, n_vec, nl.n_inputs as usize);
             let batches: Vec<InputWave> =
                 vectors.chunks(LANES).map(pack_vectors).collect();
             let mut cache = WaveCache::new(batches);
+            let block_batches: Vec<BlockWave<BLOCK_WORDS>> =
+                vectors.chunks(BLOCK_LANES).map(pack_block).collect();
+            let mut block_cache = BlockCache::new(block_batches);
             let first_len = nl.len();
-            cache.classify_bus(&nl, &nl.outputs[0].1.clone());
+            let out0 = nl.outputs[0].1.clone();
+            cache.classify_bus(&nl, &out0);
+            block_cache.classify_bus(&nl, &out0);
             // Grow the netlist (append-only) and re-query: the appended
             // nodes' toggles are computed on extension, the old ones kept.
             let len = nl.len();
@@ -678,6 +1058,7 @@ mod tests {
             let x = nl.xor(a, b);
             let y = nl.not(x);
             cache.classify_bus(&nl, &[y]);
+            block_cache.classify_bus(&nl, &[y]);
             let got = cache.node_toggles();
             let want = node_toggles_scalar(&nl, &vectors);
             if got.len() != nl.len() {
@@ -692,6 +1073,11 @@ mod tests {
                     ));
                 }
             }
+            if block_cache.node_toggles() != want.as_slice() {
+                return Err(format!(
+                    "256-lane cache toggles diverge from scalar over {n_vec} vectors"
+                ));
+            }
             Ok(())
         });
     }
@@ -701,15 +1087,11 @@ mod tests {
         // Summing cached per-cell toggles and dividing by
         // cells * (n_vec - 1) must be bit-identical (f64 ==) to
         // `toggle_activity` — the equality the measured power objective
-        // rests on. Garbage-prone netlist + 65-vector tail batch.
+        // rests on. Garbage-prone netlist + tail batches, both widths.
         let nl = garbage_prone_netlist();
-        for n_vec in [2usize, 63, 64, 65, 129] {
+        for n_vec in [2usize, 63, 64, 65, 129, 255, 256, 257, 513] {
             let vectors: Vec<Vec<bool>> =
                 (0..n_vec).map(|i| vec![i % 3 == 0]).collect();
-            let batches: Vec<InputWave> =
-                vectors.chunks(LANES).map(pack_vectors).collect();
-            let mut cache = WaveCache::new(batches);
-            cache.classify_bus(&nl, &nl.outputs[0].1.clone());
             let cells: Vec<usize> = nl
                 .gates
                 .iter()
@@ -717,13 +1099,27 @@ mod tests {
                 .filter(|(_, g)| g.is_cell())
                 .map(|(i, _)| i)
                 .collect();
-            let total: u64 = cells.iter().map(|&i| cache.node_toggles()[i]).sum();
             let slots = cells.len() as u64 * (n_vec as u64 - 1);
+            let batches: Vec<InputWave> =
+                vectors.chunks(LANES).map(pack_vectors).collect();
+            let mut cache = WaveCache::new(batches);
+            cache.classify_bus(&nl, &nl.outputs[0].1.clone());
+            let total: u64 = cells.iter().map(|&i| cache.node_toggles()[i]).sum();
             let from_cache = total as f64 / slots as f64;
             assert_eq!(
                 from_cache,
                 toggle_activity(&nl, &vectors),
                 "n_vec={n_vec}"
+            );
+            let block_batches: Vec<BlockWave<BLOCK_WORDS>> =
+                vectors.chunks(BLOCK_LANES).map(pack_block).collect();
+            let mut block_cache = BlockCache::new(block_batches);
+            block_cache.classify_bus(&nl, &nl.outputs[0].1.clone());
+            let total: u64 = cells.iter().map(|&i| block_cache.node_toggles()[i]).sum();
+            assert_eq!(
+                total as f64 / slots as f64,
+                toggle_activity(&nl, &vectors),
+                "n_vec={n_vec} (256-lane)"
             );
         }
     }
@@ -750,5 +1146,41 @@ mod tests {
         for (lane, _) in vectors.iter().enumerate() {
             assert_eq!(lane_bus_u64(&values, &nl.outputs[0].1, lane), lane as u64);
         }
+    }
+
+    #[test]
+    fn block_lane_extraction_round_trips() {
+        // 300 vectors span two blocks; every lane of both blocks must
+        // read back its own index through `lane_bus_block`.
+        let mut nl = Netlist::new();
+        let bus_in = nl.input_bus(9);
+        nl.output("v", bus_in.clone());
+        let vectors: Vec<Vec<bool>> =
+            (0..300u64).map(|v| crate::sim::u64_to_bits(v, 9)).collect();
+        let mut k = 0usize;
+        for chunk in vectors.chunks(BLOCK_LANES) {
+            let batch = pack_block(chunk);
+            let mut values = Vec::new();
+            eval_blocks_into(&nl, &batch.blocks, &mut values);
+            for lane in 0..batch.n_lanes {
+                assert_eq!(
+                    lane_bus_block(&values, &nl.outputs[0].1, lane),
+                    k as u64
+                );
+                k += 1;
+            }
+        }
+        assert_eq!(k, 300);
+    }
+
+    #[test]
+    fn lane_width_parses_and_describes() {
+        assert_eq!(LaneWidth::parse("64"), Some(LaneWidth::W64));
+        assert_eq!(LaneWidth::parse("256"), Some(LaneWidth::W256));
+        assert_eq!(LaneWidth::parse("128"), None);
+        assert_eq!(LaneWidth::default(), LaneWidth::W256);
+        assert_eq!(LaneWidth::W64.lanes(), 64);
+        assert_eq!(LaneWidth::W256.lanes(), 256);
+        assert_eq!(LaneWidth::W256.label(), "256");
     }
 }

@@ -22,7 +22,25 @@
 //!   work scales with *mutation size*, not netlist size;
 //! * outputs are re-resolved through the repr table, and the survivor
 //!   netlist (or just its live-cell count) falls out of a hash-free DCE
-//!   walk over the arena.
+//!   walk over the arena;
+//! * optionally ([`IncrementalSynth::set_share_cones`]), a
+//!   generation-scoped *shared-cone memo* lets structurally-identical
+//!   cones be reused across sibling chromosomes: when the dirty walk
+//!   reaches a template [`crate::netlist::ConeGroup`] whose key —
+//!   (group id, the group's param binding, the representatives of its
+//!   frontier nodes) — was already synthesized this generation, the
+//!   memoized interior representatives are copied in verbatim and the
+//!   group's worklist entries are discarded. This is exact, not
+//!   approximate: given identical frontier reprs and binding, a re-walk
+//!   would re-derive exactly the memoized reprs, because the arena's
+//!   structural-hash dedup is deterministic and append-only — every
+//!   `emit` probe would land on the nodes the first synthesis created.
+//!   For the same reason the memo only changes *work*, never results,
+//!   so jobs-1 == jobs-N determinism is preserved no matter how genomes
+//!   are scheduled; flushing at generation boundaries
+//!   ([`IncrementalSynth::flush_shared_cones`], called from the
+//!   evaluator's worker `Drop`) merely bounds memo memory and keeps
+//!   entries from outliving arena resets.
 //!
 //! Invariants, pinned by the property suite below:
 //!
@@ -37,9 +55,48 @@
 use crate::netlist::{CellCounts, Gate, Netlist, NodeId, Template};
 use crate::synth::{dce, Repr, Rewriter, SynthStats};
 use crate::util::telemetry::{self, Counter, Work};
-use crate::util::BitVec;
+use crate::util::{BitVec, FxHashMap};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+/// Encode a representative for a shared-cone memo key. Offset node ids
+/// past the two constants so the encoding is injective.
+#[inline]
+fn encode_repr(r: Repr) -> u64 {
+    match r {
+        Repr::Const(b) => b as u64,
+        Repr::Node(id) => 2 + id as u64,
+    }
+}
+
+/// Build the memo key of cone group `gi` under the binding `cur` and
+/// the settled representatives `repr`: `[group id, packed group param
+/// bits ..., encoded frontier reprs ...]`. Per group the key length is
+/// fixed, and the leading group id separates groups, so distinct
+/// (group, binding, frontier) triples never collide.
+fn cone_key(tpl: &Template, cur: &BitVec, repr: &[Repr], gi: usize) -> Vec<u64> {
+    let g = &tpl.cone_groups[gi];
+    let n_params = (g.param_hi - g.param_lo) as usize;
+    let mut key = Vec::with_capacity(1 + n_params.div_ceil(64) + g.frontier.len());
+    key.push(gi as u64);
+    let mut word = 0u64;
+    for (k, p) in (g.param_lo..g.param_hi).enumerate() {
+        if cur.get(p as usize) {
+            word |= 1u64 << (k % 64);
+        }
+        if k % 64 == 63 {
+            key.push(word);
+            word = 0;
+        }
+    }
+    if n_params % 64 != 0 {
+        key.push(word);
+    }
+    for &f in &g.frontier {
+        key.push(encode_repr(repr[f as usize]));
+    }
+    key
+}
 
 /// Persistent incremental re-synthesizer for one template.
 pub struct IncrementalSynth {
@@ -63,6 +120,13 @@ pub struct IncrementalSynth {
     /// + per-node toggle sums over `sim::wave::WaveCache`).
     hist: CellCounts,
     live_cells: Vec<NodeId>,
+    /// Cross-chromosome shared-cone memo (see the module docs): key per
+    /// [`cone_key`], value = the group's interior reprs
+    /// (`repr[node_lo..node_hi]`) under that key. Generation-scoped —
+    /// the evaluator flushes it at worker drop; it also never outlives
+    /// an arena reset, because resets drop the whole synth state.
+    cone_memo: FxHashMap<Vec<u64>, Vec<Repr>>,
+    share_cones: bool,
 }
 
 impl IncrementalSynth {
@@ -81,8 +145,36 @@ impl IncrementalSynth {
             live_mark: 0,
             hist: CellCounts::default(),
             live_cells: Vec::new(),
+            cone_memo: FxHashMap::default(),
+            share_cones: false,
             tpl,
         }
+    }
+
+    /// Enable/disable the cross-chromosome shared-cone memo (default
+    /// off — sharing only pays when sibling chromosomes are evaluated
+    /// through one synth state, i.e. inside `ga::evaluate_parallel`
+    /// workers). Disabling flushes.
+    pub fn set_share_cones(&mut self, on: bool) {
+        self.share_cones = on;
+        if !on {
+            self.cone_memo.clear();
+        }
+    }
+
+    /// Drop every shared-cone memo entry. The evaluator calls this at
+    /// generation boundaries (its workers are created and dropped per
+    /// `evaluate_parallel` call), which bounds memo memory per
+    /// generation. Results are unaffected by *when* this is called —
+    /// memo reuse is exact (module docs) — so flushing cannot perturb
+    /// the jobs-1 == jobs-N contract.
+    pub fn flush_shared_cones(&mut self) {
+        self.cone_memo.clear();
+    }
+
+    /// Entries currently memoized (diagnostics/tests).
+    pub fn shared_cone_entries(&self) -> usize {
+        self.cone_memo.len()
     }
 
     pub fn template(&self) -> &Template {
@@ -160,6 +252,17 @@ impl IncrementalSynth {
             };
             repr.push(r);
         }
+        if self.share_cones {
+            // Seed the memo with this binding's groups: the commonest
+            // sibling pattern is a child flipping one group back to its
+            // parent's binding while mutating another.
+            for gi in 0..self.tpl.cone_groups.len() {
+                let key = cone_key(&self.tpl, &self.cur, &self.repr, gi);
+                let g = &self.tpl.cone_groups[gi];
+                self.cone_memo
+                    .insert(key, self.repr[g.node_lo as usize..g.node_hi as usize].to_vec());
+            }
+        }
     }
 
     /// Recompute reprs over the fanout cones of `flipped` param nodes.
@@ -167,13 +270,24 @@ impl IncrementalSynth {
     /// topological invariant means every operand repr is final when a
     /// node is recomputed; a node whose repr converges to its old value
     /// does not dirty its consumers.
+    ///
+    /// With cone sharing on, the walk is partitioned by the template's
+    /// cone groups: the heap is drained up to each dirty group's range,
+    /// the group's memo key is probed (its frontier reprs are final at
+    /// that point — every frontier node precedes the range), and on a
+    /// hit the group's worklist entries are discarded in favor of the
+    /// memoized reprs (exact; see the module docs). The walk itself,
+    /// hit or miss, still settles nodes in ascending order, so results
+    /// are identical to the unshared pass.
     fn cone_pass(&mut self, flipped: &[NodeId]) {
         if flipped.is_empty() {
             return;
         }
         self.stamp += 1;
         let stamp = self.stamp;
-        let IncrementalSynth { tpl, rw, repr, cur, dirty_stamp, .. } = self;
+        let IncrementalSynth {
+            tpl, rw, repr, cur, dirty_stamp, cone_memo, share_cones, ..
+        } = self;
         let mut heap: BinaryHeap<Reverse<NodeId>> =
             BinaryHeap::with_capacity(flipped.len() * 4);
         for &id in flipped {
@@ -183,15 +297,30 @@ impl IncrementalSynth {
             }
         }
         let (mut pops, mut rewrites) = (0u64, 0u64);
-        while let Some(Reverse(id)) = heap.pop() {
-            pops += 1;
+
+        /// Settle one popped node: recompute its repr; on change, dirty
+        /// its consumers (the legacy worklist body, shared by every
+        /// drain below).
+        fn settle_one(
+            tpl: &Template,
+            rw: &mut Rewriter,
+            repr: &mut [Repr],
+            cur: &BitVec,
+            dirty_stamp: &mut [u32],
+            stamp: u32,
+            heap: &mut BinaryHeap<Reverse<NodeId>>,
+            id: NodeId,
+            pops: &mut u64,
+            rewrites: &mut u64,
+        ) {
+            *pops += 1;
             let g = &tpl.nl.gates[id as usize];
             let new = match *g {
                 Gate::Param(p) => Repr::Const(cur.get(p as usize)),
                 _ => rw.rewrite_gate(g, |i| repr[i as usize]),
             };
             if new != repr[id as usize] {
-                rewrites += 1;
+                *rewrites += 1;
                 repr[id as usize] = new;
                 for &c in tpl.consumers(id) {
                     if dirty_stamp[c as usize] != stamp {
@@ -199,6 +328,87 @@ impl IncrementalSynth {
                         heap.push(Reverse(c));
                     }
                 }
+            }
+        }
+
+        if *share_cones && !tpl.cone_groups.is_empty() {
+            let (mut hits, mut misses) = (0u64, 0u64);
+            for gi in 0..tpl.cone_groups.len() {
+                let (node_lo, node_hi) =
+                    (tpl.cone_groups[gi].node_lo, tpl.cone_groups[gi].node_hi);
+                // Settle everything upstream of the group so its
+                // frontier reprs are final before the key is built.
+                while let Some(&Reverse(id)) = heap.peek() {
+                    if id >= node_lo {
+                        break;
+                    }
+                    heap.pop();
+                    settle_one(
+                        tpl, rw, repr, cur, dirty_stamp, stamp, &mut heap, id, &mut pops,
+                        &mut rewrites,
+                    );
+                }
+                match heap.peek() {
+                    Some(&Reverse(id)) if id < node_hi => {}
+                    _ => continue, // group untouched by this delta
+                }
+                let key = cone_key(tpl, cur, repr, gi);
+                if let Some(snapshot) = cone_memo.get(&key) {
+                    hits += 1;
+                    // Discard the group's worklist entries: a
+                    // structurally-identical sibling already settled
+                    // this (binding, frontier) — copy its reprs in and
+                    // dirty only consumers *outside* the group (the
+                    // interior is final by construction).
+                    while let Some(&Reverse(id)) = heap.peek() {
+                        if id >= node_hi {
+                            break;
+                        }
+                        heap.pop();
+                    }
+                    for (off, id) in (node_lo..node_hi).enumerate() {
+                        let new = snapshot[off];
+                        if new != repr[id as usize] {
+                            repr[id as usize] = new;
+                            for &c in tpl.consumers(id) {
+                                if c >= node_hi && dirty_stamp[c as usize] != stamp {
+                                    dirty_stamp[c as usize] = stamp;
+                                    heap.push(Reverse(c));
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    misses += 1;
+                    while let Some(&Reverse(id)) = heap.peek() {
+                        if id >= node_hi {
+                            break;
+                        }
+                        heap.pop();
+                        settle_one(
+                            tpl, rw, repr, cur, dirty_stamp, stamp, &mut heap, id,
+                            &mut pops, &mut rewrites,
+                        );
+                    }
+                    cone_memo
+                        .insert(key, repr[node_lo as usize..node_hi as usize].to_vec());
+                }
+            }
+            // Tail past the last group (e.g. the argmax tree).
+            while let Some(Reverse(id)) = heap.pop() {
+                settle_one(
+                    tpl, rw, repr, cur, dirty_stamp, stamp, &mut heap, id, &mut pops,
+                    &mut rewrites,
+                );
+            }
+            telemetry::work(Work::SynthSharedConeHits, hits);
+            telemetry::work(Work::SynthSharedConeMisses, misses);
+        } else {
+            while let Some(Reverse(id)) = heap.pop() {
+                settle_one(
+                    tpl, rw, repr, cur, dirty_stamp, stamp, &mut heap, id, &mut pops,
+                    &mut rewrites,
+                );
             }
         }
         // Cone shape depends on the worker state's previous binding, so
@@ -406,6 +616,187 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Random template with registered cone groups: inputs, then a few
+    /// contiguous "neuron" groups (dense params + a random gate soup
+    /// over everything built so far), then an ungrouped tail and
+    /// outputs — the same shape `build_mlp_template` registers.
+    fn random_grouped_template(rng: &mut Rng) -> Template {
+        let mut nl = Netlist::new();
+        let n_in = 2 + rng.below(3);
+        for _ in 0..n_in {
+            nl.input();
+        }
+        let mut groups: Vec<(u32, u32, u32, u32)> = Vec::new();
+        let mut next_param = 0u32;
+        for _ in 0..2 + rng.below(3) {
+            let (node_lo, param_lo) = (nl.len() as u32, next_param);
+            for _ in 0..1 + rng.below(3) {
+                nl.param(next_param);
+                next_param += 1;
+            }
+            for _ in 0..4 + rng.below(12) {
+                let len = nl.len();
+                let pick = |r: &mut Rng| r.below(len) as NodeId;
+                let (a, b) = (pick(rng), pick(rng));
+                match rng.below(8) {
+                    0 => nl.not(a),
+                    1 => nl.and(a, b),
+                    2 => nl.or(a, b),
+                    3 => nl.xor(a, b),
+                    4 => nl.nand(a, b),
+                    5 => nl.nor(a, b),
+                    6 => nl.xnor(a, b),
+                    _ => {
+                        let s = pick(rng);
+                        nl.mux(s, a, b)
+                    }
+                };
+            }
+            groups.push((node_lo, nl.len() as u32, param_lo, next_param));
+        }
+        // Ungrouped tail over everything (the argmax-tree analogue).
+        for _ in 0..rng.below(6) {
+            let len = nl.len();
+            let (a, b) = (rng.below(len) as NodeId, rng.below(len) as NodeId);
+            nl.xor(a, b);
+        }
+        let len = nl.len();
+        for k in 0..1 + rng.below(2) {
+            let bus: Vec<NodeId> =
+                (0..1 + rng.below(4)).map(|_| rng.below(len) as NodeId).collect();
+            nl.output(&format!("y{k}"), bus);
+        }
+        let mut tpl = Template::new(nl, next_param as usize);
+        for (a, b, c, d) in groups {
+            tpl.register_cone_group(a, b, c, d);
+        }
+        tpl
+    }
+
+    #[test]
+    fn prop_shared_cones_bit_identical_to_plain() {
+        // The sharing tentpole invariant: a sharing engine and a plain
+        // engine fed the same binding sequence stay bit-identical in
+        // *everything* downstream consumers can observe — stats, the
+        // arena's gates and outputs (so WaveCache extension lengths
+        // match), the census, the live-cell list — and both match
+        // from-scratch synthesis functionally. Sibling-style deltas
+        // (re-flipping one group's bits) maximize memo hits.
+        prop::check("shared cones == plain incremental", |rng, _| {
+            let tpl = random_grouped_template(rng);
+            let n_params = tpl.n_params;
+            let mut params = prop::gen::bits(rng, n_params, 0.5);
+            let base = params.clone();
+            let mut plain = IncrementalSynth::new(tpl.clone());
+            let mut shared = IncrementalSynth::new(tpl.clone());
+            shared.set_share_cones(true);
+            let n_vec = (8 + rng.below(56)).min(LANES);
+            let batch = random_batch(rng, tpl.nl.n_inputs, n_vec);
+            for step in 0..8 {
+                if step > 0 {
+                    // Mutate within one random group (sibling pattern),
+                    // occasionally revert to the base binding entirely.
+                    if rng.chance(0.25) {
+                        params = base.clone();
+                    }
+                    let g = &tpl.cone_groups[rng.below(tpl.cone_groups.len())];
+                    let span = (g.param_hi - g.param_lo) as usize;
+                    for _ in 0..1 + rng.below(span) {
+                        params.flip(g.param_lo as usize + rng.below(span));
+                    }
+                    if rng.chance(0.3) {
+                        params.flip(rng.below(n_params));
+                    }
+                }
+                let sp = plain.set_params(&params);
+                let ss = shared.set_params(&params);
+                if sp != ss {
+                    return Err(format!("step {step}: stats {ss:?} != plain {sp:?}"));
+                }
+                if shared.arena().gates != plain.arena().gates {
+                    return Err(format!(
+                        "step {step}: arenas diverged ({} vs {} nodes)",
+                        shared.arena().len(),
+                        plain.arena().len()
+                    ));
+                }
+                if shared.arena().outputs != plain.arena().outputs {
+                    return Err(format!("step {step}: arena outputs diverged"));
+                }
+                if shared.survivor_histogram() != plain.survivor_histogram() {
+                    return Err(format!("step {step}: census diverged"));
+                }
+                if shared.live_cell_ids() != plain.live_cell_ids() {
+                    return Err(format!("step {step}: live-cell ids diverged"));
+                }
+                let (fresh, _) = optimize(&tpl.instantiate(&params));
+                check_equiv(&shared, &fresh, &batch)
+                    .map_err(|e| format!("step {step} (shared): {e}"))?;
+            }
+            // A mid-run flush only costs future hits, never results.
+            shared.flush_shared_cones();
+            assert_eq!(shared.shared_cone_entries(), 0);
+            params.flip(rng.below(n_params));
+            let sp = plain.set_params(&params);
+            let ss = shared.set_params(&params);
+            if sp != ss || shared.arena().gates != plain.arena().gates {
+                return Err("post-flush divergence".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sibling_rebinding_hits_the_memo() {
+        // parent A -> child1 (flip group 0) -> child2 (group 0 back to
+        // A's binding, flip group 1): child2's group-0 rebinding must be
+        // served from the memo seeded by A's full pass, and the result
+        // must still match from-scratch synthesis.
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let g0_lo = nl.len() as NodeId;
+        let p0 = nl.param(0);
+        let t0 = nl.and(a, p0);
+        let y0 = nl.xor(t0, b);
+        let g0_hi = nl.len() as NodeId;
+        let p1 = nl.param(1);
+        let y1 = nl.mux(p1, y0, a);
+        let g1_hi = nl.len() as NodeId;
+        nl.output("y", vec![y0, y1]);
+        let mut tpl = Template::new(nl, 2);
+        tpl.register_cone_group(g0_lo, g0_hi, 0, 1);
+        tpl.register_cone_group(g0_hi, g1_hi, 1, 2);
+
+        let mut inc = IncrementalSynth::new(tpl.clone());
+        inc.set_share_cones(true);
+        let genome_a = BitVec::zeros(2);
+        let mut child1 = genome_a.clone();
+        child1.flip(0);
+        let mut child2 = genome_a.clone();
+        child2.flip(1);
+
+        inc.set_params(&genome_a); // full pass seeds both groups
+        assert_eq!(inc.shared_cone_entries(), 2);
+        inc.set_params(&child1); // group 0 re-synthesized (miss)
+        let before = telemetry::thread_block();
+        inc.set_params(&child2); // group 0 back to A -> memo hit
+        let d = telemetry::thread_block().delta(&before);
+        assert_eq!(d.work[Work::SynthSharedConeHits as usize], 1, "group-0 hit");
+        assert_eq!(d.work[Work::SynthSharedConeMisses as usize], 1, "group-1 miss");
+
+        let batch = pack_vectors(&[
+            vec![false, false],
+            vec![false, true],
+            vec![true, false],
+            vec![true, true],
+        ]);
+        let (fresh, stats_fresh) = optimize(&tpl.instantiate(&child2));
+        let (_, stats_inc) = inc.survivor();
+        assert_eq!(stats_inc, stats_fresh);
+        check_equiv(&inc, &fresh, &batch).unwrap();
     }
 
     #[test]

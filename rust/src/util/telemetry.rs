@@ -147,9 +147,16 @@ pub enum Work {
     EvalStatesCreated,
     /// Worker states dropped by the arena-growth backstop.
     EvalArenaResets,
+    /// Wave forward/extension passes over one lane block (any width).
+    WaveBlockPasses,
+    /// Shared-cone memo hits: cone groups whose repr vector was copied
+    /// from a structurally-identical sibling instead of re-synthesized.
+    SynthSharedConeHits,
+    /// Shared-cone memo misses (cone group synthesized and memoized).
+    SynthSharedConeMisses,
 }
 
-pub const N_WORK: usize = 10;
+pub const N_WORK: usize = 13;
 
 /// Dotted work-stat names, indexed by `Work as usize`.
 pub const WORK_NAMES: [&str; N_WORK] = [
@@ -163,6 +170,9 @@ pub const WORK_NAMES: [&str; N_WORK] = [
     "wave.cache_hits",
     "evaluator.states_created",
     "evaluator.arena_resets",
+    "wave.block_passes",
+    "synth.shared_cone_hits",
+    "synth.shared_cone_misses",
 ];
 
 /// Power-of-two buckets of the dirty-cone size histogram: bucket 0
@@ -617,7 +627,7 @@ mod tests {
     fn name_tables_match_enum_arity() {
         // The last variant of each enum must index the last name slot.
         assert_eq!(Counter::CoordDesignsSynthesized as usize, N_COUNTERS - 1);
-        assert_eq!(Work::EvalArenaResets as usize, N_WORK - 1);
+        assert_eq!(Work::SynthSharedConeMisses as usize, N_WORK - 1);
         assert_eq!(Gauge::MemoEntries as usize, N_GAUGES - 1);
         assert_eq!(COUNTER_NAMES.len(), N_COUNTERS);
         assert_eq!(WORK_NAMES.len(), N_WORK);

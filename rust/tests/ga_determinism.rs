@@ -174,6 +174,56 @@ fn circuit_joint_objective_modes_agree_at_width_8() {
 }
 
 #[test]
+fn circuit_shared_cones_on_vs_off_jobs_1_and_8_bit_identical() {
+    // The generation-scoped shared-cone memo is exact: a memo hit
+    // replays byte-for-byte the reprs a re-synthesis would derive, so
+    // enabling it — at any worker width — must leave the GaResult
+    // bit-identical to the unshared engine. Fresh evaluator per cell of
+    // the (sharing, jobs) matrix so agreement cannot come from shared
+    // caches.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let reference = {
+        let ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_cone_sharing(false);
+        run_at::<2>(&ev, glen, &[], 1)
+    };
+    for share in [false, true] {
+        for jobs in [1usize, 8] {
+            let ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_cone_sharing(share);
+            assert_eq!(
+                run_at::<2>(&ev, glen, &[], jobs),
+                reference,
+                "share={share} jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn circuit_lane_widths_64_vs_256_bit_identical() {
+    // `--lane-width` is a pure throughput knob: the 64-lane legacy
+    // engine and the 256-lane block engine must walk the same GA
+    // trajectory bit-for-bit at any worker width.
+    use printed_mlp::sim::wave::LaneWidth;
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let reference = {
+        let ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_lane_width(LaneWidth::W64);
+        run_at::<2>(&ev, glen, &[], 1)
+    };
+    for width in [LaneWidth::W64, LaneWidth::W256] {
+        for jobs in [1usize, 8] {
+            let ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_lane_width(width);
+            assert_eq!(
+                run_at::<2>(&ev, glen, &[], jobs),
+                reference,
+                "width={width:?} jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
 fn backends_agree_with_each_other_at_any_width() {
     // Cross-backend: the circuit backend measures accuracy on netlists
     // verified equivalent to the integer model, so native @1 job and
@@ -256,6 +306,49 @@ fn circuit_full_counters_jobs_1_vs_8_bit_identical() {
     assert_eq!(serial, parallel);
     assert!(counter_of(&serial, "evaluator.memo_misses") > 0);
     assert!(counter_of(&serial, "wave.classify_calls") > 0);
+}
+
+#[test]
+fn shared_cone_work_consistent_with_unique_genomes_at_jobs_1() {
+    // At jobs=1 the shared-cone work stats are deterministic and must
+    // book-keep against the genome stream: every evaluator-memo miss is
+    // one synthesis pass, every cone pass probes between 1 and
+    // `cone_groups.len()` groups (GA deltas are param flips, and every
+    // param site lives inside a registered group), and every probe is
+    // either a hit or a miss.
+    use printed_mlp::netlist::mlp::{build_mlp_template, ArgmaxMode};
+    use printed_mlp::util::telemetry::Work;
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let n_groups = build_mlp_template(&qmlp, &ArgmaxMode::Exact).cone_groups.len() as u64;
+    assert!(n_groups > 0, "MLP template must register cone groups");
+    let ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+    assert!(ev.cone_sharing(), "sharing must default on");
+    let before = telemetry::thread_block();
+    let _ = run_at::<2>(&ev, glen, &[], 1);
+    let d = telemetry::thread_block().delta(&before);
+    let unique = counter_of(&d.counters_named(), "ga.genomes_unique");
+    let memo_misses = counter_of(&d.counters_named(), "evaluator.memo_misses");
+    let hits = d.work[Work::SynthSharedConeHits as usize];
+    let misses = d.work[Work::SynthSharedConeMisses as usize];
+    let cone_passes = d.work[Work::SynthConePasses as usize];
+    let full_passes = d.work[Work::SynthFullPasses as usize];
+    let probes = hits + misses;
+    assert_eq!(
+        cone_passes + full_passes,
+        memo_misses,
+        "every evaluator-memo miss is exactly one synthesis pass"
+    );
+    assert!(probes >= cone_passes, "every cone pass probes >=1 dirty group");
+    assert!(
+        probes <= cone_passes * n_groups,
+        "a cone pass probes at most every group: {probes} > {cone_passes} * {n_groups}"
+    );
+    assert!(probes <= unique * n_groups);
+    assert!(
+        d.work[Work::WaveBlockPasses as usize] >= 1,
+        "the default 256-lane engine must count block passes"
+    );
 }
 
 #[test]

@@ -2,9 +2,10 @@
 //! `gate-level netlist simulation == Rust integer model`, exact and
 //! masked, plus synthesized-circuit monotonicity (DESIGN.md §2).
 //!
-//! The batch sweeps run on the bit-parallel wave engine (64 vectors per
-//! pass); one test additionally pins the wave engine to the scalar
-//! simulator lane-by-lane on a real synthesized MLP circuit.
+//! The batch sweeps run on the bit-parallel wave engine; two tests
+//! additionally pin it to the scalar simulator lane-by-lane on a real
+//! synthesized MLP circuit — once through the legacy 64-lane `u64` API
+//! and once through the production 256-lane `[u64; 4]` block API.
 
 use printed_mlp::accum::GenomeMap;
 use printed_mlp::argmax::{build_plan, ArgmaxSearchOpts};
@@ -137,6 +138,52 @@ fn wave_engine_is_bit_exact_on_synthesized_mlp() {
     assert!(
         (act - scalar_act).abs() < 1e-12,
         "wave activity {act} vs scalar {scalar_act}"
+    );
+}
+
+#[test]
+fn block_wave_engine_is_bit_exact_on_synthesized_mlp() {
+    // The 256-lane twin of the test above: lane-by-lane, node-by-node
+    // agreement between the `[u64; 4]` block engine and the scalar
+    // reference on production structure, including the partial tail
+    // block (150 samples = one 128-lane-short batch).
+    let (qmlp, qtrain) = trained();
+    let nl = build_mlp_circuit(&qmlp, &MlpCircuitOpts::default());
+    let (opt, _) = optimize(&nl);
+    let encoded: Vec<Vec<bool>> = qtrain
+        .x
+        .iter()
+        .take(150)
+        .map(|row| wave::encode_features(row, qtrain.bits))
+        .collect();
+    let batches: Vec<wave::BlockWave<{ wave::BLOCK_WORDS }>> =
+        encoded.chunks(wave::BLOCK_LANES).map(wave::pack_block).collect();
+    let mut k = 0usize;
+    for batch in &batches {
+        let mut values = Vec::new();
+        wave::eval_blocks_into(&opt, &batch.blocks, &mut values);
+        for lane in 0..batch.n_lanes {
+            let (word, bit) = (lane / wave::LANES, lane % wave::LANES);
+            let scalar = eval_nodes(&opt, &encoded[k]);
+            for (i, b) in values.iter().enumerate() {
+                assert_eq!(
+                    (b[word] >> bit) & 1 == 1,
+                    scalar[i],
+                    "sample {k} node {i} diverges"
+                );
+            }
+            k += 1;
+        }
+    }
+    assert_eq!(k, 150);
+
+    // Block classification equals the legacy 64-lane classification on
+    // the same stimulus — widths are a pure throughput knob.
+    let legacy: Vec<wave::InputWave> =
+        encoded.chunks(wave::LANES).map(wave::pack_vectors).collect();
+    assert_eq!(
+        wave::classify_blocks(&opt, &batches, "class", 2),
+        wave::classify(&opt, &legacy, "class", 2),
     );
 }
 
