@@ -1,9 +1,10 @@
 //! Shared bench scaffolding: scale selection via `PMLP_BENCH_SCALE`
 //! (smoke|small|paper; default small), backend/objective selection via
 //! `PMLP_BACKEND` (auto|pjrt|native|circuit) and `PMLP_OBJECTIVE`
-//! (fa|area|power|area+power; measured objectives need
-//! `PMLP_BACKEND=circuit`, and `area+power` drives the joint
-//! three-objective front), and a wall-clock banner.
+//! (fa|area|power|delay|area+power|area+power+delay; measured
+//! objectives need `PMLP_BACKEND=circuit`, `area+power` drives the
+//! joint three-objective front and `area+power+delay` the 4-D one),
+//! and a wall-clock banner.
 
 use printed_mlp::bench::Scale;
 #[allow(unused_imports)]
@@ -39,8 +40,9 @@ pub fn backend() -> EvalBackend {
 pub fn objective() -> CostObjective {
     match std::env::var("PMLP_OBJECTIVE") {
         Err(_) => CostObjective::Fa,
-        Ok(s) => CostObjective::parse(&s)
-            .unwrap_or_else(|| panic!("bad PMLP_OBJECTIVE '{s}' (fa|area|power|area+power)")),
+        Ok(s) => CostObjective::parse(&s).unwrap_or_else(|| {
+            panic!("bad PMLP_OBJECTIVE '{s}' (fa|area|power|delay|area+power|area+power+delay)")
+        }),
     }
 }
 

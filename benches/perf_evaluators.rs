@@ -10,7 +10,10 @@
 //! `circuit/incr/area+power` row times the joint three-objective
 //! evaluator on the same chain so the const-generic arity
 //! generalization's overhead stays visible (target: < 10% vs the single
-//! measured objective). The `circuit/incr/{64-lane,256-lane,
+//! measured objective), and `circuit/incr/area+power+delay` stacks the
+//! 4-D timing axis on top — delay read off the incremental arena's
+//! arrival table, so the extra axis is bookkeeping (target: < 15% vs
+//! the 3-objective row, CI asserts ≥ 0.85×). The `circuit/incr/{64-lane,256-lane,
 //! shared-cones}` row triple isolates the wave tentpole: legacy `u64`
 //! width (the committed baseline), `[u64; 4]` blocks, and blocks plus
 //! the generation-scoped shared-cone memo — CI's smoke leg asserts

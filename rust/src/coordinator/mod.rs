@@ -72,10 +72,18 @@ pub struct PipelineOpts {
     pub synth: SynthMode,
     /// Cost axes of the GA (`--objective`): the FA surrogate (default —
     /// unit-compatible across all backends), or, with the circuit
-    /// backend only, measured EGFET area and/or power of each
-    /// chromosome's synthesized survivor (`area+power` runs the joint
-    /// three-objective front).
+    /// backend only, measured EGFET area, power and/or critical-path
+    /// delay of each chromosome's synthesized survivor (`area+power`
+    /// runs the joint three-objective front, `area+power+delay` the
+    /// four-objective one with the delay axis read off the incremental
+    /// arena's arrival table).
     pub objective: CostObjective,
+    /// Hard timing cap in milliseconds (`--max-delay`) applied to the
+    /// objective's delay axis via constrained domination — every
+    /// reported front member meets it. `None` with a delay objective
+    /// defaults to the dataset's clock budget (`HwSpec::clock_ms`);
+    /// setting it without a delay objective is an error.
+    pub max_delay_ms: Option<f64>,
     /// Worker threads of the GA evaluation fan-out (`--jobs`); `0` =
     /// auto (env `PMLP_JOBS`, else the machine's parallelism). Results
     /// are bit-identical for every value — jobs only sets how wide each
@@ -107,6 +115,7 @@ impl Default for PipelineOpts {
             backend: EvalBackend::Auto,
             synth: SynthMode::Incremental,
             objective: CostObjective::Fa,
+            max_delay_ms: None,
             jobs: 0,
             lane_width: wave::LaneWidth::default(),
             share_cones: true,
@@ -121,8 +130,9 @@ impl Default for PipelineOpts {
 /// One Pareto-front member with the GA's const-generic objective arity
 /// erased to a runtime-length vector: `objs[0]` is the accuracy loss,
 /// `objs[1..]` the cost axes in [`PipelineResult::objective`]'s units —
-/// one axis for `fa|area|power`, `[area_cm2, power_mw]` for the joint
-/// `area+power` mode. The GA core stays `[f64; M]`-typed; the erasure
+/// one axis for `fa|area|power|delay`, `[area_cm2, power_mw]` for the
+/// joint `area+power` mode and `[area_cm2, power_mw, delay_ms]` for
+/// `area+power+delay`. The GA core stays `[f64; M]`-typed; the erasure
 /// happens only at this reporting boundary, so one `PipelineResult`
 /// type carries fronts of any arity.
 #[derive(Clone, Debug, PartialEq)]
@@ -155,10 +165,14 @@ fn run_circuit_ga<const M: usize>(
     genome_len: usize,
     seeds: Vec<BitVec>,
     jobs: usize,
+    max_delay: Option<(usize, f64)>,
     exact: &BitVec,
     log_hist: &dyn Fn(usize, &[(f64, f64)]),
 ) -> (Vec<FrontPoint>, Vec<FrontPoint>, Vec<f64>) {
-    let ga = Nsga2::new(spec, genome_len, ev).with_seeds(seeds).with_jobs(jobs);
+    let ga = Nsga2::new(spec, genome_len, ev)
+        .with_seeds(seeds)
+        .with_jobs(jobs)
+        .with_max_delay(max_delay);
     let result = ga.run(|g, snap| log_hist(g, &snap.history));
     let exact_objs = ga::evaluate_parallel(ev, std::slice::from_ref(exact), 1)[0];
     telemetry::gauge(Gauge::MemoEntries, ev.memo_len() as u64);
@@ -205,7 +219,8 @@ pub struct PipelineResult {
     pub qat_hw: HwReport,
     /// GA Pareto front as (accuracy-loss vs QAT train, cost axes) — the
     /// cost axes are in `objective`'s units; arity-erased
-    /// ([`FrontPoint`]), 3-D for the joint `area+power` objective.
+    /// ([`FrontPoint`]), 3-D for the joint `area+power` objective, 4-D
+    /// for `area+power+delay`.
     pub front: Vec<FrontPoint>,
     pub designs: Vec<FinalDesign>,
     /// Which evaluator actually ran.
@@ -233,6 +248,13 @@ impl Pipeline {
             anyhow::bail!(
                 "--objective {} is measured on the synthesized survivor and requires \
                  --backend circuit",
+                self.opts.objective.label()
+            );
+        }
+        if self.opts.max_delay_ms.is_some() && self.opts.objective.delay_axis().is_none() {
+            anyhow::bail!(
+                "--max-delay constrains the delay axis and requires --objective delay \
+                 or area+power+delay (got {})",
                 self.opts.objective.label()
             );
         }
@@ -370,13 +392,39 @@ impl Pipeline {
             // its own synthesis arena + wave cache — including the
             // measured-objective census/toggle state, so `--objective
             // area|power|area+power` stays bit-identical across widths.
-            // The joint objective instantiates the const-generic GA at
-            // arity 3 ([loss, area, power]); everything else at 2. The
-            // exact genome is scored through the same evaluator so the
+            // The joint objectives instantiate the const-generic GA at
+            // arity 3 ([loss, area, power]) or 4 ([loss, area, power,
+            // delay]); everything else at 2. Delay axes ride a hard
+            // timing cap through constrained domination: `--max-delay`
+            // if given, else the dataset's clock budget. The exact
+            // genome is scored through the same evaluator so the
             // zero-approximation fallback injected below carries the
-            // active objective's units (FA, cm² and/or mW).
-            let (front, population, exact_objs) =
-                if self.opts.objective == CostObjective::AreaPower {
+            // active objective's units (FA, cm², mW and/or ms) — note
+            // the fallback is injected for accuracy coverage and is
+            // exempt from the cap.
+            let delay_cap = self
+                .opts
+                .objective
+                .delay_axis()
+                .map(|axis| (axis, self.opts.max_delay_ms.unwrap_or(cfg.hw.clock_ms)));
+            let (front, population, exact_objs) = match self.opts.objective {
+                CostObjective::AreaPowerDelay => {
+                    let ev = CircuitEvaluator::new_joint_delay(qmlp, &qtrain, base_acc_train)
+                        .with_mode(self.opts.synth)
+                        .with_lane_width(self.opts.lane_width)
+                        .with_cone_sharing(self.opts.share_cones);
+                    run_circuit_ga(
+                        &ev,
+                        cfg.ga.clone(),
+                        map.len(),
+                        seeds.clone(),
+                        jobs,
+                        delay_cap,
+                        &exact,
+                        &log_hist,
+                    )
+                }
+                CostObjective::AreaPower => {
                     let ev = CircuitEvaluator::new_joint(qmlp, &qtrain, base_acc_train)
                         .with_mode(self.opts.synth)
                         .with_lane_width(self.opts.lane_width)
@@ -387,10 +435,12 @@ impl Pipeline {
                         map.len(),
                         seeds.clone(),
                         jobs,
+                        delay_cap,
                         &exact,
                         &log_hist,
                     )
-                } else {
+                }
+                _ => {
                     let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train)
                         .with_mode(self.opts.synth)
                         .with_objective(self.opts.objective)
@@ -402,10 +452,12 @@ impl Pipeline {
                         map.len(),
                         seeds.clone(),
                         jobs,
+                        delay_cap,
                         &exact,
                         &log_hist,
                     )
-                };
+                }
+            };
             (front, population, "circuit", exact_objs)
         } else if have_artifact {
             let rt = runtime.as_ref().unwrap();

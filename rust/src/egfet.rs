@@ -91,7 +91,9 @@ impl Library {
         Library::scaled("EGFET 0.6V upsized", 0.6, 1.45, 0.5, 1.55)
     }
 
-    fn cell(&self, g: &Gate) -> Option<&Cell> {
+    /// The library cell implementing `g`, if `g` is a cell at all
+    /// (`Input`/`Const`/`Param` leaves occupy no silicon).
+    pub fn cell(&self, g: &Gate) -> Option<&Cell> {
         match g {
             Gate::Not(_) => Some(&self.not),
             Gate::And(..) => Some(&self.and),
@@ -104,10 +106,19 @@ impl Library {
             Gate::Input(_) | Gate::Const(_) | Gate::Param(_) => None,
         }
     }
+
+    /// Propagation delay of `g` in this corner (0 for non-cell leaves).
+    /// The per-gate term of the arrival-time recurrence — shared by
+    /// [`arrival_times`] and the incremental engine's arena-aligned
+    /// arrival table (`crate::synth::incremental`), so the two delay
+    /// models can never drift.
+    pub fn delay_of(&self, g: &Gate) -> f64 {
+        self.cell(g).map_or(0.0, |c| c.delay_ms)
+    }
 }
 
 /// Which cost(s) the GA minimizes next to the accuracy loss
-/// (`pmlp run --objective fa|area|power|area+power`).
+/// (`pmlp run --objective fa|area|power|delay|area+power|area+power+delay`).
 ///
 /// `fa` is the paper's full-adder surrogate ([`crate::area::AreaModel`]) —
 /// the default, and the only choice the native/PJRT backends support
@@ -115,12 +126,16 @@ impl Library {
 /// objectives require `--backend circuit`: every chromosome is
 /// synthesized anyway, so the evaluator can score it on the EGFET
 /// [`Library`] roll-up of its actual survivor netlist
-/// ([`analyze_histogram`]) instead of the surrogate — area in cm², or
+/// ([`analyze_histogram`]) instead of the surrogate — area in cm²,
 /// dynamic power in mW under the train-set stimulus's measured toggle
-/// activity (the quantity the paper's NSGA-II actually selects on).
-/// `area+power` is the joint mode: both measured axes at once, from the
-/// same single roll-up, driving a three-objective
-/// (loss, area, power) NSGA-II front ([`crate::ga::Nsga2`] at `M = 3`).
+/// activity (the quantity the paper's NSGA-II actually selects on), or
+/// the survivor's critical-path delay in ms ([`critical_path_ms`],
+/// maintained incrementally as per-node arrival times in the synthesis
+/// arena — `crate::synth::incremental`). `area+power` is the joint mode
+/// (3-D front, `M = 3`); `area+power+delay` adds timing closure as the
+/// fourth axis ([`crate::ga::Nsga2`] at `M = 4`), usually together with
+/// the `--max-delay` hard constraint defaulting to the dataset's
+/// `HwSpec.clock_ms` budget.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CostObjective {
     /// Full-adder surrogate count (unitless; backend-portable).
@@ -130,18 +145,35 @@ pub enum CostObjective {
     /// Measured power of the synthesized survivor, mW, with the dynamic
     /// share scaled by wave-measured toggle activity.
     Power,
+    /// Measured critical-path delay of the synthesized survivor, ms —
+    /// the longest register-free path through the EGFET cells, a max
+    /// over paths rather than a sum over cells.
+    Delay,
     /// Joint measured area *and* power — both axes of one
     /// [`analyze_histogram`] roll-up, optimized as a 3-D Pareto front.
     AreaPower,
+    /// Joint measured area, power *and* delay — the timing-closure mode:
+    /// a 4-D (loss, area, power, delay) front where the delay axis falls
+    /// out of the incremental arena's live-output arrival max.
+    AreaPowerDelay,
 }
 
 impl CostObjective {
+    /// Parse an objective name. Compound objectives are order- and
+    /// case-insensitive (`power+area`, `AREA+POWER+DELAY`), so env-var
+    /// driven harnesses can't silently fall back to the default over a
+    /// spelling that names the right axes.
     pub fn parse(s: &str) -> Option<CostObjective> {
-        match s.to_lowercase().as_str() {
-            "fa" => Some(CostObjective::Fa),
-            "area" => Some(CostObjective::Area),
-            "power" => Some(CostObjective::Power),
-            "area+power" => Some(CostObjective::AreaPower),
+        let lower = s.to_lowercase();
+        let mut parts: Vec<&str> = lower.split('+').map(str::trim).collect();
+        parts.sort_unstable();
+        match parts.as_slice() {
+            ["fa"] => Some(CostObjective::Fa),
+            ["area"] => Some(CostObjective::Area),
+            ["power"] => Some(CostObjective::Power),
+            ["delay"] => Some(CostObjective::Delay),
+            ["area", "power"] => Some(CostObjective::AreaPower),
+            ["area", "delay", "power"] => Some(CostObjective::AreaPowerDelay),
             _ => None,
         }
     }
@@ -151,7 +183,9 @@ impl CostObjective {
             CostObjective::Fa => "fa",
             CostObjective::Area => "area",
             CostObjective::Power => "power",
+            CostObjective::Delay => "delay",
             CostObjective::AreaPower => "area+power",
+            CostObjective::AreaPowerDelay => "area+power+delay",
         }
     }
 
@@ -166,15 +200,29 @@ impl CostObjective {
     /// [`crate::ga::Nsga2`] must be instantiated with.
     pub fn arity(&self) -> usize {
         match self {
+            CostObjective::AreaPowerDelay => 4,
             CostObjective::AreaPower => 3,
             _ => 2,
         }
     }
 
     /// True when scoring needs a toggle-activity factor (any objective
-    /// with a power axis; area is activity-independent).
+    /// with a power axis; area and delay are activity-independent).
     pub fn needs_activity(&self) -> bool {
-        matches!(self, CostObjective::Power | CostObjective::AreaPower)
+        matches!(
+            self,
+            CostObjective::Power | CostObjective::AreaPower | CostObjective::AreaPowerDelay
+        )
+    }
+
+    /// The objective-vector index of the delay axis, if this objective
+    /// scores one — where the `--max-delay` hard constraint applies.
+    pub fn delay_axis(&self) -> Option<usize> {
+        match self {
+            CostObjective::Delay => Some(1),
+            CostObjective::AreaPowerDelay => Some(3),
+            _ => None,
+        }
     }
 }
 
@@ -201,24 +249,14 @@ pub struct HwReport {
 pub fn analyze(nl: &Netlist, lib: &Library, clock_ms: f64, activity: f64) -> HwReport {
     let mut area = 0.0f64;
     let mut power_uw = 0.0f64;
-    // Per-node arrival time (topological order).
-    let mut arrival = vec![0.0f64; nl.gates.len()];
     let act_scale = activity_scale(activity);
-    for (i, g) in nl.gates.iter().enumerate() {
+    for g in nl.gates.iter() {
         if let Some(cell) = lib.cell(g) {
             area += cell.area_cm2;
             power_uw += cell.power_uw * act_scale;
-            let in_arrival =
-                g.operands().map(|o| arrival[o as usize]).fold(0.0f64, f64::max);
-            arrival[i] = in_arrival + cell.delay_ms;
         }
     }
-    let delay_ms = nl
-        .outputs
-        .iter()
-        .flat_map(|(_, bus)| bus.iter())
-        .map(|&n| arrival[n as usize])
-        .fold(0.0f64, f64::max);
+    let delay_ms = critical_path_ms(nl, lib);
     HwReport {
         area_cm2: area,
         power_mw: power_uw / 1000.0,
@@ -229,6 +267,37 @@ pub fn analyze(nl: &Netlist, lib: &Library, clock_ms: f64, activity: f64) -> HwR
         clock_ms,
         library: lib.name.clone(),
     }
+}
+
+/// Per-node arrival times of a netlist under a library: the longest-path
+/// recurrence `arrival[i] = max over operands + cell delay` in node (=
+/// topological) order; non-cell leaves arrive at 0. This is THE delay
+/// model of the framework — [`analyze`], [`critical_path_ms`] and the
+/// incremental engine's arena-aligned arrival table
+/// (`crate::synth::incremental`) all compute exactly this recurrence,
+/// which is what makes the GA's incremental delay axis bit-identical to
+/// the from-scratch analysis (pinned by the oracle suites).
+pub fn arrival_times(nl: &Netlist, lib: &Library) -> Vec<f64> {
+    let mut arrival = vec![0.0f64; nl.gates.len()];
+    for (i, g) in nl.gates.iter().enumerate() {
+        if let Some(cell) = lib.cell(g) {
+            let in_arrival =
+                g.operands().map(|o| arrival[o as usize]).fold(0.0f64, f64::max);
+            arrival[i] = in_arrival + cell.delay_ms;
+        }
+    }
+    arrival
+}
+
+/// Critical-path delay of a netlist (ms): the max [`arrival_times`]
+/// entry over every declared output node.
+pub fn critical_path_ms(nl: &Netlist, lib: &Library) -> f64 {
+    let arrival = arrival_times(nl, lib);
+    nl.outputs
+        .iter()
+        .flat_map(|(_, bus)| bus.iter())
+        .map(|&n| arrival[n as usize])
+        .fold(0.0f64, f64::max)
 }
 
 /// Scale factor applied to each cell's nominal power: the dynamic share
@@ -488,28 +557,95 @@ mod tests {
         assert_eq!(CostObjective::parse("fa"), Some(CostObjective::Fa));
         assert_eq!(CostObjective::parse("AREA"), Some(CostObjective::Area));
         assert_eq!(CostObjective::parse("power"), Some(CostObjective::Power));
+        assert_eq!(CostObjective::parse("delay"), Some(CostObjective::Delay));
         assert_eq!(CostObjective::parse("area+power"), Some(CostObjective::AreaPower));
         assert_eq!(CostObjective::parse("Area+Power"), Some(CostObjective::AreaPower));
+        // Compound objectives are order- and case-insensitive.
+        assert_eq!(CostObjective::parse("power+area"), Some(CostObjective::AreaPower));
+        assert_eq!(
+            CostObjective::parse("area+power+delay"),
+            Some(CostObjective::AreaPowerDelay)
+        );
+        assert_eq!(
+            CostObjective::parse("delay+power+area"),
+            Some(CostObjective::AreaPowerDelay)
+        );
+        assert_eq!(
+            CostObjective::parse("AREA+POWER+DELAY"),
+            Some(CostObjective::AreaPowerDelay)
+        );
         assert_eq!(CostObjective::parse("watts"), None);
-        assert_eq!(CostObjective::parse("power+area"), None);
+        assert_eq!(CostObjective::parse("area+delay"), None);
+        assert_eq!(CostObjective::parse("area+area"), None);
+        assert_eq!(CostObjective::parse("fa+power"), None);
         assert!(!CostObjective::Fa.is_measured());
         assert!(CostObjective::Area.is_measured());
         assert!(CostObjective::Power.is_measured());
+        assert!(CostObjective::Delay.is_measured());
         assert!(CostObjective::AreaPower.is_measured());
+        assert!(CostObjective::AreaPowerDelay.is_measured());
         assert_eq!(CostObjective::Power.label(), "power");
         assert_eq!(CostObjective::AreaPower.label(), "area+power");
+        assert_eq!(CostObjective::AreaPowerDelay.label(), "area+power+delay");
+        // Round trip: every label parses back to its own variant.
+        for o in [
+            CostObjective::Fa,
+            CostObjective::Area,
+            CostObjective::Power,
+            CostObjective::Delay,
+            CostObjective::AreaPower,
+            CostObjective::AreaPowerDelay,
+        ] {
+            assert_eq!(CostObjective::parse(o.label()), Some(o), "{o:?}");
+        }
     }
 
     #[test]
     fn cost_objective_arity_and_activity() {
-        for o in [CostObjective::Fa, CostObjective::Area, CostObjective::Power] {
+        for o in [
+            CostObjective::Fa,
+            CostObjective::Area,
+            CostObjective::Power,
+            CostObjective::Delay,
+        ] {
             assert_eq!(o.arity(), 2, "{o:?}");
         }
         assert_eq!(CostObjective::AreaPower.arity(), 3);
+        assert_eq!(CostObjective::AreaPowerDelay.arity(), 4);
         assert!(!CostObjective::Fa.needs_activity());
         assert!(!CostObjective::Area.needs_activity());
+        assert!(!CostObjective::Delay.needs_activity());
         assert!(CostObjective::Power.needs_activity());
         assert!(CostObjective::AreaPower.needs_activity());
+        assert!(CostObjective::AreaPowerDelay.needs_activity());
+        assert_eq!(CostObjective::Fa.delay_axis(), None);
+        assert_eq!(CostObjective::AreaPower.delay_axis(), None);
+        assert_eq!(CostObjective::Delay.delay_axis(), Some(1));
+        assert_eq!(CostObjective::AreaPowerDelay.delay_axis(), Some(3));
+    }
+
+    #[test]
+    fn critical_path_matches_analyze() {
+        let nl = small_netlist();
+        for lib in [Library::egfet_1v(), Library::egfet_0p6v(), Library::egfet_0p6v_upsized()] {
+            let r = analyze(&nl, &lib, 200.0, 0.25);
+            assert_eq!(critical_path_ms(&nl, &lib), r.delay_ms, "{}", lib.name);
+            // The arrival table itself obeys the longest-path recurrence.
+            let arr = arrival_times(&nl, &lib);
+            for (i, g) in nl.gates.iter().enumerate() {
+                match lib.cell(g) {
+                    None => assert_eq!(arr[i], 0.0),
+                    Some(cell) => {
+                        let want = g
+                            .operands()
+                            .map(|o| arr[o as usize])
+                            .fold(0.0f64, f64::max)
+                            + cell.delay_ms;
+                        assert_eq!(arr[i], want, "node {i}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -12,10 +12,15 @@
 //!   QAT model (train set) — the accuracy-bound constraint applies to it;
 //! * objectives 1.. are hardware costs: by default the full-adder area
 //!   surrogate ([`crate::area::AreaModel`]); the circuit-in-the-loop
-//!   backend can swap in *measured* EGFET area and/or dynamic power of
-//!   each chromosome's synthesized survivor (`--objective
-//!   fa|area|power|area+power`, [`crate::egfet::CostObjective`] — the
-//!   joint `area+power` mode runs a three-objective front).
+//!   backend can swap in *measured* EGFET area, dynamic power, and/or
+//!   critical-path delay of each chromosome's synthesized survivor
+//!   (`--objective fa|area|power|delay|area+power|area+power+delay`,
+//!   [`crate::egfet::CostObjective`] — the joint modes run three- and
+//!   four-objective fronts). A delay axis can additionally carry a hard
+//!   timing cap (`--max-delay`, [`Constraints::max_delay`]) that rides
+//!   the same constrained-domination rule as the accuracy bound, so
+//!   timing-infeasible designs lose to every timing-feasible one and
+//!   never appear on the reported front.
 //!
 //! Per the paper: the initial population is biased toward
 //! non-approximated bits, candidates whose accuracy loss exceeds 15% are
@@ -153,11 +158,58 @@ pub struct GaResult<const M: usize = 2> {
     pub history: Vec<(f64, f64)>,
 }
 
+/// The feasibility side of constrained domination: the accuracy-loss
+/// bound on objective 0 (always), plus an optional hard cap on one cost
+/// axis — the `--max-delay` timing constraint (`(axis, cap)`, where
+/// `axis` is the objective's delay slot,
+/// [`crate::egfet::CostObjective::delay_axis`]). Violations are summed
+/// into one scalar, so Deb's rule stays a total preorder: feasible
+/// beats infeasible, less-violating beats more-violating, and plain
+/// Pareto dominance decides among the feasible.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Constraints {
+    /// Maximum admissible accuracy loss (objective 0).
+    pub acc_loss_bound: f64,
+    /// Optional `(objective axis, cap)` hard constraint — `--max-delay`
+    /// in milliseconds on the delay axis.
+    pub max_delay: Option<(usize, f64)>,
+}
+
+impl Constraints {
+    /// The legacy constraint set: accuracy bound only.
+    pub fn loss_only(acc_loss_bound: f64) -> Constraints {
+        Constraints { acc_loss_bound, max_delay: None }
+    }
+
+    /// Total constraint violation of an objective vector (0 = feasible).
+    pub fn violation<const M: usize>(&self, o: &[f64; M]) -> f64 {
+        let mut v = (o[0] - self.acc_loss_bound).max(0.0);
+        if let Some((axis, cap)) = self.max_delay {
+            v += (o[axis] - cap).max(0.0);
+        }
+        v
+    }
+
+    /// Whether an objective vector satisfies every constraint.
+    pub fn feasible<const M: usize>(&self, o: &[f64; M]) -> bool {
+        self.violation(o) == 0.0
+    }
+}
+
 /// Non-dominated sorting: returns the front index of every individual
 /// (0 = best front). Uses the constrained-domination rule with the
 /// accuracy-loss bound on objective 0: feasible dominates infeasible;
 /// among infeasible, lower violation dominates.
 pub fn non_dominated_sort<const M: usize>(objs: &[[f64; M]], bound: f64) -> Vec<usize> {
+    non_dominated_sort_by(objs, &Constraints::loss_only(bound))
+}
+
+/// [`non_dominated_sort`] under a full [`Constraints`] set (accuracy
+/// bound + optional timing cap).
+pub fn non_dominated_sort_by<const M: usize>(
+    objs: &[[f64; M]],
+    constraints: &Constraints,
+) -> Vec<usize> {
     let n = objs.len();
     let mut dominated_by = vec![0usize; n];
     let mut dominates: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -166,9 +218,9 @@ pub fn non_dominated_sort<const M: usize>(objs: &[[f64; M]], bound: f64) -> Vec<
             if i == j {
                 continue;
             }
-            if dominates_constrained(&objs[i], &objs[j], bound) {
+            if dominates_constrained_by(&objs[i], &objs[j], constraints) {
                 dominates[i].push(j);
-            } else if dominates_constrained(&objs[j], &objs[i], bound) {
+            } else if dominates_constrained_by(&objs[j], &objs[i], constraints) {
                 dominated_by[i] += 1;
             }
         }
@@ -196,8 +248,19 @@ pub fn non_dominated_sort<const M: usize>(objs: &[[f64; M]], bound: f64) -> Vec<
 /// Deb's constrained-domination: feasibility first (violation of the
 /// accuracy bound on objective 0), Pareto second.
 pub fn dominates_constrained<const M: usize>(a: &[f64; M], b: &[f64; M], bound: f64) -> bool {
-    let va = (a[0] - bound).max(0.0);
-    let vb = (b[0] - bound).max(0.0);
+    dominates_constrained_by(a, b, &Constraints::loss_only(bound))
+}
+
+/// [`dominates_constrained`] under a full [`Constraints`] set: the same
+/// Deb rule, with the violation scalar summing every constraint
+/// (accuracy bound + optional timing cap).
+pub fn dominates_constrained_by<const M: usize>(
+    a: &[f64; M],
+    b: &[f64; M],
+    constraints: &Constraints,
+) -> bool {
+    let va = constraints.violation(a);
+    let vb = constraints.violation(b);
     if va == 0.0 && vb > 0.0 {
         return true;
     }
@@ -256,12 +319,26 @@ pub fn crowding_distance<const M: usize>(objs: &[[f64; M]], front: &[usize]) -> 
 
 /// Extract the feasible non-dominated front from a set of individuals.
 pub fn pareto_front<const M: usize>(pop: &[Individual<M>], bound: f64) -> Vec<Individual<M>> {
+    pareto_front_by(pop, &Constraints::loss_only(bound))
+}
+
+/// [`pareto_front`] under a full [`Constraints`] set: individuals
+/// violating *any* constraint (accuracy bound or timing cap) are
+/// excluded outright — with `--max-delay` active, every front member is
+/// guaranteed to meet the cap.
+pub fn pareto_front_by<const M: usize>(
+    pop: &[Individual<M>],
+    constraints: &Constraints,
+) -> Vec<Individual<M>> {
     let mut front: Vec<Individual<M>> = Vec::new();
     for ind in pop {
-        if ind.objs[0] > bound {
+        if !constraints.feasible(&ind.objs) {
             continue;
         }
-        if pop.iter().any(|o| o.objs[0] <= bound && dominates(&o.objs, &ind.objs)) {
+        if pop
+            .iter()
+            .any(|o| constraints.feasible(&o.objs) && dominates(&o.objs, &ind.objs))
+        {
             continue;
         }
         // Dedup identical objective points.
@@ -287,11 +364,15 @@ pub struct Nsga2<'a, const M: usize = 2> {
     /// Extra domain-informed individuals injected into the initial
     /// population (e.g. [`crate::accum::truncation_seeds`]).
     pub seeds: Vec<BitVec>,
+    /// Optional `(objective axis, cap)` hard timing constraint
+    /// (`--max-delay` on the objective's delay axis) folded into
+    /// constrained domination alongside the accuracy bound.
+    pub max_delay: Option<(usize, f64)>,
 }
 
 impl<'a, const M: usize> Nsga2<'a, M> {
     pub fn new(spec: GaSpec, genome_len: usize, evaluator: &'a dyn Evaluator<M>) -> Self {
-        Nsga2 { spec, genome_len, evaluator, jobs: 0, seeds: Vec::new() }
+        Nsga2 { spec, genome_len, evaluator, jobs: 0, seeds: Vec::new(), max_delay: None }
     }
 
     /// Builder-style seed injection.
@@ -304,6 +385,36 @@ impl<'a, const M: usize> Nsga2<'a, M> {
     pub fn with_jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs;
         self
+    }
+
+    /// Builder-style timing cap: `Some((axis, cap_ms))` makes objective
+    /// `axis` a hard constraint (`--max-delay`). The axis must be a
+    /// cost axis (`1..M`); `None` leaves selection unconstrained.
+    pub fn with_max_delay(mut self, max_delay: Option<(usize, f64)>) -> Self {
+        if let Some((axis, _)) = max_delay {
+            assert!(
+                (1..M).contains(&axis),
+                "delay axis {axis} out of range for arity {M}"
+            );
+        }
+        self.max_delay = max_delay;
+        self
+    }
+
+    /// The full constraint set selection runs under.
+    fn constraints(&self) -> Constraints {
+        Constraints { acc_loss_bound: self.spec.acc_loss_bound, max_delay: self.max_delay }
+    }
+
+    /// Tally `--max-delay` violations in one evaluated batch. Runs on
+    /// the GA thread over the full (pre-dedup) objective stream, so the
+    /// tally is a pure function of the genome sequence — deterministic
+    /// across `--jobs` widths, hence a `Counter`.
+    fn count_violations(&self, objs: &[[f64; M]]) {
+        if let Some((axis, cap)) = self.max_delay {
+            let n = objs.iter().filter(|o| o[axis] > cap).count();
+            telemetry::count(Counter::GaConstraintViolations, n as u64);
+        }
     }
 
     fn resolved_jobs(&self) -> usize {
@@ -341,7 +452,9 @@ impl<'a, const M: usize> Nsga2<'a, M> {
             genomes.push(BitVec::from_bools(&bools));
         }
         let jobs = self.resolved_jobs();
+        let constraints = self.constraints();
         let objs = evaluate_parallel(self.evaluator, &genomes, jobs);
+        self.count_violations(&objs);
         let mut pop: Vec<Individual<M>> = genomes
             .into_iter()
             .zip(objs)
@@ -353,9 +466,9 @@ impl<'a, const M: usize> Nsga2<'a, M> {
             let _sp = crate::span!("generation");
             telemetry::count(Counter::GaGenerations, 1);
             // --- variation: binary tournament -> crossover -> mutation
-            let ranks = non_dominated_sort(
+            let ranks = non_dominated_sort_by(
                 &pop.iter().map(|i| i.objs).collect::<Vec<_>>(),
-                self.spec.acc_loss_bound,
+                &constraints,
             );
             let crowd = full_crowding(&pop, &ranks);
             let mut offspring_genomes = Vec::with_capacity(pop_size);
@@ -377,6 +490,7 @@ impl<'a, const M: usize> Nsga2<'a, M> {
             let n_off = offspring_genomes.len();
             let t0 = std::time::Instant::now();
             let off_objs = evaluate_parallel(self.evaluator, &offspring_genomes, jobs);
+            self.count_violations(&off_objs);
             if telemetry::log_enabled(telemetry::Level::Debug) {
                 let dt = t0.elapsed().as_secs_f64().max(1e-9);
                 telemetry::debug(
@@ -397,7 +511,7 @@ impl<'a, const M: usize> Nsga2<'a, M> {
 
             // --- environmental selection on the merged population
             pop.extend(offspring);
-            pop = select(pop, pop_size, self.spec.acc_loss_bound);
+            pop = select(pop, pop_size, &constraints);
             telemetry::gauge(Gauge::GaPopulation, pop.len() as u64);
 
             // --- logging
@@ -405,14 +519,14 @@ impl<'a, const M: usize> Nsga2<'a, M> {
             let best5 = best_area_at(&pop, 0.05);
             history.push((best2, best5));
             let snapshot = GaResult {
-                front: pareto_front(&pop, self.spec.acc_loss_bound),
+                front: pareto_front_by(&pop, &constraints),
                 population: Vec::new(),
                 history: history.clone(),
             };
             log(generation, &snapshot);
         }
 
-        let front = pareto_front(&pop, self.spec.acc_loss_bound);
+        let front = pareto_front_by(&pop, &constraints);
         GaResult { population: pop, front, history }
     }
 }
@@ -474,10 +588,10 @@ fn mutate(rng: &mut Rng, g: &mut BitVec, rate: f64) {
 fn select<const M: usize>(
     pop: Vec<Individual<M>>,
     target: usize,
-    bound: f64,
+    constraints: &Constraints,
 ) -> Vec<Individual<M>> {
     let objs: Vec<[f64; M]> = pop.iter().map(|i| i.objs).collect();
-    let ranks = non_dominated_sort(&objs, bound);
+    let ranks = non_dominated_sort_by(&objs, constraints);
     let max_rank = ranks.iter().copied().max().unwrap_or(0);
     let mut out: Vec<Individual<M>> = Vec::with_capacity(target);
     for r in 0..=max_rank {
@@ -616,6 +730,114 @@ mod tests {
         let ranks = non_dominated_sort(&objs, 0.15);
         assert_eq!(ranks[1], 0);
         assert_eq!(ranks[0], 1);
+    }
+
+    #[test]
+    fn constraints_loss_only_matches_legacy_rule() {
+        // The delegating wrappers must not change the legacy semantics:
+        // with no timing cap, the _by variants are the old functions.
+        let c = Constraints::loss_only(0.15);
+        let pts = [[0.0, 1.0], [0.1, 2.0], [0.5, 0.1], [0.2, 0.0]];
+        for a in &pts {
+            assert_eq!(c.violation(a), (a[0] - 0.15).max(0.0));
+            for b in &pts {
+                assert_eq!(
+                    dominates_constrained(a, b, 0.15),
+                    dominates_constrained_by(a, b, &c)
+                );
+            }
+        }
+        let ranks_old = non_dominated_sort(&pts, 0.15);
+        let ranks_new = non_dominated_sort_by(&pts, &c);
+        assert_eq!(ranks_old, ranks_new);
+    }
+
+    #[test]
+    fn timing_cap_drives_constrained_domination() {
+        // Axis 2 is "delay" with a 10.0 cap: a timing violator loses to
+        // any timing-feasible point even when it Pareto-dominates it,
+        // and among violators the smaller violation wins.
+        let c = Constraints { acc_loss_bound: 0.15, max_delay: Some((2, 10.0)) };
+        let feasible = [0.1, 50.0, 9.0];
+        let violator = [0.0, 1.0, 12.0]; // better loss+cost, late
+        let worse_violator = [0.0, 1.0, 20.0];
+        assert!(c.feasible(&feasible));
+        assert!(!c.feasible(&violator));
+        assert_eq!(c.violation(&violator), 2.0);
+        assert!(dominates_constrained_by(&feasible, &violator, &c));
+        assert!(!dominates_constrained_by(&violator, &feasible, &c));
+        assert!(dominates_constrained_by(&violator, &worse_violator, &c));
+        // Violations sum across constraints: loss + delay.
+        let double = [0.25, 1.0, 12.0];
+        assert_eq!(c.violation(&double), (0.25 - 0.15) + 2.0);
+    }
+
+    #[test]
+    fn pareto_front_by_excludes_timing_violators() {
+        let c = Constraints { acc_loss_bound: 0.15, max_delay: Some((1, 10.0)) };
+        let mk = |objs: [f64; 2]| Individual { genome: BitVec::zeros(4), objs };
+        let pop = vec![
+            mk([0.0, 12.0]), // dominates everything but violates the cap
+            mk([0.05, 9.0]),
+            mk([0.1, 8.0]),
+            mk([0.2, 5.0]), // violates the accuracy bound
+        ];
+        let front = pareto_front_by(&pop, &c);
+        let objs: Vec<[f64; 2]> = front.iter().map(|i| i.objs).collect();
+        assert_eq!(objs, vec![[0.05, 9.0], [0.1, 8.0]]);
+        // Without the cap the fast violator takes over the front.
+        let unconstrained = pareto_front(&pop, 0.15);
+        assert_eq!(unconstrained[0].objs, [0.0, 12.0]);
+    }
+
+    #[test]
+    fn ga_front_meets_max_delay_and_counts_violations() {
+        // End to end: with axis 1 capped, every front member meets the
+        // cap, and the violation tally lands in the deterministic
+        // counter block.
+        let toy = Toy { len: 30 };
+        let cap = 20.0;
+        let before = telemetry::thread_block();
+        let result = Nsga2::<2>::new(spec(), 30, &toy)
+            .with_jobs(1)
+            .with_max_delay(Some((1, cap)))
+            .run(|_, _| {});
+        let d = telemetry::thread_block().delta(&before);
+        for ind in &result.front {
+            assert!(ind.objs[1] <= cap, "front member over cap: {:?}", ind.objs);
+        }
+        assert!(!result.front.is_empty(), "capped run still yields a front");
+        // The all-ones anchor (area 30 > cap) alone guarantees at least
+        // one violation was evaluated and tallied.
+        assert!(
+            d.counters[Counter::GaConstraintViolations as usize] >= 1,
+            "violations must be counted"
+        );
+    }
+
+    #[test]
+    fn max_delay_jobs_determinism() {
+        // The capped run must stay bit-identical across jobs widths —
+        // constraint handling lives entirely on the GA thread.
+        let toy = Toy { len: 24 };
+        let run = |jobs| {
+            let before = telemetry::thread_block();
+            let r = Nsga2::<2>::new(spec(), 24, &toy)
+                .with_jobs(jobs)
+                .with_max_delay(Some((1, 18.0)))
+                .run(|_, _| {});
+            let d = telemetry::thread_block().delta(&before);
+            let objs: Vec<[f64; 2]> = r.front.iter().map(|i| i.objs).collect();
+            (objs, r.history, d.counters[Counter::GaConstraintViolations as usize])
+        };
+        assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "delay axis 0 out of range")]
+    fn max_delay_rejects_loss_axis() {
+        let toy = Toy { len: 8 };
+        let _ = Nsga2::<2>::new(spec(), 8, &toy).with_max_delay(Some((0, 1.0)));
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //! 256-lane blocks by default, 64 is the legacy width; bit-identical),
 //! --share-cones on|off (circuit backend: generation-scoped shared-cone
 //! evaluation in the incremental engine, default on; bit-identical),
+//! --objective fa|area|power|delay|area+power|area+power+delay (GA cost
+//! axes; measured ones need the circuit backend),
+//! --max-delay <ms> (hard timing cap on the delay axis; defaults to the
+//! dataset clock budget when a delay objective is active),
 //! --out <file> (JSON for `run`, text otherwise), --pop/--gens overrides.
 
 use anyhow::{anyhow, bail, Result};
@@ -146,8 +150,23 @@ impl Args {
 
     fn objective(&self) -> Result<CostObjective> {
         let s = self.get("objective").unwrap_or("fa");
-        CostObjective::parse(s)
-            .ok_or_else(|| anyhow!("bad --objective '{s}' (fa|area|power|area+power)"))
+        CostObjective::parse(s).ok_or_else(|| {
+            anyhow!("bad --objective '{s}' (fa|area|power|delay|area+power|area+power+delay)")
+        })
+    }
+
+    fn max_delay(&self) -> Result<Option<f64>> {
+        match self.get("max-delay") {
+            None => Ok(None),
+            Some(s) => {
+                let ms: f64 =
+                    s.parse().map_err(|_| anyhow!("bad --max-delay '{s}' (milliseconds)"))?;
+                if !(ms > 0.0) {
+                    bail!("bad --max-delay '{s}' (must be a positive number of milliseconds)");
+                }
+                Ok(Some(ms))
+            }
+        }
     }
 
     fn jobs(&self) -> Result<usize> {
@@ -232,6 +251,7 @@ fn run() -> Result<()> {
                 backend: args.backend()?,
                 synth: args.synth()?,
                 objective: args.objective()?,
+                max_delay_ms: args.max_delay()?,
                 jobs: args.jobs()?,
                 lane_width: args.lane_width()?,
                 share_cones: args.share_cones()?,
@@ -407,14 +427,20 @@ fn run() -> Result<()> {
                  --share-cones on|off [default on] shares structurally identical\n                            \
                  dirty-cone results across a generation's chromosomes in the\n                            \
                  incremental engine — work-saving only, bit-identical results;\n                            \
-                 --objective fa|area|power|area+power selects the GA's cost\n                            \
-                 axes: the full-adder surrogate [default, backend-portable]\n                            \
-                 or — circuit backend only — measured EGFET cell area /\n                            \
-                 dynamic power of each chromosome's synthesized survivor\n                            \
+                 --objective fa|area|power|delay|area+power|area+power+delay\n                            \
+                 selects the GA's cost axes: the full-adder surrogate\n                            \
+                 [default, backend-portable] or — circuit backend only —\n                            \
+                 measured EGFET cell area / dynamic power / critical-path\n                            \
+                 delay of each chromosome's synthesized survivor\n                            \
                  (toggle activity measured on the train stimulus, paper's\n                            \
-                 VCS step); 'area+power' optimizes both measured axes\n                            \
-                 jointly as a three-objective (loss, area, power) front\n                            \
-                 from the same single synthesis pass;\n                            \
+                 VCS step; delay read off the incremental arena's arrival\n                            \
+                 table, bit-identical to from-scratch timing); compound\n                            \
+                 objectives are order-insensitive ('power+area' == \n                            \
+                 'area+power') and optimize the measured axes jointly as a\n                            \
+                 3- or 4-objective front from the same synthesis pass;\n                            \
+                 --max-delay <ms> [delay objectives only] caps the delay\n                            \
+                 axis via constrained domination so every front member\n                            \
+                 meets timing [default: the dataset's clock budget];\n                            \
                  --jobs N = GA evaluation worker threads, 0/auto by default —\n                            \
                  each worker owns its own synth arena + wave cache and any\n                            \
                  width produces bit-identical results)\n  \

@@ -118,7 +118,8 @@ pub fn result_to_json(r: &PipelineResult) -> Json {
         (
             "front",
             // Each member's full objective vector — length 2 for single
-            // cost objectives, 3 for the joint area+power front.
+            // cost objectives, 3 for the joint area+power front, 4 for
+            // area+power+delay (every member meets the --max-delay cap).
             Json::arr(
                 r.front
                     .iter()

@@ -43,11 +43,16 @@
 //! const-generic NSGA-II optimizer minimizes (paper §III-D1/D2/D3). The
 //! native and PJRT evaluators are fixed at arity 2 (loss + FA area
 //! surrogate); [`CircuitEvaluator`] is generic over the objective arity
-//! `M` and can score *measured* EGFET area and/or dynamic power of each
-//! chromosome's synthesized survivor (`--objective`, [`CostObjective`]):
-//! arity 2 for `fa|area|power`, arity 3 for the joint `area+power` mode,
-//! whose `[loss, area, power]` axes all fall out of one incremental
-//! pass.
+//! `M` and can score *measured* EGFET area, dynamic power, and/or
+//! critical-path delay of each chromosome's synthesized survivor
+//! (`--objective`, [`CostObjective`]): arity 2 for
+//! `fa|area|power|delay`, arity 3 for the joint `area+power` mode, and
+//! arity 4 for `area+power+delay`, whose `[loss, area, power, delay]`
+//! axes all fall out of one incremental pass — the delay axis reads the
+//! arena's live-output arrival max
+//! ([`IncrementalSynth::output_delay_ms`]), maintained at emit time, so
+//! timing costs nothing beyond the synthesis the chromosome already
+//! paid.
 
 use crate::accum::GenomeMap;
 use crate::area::AreaModel;
@@ -387,11 +392,16 @@ impl Evaluator<2> for NativeEvaluator {
 /// the configured [`CostObjective`]'s [`CostObjective::arity`] —
 /// enforced at construction, so an evaluator can never hand the
 /// optimizer a half-filled objective vector: [`CircuitEvaluator::new`]
-/// builds the classic two-objective evaluator, and
+/// builds the classic two-objective evaluator,
 /// [`CircuitEvaluator::new_joint`] the three-objective
 /// `[loss, area, power]` one (`--objective area+power`), whose two cost
 /// axes fall out of the *same* [`egfet::analyze_histogram`] roll-up of
-/// the same single incremental pass.
+/// the same single incremental pass, and
+/// [`CircuitEvaluator::new_joint_delay`] the four-objective
+/// `[loss, area, power, delay]` one (`--objective area+power+delay`),
+/// which additionally reads the incremental engine's arrival table —
+/// bit-identical to from-scratch `egfet::analyze` timing of the
+/// survivor (full mode computes exactly that).
 pub struct CircuitEvaluator<const M: usize = 2> {
     pub mlp: QuantMlp,
     pub map: GenomeMap,
@@ -524,6 +534,23 @@ impl CircuitEvaluator<3> {
     /// synthesized survivor from the same single roll-up.
     pub fn new_joint(mlp: &QuantMlp, train: &QuantDataset, base_acc: f64) -> CircuitEvaluator<3> {
         CircuitEvaluator::with_arity(mlp, train, base_acc, CostObjective::AreaPower)
+    }
+}
+
+impl CircuitEvaluator<4> {
+    /// The joint four-objective evaluator (`--objective
+    /// area+power+delay`): `[loss, area_cm2, power_mw, delay_ms]`. Area
+    /// and power roll up from the same census as the 3-D mode; the
+    /// delay axis is the survivor's measured critical path — the
+    /// incremental arena's live-output arrival max, or (full mode)
+    /// `egfet::critical_path_ms` of the from-scratch survivor, which
+    /// are bit-identical by construction.
+    pub fn new_joint_delay(
+        mlp: &QuantMlp,
+        train: &QuantDataset,
+        base_acc: f64,
+    ) -> CircuitEvaluator<4> {
+        CircuitEvaluator::with_arity(mlp, train, base_acc, CostObjective::AreaPowerDelay)
     }
 }
 
@@ -696,20 +723,33 @@ impl<const M: usize> CircuitEvaluator<M> {
         }
     }
 
-    /// Roll a census + activity up into the measured objective vector:
-    /// one [`egfet::analyze_histogram`] call yields both area and power,
+    /// Roll a census + activity + measured delay up into the objective
+    /// vector: one [`egfet::analyze_histogram`] call yields both area
+    /// and power, `delay_ms` is the survivor's critical path (callers
+    /// pass 0 when the objective has no delay axis — it is never read),
     /// and the configured objective selects which of them fill axes 1..
-    /// (both, for the joint `area+power` mode). The slice copies keep
-    /// the packing arity-checked at runtime instead of indexing past a
-    /// narrower `M` (the constructor already pins `M` to the objective).
-    fn measured_objs(&self, loss: f64, hist: &CellCounts, activity: f64) -> [f64; M] {
+    /// (all three, for the joint `area+power+delay` mode). The slice
+    /// copies keep the packing arity-checked at runtime instead of
+    /// indexing past a narrower `M` (the constructor already pins `M`
+    /// to the objective).
+    fn measured_objs(
+        &self,
+        loss: f64,
+        hist: &CellCounts,
+        activity: f64,
+        delay_ms: f64,
+    ) -> [f64; M] {
         let (area_cm2, power_mw) = egfet::analyze_histogram(hist, &self.lib, activity);
         let mut o = [0.0f64; M];
         o[0] = loss;
         match self.objective {
             CostObjective::Area => o[1..].copy_from_slice(&[area_cm2]),
             CostObjective::Power => o[1..].copy_from_slice(&[power_mw]),
+            CostObjective::Delay => o[1..].copy_from_slice(&[delay_ms]),
             CostObjective::AreaPower => o[1..].copy_from_slice(&[area_cm2, power_mw]),
+            CostObjective::AreaPowerDelay => {
+                o[1..].copy_from_slice(&[area_cm2, power_mw, delay_ms]);
+            }
             CostObjective::Fa => unreachable!("measured objectives with FA objective"),
         }
         o
@@ -749,7 +789,15 @@ impl<const M: usize> CircuitEvaluator<M> {
         } else {
             egfet::NOMINAL_ACTIVITY
         };
-        self.measured_objs(loss, &opt.cell_histogram(), activity)
+        // Full mode *is* the from-scratch reference the incremental
+        // arrival table is pinned against: timing analysis of the
+        // freshly synthesized survivor.
+        let delay_ms = if self.objective.delay_axis().is_some() {
+            egfet::critical_path_ms(&opt, &self.lib)
+        } else {
+            0.0
+        };
+        self.measured_objs(loss, &opt.cell_histogram(), activity, delay_ms)
     }
 }
 
@@ -822,7 +870,20 @@ impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
                     // synthesis or simulation (the joint area+power mode
                     // fills both axes from the same call).
                     let act = ev.toggle_ratio(synth.live_cell_ids(), wave.node_toggles());
-                    ev.measured_objs(ev.loss_of(acc), synth.survivor_histogram(), act)
+                    // The delay axis falls out of the arena's arrival
+                    // table — settled at emit time, so reading it here
+                    // is a max over the output bits, nothing more.
+                    let delay_ms = if ev.objective.delay_axis().is_some() {
+                        synth.output_delay_ms()
+                    } else {
+                        0.0
+                    };
+                    ev.measured_objs(
+                        ev.loss_of(acc),
+                        synth.survivor_histogram(),
+                        act,
+                        delay_ms,
+                    )
                 } else {
                     ev.objectives(genome, acc)
                 }
@@ -1195,6 +1256,87 @@ mod tests {
             let serial_ev =
                 CircuitEvaluator::new_joint(&qmlp, &qtrain, base).with_mode(mode);
             let par_ev = CircuitEvaluator::new_joint(&qmlp, &qtrain, base).with_mode(mode);
+            let serial = evaluate_parallel(&serial_ev, &genomes, 1);
+            let parallel = evaluate_parallel(&par_ev, &genomes, 8);
+            assert_eq!(serial, parallel, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn delay_objective_modes_agree_and_pin_to_analyze() {
+        // The timing tentpole at evaluator level: the delay axis must be
+        // bit-identical between synthesis modes, and equal from-scratch
+        // `egfet` timing analysis of the freshly synthesized survivor
+        // exactly — both `critical_path_ms` and the `analyze` roll-up.
+        use crate::egfet::{analyze, critical_path_ms, Library};
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(101);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 8);
+        let full = CircuitEvaluator::new(&qmlp, &qtrain, base)
+            .with_mode(SynthMode::Full)
+            .with_objective(CostObjective::Delay);
+        let incr =
+            CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Delay);
+        assert_eq!(incr.objective(), CostObjective::Delay);
+        let a = full.evaluate(&genomes);
+        let b = incr.evaluate(&genomes);
+        assert_eq!(a, b, "delay objective: modes must be bit-identical");
+
+        let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+        let lib = Library::egfet_1v();
+        for (genome, o) in genomes.iter().zip(&b) {
+            let (surv, _) = optimize(&tpl.instantiate(genome));
+            assert_eq!(o[1], critical_path_ms(&surv, &lib), "delay must be bit-exact");
+            assert_eq!(o[1], analyze(&surv, &lib, 200.0, 0.25).delay_ms);
+        }
+    }
+
+    #[test]
+    fn joint_delay_axes_match_single_runs() {
+        // The 4-objective evaluator must (a) be bit-identical between
+        // synthesis modes and (b) score exactly the axes the 3-D joint
+        // and the dedicated delay evaluators score — the 4-D mode is the
+        // same census roll-up plus the arrival-table read.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(103);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 8);
+        let full = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base)
+            .with_mode(SynthMode::Full);
+        let incr = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base);
+        assert_eq!(incr.objective(), CostObjective::AreaPowerDelay);
+        let a = full.evaluate(&genomes);
+        let b = incr.evaluate(&genomes);
+        assert_eq!(a, b, "4-D objective: modes must be bit-identical");
+
+        let joint = CircuitEvaluator::new_joint(&qmlp, &qtrain, base);
+        let delay_ev =
+            CircuitEvaluator::new(&qmlp, &qtrain, base).with_objective(CostObjective::Delay);
+        let joint_objs = joint.evaluate(&genomes);
+        let delay_objs = delay_ev.evaluate(&genomes);
+        for (k, j) in b.iter().enumerate() {
+            assert_eq!(j[0], joint_objs[k][0], "genome {k}: loss axis");
+            assert_eq!(j[1], joint_objs[k][1], "genome {k}: area axis");
+            assert_eq!(j[2], joint_objs[k][2], "genome {k}: power axis");
+            assert_eq!(j[3], delay_objs[k][1], "genome {k}: delay axis");
+        }
+    }
+
+    #[test]
+    fn joint_delay_parallel_matches_serial() {
+        // --jobs determinism at arity 4: the arrival table rides the
+        // same per-worker arena lease as the census, so any fan-out
+        // width is bit-identical to serial, in both synthesis modes.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(107);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 12);
+        for mode in [SynthMode::Incremental, SynthMode::Full] {
+            let serial_ev =
+                CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base).with_mode(mode);
+            let par_ev =
+                CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base).with_mode(mode);
             let serial = evaluate_parallel(&serial_ev, &genomes, 1);
             let parallel = evaluate_parallel(&par_ev, &genomes, 8);
             assert_eq!(serial, parallel, "mode {mode:?}");

@@ -16,6 +16,26 @@
 //!   (`sim::wave::WaveCache`) — stay valid across instantiations;
 //! * a per-template-node `Repr` table remembers what each source node
 //!   resolved to under the current parameter binding;
+//! * a per-*arena*-node **arrival table** is kept in lockstep with the
+//!   arena for timing closure: because the arena is append-only and a
+//!   node's operands are immutable after creation, its longest-path
+//!   arrival under the evaluation corner
+//!   ([`crate::egfet::Library::egfet_1v`], the same corner the
+//!   measured objectives use) is computed exactly once — when the node
+//!   is first emitted — and stays exact forever. The measured
+//!   critical-path delay of the current binding is then just a max over
+//!   the arena's live output arrivals
+//!   ([`IncrementalSynth::output_delay_ms`]), bit-identical to
+//!   from-scratch [`crate::egfet::analyze`] on the survivor: `f64::max`
+//!   over non-negative arrivals is order-insensitive, and DCE preserves
+//!   operand order, so both sides fold the same `max`/`+` DAG. A cone
+//!   re-synthesis that *shortens* the critical path needs no downstream
+//!   "un-propagation": the shortened cone's reprs resolve to different
+//!   (or pre-existing) arena nodes whose arrivals were settled at emit
+//!   time, and the delay max is re-taken over the re-resolved outputs
+//!   on every binding. Shared-cone memo hits carry settled arrivals for
+//!   free, structurally: a snapshot's reprs point at arena nodes whose
+//!   arrivals are already tabled;
 //! * on a parameter delta, a min-heap worklist walks the dirty cone in
 //!   ascending node id (= topological) order, recomputing reprs and
 //!   stopping early where a node's repr converges to its old value —
@@ -52,6 +72,7 @@
 //!    canonical structure, and repr convergence never skips a node whose
 //!    inputs changed).
 
+use crate::egfet::Library;
 use crate::netlist::{CellCounts, Gate, Netlist, NodeId, Template};
 use crate::synth::{dce, Repr, Rewriter, SynthStats};
 use crate::util::telemetry::{self, Counter, Work};
@@ -104,6 +125,15 @@ pub struct IncrementalSynth {
     rw: Rewriter,
     /// Representative of each template node under `cur`.
     repr: Vec<Repr>,
+    /// Arrival time (ms) of each *arena* node under `lib`, indexed by
+    /// arena node id. Append-only in lockstep with the arena: a node's
+    /// operands are immutable, so its longest-path arrival is computed
+    /// once at emit time and never revisited (module docs).
+    arrival: Vec<f64>,
+    /// Timing corner for the arrival table. Must match the corner the
+    /// evaluator's measured objectives use (`Library::egfet_1v`) so the
+    /// delay axis agrees bit-exactly with `egfet::analyze`.
+    lib: Library,
     /// Current parameter binding (valid once `ready`).
     cur: BitVec,
     ready: bool,
@@ -137,6 +167,8 @@ impl IncrementalSynth {
         IncrementalSynth {
             rw,
             repr: Vec::with_capacity(n),
+            arrival: Vec::new(),
+            lib: Library::egfet_1v(),
             cur: BitVec::zeros(tpl.n_params),
             ready: false,
             dirty_stamp: vec![0; n],
@@ -206,6 +238,7 @@ impl IncrementalSynth {
             self.cone_pass(&flipped);
         }
         self.refresh_outputs();
+        self.sync_arrivals();
         self.census();
         SynthStats { cells_in: self.tpl.nl.cell_count(), cells_out: self.live_cells.len() }
     }
@@ -226,6 +259,31 @@ impl IncrementalSynth {
     pub fn live_cell_ids(&self) -> &[NodeId] {
         debug_assert!(self.ready, "set_params before live_cell_ids");
         &self.live_cells
+    }
+
+    /// Arrival time (ms) of arena node `id` under the evaluation
+    /// corner. Exact for every node ever emitted, not just live ones
+    /// (module docs: arrivals are settled at emit time, forever).
+    pub fn arena_arrival(&self, id: NodeId) -> f64 {
+        self.arrival[id as usize]
+    }
+
+    /// Measured critical-path delay (ms) of the current survivor: the
+    /// max arrival over the arena's output bits. Bit-identical to
+    /// `egfet::critical_path_ms` on the DCE'd survivor — and therefore
+    /// to `egfet::analyze(..).delay_ms` — because DCE preserves operand
+    /// order and both sides fold the same `max`/`+` DAG (module docs).
+    /// This is the delay axis of `--objective area+power+delay`. Valid
+    /// after `set_params`.
+    pub fn output_delay_ms(&self) -> f64 {
+        debug_assert!(self.ready, "set_params before output_delay_ms");
+        self.rw
+            .out
+            .outputs
+            .iter()
+            .flat_map(|(_, bus)| bus.iter())
+            .map(|&n| self.arrival[n as usize])
+            .fold(0.0f64, f64::max)
     }
 
     /// Materialize the compact survivor netlist of the current binding
@@ -426,6 +484,34 @@ impl IncrementalSynth {
         rw.resolve_outputs(&tpl.nl.outputs, repr);
     }
 
+    /// Extend the arrival table over arena nodes emitted since the last
+    /// call. Runs after output resolution (which may intern constant
+    /// nodes) so the table always covers the whole arena. Ascending
+    /// index order is topological — the arena is append-only, so every
+    /// operand of node `i` has id `< i` and its arrival is already
+    /// settled. Same recurrence as `egfet::arrival_times`: cells take
+    /// the operand max plus the cell delay, non-cells are 0.
+    fn sync_arrivals(&mut self) {
+        let IncrementalSynth { rw, arrival, lib, .. } = self;
+        let arena = &rw.out;
+        let lo = arrival.len();
+        if lo == arena.len() {
+            return;
+        }
+        arrival.reserve(arena.len() - lo);
+        for g in &arena.gates[lo..] {
+            let t = match lib.cell(g) {
+                None => 0.0,
+                Some(cell) => {
+                    g.operands().map(|o| arrival[o as usize]).fold(0.0f64, f64::max)
+                        + cell.delay_ms
+                }
+            };
+            arrival.push(t);
+        }
+        telemetry::work(Work::SynthArrivalRecomputes, (arena.len() - lo) as u64);
+    }
+
     /// Census of the current output cone: live cell ids and per-type
     /// counts (the `cells_out` + `cell_histogram` a from-scratch DCE
     /// would report) without materializing the netlist. One hash-free
@@ -467,9 +553,37 @@ impl IncrementalSynth {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::egfet;
     use crate::sim::wave::{eval_wave, lane_bus_u64, pack_vectors, InputWave, LANES};
     use crate::synth::optimize;
     use crate::util::{prop, Rng};
+
+    /// Pin the arena's timing view against a from-scratch pass: the
+    /// delay axis must equal `egfet::critical_path_ms` on the fresh
+    /// survivor bit-exactly, and every output bit's arena arrival must
+    /// equal the fresh survivor's arrival at the corresponding output
+    /// position (output buses correspond 1:1 in declaration order).
+    fn check_arrivals(inc: &IncrementalSynth, fresh: &Netlist) -> Result<(), String> {
+        let lib = Library::egfet_1v();
+        let want = egfet::critical_path_ms(fresh, &lib);
+        let got = inc.output_delay_ms();
+        if got != want {
+            return Err(format!("delay {got} (incremental) != {want} (from-scratch)"));
+        }
+        let fresh_arr = egfet::arrival_times(fresh, &lib);
+        for (oi, (name, busf)) in fresh.outputs.iter().enumerate() {
+            let busa = &inc.arena().outputs[oi].1;
+            for (k, (&nf, &na)) in busf.iter().zip(busa.iter()).enumerate() {
+                let (wf, wa) = (fresh_arr[nf as usize], inc.arena_arrival(na));
+                if wa != wf {
+                    return Err(format!(
+                        "output '{name}' bit {k}: arrival {wa} (arena) != {wf} (fresh)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
 
     /// Random topologically-valid template: inputs, a dense block of
     /// params, optional constants, then a random gate soup over all of
@@ -618,6 +732,90 @@ mod tests {
         });
     }
 
+    #[test]
+    fn prop_arrivals_match_from_scratch() {
+        // The timing tentpole invariant: across random mask-flip
+        // sequences on random templates, the arena's arrival table pins
+        // bit-exactly to from-scratch `egfet` timing analysis of the
+        // fresh survivor — delay axis and per-output-bit arrivals both.
+        // The chain ends by flipping back to the recorded initial
+        // binding, so every case exercises a critical path that
+        // *shrinks* back to a previously-seen value (the "max can
+        // decrease" direction) and must land on the identical f64.
+        prop::check("incremental arrivals == from-scratch timing", |rng, _| {
+            let tpl = random_template(rng);
+            let n_params = tpl.n_params;
+            let initial = prop::gen::bits(rng, n_params, 0.5);
+            let mut params = initial.clone();
+            let mut inc = IncrementalSynth::new(tpl.clone());
+            inc.set_params(&params);
+            let initial_delay = inc.output_delay_ms();
+            {
+                let (fresh, _) = optimize(&tpl.instantiate(&params));
+                check_arrivals(&inc, &fresh).map_err(|e| format!("step 0: {e}"))?;
+            }
+            for step in 1..7 {
+                let flips = 1 + rng.below(n_params);
+                for _ in 0..flips {
+                    params.flip(rng.below(n_params));
+                }
+                inc.set_params(&params);
+                let (fresh, _) = optimize(&tpl.instantiate(&params));
+                check_arrivals(&inc, &fresh).map_err(|e| format!("step {step}: {e}"))?;
+            }
+            // Revert to the initial binding: arrivals must settle back
+            // to the exact initial delay, not merely a close one.
+            inc.set_params(&initial);
+            let back = inc.output_delay_ms();
+            if back != initial_delay {
+                return Err(format!(
+                    "revert: delay {back} != initial {initial_delay}"
+                ));
+            }
+            let (fresh, _) = optimize(&tpl.instantiate(&initial));
+            check_arrivals(&inc, &fresh).map_err(|e| format!("revert: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delay_shortening_flip_is_exact() {
+        // Deterministic "max decreases" coverage: a param muxes the
+        // output between a 6-deep NAND chain and a bare input, so
+        // flipping it collapses the critical path from six cell delays
+        // to zero. Both directions must pin to the from-scratch oracle.
+        let mut nl = Netlist::new();
+        let x = nl.input();
+        let y = nl.input();
+        let p = nl.param(0);
+        let mut t = x;
+        for _ in 0..6 {
+            t = nl.nand(t, y);
+        }
+        let m = nl.mux(p, t, x);
+        nl.output("y", vec![m]);
+        let tpl = Template::new(nl, 1);
+        let mut inc = IncrementalSynth::new(tpl.clone());
+        let lib = Library::egfet_1v();
+
+        let mut delays = [0.0f64; 2];
+        for (i, params) in [BitVec::zeros(1), BitVec::ones(1)].iter().enumerate() {
+            inc.set_params(params);
+            let (fresh, _) = optimize(&tpl.instantiate(params));
+            check_arrivals(&inc, &fresh).unwrap();
+            assert_eq!(inc.output_delay_ms(), egfet::critical_path_ms(&fresh, &lib));
+            delays[i] = inc.output_delay_ms();
+        }
+        let (short, long) = (delays[0].min(delays[1]), delays[0].max(delays[1]));
+        assert_eq!(short, 0.0, "wire side must have zero delay");
+        assert!(long > 0.0, "chain side must have positive delay");
+        // Flip back to the long side: the arena must re-report the
+        // identical maximum after having settled on the short one.
+        let long_binding = if delays[1] > delays[0] { BitVec::ones(1) } else { BitVec::zeros(1) };
+        inc.set_params(&long_binding);
+        assert_eq!(inc.output_delay_ms(), long);
+    }
+
     /// Random template with registered cone groups: inputs, then a few
     /// contiguous "neuron" groups (dense params + a random gate soup
     /// over everything built so far), then an ungrouped tail and
@@ -731,9 +929,18 @@ mod tests {
                 if shared.live_cell_ids() != plain.live_cell_ids() {
                     return Err(format!("step {step}: live-cell ids diverged"));
                 }
+                if shared.output_delay_ms() != plain.output_delay_ms() {
+                    return Err(format!(
+                        "step {step}: delay {} (shared) != {} (plain)",
+                        shared.output_delay_ms(),
+                        plain.output_delay_ms()
+                    ));
+                }
                 let (fresh, _) = optimize(&tpl.instantiate(&params));
                 check_equiv(&shared, &fresh, &batch)
                     .map_err(|e| format!("step {step} (shared): {e}"))?;
+                check_arrivals(&shared, &fresh)
+                    .map_err(|e| format!("step {step} (shared arrivals): {e}"))?;
             }
             // A mid-run flush only costs future hits, never results.
             shared.flush_shared_cones();

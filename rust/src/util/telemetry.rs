@@ -98,9 +98,14 @@ pub enum Counter {
     WaveActivitySims,
     /// Final designs synthesized + analyzed by the coordinator.
     CoordDesignsSynthesized,
+    /// Evaluated objective vectors that violated the `--max-delay`
+    /// constraint. Deterministic: a pure function of the genome stream
+    /// (every genome is counted once, on the GA thread, after its
+    /// objectives come back), independent of worker scheduling.
+    GaConstraintViolations,
 }
 
-pub const N_COUNTERS: usize = 14;
+pub const N_COUNTERS: usize = 15;
 
 /// Dotted counter names, indexed by `Counter as usize` — the keys of the
 /// `counters` section of `metrics.json`.
@@ -119,6 +124,7 @@ pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "wave.vectors_classified",
     "wave.activity_sims",
     "coordinator.designs_synthesized",
+    "ga.constraint_violations",
 ];
 
 /// Scheduling-dependent work attribution (NOT covered by the jobs
@@ -154,9 +160,13 @@ pub enum Work {
     SynthSharedConeHits,
     /// Shared-cone memo misses (cone group synthesized and memoized).
     SynthSharedConeMisses,
+    /// Arena nodes whose arrival time was computed (once each, at emit
+    /// time). Scheduling-dependent: which worker's arena first emits a
+    /// node decides where its arrival is paid.
+    SynthArrivalRecomputes,
 }
 
-pub const N_WORK: usize = 13;
+pub const N_WORK: usize = 14;
 
 /// Dotted work-stat names, indexed by `Work as usize`.
 pub const WORK_NAMES: [&str; N_WORK] = [
@@ -173,6 +183,7 @@ pub const WORK_NAMES: [&str; N_WORK] = [
     "wave.block_passes",
     "synth.shared_cone_hits",
     "synth.shared_cone_misses",
+    "synth.arrival_recomputes",
 ];
 
 /// Power-of-two buckets of the dirty-cone size histogram: bucket 0
@@ -626,8 +637,8 @@ mod tests {
     #[test]
     fn name_tables_match_enum_arity() {
         // The last variant of each enum must index the last name slot.
-        assert_eq!(Counter::CoordDesignsSynthesized as usize, N_COUNTERS - 1);
-        assert_eq!(Work::SynthSharedConeMisses as usize, N_WORK - 1);
+        assert_eq!(Counter::GaConstraintViolations as usize, N_COUNTERS - 1);
+        assert_eq!(Work::SynthArrivalRecomputes as usize, N_WORK - 1);
         assert_eq!(Gauge::MemoEntries as usize, N_GAUGES - 1);
         assert_eq!(COUNTER_NAMES.len(), N_COUNTERS);
         assert_eq!(WORK_NAMES.len(), N_WORK);

@@ -174,6 +174,71 @@ fn circuit_joint_objective_modes_agree_at_width_8() {
 }
 
 #[test]
+fn circuit_joint_delay_jobs_1_vs_8_bit_identical() {
+    // The four-objective `--objective area+power+delay` front: the
+    // delay axis is read off each worker's incremental arena arrival
+    // table (settled once per emitted node, shared-cone memo hits
+    // included — sharing defaults on), so jobs 1 and jobs 8 must
+    // produce a bit-identical 4-D GaResult. Fresh evaluators per width.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let serial_ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base);
+    let par_ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base);
+    assert!(serial_ev.cone_sharing(), "sharing must default on");
+    let serial = run_at::<4>(&serial_ev, glen, &[], 1);
+    let parallel = run_at::<4>(&par_ev, glen, &[], 8);
+    assert_eq!(serial, parallel);
+}
+
+#[test]
+fn circuit_joint_delay_modes_agree_at_width_8() {
+    // Full-mode joint-delay scoring times the from-scratch survivor
+    // through `egfet`, the incremental mode folds the arena's arrival
+    // table — the tentpole's bit-exactness contract says both walk the
+    // same 4-D GA trajectory at any width.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let incr_ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base);
+    let full_ev =
+        CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
+    let a = run_at::<4>(&incr_ev, glen, &[], 8);
+    let b = run_at::<4>(&full_ev, glen, &[], 1);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn circuit_joint_delay_lane_widths_and_sharing_bit_identical() {
+    // The 4-D run through the full throughput-knob matrix: lane width ×
+    // cone sharing × worker width must all reproduce the same GaResult
+    // bit-for-bit — the arrival table lives in the synthesis arena, not
+    // the wave engine, so no knob may perturb the delay axis. Fresh
+    // evaluator per cell.
+    use printed_mlp::sim::wave::LaneWidth;
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let reference = {
+        let ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base)
+            .with_lane_width(LaneWidth::W64)
+            .with_cone_sharing(false);
+        run_at::<4>(&ev, glen, &[], 1)
+    };
+    for width in [LaneWidth::W64, LaneWidth::W256] {
+        for share in [false, true] {
+            for jobs in [1usize, 8] {
+                let ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base)
+                    .with_lane_width(width)
+                    .with_cone_sharing(share);
+                assert_eq!(
+                    run_at::<4>(&ev, glen, &[], jobs),
+                    reference,
+                    "width={width:?} share={share} jobs={jobs}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn circuit_shared_cones_on_vs_off_jobs_1_and_8_bit_identical() {
     // The generation-scoped shared-cone memo is exact: a memo hit
     // replays byte-for-byte the reprs a re-synthesis would derive, so

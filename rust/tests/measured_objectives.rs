@@ -4,6 +4,9 @@
 //! survivor for every front member, the joint `--objective area+power`
 //! mode must produce a 3-D front whose area *and* power axes are both
 //! pinned to the same roll-up (with Pareto-sane 2-D projections), the
+//! the four-objective `--objective area+power+delay` mode must add a
+//! delay axis bit-identical to the from-scratch critical path of the
+//! survivor with every front member inside the `--max-delay` cap, the
 //! measured objectives must refuse backends that cannot provide them,
 //! and the FA surrogate must stay rank-faithful to the measured area it
 //! stands in for.
@@ -12,7 +15,7 @@ use printed_mlp::config::builtin;
 use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
 use printed_mlp::datasets;
 use printed_mlp::egfet::{
-    analyze, analyze_histogram, measured_activity, CostObjective, Library,
+    analyze, analyze_histogram, critical_path_ms, measured_activity, CostObjective, Library,
 };
 use printed_mlp::netlist::mlp::{build_mlp_template, ArgmaxMode};
 use printed_mlp::sim::wave;
@@ -189,9 +192,128 @@ fn joint_front_axes_pinned_to_survivor_rollup_and_projections_non_dominated() {
 }
 
 #[test]
+fn joint_delay_front_pinned_to_critical_path_and_meets_cap() {
+    // The timing-closure acceptance pin: `--objective area+power+delay`
+    // must produce a 4-D front whose area/power axes equal the survivor
+    // roll-up bit-exactly (as in the 3-D pin), whose delay axis equals
+    // `egfet::critical_path_ms` of the from-scratch re-synthesized
+    // survivor bit-exactly — the incremental arena's arrival table and
+    // the fresh timing walk fold the same max/+ DAG — and every member
+    // of which meets the default `--max-delay` cap (the dataset's clock
+    // budget; tiny = 200 ms) via constrained domination.
+    let cfg = tiny_cfg();
+    let opts = PipelineOpts {
+        backend: EvalBackend::Circuit,
+        objective: CostObjective::AreaPowerDelay,
+        max_hw_points: 2,
+        ..Default::default()
+    };
+    let r = Pipeline::new(cfg.clone(), opts).run().expect("pipeline");
+    assert_eq!(r.backend_used, "circuit");
+    assert_eq!(r.objective, CostObjective::AreaPowerDelay);
+    assert!(!r.front.is_empty());
+
+    let qmlp = &r.trained.qmlp;
+    let (_, qtrain, _) = datasets::load(&cfg.dataset);
+    let vectors: Vec<Vec<bool>> = qtrain
+        .x
+        .iter()
+        .map(|row| wave::encode_features(row, qmlp.l1.in_bits))
+        .collect();
+    let tpl = build_mlp_template(qmlp, &ArgmaxMode::Exact);
+    let lib = Library::egfet_1v();
+    for (k, ind) in r.front.iter().enumerate() {
+        assert_eq!(ind.objs.len(), 4, "joint-delay front member {k} must carry 4 axes");
+        let (surv, _) = optimize(&tpl.instantiate(&ind.genome));
+        let act = measured_activity(&surv, &vectors);
+        let (area_cm2, power_mw) = analyze_histogram(&surv.cell_histogram(), &lib, act);
+        assert_eq!(ind.objs[1], area_cm2, "front member {k}: area axis");
+        assert_eq!(ind.objs[2], power_mw, "front member {k}: power axis");
+        assert_eq!(
+            ind.objs[3],
+            critical_path_ms(&surv, &lib),
+            "front member {k}: delay axis must equal the survivor's critical path bit-exactly"
+        );
+        let hw = analyze(&surv, &lib, cfg.hw.clock_ms, act);
+        assert_eq!(
+            ind.objs[3], hw.delay_ms,
+            "front member {k}: delay axis must equal egfet::analyze"
+        );
+        assert!(ind.objs[3] > 0.0, "front member {k}: survivor has cells, delay > 0");
+        assert!(
+            ind.objs[3] <= cfg.hw.clock_ms,
+            "front member {k}: delay {} misses the {} ms clock budget",
+            ind.objs[3],
+            cfg.hw.clock_ms
+        );
+    }
+    // 4-D mutual non-domination of the front itself.
+    for a in &r.front {
+        for b in &r.front {
+            let dom = a.objs.iter().zip(&b.objs).all(|(x, y)| x <= y)
+                && a.objs.iter().zip(&b.objs).any(|(x, y)| x < y);
+            assert!(!dom, "4-D front contains dominated point {:?} < {:?}", b.objs, a.objs);
+        }
+    }
+    // Each 2-D slice (loss×area, loss×power, loss×delay) is mutually
+    // non-dominating and covers the whole 4-D front.
+    for axis in [1usize, 2, 3] {
+        let proj = printed_mlp::bench::front_projection(&r.front, axis);
+        assert!(!proj.is_empty());
+        let dom2 = |a: (f64, f64), b: (f64, f64)| {
+            (a.0 <= b.0 && a.1 <= b.1) && (a.0 < b.0 || a.1 < b.1)
+        };
+        for &a in &proj {
+            for &b in &proj {
+                assert!(!dom2(a, b), "axis {axis}: projection keeps dominated {b:?}");
+            }
+        }
+        for ind in &r.front {
+            let p = (ind.objs[0], ind.objs[axis]);
+            let covered = proj.contains(&p) || proj.iter().any(|&q| dom2(q, p));
+            assert!(covered, "axis {axis}: member {p:?} neither kept nor dominated");
+        }
+    }
+    // Designs carry all four axes.
+    for d in &r.designs {
+        assert_eq!(d.objs.len(), 4, "joint-delay designs carry [loss, area, power, delay]");
+    }
+}
+
+#[test]
+fn explicit_max_delay_is_respected() {
+    // A user-supplied `--max-delay` tighter than the clock budget must
+    // bound every front member's delay axis (pareto_front_by drops
+    // violators; the GA steers around them via constrained domination).
+    let cfg = tiny_cfg();
+    let clock = cfg.hw.clock_ms;
+    let opts = PipelineOpts {
+        backend: EvalBackend::Circuit,
+        objective: CostObjective::AreaPowerDelay,
+        max_delay_ms: Some(clock * 0.75),
+        max_hw_points: 2,
+        ..Default::default()
+    };
+    let r = Pipeline::new(cfg, opts).run().expect("pipeline");
+    for (k, ind) in r.front.iter().enumerate() {
+        assert!(
+            ind.objs[3] <= clock * 0.75,
+            "front member {k}: delay {} exceeds explicit cap {}",
+            ind.objs[3],
+            clock * 0.75
+        );
+    }
+}
+
+#[test]
 fn measured_objective_requires_circuit_backend() {
     for backend in [EvalBackend::Auto, EvalBackend::Native] {
-        for objective in [CostObjective::Power, CostObjective::AreaPower] {
+        for objective in [
+            CostObjective::Power,
+            CostObjective::Delay,
+            CostObjective::AreaPower,
+            CostObjective::AreaPowerDelay,
+        ] {
             let opts = PipelineOpts {
                 backend,
                 objective,
@@ -203,6 +325,22 @@ fn measured_objective_requires_circuit_backend() {
                 "{backend:?} must reject measured objective {objective:?}"
             );
         }
+    }
+}
+
+#[test]
+fn max_delay_requires_delay_objective() {
+    // `--max-delay` constrains a delay axis; objectives without one
+    // must refuse it up front rather than silently ignore the cap.
+    for objective in [CostObjective::Fa, CostObjective::Area, CostObjective::AreaPower] {
+        let opts = PipelineOpts {
+            backend: EvalBackend::Circuit,
+            objective,
+            max_delay_ms: Some(100.0),
+            ..Default::default()
+        };
+        let err = Pipeline::new(tiny_cfg(), opts).run();
+        assert!(err.is_err(), "{objective:?} must reject --max-delay");
     }
 }
 

@@ -22,9 +22,13 @@ fn gate() -> MutexGuard<'static, ()> {
 #[test]
 fn metrics_json_schema_round_trips() {
     let _g = gate();
-    // Populate every section so the round-trip exercises real content.
+    // Populate every section so the round-trip exercises real content
+    // (including the timing-closure signals: the arrival-table work
+    // stat and the constrained-domination violation counter).
     telemetry::count(Counter::GaGenomesIn, 42);
+    telemetry::count(Counter::GaConstraintViolations, 3);
     telemetry::work(Work::SynthRewrites, 7);
+    telemetry::work(Work::SynthArrivalRecomputes, 11);
     telemetry::cone_size(5);
     {
         let _outer = telemetry::span("it_roundtrip");
@@ -65,6 +69,10 @@ fn metrics_json_schema_round_trips() {
     // (other tests can only add, never subtract).
     let ga_in = counters.get("ga.genomes_in").and_then(Json::as_f64).unwrap();
     assert!(ga_in >= 42.0);
+    let viol = counters.get("ga.constraint_violations").and_then(Json::as_f64).unwrap();
+    assert!(viol >= 3.0);
+    let arr = work.get("synth.arrival_recomputes").and_then(Json::as_f64).unwrap();
+    assert!(arr >= 11.0);
 }
 
 #[test]
