@@ -29,6 +29,11 @@
 //! collection disabled vs enabled (`util::telemetry`) — the row pair
 //! that pins instrumentation overhead on the hottest path at < 5%.
 //!
+//! The verify section runs the same chain with `--verify off` vs
+//! `--verify boundaries` (`synth::verify` checkpoints at worker
+//! teardown) — the row pair that pins invariant-checking overhead on
+//! the hottest path at < 5%, with `off` zero-cost by construction.
+//!
 //! Every measured rate is also written as a structured record to
 //! `BENCH_evaluators.json` (path override: `PMLP_BENCH_JSON`), which CI
 //! uploads as an artifact — the perf trajectory's data points.
@@ -64,6 +69,13 @@ fn main() {
         }
         for name in &names {
             out.push_str(&printed_mlp::bench::telemetry_overhead_recorded(
+                name,
+                n,
+                &mut records,
+            ));
+        }
+        for name in &names {
+            out.push_str(&printed_mlp::bench::verify_overhead_recorded(
                 name,
                 n,
                 &mut records,

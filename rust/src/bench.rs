@@ -26,6 +26,9 @@ use crate::train;
 use crate::util::json::Json;
 use crate::util::stats::{mean, spearman};
 use crate::util::{threads, Rng};
+// detlint: allow-file(std-hash) — study memo keyed by config label, point
+// lookups only. allow-file(wallclock) — this module IS the timing harness;
+// wall-clock readings land in reports, never in scored results.
 use std::collections::HashMap;
 
 /// Experiment scale: how close to the paper's settings a run is.
@@ -1047,6 +1050,84 @@ pub fn telemetry_overhead_recorded(
             vec![
                 "telemetry=on".to_string(),
                 format!("{on_rate:.1}"),
+                format!("objectives equal: {agree}; overhead {overhead_pct:.1}% (target < 5%)"),
+            ],
+        ],
+    )
+}
+
+/// Verify overhead row pair: the same `circuit/incr` mutation-chain
+/// workload once with `--verify off` (the default) and once with
+/// `--verify boundaries` — pinning the cost of the invariant
+/// checkpoints (one full arena verification per worker teardown) on the
+/// hottest path (acceptance target: < 5%; `off` is zero-cost by
+/// construction — the mode is checked before any check object is even
+/// built). Fresh evaluator per arm and identical objectives asserted:
+/// verification is read-only, so any divergence is itself a bug.
+pub fn verify_overhead(name: &str, n_genomes: usize) -> String {
+    verify_overhead_recorded(name, n_genomes, &mut Vec::new())
+}
+
+/// [`verify_overhead`] that also appends one [`BenchRecord`] per arm.
+pub fn verify_overhead_recorded(
+    name: &str,
+    n_genomes: usize,
+    records: &mut Vec<BenchRecord>,
+) -> String {
+    use crate::ga::evaluate_parallel;
+    use crate::synth::verify::VerifyMode;
+    let cfg = builtin::by_name(name).expect("dataset");
+    let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+    let tm = train::train_native(&cfg, &split, &qtrain, &qtest);
+    let qmlp: &QuantMlp = &tm.qmlp;
+    let base = tm.acc_q_train;
+    let map = GenomeMap::new(qmlp);
+    let mut rng = Rng::new(7);
+    // The telemetry-overhead chain shape: smallest per-genome work,
+    // largest relative checkpoint cost.
+    let chain: Vec<crate::util::BitVec> = {
+        let mut g = map.random_genome(&mut rng, 0.8);
+        let mut v = Vec::with_capacity(n_genomes);
+        v.push(g.clone());
+        while v.len() < n_genomes {
+            for _ in 0..4 {
+                g.flip(rng.below(map.len()));
+            }
+            v.push(g.clone());
+        }
+        v
+    };
+    let arm = |mode: VerifyMode| -> (f64, Vec<[f64; 2]>) {
+        let ev = crate::runtime::evaluator::CircuitEvaluator::new(qmlp, &qtrain, base)
+            .with_verify(mode);
+        let t0 = std::time::Instant::now();
+        let objs = evaluate_parallel(&ev, &chain, 1);
+        (n_genomes as f64 / t0.elapsed().as_secs_f64(), objs)
+    };
+    let (off_rate, objs_off) = arm(VerifyMode::Off);
+    let (bound_rate, objs_bound) = arm(VerifyMode::Boundaries);
+    let agree = objs_off == objs_bound;
+    let overhead_pct = (off_rate / bound_rate - 1.0) * 100.0;
+    let cases = [
+        ("circuit/incr/fa/verify=off", off_rate),
+        ("circuit/incr/fa/verify=boundaries", bound_rate),
+    ];
+    for (case, rate) in cases {
+        records.push(BenchRecord {
+            bench: "verify",
+            dataset: name.to_string(),
+            case: case.to_string(),
+            genomes_per_sec: rate,
+        });
+    }
+    render_table(
+        &format!("Verify overhead [{name}] ({n_genomes} chromosomes, circuit/incr, jobs=1)"),
+        &["case", "chromosomes/s", "notes"],
+        &[
+            vec!["verify=off".to_string(), format!("{off_rate:.1}"), String::new()],
+            vec![
+                "verify=boundaries".to_string(),
+                format!("{bound_rate:.1}"),
                 format!("objectives equal: {agree}; overhead {overhead_pct:.1}% (target < 5%)"),
             ],
         ],

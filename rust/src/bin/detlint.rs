@@ -1,0 +1,243 @@
+//! `detlint` — source-level determinism lint for `rust/src/**`.
+//!
+//! The crate's determinism contract (jobs-1 == jobs-N, bit-identical
+//! reruns) holds by construction: hashed collections in result-affecting
+//! paths use `util::fxhash` (fixed keys, fixed iteration order) and
+//! wall-clock reads live behind the `util::telemetry` facade. This
+//! binary keeps those conventions from eroding. It scans the library
+//! source for three patterns:
+//!
+//! * `std-hash` — `std::collections` hash maps/sets with the default
+//!   `RandomState` hasher: per-process iteration order, so a
+//!   result-affecting iteration would break bit-determinism;
+//! * `wallclock` — monotonic-clock or system-clock reads outside the
+//!   telemetry facade: timing must never steer scoring;
+//! * `thread-id` — thread-identity reads in library code:
+//!   schedule-dependent values must not reach results.
+//!
+//! Findings are suppressed only by an explicit inline allowlist, so
+//! every sanctioned use carries its justification in the source:
+//!
+//! * `// detlint: allow(<rule>) — <why>` on the offending line, or on a
+//!   comment line directly above it, suppresses that one site;
+//! * `// detlint: allow-file(<rule>) — <why>` anywhere in a file
+//!   suppresses the rule for the whole file (for modules whose job is
+//!   the pattern, e.g. the bench harness and wall-clock timing).
+//!
+//! Two files are exempt structurally rather than by comment:
+//! `util/fxhash.rs` (the sanctioned bridge that defines the
+//! deterministic aliases) for `std-hash`, and `util/telemetry.rs` (the
+//! one timing facade) for `wallclock`.
+//!
+//! Usage: `detlint [root]`, default root `rust/src`. Output is
+//! deterministic (sorted directory walk, in-file line order). Exits 1
+//! if any finding survives the allowlist, 0 when the tree is clean.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Scanner configuration. The needle strings are assembled at runtime
+/// so this file's own literals never match the patterns it hunts.
+struct Rules {
+    /// `std-hash` needles (map and set type names).
+    std_hash: [String; 2],
+    /// `wallclock` needles (monotonic + system clock).
+    wallclock: [String; 2],
+    /// `thread-id` needle.
+    thread_id: String,
+    /// Allowlist marker prefix (`detlint: allow`).
+    marker: String,
+}
+
+impl Rules {
+    fn new() -> Rules {
+        Rules {
+            std_hash: [["Hash", "Map"].concat(), ["Hash", "Set"].concat()],
+            wallclock: [["Instant", "::", "now"].concat(), ["System", "Time"].concat()],
+            thread_id: ["thread::", "current()", ".id()"].concat(),
+            marker: ["detlint", ": ", "allow"].concat(),
+        }
+    }
+}
+
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| "rust/src".to_string());
+    let rules = Rules::new();
+    let mut files = Vec::new();
+    collect_rs_files(Path::new(&root), &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("detlint: no .rs files under '{root}'");
+        return ExitCode::from(1);
+    }
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("detlint: cannot read {}: {e}", path.display());
+                return ExitCode::from(1);
+            }
+        };
+        scan_file(path, &text, &rules, &mut findings);
+    }
+    if findings.is_empty() {
+        println!("detlint: clean ({} files scanned)", files.len());
+        return ExitCode::SUCCESS;
+    }
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    println!("detlint: {} finding(s) in {} files scanned", findings.len(), files.len());
+    ExitCode::from(1)
+}
+
+/// Sorted recursive walk — the lint's own output must be deterministic.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.filter_map(Result::ok).map(|e| e.path()).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// The code portion of a line: everything before a `//` comment. Good
+/// enough for a lint — a `//` inside a string literal truncates early,
+/// which can only hide a match inside that literal, never invent one.
+fn code_of(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Parse every `allow(<rule>)` / `allow-file(<rule>)` marker on a line.
+fn parse_allows(line: &str, marker: &str) -> (Vec<String>, Vec<String>) {
+    let (mut line_allows, mut file_allows) = (Vec::new(), Vec::new());
+    let mut rest = line;
+    while let Some(i) = rest.find(marker) {
+        rest = &rest[i + marker.len()..];
+        let (file_scope, body) = match rest.strip_prefix("-file(") {
+            Some(b) => (true, b),
+            None => match rest.strip_prefix('(') {
+                Some(b) => (false, b),
+                None => continue,
+            },
+        };
+        if let Some(end) = body.find(')') {
+            let rule = body[..end].to_string();
+            if file_scope {
+                file_allows.push(rule);
+            } else {
+                line_allows.push(rule);
+            }
+        }
+    }
+    (line_allows, file_allows)
+}
+
+fn scan_file(path: &Path, text: &str, rules: &Rules, out: &mut Vec<Finding>) {
+    let file = path.to_string_lossy().replace('\\', "/");
+    // Structural exemptions: the two facade files whose whole purpose is
+    // the pattern in question.
+    let exempt_std_hash = file.ends_with("util/fxhash.rs");
+    let exempt_wallclock = file.ends_with("util/telemetry.rs");
+
+    // Pass 1: file-scoped allows can sit anywhere.
+    let mut file_allows: Vec<String> = Vec::new();
+    for line in text.lines() {
+        file_allows.extend(parse_allows(line, &rules.marker).1);
+    }
+    let file_allowed = |rule: &str| file_allows.iter().any(|r| r == rule);
+
+    // Pass 2: scan code lines; `pending` carries line-allows declared on
+    // comment-only lines down to the next code line.
+    let mut pending: Vec<String> = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let (line_allows, _) = parse_allows(line, &rules.marker);
+        let code = code_of(line);
+        if code.trim().is_empty() {
+            // Comment-only (or blank) line: stage its allows for the
+            // code line below.
+            pending.extend(line_allows);
+            continue;
+        }
+        let allowed = |rule: &str| {
+            file_allowed(rule)
+                || line_allows.iter().any(|r| r == rule)
+                || pending.iter().any(|r| r == rule)
+        };
+
+        if !exempt_std_hash && !allowed("std-hash") {
+            for needle in &rules.std_hash {
+                if has_unprefixed(code, needle) {
+                    out.push(Finding {
+                        file: file.clone(),
+                        line: idx + 1,
+                        rule: "std-hash",
+                        msg: format!(
+                            "std {needle} uses the default RandomState hasher \
+                             (per-process iteration order) — use util::Fx{needle} \
+                             or add a detlint allow comment"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+        if !exempt_wallclock && !allowed("wallclock") {
+            for needle in &rules.wallclock {
+                if code.contains(needle.as_str()) {
+                    out.push(Finding {
+                        file: file.clone(),
+                        line: idx + 1,
+                        rule: "wallclock",
+                        msg: format!(
+                            "{needle} outside util::telemetry — wall-clock reads \
+                             must stay behind the timing facade"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+        if !allowed("thread-id") && code.contains(rules.thread_id.as_str()) {
+            out.push(Finding {
+                file: file.clone(),
+                line: idx + 1,
+                rule: "thread-id",
+                msg: "thread-identity read in library code — schedule-dependent \
+                      values must not reach results"
+                    .to_string(),
+            });
+        }
+        pending.clear();
+    }
+}
+
+/// Does `code` contain `needle` not immediately preceded by `Fx` (the
+/// deterministic-alias prefix)?
+fn has_unprefixed(code: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(needle) {
+        let at = start + pos;
+        if !code[..at].ends_with("Fx") {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}

@@ -30,6 +30,7 @@ use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
 use crate::runtime::evaluator::{CircuitEvaluator, NativeEvaluator};
 use crate::runtime::{PjrtEvaluator, Runtime};
 use crate::sim::wave;
+use crate::synth::verify::VerifyMode;
 use crate::synth::{optimize, SynthMode};
 use crate::train::{self, TrainedModel};
 use crate::util::telemetry::{self, Counter, Gauge};
@@ -99,6 +100,14 @@ pub struct PipelineOpts {
     /// identical dirty cones across a generation's chromosomes are
     /// settled once per worker. Exact — affects work, never results.
     pub share_cones: bool,
+    /// Invariant verification of the circuit backend (`--verify
+    /// off|boundaries|every-gen`, default off): run the structural
+    /// checks of [`crate::synth::verify`] never, at generation
+    /// boundaries (each worker's arena as it parks), or after every
+    /// chromosome re-synthesis. Violations are counted in
+    /// `verify.violations` and logged — never panicked on. Exact: any
+    /// mode leaves objectives bit-identical.
+    pub verify: VerifyMode,
     /// Synthesize + analyze at most this many Pareto designs (the
     /// hardware step dominates runtime for large MLPs).
     pub max_hw_points: usize,
@@ -119,6 +128,7 @@ impl Default for PipelineOpts {
             jobs: 0,
             lane_width: wave::LaneWidth::default(),
             share_cones: true,
+            verify: VerifyMode::Off,
             max_hw_points: 4,
             synth_baseline: true,
             approx_argmax: true,
@@ -412,7 +422,8 @@ impl Pipeline {
                     let ev = CircuitEvaluator::new_joint_delay(qmlp, &qtrain, base_acc_train)
                         .with_mode(self.opts.synth)
                         .with_lane_width(self.opts.lane_width)
-                        .with_cone_sharing(self.opts.share_cones);
+                        .with_cone_sharing(self.opts.share_cones)
+                        .with_verify(self.opts.verify);
                     run_circuit_ga(
                         &ev,
                         cfg.ga.clone(),
@@ -428,7 +439,8 @@ impl Pipeline {
                     let ev = CircuitEvaluator::new_joint(qmlp, &qtrain, base_acc_train)
                         .with_mode(self.opts.synth)
                         .with_lane_width(self.opts.lane_width)
-                        .with_cone_sharing(self.opts.share_cones);
+                        .with_cone_sharing(self.opts.share_cones)
+                        .with_verify(self.opts.verify);
                     run_circuit_ga(
                         &ev,
                         cfg.ga.clone(),
@@ -445,7 +457,8 @@ impl Pipeline {
                         .with_mode(self.opts.synth)
                         .with_objective(self.opts.objective)
                         .with_lane_width(self.opts.lane_width)
-                        .with_cone_sharing(self.opts.share_cones);
+                        .with_cone_sharing(self.opts.share_cones)
+                        .with_verify(self.opts.verify);
                     run_circuit_ga(
                         &ev,
                         cfg.ga.clone(),

@@ -35,6 +35,8 @@
 use crate::config::GaSpec;
 use crate::util::telemetry::{self, Counter, Gauge};
 use crate::util::{threads, BitVec, Rng};
+// detlint: allow-file(std-hash) — batch-dedup map below is lookup-only
+// (first-occurrence order comes from the `uniq` Vec, never iteration).
 use std::collections::HashMap;
 
 /// One evaluation worker's scratch state.
@@ -488,6 +490,8 @@ impl<'a, const M: usize> Nsga2<'a, M> {
                 }
             }
             let n_off = offspring_genomes.len();
+            // detlint: allow(wallclock) — debug-level throughput log only,
+            // never feeds scores or selection.
             let t0 = std::time::Instant::now();
             let off_objs = evaluate_parallel(self.evaluator, &offspring_genomes, jobs);
             self.count_violations(&off_objs);

@@ -27,6 +27,14 @@
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index.
 
+// Compiler-enforced no-unsafe discipline (DESIGN.md §7): exactly two
+// sanctioned sites carry a scoped `#[allow(unsafe_code)]` with a SAFETY
+// argument — the disjoint-slot output pointer in `util::threads` and the
+// PJRT executable's Send/Sync impls in `runtime::pjrt`. Everything else,
+// including `vendor/anyhow` (`#![forbid(unsafe_code)]`), is unsafe-free;
+// a new `unsafe` block anywhere else fails the build.
+#![deny(unsafe_code)]
+
 pub mod util;
 pub mod config;
 pub mod fixedpoint;

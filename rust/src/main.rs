@@ -10,6 +10,10 @@
 //!   repro    --exp <id>          regenerate a paper table/figure
 //!                                (table2|table3|table4|table5|fig4|fig5|all)
 //!   ablation --dataset <name>    PJRT-vs-native evaluator throughput
+//!   lint     --dataset <name>    standalone invariant verification: run
+//!                                every `synth::verify` check over the
+//!                                dataset's template and a deterministic
+//!                                chain of incremental re-synthesis states
 //!
 //! Shared flags: --scale smoke|small|paper,
 //! --backend auto|pjrt|native|circuit (`circuit` scores GA fitness on the
@@ -23,6 +27,10 @@
 //! 256-lane blocks by default, 64 is the legacy width; bit-identical),
 //! --share-cones on|off (circuit backend: generation-scoped shared-cone
 //! evaluation in the incremental engine, default on; bit-identical),
+//! --verify off|boundaries|every-gen (circuit backend: structural
+//! invariant checks — off by default, at generation boundaries, or after
+//! every chromosome re-synthesis; violations are counted and logged,
+//! never panicked on),
 //! --objective fa|area|power|delay|area+power|area+power+delay (GA cost
 //! axes; measured ones need the circuit backend),
 //! --max-delay <ms> (hard timing cap on the delay axis; defaults to the
@@ -30,16 +38,21 @@
 //! --out <file> (JSON for `run`, text otherwise), --pop/--gens overrides.
 
 use anyhow::{anyhow, bail, Result};
+use printed_mlp::accum::GenomeMap;
 use printed_mlp::bench::{self, Scale, Study};
 use printed_mlp::config::{builtin, RunConfig};
 use printed_mlp::coordinator::{EvalBackend, Pipeline, PipelineOpts};
 use printed_mlp::datasets;
 use printed_mlp::egfet::CostObjective;
+use printed_mlp::netlist::mlp::{build_mlp_template, ArgmaxMode};
 use printed_mlp::report;
 use printed_mlp::sim::wave;
+use printed_mlp::synth::incremental::IncrementalSynth;
+use printed_mlp::synth::verify::{self, VerifyMode};
 use printed_mlp::synth::SynthMode;
 use printed_mlp::util::telemetry;
-use std::collections::HashMap;
+use printed_mlp::util::Rng;
+use std::collections::HashMap; // detlint: allow-file(std-hash) — CLI flag map, point lookups only
 
 /// The `--profile` stderr report: counters, work stats, the dirty-cone
 /// histogram, and span wall-time roll-ups, as aligned tables.
@@ -182,6 +195,12 @@ impl Args {
         }
     }
 
+    fn verify(&self) -> Result<VerifyMode> {
+        let s = self.get("verify").unwrap_or("off");
+        VerifyMode::parse(s)
+            .ok_or_else(|| anyhow!("bad --verify '{s}' (off|boundaries|every-gen)"))
+    }
+
     fn share_cones(&self) -> Result<bool> {
         match self.get("share-cones").unwrap_or("on") {
             "on" | "true" => Ok(true),
@@ -255,6 +274,7 @@ fn run() -> Result<()> {
                 jobs: args.jobs()?,
                 lane_width: args.lane_width()?,
                 share_cones: args.share_cones()?,
+                verify: args.verify()?,
                 max_hw_points: args
                     .get("hw-points")
                     .map(|v| v.parse())
@@ -402,6 +422,59 @@ fn run() -> Result<()> {
             let n = args.get("n").map(|v| v.parse()).transpose()?.unwrap_or(64);
             args.emit(&bench::ablation_evaluators(name, n))
         }
+        "lint" => {
+            // Standalone invariant verification: every `synth::verify`
+            // check over the dataset's MLP template and a deterministic
+            // GA-like chain of incremental re-synthesis states (exact
+            // genome, one random genome, then `--rounds` triple-bit-flip
+            // mutations). Exit status is the result: 0 clean, 1 if any
+            // structural invariant is violated.
+            let cfg = args.cfg()?;
+            let name = cfg.dataset.name.clone();
+            let rounds =
+                args.get("rounds").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(12);
+            let (split, qtrain, qtest) = datasets::load(&cfg.dataset);
+            let tm = printed_mlp::train::train_native(&cfg, &split, &qtrain, &qtest);
+            let qmlp = &tm.qmlp;
+            let map = GenomeMap::new(qmlp);
+            let tpl = build_mlp_template(qmlp, &ArgmaxMode::Exact);
+            let mut violations = verify::verify_template(&tpl, Some(map.len()));
+            let mut states = 1usize;
+            let mut synth = IncrementalSynth::new(tpl);
+            synth.set_share_cones(true);
+            let mut rng = Rng::new(7);
+            let mut g = map.exact_genome();
+            synth.set_params(&g);
+            violations.extend(verify::verify_arena(&synth, Some(map.len())));
+            states += 1;
+            g = map.random_genome(&mut rng, 0.75);
+            synth.set_params(&g);
+            violations.extend(verify::verify_arena(&synth, Some(map.len())));
+            states += 1;
+            for _ in 0..rounds {
+                for _ in 0..3 {
+                    g.flip(rng.below(map.len()));
+                }
+                synth.set_params(&g);
+                violations.extend(verify::verify_arena(&synth, Some(map.len())));
+                states += 1;
+            }
+            if violations.is_empty() {
+                args.emit(&format!(
+                    "lint [{name}]: clean — all invariant checks passed over \
+                     {states} template/arena states ({} genome bits)",
+                    map.len()
+                ))
+            } else {
+                for v in &violations {
+                    eprintln!("{v}");
+                }
+                bail!(
+                    "lint [{name}]: {} violation(s) across {states} states",
+                    violations.len()
+                );
+            }
+        }
         "help" | "--help" | "-h" => {
             println!(
                 "pmlp — printed-MLP holistic approximation framework (ICCAD'23 reproduction)\n\n\
@@ -427,6 +500,12 @@ fn run() -> Result<()> {
                  --share-cones on|off [default on] shares structurally identical\n                            \
                  dirty-cone results across a generation's chromosomes in the\n                            \
                  incremental engine — work-saving only, bit-identical results;\n                            \
+                 --verify off|boundaries|every-gen [default off] runs the\n                            \
+                 structural invariant checks of synth::verify on the circuit\n                            \
+                 backend: never, on each worker's arena at generation\n                            \
+                 boundaries, or after every chromosome re-synthesis —\n                            \
+                 violations are counted in the 'verify.violations' work stat\n                            \
+                 and logged, never panicked on; results stay bit-identical;\n                            \
                  --objective fa|area|power|delay|area+power|area+power+delay\n                            \
                  selects the GA's cost axes: the full-adder surrogate\n                            \
                  [default, backend-portable] or — circuit backend only —\n                            \
@@ -447,7 +526,12 @@ fn run() -> Result<()> {
                  train --dataset <name>    training + QAT only\n  \
                  gen-data --dataset <name> dump synthetic dataset CSV [--out f.csv]\n  \
                  repro --exp <id>          regenerate table2|table3|table4|table5|fig4|fig5|all [--scale smoke|small|paper]\n  \
-                 ablation --dataset <name> evaluator throughput (native vs PJRT vs circuit) [--n N]"
+                 ablation --dataset <name> evaluator throughput (native vs PJRT vs circuit) [--n N]\n  \
+                 lint --dataset <name>     standalone invariant verification [--rounds N, default 12]:\n                            \
+                 every synth::verify check over the dataset's template and a\n                            \
+                 deterministic chain of incremental re-synthesis states;\n                            \
+                 exits 1 and prints each violation if any check fires\n                            \
+                 (source-level determinism lint is the separate `detlint` binary)"
             );
             Ok(())
         }

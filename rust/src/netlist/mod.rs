@@ -370,6 +370,17 @@ impl Template {
         self.cone_groups.push(ConeGroup { node_lo, node_hi, param_lo, param_hi, frontier });
     }
 
+    /// Overwrite one CSR fanout destination slot with `dst`, returning
+    /// the previous destination. `#[doc(hidden)]` corruption-injection
+    /// hook for the invariant verifier's test suite
+    /// (`rust/tests/verify_lint.rs`) — the only way to seed a dangling
+    /// CSR edge, since the adjacency arrays are private. Not part of
+    /// the API.
+    #[doc(hidden)]
+    pub fn corrupt_fanout_slot(&mut self, slot: usize, dst: NodeId) -> NodeId {
+        std::mem::replace(&mut self.fan_dst[slot], dst)
+    }
+
     /// Consumers of node `id` (each consumer id is > `id` by the
     /// topological invariant).
     pub fn consumers(&self, id: NodeId) -> &[NodeId] {

@@ -65,6 +65,7 @@ use crate::netlist::{CellCounts, Netlist, NodeId, Template};
 use crate::runtime::{lit_i32, lit_i32_scalar, Executable, Literal, Runtime};
 use crate::sim::wave::{self, BlockCache, BlockWave, LaneWidth, BLOCK_WORDS};
 use crate::synth::incremental::IncrementalSynth;
+use crate::synth::verify::{self, VerifyMode, Violation};
 use crate::synth::{optimize, SynthMode};
 use crate::util::telemetry::{self, Counter, Work};
 use crate::util::{BitVec, ShardedMap};
@@ -431,6 +432,11 @@ pub struct CircuitEvaluator<const M: usize = 2> {
     /// work-saving only).
     share_cones: bool,
     labels: Vec<usize>,
+    /// When the invariant verifier (`synth::verify`) checkpoints the
+    /// template and the workers' live arenas (`--verify`; default
+    /// [`VerifyMode::Off`] — zero cost on the hot path). Violations are
+    /// counted (`verify.violations`) and logged, never panicked on.
+    verify: VerifyMode,
     /// Cross-generation fitness memo (full-genome keys).
     memo: ShardedMap<BitVec, [f64; M]>,
     /// The shared parameterized netlist, built on first incremental use.
@@ -519,6 +525,15 @@ struct IncrState {
 /// genome, and the shared memo survives it.
 const ARENA_GROWTH_LIMIT: usize = 8;
 
+/// Surface verifier findings without aborting the run: the checkpoints
+/// are diagnostics, and the telemetry (`verify.violations`, bumped by
+/// the verifier itself) is what CI gates on. A healthy run logs nothing.
+fn report_violations(violations: &[Violation]) {
+    for v in violations {
+        telemetry::info("verify", &v.to_string());
+    }
+}
+
 impl CircuitEvaluator<2> {
     /// The classic two-objective evaluator (loss + one cost axis).
     /// Defaults to [`SynthMode::Incremental`] and [`CostObjective::Fa`];
@@ -591,6 +606,7 @@ impl<const M: usize> CircuitEvaluator<M> {
             lane_width,
             share_cones: true,
             labels: train.y.clone(),
+            verify: VerifyMode::Off,
             memo: ShardedMap::new(),
             template: OnceLock::new(),
             incr_pool: Mutex::new(Vec::new()),
@@ -644,8 +660,22 @@ impl<const M: usize> CircuitEvaluator<M> {
         self
     }
 
+    /// Select when the invariant verifier checkpoints (`--verify
+    /// off|boundaries|every-gen`; default off). Checks are read-only
+    /// analyses over the template and the workers' live arenas
+    /// (`synth::verify`), so they change work stats and diagnostics but
+    /// never objectives.
+    pub fn with_verify(mut self, mode: VerifyMode) -> CircuitEvaluator<M> {
+        self.verify = mode;
+        self
+    }
+
     pub fn mode(&self) -> SynthMode {
         self.mode
+    }
+
+    pub fn verify(&self) -> VerifyMode {
+        self.verify
     }
 
     pub fn objective(&self) -> CostObjective {
@@ -665,7 +695,9 @@ impl<const M: usize> CircuitEvaluator<M> {
         self.memo.len()
     }
 
-    /// The shared template (built once; read-only afterwards).
+    /// The shared template (built once; read-only afterwards). With
+    /// verification on, the freshly built template is vetted once here —
+    /// every later checkpoint re-verifies it alongside a live arena.
     fn template(&self) -> &Template {
         self.template.get_or_init(|| {
             let tpl = build_mlp_template(&self.mlp, &ArgmaxMode::Exact);
@@ -674,6 +706,9 @@ impl<const M: usize> CircuitEvaluator<M> {
                 self.map.len(),
                 "template param sites drifted from the genome map"
             );
+            if self.verify != VerifyMode::Off {
+                report_violations(&verify::verify_template(&tpl, Some(self.map.len())));
+            }
             tpl
         })
     }
@@ -854,6 +889,13 @@ impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
             SynthMode::Incremental => {
                 let IncrState { synth, wave } = self.state();
                 synth.set_params(genome);
+                // Exhaustive verification: re-derive every arena
+                // invariant after each instantiation. Read-only, so
+                // objectives are untouched; violations are logged and
+                // land in `verify.violations`.
+                if ev.verify == VerifyMode::EveryGen {
+                    report_violations(&verify::verify_arena(synth, Some(ev.map.len())));
+                }
                 let arena = synth.arena();
                 let bus = &arena
                     .outputs
@@ -917,6 +959,13 @@ impl<const M: usize> Drop for CircuitWorker<'_, M> {
         // from-scratch pass.
         if std::thread::panicking() {
             return;
+        }
+        // Generation-boundary invariant checkpoint (`--verify
+        // boundaries`, also taken under `every-gen`): the worker's arena
+        // in its settled end-of-generation state, before the memo flush
+        // below touches it.
+        if self.ev.verify != VerifyMode::Off {
+            report_violations(&verify::verify_arena(&st.synth, Some(self.ev.map.len())));
         }
         // Worker drop is the generation boundary (`evaluate_parallel`
         // creates and drops workers per call), so flush the shared-cone

@@ -16,6 +16,8 @@ pub mod evaluator;
 
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
+// detlint: allow-file(std-hash) — artifact manifest/executable cache,
+// accessed by dataset-name lookup only; iteration order never matters.
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -101,7 +103,11 @@ mod pjrt {
     // serializes internally where required); this wrapper adds no interior
     // mutability. Needed so the GA evaluators can be shared across
     // evaluation workers (`ga::Evaluator: Sync`).
+    // (One of the crate's two sanctioned `unsafe` sites; the crate root
+    // is `#![deny(unsafe_code)]`.)
+    #[allow(unsafe_code)]
     unsafe impl Send for Executable {}
+    #[allow(unsafe_code)]
     unsafe impl Sync for Executable {}
 
     impl Executable {

@@ -18,6 +18,8 @@
 pub mod wave;
 
 use crate::netlist::{Gate, Netlist, NodeId};
+// detlint: allow-file(std-hash) — reference interpreter returns buses
+// keyed by output name; consumers index by name, never iterate.
 use std::collections::HashMap;
 
 /// Evaluate a netlist on one input vector; returns named output buses as

@@ -219,6 +219,88 @@ impl IncrementalSynth {
         &self.rw.out
     }
 
+    // --- verifier access (`synth::verify`) -------------------------------
+    // Read-only views of the internal state the invariant checks
+    // re-derive independently. Crate-internal: the verifier is the only
+    // consumer, and exposing these publicly would freeze representation
+    // details (stamp arrays, the raw rewriter) into the API.
+
+    pub(crate) fn rewriter(&self) -> &Rewriter {
+        &self.rw
+    }
+
+    pub(crate) fn repr_table(&self) -> &[Repr] {
+        &self.repr
+    }
+
+    pub(crate) fn arrival_table(&self) -> &[f64] {
+        &self.arrival
+    }
+
+    pub(crate) fn binding(&self) -> &BitVec {
+        &self.cur
+    }
+
+    pub(crate) fn timing_lib(&self) -> &Library {
+        &self.lib
+    }
+
+    pub(crate) fn census_view(&self) -> (&CellCounts, &[NodeId]) {
+        (&self.hist, &self.live_cells)
+    }
+
+    /// Whether `set_params` has run at least once (arena checks are
+    /// vacuous before that).
+    pub(crate) fn is_ready(&self) -> bool {
+        self.ready
+    }
+
+    // --- corruption-injection hooks (tests only) -------------------------
+    // `#[doc(hidden)]` escape hatches for the verifier's
+    // corruption-injection suite (`rust/tests/verify_lint.rs`): each one
+    // breaks exactly one invariant so the suite can assert that exactly
+    // the intended check fires. Not part of the API.
+
+    /// Append a copy of hashable arena node `id` without registering it
+    /// in the dedup table — two live nodes then share one structural
+    /// key. The copy's arrival is computed correctly and it stays
+    /// unreachable from the outputs, so only the struct-hash check
+    /// trips. Returns the duplicate's id.
+    #[doc(hidden)]
+    pub fn corrupt_duplicate_node(&mut self, id: NodeId) -> NodeId {
+        let g = self.rw.out.gates[id as usize];
+        assert!(
+            g.is_cell() || matches!(g, Gate::Param(_)),
+            "corrupt_duplicate_node needs a hashable node, got {g:?}"
+        );
+        self.rw.out.gates.push(g);
+        let t = match self.lib.cell(&g) {
+            None => 0.0,
+            Some(cell) => {
+                g.operands().map(|o| self.arrival[o as usize]).fold(0.0f64, f64::max)
+                    + cell.delay_ms
+            }
+        };
+        self.arrival.push(t);
+        (self.rw.out.gates.len() - 1) as NodeId
+    }
+
+    /// Overwrite arena node `id`'s settled arrival with `t_ms`,
+    /// returning the true value — a stale-arrival seed for the arrival
+    /// consistency check.
+    #[doc(hidden)]
+    pub fn corrupt_arrival(&mut self, id: NodeId, t_ms: f64) -> f64 {
+        std::mem::replace(&mut self.arrival[id as usize], t_ms)
+    }
+
+    /// Drop the last entry of the census live-cell list (histogram left
+    /// untouched) — a census-drift seed for the cross-check. Returns the
+    /// dropped arena node id.
+    #[doc(hidden)]
+    pub fn corrupt_census_drop_live(&mut self) -> Option<NodeId> {
+        self.live_cells.pop()
+    }
+
     /// Bind the parameters to `params` and re-simplify. The first call
     /// is a full from-scratch pass; subsequent calls revisit only the
     /// fanout cones of the flipped literals. Returns survivor stats.
@@ -240,6 +322,20 @@ impl IncrementalSynth {
         self.refresh_outputs();
         self.sync_arrivals();
         self.census();
+        // Mutation-site micro-checks (debug builds only): the side
+        // tables must leave every set_params in lockstep with the arena
+        // and template — the cheap prefix of what `synth::verify`
+        // re-derives in full at checkpoints.
+        debug_assert_eq!(
+            self.arrival.len(),
+            self.rw.out.len(),
+            "arrival table out of lockstep with the arena"
+        );
+        debug_assert_eq!(
+            self.repr.len(),
+            self.tpl.nl.len(),
+            "repr table out of lockstep with the template"
+        );
         SynthStats { cells_in: self.tpl.nl.cell_count(), cells_out: self.live_cells.len() }
     }
 
@@ -547,6 +643,11 @@ impl IncrementalSynth {
                 }
             }
         }
+        debug_assert_eq!(
+            hist.total(),
+            live_cells.len(),
+            "census histogram out of lockstep with the live-cell list"
+        );
     }
 }
 

@@ -28,6 +28,7 @@
 //! SipHash's keyed rounds are pure overhead.
 
 pub mod incremental;
+pub mod verify;
 
 use crate::netlist::{Gate, Netlist, NodeId};
 use crate::util::FxHashMap;

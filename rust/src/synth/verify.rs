@@ -1,0 +1,928 @@
+//! Static verification of the synthesis substrate: structural analyses
+//! over [`Template`] netlists and live [`IncrementalSynth`] arenas.
+//!
+//! Every exactness argument the pipeline leans on — the append-only
+//! structural-hash arena behind shared-cone memo hits, the
+//! settled-at-emit arrival table behind the delay objective, the
+//! param-leaf ↔ genome bijection behind the GA's mask semantics, the
+//! cone-group frontier purity behind cross-chromosome sharing, the
+//! census the measured objectives consume — is argued in DESIGN.md and
+//! pinned by property tests, but nothing checks a *live* state. This
+//! module is that checker: a catalog of [`Check`]s that re-derive each
+//! invariant from first principles (independent reachability walks,
+//! recomputed tables, recomputed adjacency) and report structured
+//! [`Violation`]s instead of panicking, so a corrupted state is
+//! diagnosable rather than merely fatal.
+//!
+//! The checks run standalone (`pmlp lint`), at generation boundaries
+//! (`--verify boundaries`: once per evaluator worker drop), or after
+//! every chromosome instantiation (`--verify every-gen`). Two work
+//! stats land in the `pmlp.metrics/1` report: `verify.checks_run` and
+//! `verify.violations`. They are scheduling-dependent `Work`, not
+//! deterministic `Counter`s — boundary checkpoints fire once per
+//! worker, and the worker count follows `--jobs`.
+//!
+//! Exactness notes (why a clean state reports zero violations):
+//!
+//! * **acyclic** — `Netlist::push` only ever appends gates whose
+//!   operands already exist, so `operand < id` holds for every node;
+//!   the arena inherits the invariant because `Rewriter::emit` resolves
+//!   operands before pushing.
+//! * **csr-fanout** — `Template::new` builds the CSR by
+//!   count/prefix-sum/fill over the same gate list the check rescans,
+//!   and consumers are filled in ascending consumer order, matching the
+//!   check's scan order exactly.
+//! * **struct-hash** — `emit` canonicalizes, probes, and inserts under
+//!   one key per node, so every hashable arena node (cells and `Param`
+//!   leaves; inputs and interned constants bypass the table) maps back
+//!   to itself and the table size equals the hashable node count.
+//! * **param-bijection / repr** — `Template::new` asserts dense param
+//!   indices at construction; `set_params` pins `repr[param_nodes[p]]`
+//!   to `Repr::Const(cur[p])` before any consumer is revisited.
+//! * **cone-frontier** — `register_cone_group` computes the frontier
+//!   from the same gates the check rescans, and group ranges are
+//!   asserted ascending/non-overlapping at registration.
+//! * **arrival** — arrivals are settled once at emit under the
+//!   append-only invariant; the check re-runs the identical recurrence
+//!   (same operand order, same `f64::max` fold, same library corner)
+//!   so equality is exact, not approximate.
+//! * **census** — the stored census is a stamp-based walk from the
+//!   arena outputs; the check repeats the walk with its own visited
+//!   set and compares sorted live sets, histograms, and totals.
+
+use crate::netlist::{CellCounts, Gate, Netlist, NodeId, Template};
+use crate::synth::incremental::IncrementalSynth;
+use crate::synth::{canon, Repr};
+use crate::util::telemetry::{self, Work};
+use std::fmt;
+
+/// When the pipeline runs the invariant verifier
+/// (`pmlp run --verify off|boundaries|every-gen`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VerifyMode {
+    /// Never (production default; zero cost on the hot path).
+    #[default]
+    Off,
+    /// Once per evaluator worker at the generation boundary (worker
+    /// drop), just before the shared-cone flush.
+    Boundaries,
+    /// After every chromosome instantiation (`set_params`) — the
+    /// exhaustive mode the CI smoke leg runs.
+    EveryGen,
+}
+
+impl VerifyMode {
+    pub fn parse(s: &str) -> Option<VerifyMode> {
+        match s.to_lowercase().as_str() {
+            "off" | "none" => Some(VerifyMode::Off),
+            "boundaries" | "boundary" => Some(VerifyMode::Boundaries),
+            "every-gen" | "everygen" | "every" => Some(VerifyMode::EveryGen),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            VerifyMode::Off => "off",
+            VerifyMode::Boundaries => "boundaries",
+            VerifyMode::EveryGen => "every-gen",
+        }
+    }
+}
+
+/// One invariant breach, as structured diagnostics: the stable check id
+/// it tripped, the implicated node ids (template ids for template
+/// checks, arena ids for arena checks; capped at eight), and a
+/// human-readable explanation of what was expected.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Violation {
+    pub check: &'static str,
+    pub nodes: Vec<NodeId>,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.nodes.is_empty() {
+            write!(f, "[{}] {}", self.check, self.detail)
+        } else {
+            write!(f, "[{}] nodes {:?}: {}", self.check, self.nodes, self.detail)
+        }
+    }
+}
+
+/// Cap per-violation node lists so a badly corrupted state stays
+/// readable (the detail string carries the full count).
+const MAX_NODES: usize = 8;
+
+fn cap_ids(mut ids: Vec<NodeId>) -> Vec<NodeId> {
+    ids.truncate(MAX_NODES);
+    ids
+}
+
+fn fmt_ids(ids: &[NodeId]) -> String {
+    if ids.len() <= MAX_NODES {
+        format!("{ids:?}")
+    } else {
+        format!("[{:?}, … {} total]", &ids[..MAX_NODES], ids.len())
+    }
+}
+
+/// What a check runs against: always a template, plus the live synth
+/// state when verifying an arena. `genome_len` is the evaluator's
+/// genome width when known (`GenomeMap::len`), used by the bijection
+/// check to tie the template to the GA's search space.
+pub(crate) struct VerifyCtx<'a> {
+    tpl: &'a Template,
+    genome_len: Option<usize>,
+    synth: Option<&'a IncrementalSynth>,
+}
+
+impl VerifyCtx<'_> {
+    /// The live synth state, if present *and* instantiated at least
+    /// once — arena checks are vacuous before the first `set_params`.
+    fn live(&self) -> Option<&IncrementalSynth> {
+        self.synth.filter(|s| s.is_ready())
+    }
+}
+
+/// One structural analysis. `applies` gates on the context (arena
+/// checks need a live state); `run` appends violations, never panics —
+/// the verifier must survive the states it exists to diagnose, so every
+/// index is bounds-guarded.
+pub(crate) trait Check {
+    fn id(&self) -> &'static str;
+    fn applies(&self, cx: &VerifyCtx) -> bool;
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>);
+}
+
+fn all_checks() -> Vec<Box<dyn Check>> {
+    vec![
+        Box::new(Acyclic),
+        Box::new(CsrFanout),
+        Box::new(ParamBijection),
+        Box::new(ConeFrontier),
+        Box::new(StructHash),
+        Box::new(Arrival),
+        Box::new(Census),
+    ]
+}
+
+/// Verify a standalone template (no live arena): acyclicity, CSR
+/// fanout, param bijection, cone-group frontiers. Returns every
+/// violation found; an empty vector is a clean bill.
+pub fn verify_template(tpl: &Template, genome_len: Option<usize>) -> Vec<Violation> {
+    run_all(&VerifyCtx { tpl, genome_len, synth: None })
+}
+
+/// Verify a live incremental-synthesis state: all template checks on
+/// its template plus the arena-level analyses (structural-hash
+/// soundness, arrival consistency, census cross-check). Before the
+/// first `set_params` only the template checks run.
+pub fn verify_arena(synth: &IncrementalSynth, genome_len: Option<usize>) -> Vec<Violation> {
+    run_all(&VerifyCtx { tpl: synth.template(), genome_len, synth: Some(synth) })
+}
+
+fn run_all(cx: &VerifyCtx) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut ran = 0u64;
+    for check in all_checks() {
+        if check.applies(cx) {
+            ran += 1;
+            check.run(cx, &mut out);
+        }
+    }
+    telemetry::work(Work::VerifyChecksRun, ran);
+    telemetry::work(Work::VerifyViolations, out.len() as u64);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The checks
+// ---------------------------------------------------------------------------
+
+/// Topological soundness: every operand id precedes its gate, every
+/// output bit is in bounds — the invariant single-forward-pass
+/// simulation, timing, and the worklist's min-heap ordering all assume.
+struct Acyclic;
+
+impl Acyclic {
+    fn scan(nl: &Netlist, scope: &str, out: &mut Vec<Violation>) {
+        for (i, g) in nl.gates.iter().enumerate() {
+            for op in g.operands() {
+                if op as usize >= i {
+                    out.push(Violation {
+                        check: "acyclic",
+                        nodes: vec![i as NodeId, op],
+                        detail: format!(
+                            "{scope} node {i} ({g:?}) reads operand {op} >= its own \
+                             id — topological order broken (cycle or forward edge)"
+                        ),
+                    });
+                }
+            }
+        }
+        for (name, bus) in &nl.outputs {
+            for (k, &b) in bus.iter().enumerate() {
+                if b as usize >= nl.gates.len() {
+                    out.push(Violation {
+                        check: "acyclic",
+                        nodes: vec![b],
+                        detail: format!(
+                            "{scope} output '{name}' bit {k} points at node {b}, \
+                             beyond the {}-node gate list",
+                            nl.gates.len()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+impl Check for Acyclic {
+    fn id(&self) -> &'static str {
+        "acyclic"
+    }
+    fn applies(&self, _cx: &VerifyCtx) -> bool {
+        true
+    }
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>) {
+        Acyclic::scan(&cx.tpl.nl, "template", out);
+        if let Some(synth) = cx.live() {
+            Acyclic::scan(synth.arena(), "arena", out);
+        }
+    }
+}
+
+/// CSR fanout-adjacency consistency: rebuild every node's consumer
+/// list from the gate list and require it to match `Template::consumers`
+/// exactly — every edge mirrored, no dangling destinations. Cone
+/// dirtying walks this adjacency; a bad slot silently truncates or
+/// widens dirty cones.
+struct CsrFanout;
+
+impl Check for CsrFanout {
+    fn id(&self) -> &'static str {
+        "csr-fanout"
+    }
+    fn applies(&self, _cx: &VerifyCtx) -> bool {
+        true
+    }
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>) {
+        let tpl = cx.tpl;
+        let n = tpl.nl.gates.len();
+        let mut want: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for (i, g) in tpl.nl.gates.iter().enumerate() {
+            for op in g.operands() {
+                // Out-of-bounds operands are the acyclic check's case.
+                if (op as usize) < n {
+                    want[op as usize].push(i as NodeId);
+                }
+            }
+        }
+        for (i, want_i) in want.iter().enumerate() {
+            let got = tpl.consumers(i as NodeId);
+            if got != want_i.as_slice() {
+                out.push(Violation {
+                    check: "csr-fanout",
+                    nodes: cap_ids(
+                        std::iter::once(i as NodeId)
+                            .chain(got.iter().copied())
+                            .chain(want_i.iter().copied())
+                            .collect(),
+                    ),
+                    detail: format!(
+                        "node {i}: CSR consumers {} != consumers recomputed from \
+                         the gate list {}",
+                        fmt_ids(got),
+                        fmt_ids(want_i)
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Param-leaf ↔ genome bijection: every genome bit addresses exactly
+/// one `Param` site and every `Param` gate is genome-addressable. A
+/// broken bijection makes GA flips bind the wrong literal — the
+/// chromosome no longer means what NSGA-II thinks it means.
+struct ParamBijection;
+
+impl Check for ParamBijection {
+    fn id(&self) -> &'static str {
+        "param-bijection"
+    }
+    fn applies(&self, _cx: &VerifyCtx) -> bool {
+        true
+    }
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>) {
+        let tpl = cx.tpl;
+        let nl = &tpl.nl;
+        if tpl.param_nodes.len() != tpl.n_params {
+            out.push(Violation {
+                check: "param-bijection",
+                nodes: Vec::new(),
+                detail: format!(
+                    "param_nodes has {} entries for n_params = {}",
+                    tpl.param_nodes.len(),
+                    tpl.n_params
+                ),
+            });
+        }
+        for (p, &pid) in tpl.param_nodes.iter().enumerate() {
+            match nl.gates.get(pid as usize) {
+                Some(&Gate::Param(q)) if q as usize == p => {}
+                other => out.push(Violation {
+                    check: "param-bijection",
+                    nodes: vec![pid],
+                    detail: format!(
+                        "genome bit {p} is registered at node {pid}, but that node \
+                         is {other:?}, not Param({p}) — the bit binds nothing"
+                    ),
+                }),
+            }
+        }
+        let mut total = 0usize;
+        for (i, g) in nl.gates.iter().enumerate() {
+            if let Gate::Param(q) = *g {
+                total += 1;
+                if q as usize >= tpl.n_params {
+                    out.push(Violation {
+                        check: "param-bijection",
+                        nodes: vec![i as NodeId],
+                        detail: format!(
+                            "node {i} is Param({q}) but n_params = {} — the site is \
+                             not genome-addressable",
+                            tpl.n_params
+                        ),
+                    });
+                } else if tpl.param_nodes[q as usize] != i as NodeId {
+                    out.push(Violation {
+                        check: "param-bijection",
+                        nodes: vec![i as NodeId, tpl.param_nodes[q as usize]],
+                        detail: format!(
+                            "node {i} is Param({q}) but genome bit {q} is registered \
+                             at node {} — two sites claim one bit",
+                            tpl.param_nodes[q as usize]
+                        ),
+                    });
+                }
+            }
+        }
+        if total != tpl.n_params {
+            out.push(Violation {
+                check: "param-bijection",
+                nodes: Vec::new(),
+                detail: format!(
+                    "template holds {total} Param gates for {} genome bits",
+                    tpl.n_params
+                ),
+            });
+        }
+        if let Some(len) = cx.genome_len {
+            if len != tpl.n_params {
+                out.push(Violation {
+                    check: "param-bijection",
+                    nodes: Vec::new(),
+                    detail: format!(
+                        "evaluator genome length {len} != template n_params {}",
+                        tpl.n_params
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Cone-group frontier soundness: ranges valid, ascending and
+/// non-overlapping, the declared param span exactly the `Param` sites
+/// inside the node range, and the stored frontier exactly the deduped
+/// ascending external operands. The shared-cone memo key is built from
+/// the frontier — a stale frontier would alias distinct cones onto one
+/// key and serve wrong interiors.
+struct ConeFrontier;
+
+impl Check for ConeFrontier {
+    fn id(&self) -> &'static str {
+        "cone-frontier"
+    }
+    fn applies(&self, _cx: &VerifyCtx) -> bool {
+        true
+    }
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>) {
+        let tpl = cx.tpl;
+        let n = tpl.nl.gates.len() as NodeId;
+        let (mut prev_node, mut prev_param) = (0 as NodeId, 0u32);
+        for (gi, grp) in tpl.cone_groups.iter().enumerate() {
+            if grp.node_lo > grp.node_hi
+                || grp.node_hi > n
+                || grp.param_lo > grp.param_hi
+                || grp.param_hi as usize > tpl.n_params
+            {
+                out.push(Violation {
+                    check: "cone-frontier",
+                    nodes: vec![grp.node_lo, grp.node_hi],
+                    detail: format!(
+                        "group {gi}: node range {}..{} / param range {}..{} out of \
+                         bounds ({} nodes, {} params)",
+                        grp.node_lo, grp.node_hi, grp.param_lo, grp.param_hi, n,
+                        tpl.n_params
+                    ),
+                });
+                continue;
+            }
+            if grp.node_lo < prev_node || grp.param_lo < prev_param {
+                out.push(Violation {
+                    check: "cone-frontier",
+                    nodes: vec![grp.node_lo],
+                    detail: format!(
+                        "group {gi} starts at node {} / param {} inside the previous \
+                         group's range (ends {prev_node} / {prev_param})",
+                        grp.node_lo, grp.param_lo
+                    ),
+                });
+            }
+            prev_node = grp.node_hi;
+            prev_param = grp.param_hi;
+            let mut frontier: Vec<NodeId> = Vec::new();
+            let mut params_in = 0u32;
+            for id in grp.node_lo..grp.node_hi {
+                let g = &tpl.nl.gates[id as usize];
+                if let Gate::Param(p) = *g {
+                    if (grp.param_lo..grp.param_hi).contains(&p) {
+                        params_in += 1;
+                    } else {
+                        out.push(Violation {
+                            check: "cone-frontier",
+                            nodes: vec![id],
+                            detail: format!(
+                                "group {gi}: Param({p}) at node {id} lies inside the \
+                                 node range but outside param range {}..{}",
+                                grp.param_lo, grp.param_hi
+                            ),
+                        });
+                    }
+                }
+                for op in g.operands() {
+                    if op < grp.node_lo {
+                        frontier.push(op);
+                    }
+                }
+            }
+            frontier.sort_unstable();
+            frontier.dedup();
+            if frontier != grp.frontier {
+                out.push(Violation {
+                    check: "cone-frontier",
+                    nodes: cap_ids(
+                        frontier
+                            .iter()
+                            .chain(grp.frontier.iter())
+                            .copied()
+                            .collect(),
+                    ),
+                    detail: format!(
+                        "group {gi}: stored frontier {} != recomputed external \
+                         operands {} — memo keys would alias distinct cones",
+                        fmt_ids(&grp.frontier),
+                        fmt_ids(&frontier)
+                    ),
+                });
+            }
+            if params_in != grp.param_hi - grp.param_lo {
+                out.push(Violation {
+                    check: "cone-frontier",
+                    nodes: vec![grp.node_lo, grp.node_hi],
+                    detail: format!(
+                        "group {gi}: node range contains {params_in} of the {} params \
+                         the group claims",
+                        grp.param_hi - grp.param_lo
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Structural-hash-table soundness over the live arena: every hashable
+/// node (cells and `Param` leaves) is canonical and maps back to itself
+/// through the dedup table, the table holds exactly one entry per
+/// hashable node, and the repr table resolves every template node to an
+/// in-bounds arena node (or constant) with param leaves pinned to the
+/// current binding. Two live nodes sharing a key would break emit-time
+/// dedup — the exactness base of shared-cone reuse and arena
+/// convergence on revisited bindings.
+struct StructHash;
+
+impl Check for StructHash {
+    fn id(&self) -> &'static str {
+        "struct-hash"
+    }
+    fn applies(&self, cx: &VerifyCtx) -> bool {
+        cx.live().is_some()
+    }
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>) {
+        let Some(synth) = cx.live() else { return };
+        let rw = synth.rewriter();
+        let arena = &rw.out;
+        let mut hashable = 0usize;
+        for (i, g) in arena.gates.iter().enumerate() {
+            if !(g.is_cell() || matches!(g, Gate::Param(_))) {
+                continue;
+            }
+            hashable += 1;
+            let key = canon(*g);
+            if key != *g {
+                out.push(Violation {
+                    check: "struct-hash",
+                    nodes: vec![i as NodeId],
+                    detail: format!(
+                        "arena node {i} ({g:?}) is not operand-canonical — emit \
+                         always stores canon(g), so probes can never find it"
+                    ),
+                });
+            }
+            match rw.dedup.get(&key) {
+                Some(&id) if id as usize == i => {}
+                Some(&id) => out.push(Violation {
+                    check: "struct-hash",
+                    nodes: vec![i as NodeId, id],
+                    detail: format!(
+                        "arena nodes {id} and {i} share the structural key {key:?} — \
+                         duplicate live structure defeats dedup"
+                    ),
+                }),
+                None => out.push(Violation {
+                    check: "struct-hash",
+                    nodes: vec![i as NodeId],
+                    detail: format!(
+                        "arena node {i} ({g:?}) is missing from the hash table — \
+                         a re-emit would duplicate it"
+                    ),
+                }),
+            }
+        }
+        if rw.dedup.len() != hashable {
+            out.push(Violation {
+                check: "struct-hash",
+                nodes: Vec::new(),
+                detail: format!(
+                    "hash table holds {} keys but the arena has {hashable} hashable \
+                     nodes — stale or duplicate entries",
+                    rw.dedup.len()
+                ),
+            });
+        }
+        // Repr-table soundness: chains resolve in bounds and terminate
+        // (a repr is one hop by construction; "terminates" = the hop
+        // lands on a real arena node), params pinned to the binding.
+        let tpl = cx.tpl;
+        let repr = synth.repr_table();
+        if repr.len() != tpl.nl.len() {
+            out.push(Violation {
+                check: "struct-hash",
+                nodes: Vec::new(),
+                detail: format!(
+                    "repr table covers {} of {} template nodes",
+                    repr.len(),
+                    tpl.nl.len()
+                ),
+            });
+        }
+        for (i, r) in repr.iter().enumerate() {
+            if let Repr::Node(id) = *r {
+                if id as usize >= arena.len() {
+                    out.push(Violation {
+                        check: "struct-hash",
+                        nodes: vec![i as NodeId, id],
+                        detail: format!(
+                            "template node {i} resolves to arena node {id}, beyond \
+                             the {}-node arena",
+                            arena.len()
+                        ),
+                    });
+                }
+            }
+        }
+        let cur = synth.binding();
+        for (p, &pid) in tpl.param_nodes.iter().enumerate() {
+            if (pid as usize) < repr.len() && p < cur.len() {
+                let want = Repr::Const(cur.get(p));
+                if repr[pid as usize] != want {
+                    out.push(Violation {
+                        check: "struct-hash",
+                        nodes: vec![pid],
+                        detail: format!(
+                            "Param({p}) resolves to {:?}, not its bound value {want:?}",
+                            repr[pid as usize]
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Arrival-table consistency: the table covers the whole arena, every
+/// settled arrival equals the recurrence recomputed from its operands
+/// (max over operand arrivals + cell delay — same operand order, same
+/// `f64::max` fold, same corner, so equality is exact), and arrivals
+/// are monotone along edges. This is the settled-at-emit contract the
+/// delay objective reads without recomputation.
+struct Arrival;
+
+impl Check for Arrival {
+    fn id(&self) -> &'static str {
+        "arrival"
+    }
+    fn applies(&self, cx: &VerifyCtx) -> bool {
+        cx.live().is_some()
+    }
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>) {
+        let Some(synth) = cx.live() else { return };
+        let arena = synth.arena();
+        let arr = synth.arrival_table();
+        let lib = synth.timing_lib();
+        if arr.len() != arena.len() {
+            out.push(Violation {
+                check: "arrival",
+                nodes: Vec::new(),
+                detail: format!(
+                    "arrival table covers {} of {} arena nodes",
+                    arr.len(),
+                    arena.len()
+                ),
+            });
+        }
+        let n = arr.len().min(arena.len());
+        for (i, g) in arena.gates.iter().enumerate().take(n) {
+            // Nodes with forward operands are the acyclic check's case;
+            // the recurrence below would read unsettled slots.
+            if g.operands().any(|op| op as usize >= i) {
+                continue;
+            }
+            let want = match lib.cell(g) {
+                None => 0.0,
+                Some(cell) => {
+                    g.operands().map(|op| arr[op as usize]).fold(0.0f64, f64::max)
+                        + cell.delay_ms
+                }
+            };
+            // Exact f64 comparison on purpose: both sides fold the
+            // identical max/+ DAG, so any difference is corruption.
+            if want != arr[i] {
+                out.push(Violation {
+                    check: "arrival",
+                    nodes: vec![i as NodeId],
+                    detail: format!(
+                        "arena node {i} ({g:?}) settled arrival {} != {} recomputed \
+                         from its operands — the settled-at-emit contract is broken",
+                        arr[i], want
+                    ),
+                });
+            }
+            if lib.cell(g).is_some() {
+                for op in g.operands() {
+                    if arr[i] < arr[op as usize] {
+                        out.push(Violation {
+                            check: "arrival",
+                            nodes: vec![op, i as NodeId],
+                            detail: format!(
+                                "arrival not monotone along edge {op} -> {i}: {} > {}",
+                                arr[op as usize], arr[i]
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Census cross-check: an independent reachability walk from the arena
+/// outputs must agree with the stored DCE census — same live cell set,
+/// same per-type histogram, and a histogram total equal to the live
+/// list length. The measured area/power objectives price exactly this
+/// census, so a drifted one mis-costs every chromosome.
+struct Census;
+
+impl Check for Census {
+    fn id(&self) -> &'static str {
+        "census"
+    }
+    fn applies(&self, cx: &VerifyCtx) -> bool {
+        cx.live().is_some()
+    }
+    fn run(&self, cx: &VerifyCtx, out: &mut Vec<Violation>) {
+        let Some(synth) = cx.live() else { return };
+        let arena = synth.arena();
+        let (hist, live) = synth.census_view();
+        let mut seen = vec![false; arena.len()];
+        let mut stack: Vec<NodeId> = Vec::new();
+        for (_, bus) in &arena.outputs {
+            for &b in bus {
+                if (b as usize) < seen.len() && !seen[b as usize] {
+                    seen[b as usize] = true;
+                    stack.push(b);
+                }
+            }
+        }
+        let mut walk_hist = CellCounts::default();
+        let mut walk_live: Vec<NodeId> = Vec::new();
+        while let Some(id) = stack.pop() {
+            let g = &arena.gates[id as usize];
+            if g.is_cell() {
+                walk_hist.add(g);
+                walk_live.push(id);
+            }
+            for op in g.operands() {
+                if (op as usize) < seen.len() && !seen[op as usize] {
+                    seen[op as usize] = true;
+                    stack.push(op);
+                }
+            }
+        }
+        let mut stored: Vec<NodeId> = live.to_vec();
+        stored.sort_unstable();
+        walk_live.sort_unstable();
+        if stored != walk_live {
+            let diff: Vec<NodeId> = symmetric_diff(&stored, &walk_live);
+            out.push(Violation {
+                check: "census",
+                nodes: cap_ids(diff.clone()),
+                detail: format!(
+                    "census live set ({} cells) disagrees with an independent \
+                     reachability walk ({} cells); differing nodes {}",
+                    stored.len(),
+                    walk_live.len(),
+                    fmt_ids(&diff)
+                ),
+            });
+        }
+        if *hist != walk_hist {
+            out.push(Violation {
+                check: "census",
+                nodes: Vec::new(),
+                detail: format!(
+                    "census histogram {hist:?} != independent walk {walk_hist:?}"
+                ),
+            });
+        }
+        if hist.total() != live.len() {
+            out.push(Violation {
+                check: "census",
+                nodes: Vec::new(),
+                detail: format!(
+                    "census histogram totals {} cells but the live list holds {}",
+                    hist.total(),
+                    live.len()
+                ),
+            });
+        }
+    }
+}
+
+/// Elements in exactly one of two sorted, deduped id lists.
+fn symmetric_diff(a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut out = Vec::new();
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::BitVec;
+
+    fn grouped_template() -> Template {
+        // Two "neurons" over shared inputs plus an ungrouped tail —
+        // the same shape build_mlp_template registers.
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let g0_lo = nl.len() as NodeId;
+        let p0 = nl.param(0);
+        let t0 = nl.and(a, p0);
+        let y0 = nl.xor(t0, b);
+        let g0_hi = nl.len() as NodeId;
+        let p1 = nl.param(1);
+        let y1 = nl.mux(p1, y0, a);
+        let g1_hi = nl.len() as NodeId;
+        let tail = nl.or(y0, y1);
+        nl.output("y", vec![y0, y1, tail]);
+        let mut tpl = Template::new(nl, 2);
+        tpl.register_cone_group(g0_lo, g0_hi, 0, 1);
+        tpl.register_cone_group(g0_hi, g1_hi, 1, 2);
+        tpl
+    }
+
+    #[test]
+    fn mode_parse_and_label_round_trip() {
+        for mode in [VerifyMode::Off, VerifyMode::Boundaries, VerifyMode::EveryGen] {
+            assert_eq!(VerifyMode::parse(mode.label()), Some(mode));
+        }
+        assert_eq!(VerifyMode::parse("none"), Some(VerifyMode::Off));
+        assert_eq!(VerifyMode::parse("boundary"), Some(VerifyMode::Boundaries));
+        assert_eq!(VerifyMode::parse("EVERYGEN"), Some(VerifyMode::EveryGen));
+        assert_eq!(VerifyMode::parse("bogus"), None);
+        assert_eq!(VerifyMode::default(), VerifyMode::Off);
+    }
+
+    #[test]
+    fn clean_template_has_zero_violations() {
+        let tpl = grouped_template();
+        let v = verify_template(&tpl, Some(2));
+        assert!(v.is_empty(), "clean template flagged: {v:?}");
+    }
+
+    #[test]
+    fn clean_arena_has_zero_violations_across_flips() {
+        let tpl = grouped_template();
+        let mut inc = IncrementalSynth::new(tpl);
+        inc.set_share_cones(true);
+        let mut params = BitVec::zeros(2);
+        for flip in [None, Some(0), Some(1), Some(0)] {
+            if let Some(p) = flip {
+                params.flip(p);
+            }
+            inc.set_params(&params);
+            let v = verify_arena(&inc, Some(2));
+            assert!(v.is_empty(), "clean arena flagged after {flip:?}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn unready_synth_runs_template_checks_only() {
+        let tpl = grouped_template();
+        let inc = IncrementalSynth::new(tpl);
+        let before = telemetry::thread_block();
+        let v = verify_arena(&inc, Some(2));
+        let d = telemetry::thread_block().delta(&before);
+        assert!(v.is_empty(), "{v:?}");
+        // Arena checks don't apply before the first set_params: only
+        // the four template-level analyses run.
+        assert_eq!(d.work[Work::VerifyChecksRun as usize], 4);
+        assert_eq!(d.work[Work::VerifyViolations as usize], 0);
+    }
+
+    #[test]
+    fn ready_arena_runs_all_checks_and_counts_work() {
+        let tpl = grouped_template();
+        let mut inc = IncrementalSynth::new(tpl);
+        inc.set_params(&BitVec::zeros(2));
+        let before = telemetry::thread_block();
+        let v = verify_arena(&inc, Some(2));
+        let d = telemetry::thread_block().delta(&before);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(d.work[Work::VerifyChecksRun as usize], 7);
+        assert_eq!(d.work[Work::VerifyViolations as usize], 0);
+    }
+
+    #[test]
+    fn genome_length_mismatch_is_a_bijection_violation() {
+        let tpl = grouped_template();
+        let v = verify_template(&tpl, Some(5));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].check, "param-bijection");
+        assert!(v[0].detail.contains("genome length 5"), "{}", v[0].detail);
+    }
+
+    #[test]
+    fn violation_display_is_actionable() {
+        let v = Violation {
+            check: "arrival",
+            nodes: vec![3, 7],
+            detail: "example".to_string(),
+        };
+        assert_eq!(format!("{v}"), "[arrival] nodes [3, 7]: example");
+        let v2 = Violation { check: "census", nodes: vec![], detail: "x".into() };
+        assert_eq!(format!("{v2}"), "[census] x");
+    }
+
+    #[test]
+    fn symmetric_diff_merges_both_tails() {
+        assert_eq!(symmetric_diff(&[1, 3, 5], &[1, 4, 5, 9]), vec![3, 4, 9]);
+        assert_eq!(symmetric_diff(&[], &[2]), vec![2]);
+        assert!(symmetric_diff(&[7, 8], &[7, 8]).is_empty());
+    }
+}

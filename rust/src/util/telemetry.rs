@@ -164,9 +164,17 @@ pub enum Work {
     /// time). Scheduling-dependent: which worker's arena first emits a
     /// node decides where its arrival is paid.
     SynthArrivalRecomputes,
+    /// Invariant checks executed by `synth::verify` (`--verify
+    /// boundaries|every-gen`, `pmlp lint`). Scheduling-dependent:
+    /// boundary checkpoints fire once per evaluator worker, and the
+    /// worker count follows `--jobs`.
+    VerifyChecksRun,
+    /// Violations those checks reported. Zero on every healthy run —
+    /// the CI verify smoke leg asserts exactly that.
+    VerifyViolations,
 }
 
-pub const N_WORK: usize = 14;
+pub const N_WORK: usize = 16;
 
 /// Dotted work-stat names, indexed by `Work as usize`.
 pub const WORK_NAMES: [&str; N_WORK] = [
@@ -184,6 +192,8 @@ pub const WORK_NAMES: [&str; N_WORK] = [
     "synth.shared_cone_hits",
     "synth.shared_cone_misses",
     "synth.arrival_recomputes",
+    "verify.checks_run",
+    "verify.violations",
 ];
 
 /// Power-of-two buckets of the dirty-cone size histogram: bucket 0
@@ -638,7 +648,7 @@ mod tests {
     fn name_tables_match_enum_arity() {
         // The last variant of each enum must index the last name slot.
         assert_eq!(Counter::GaConstraintViolations as usize, N_COUNTERS - 1);
-        assert_eq!(Work::SynthArrivalRecomputes as usize, N_WORK - 1);
+        assert_eq!(Work::VerifyViolations as usize, N_WORK - 1);
         assert_eq!(Gauge::MemoEntries as usize, N_GAUGES - 1);
         assert_eq!(COUNTER_NAMES.len(), N_COUNTERS);
         assert_eq!(WORK_NAMES.len(), N_WORK);

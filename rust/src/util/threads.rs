@@ -70,6 +70,10 @@ where
 /// (a second panic aborts the process) — which is why the evaluator
 /// pool leases and the sharded memo recover from mutex poisoning
 /// instead of unwrapping.
+// One of the crate's two sanctioned `unsafe` sites (the crate root is
+// `#![deny(unsafe_code)]`): the disjoint-slot writes through `SendPtr`
+// below, justified at the block.
+#[allow(unsafe_code)]
 pub fn par_map_with<S, T, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
 where
     T: Send,
@@ -127,7 +131,12 @@ where
 }
 
 struct SendPtr<T>(*mut T);
+// SAFETY: only `par_map_with` constructs a `SendPtr`, and its workers
+// write disjoint slots claimed via the atomic cursor (see the block's
+// SAFETY note); the pointee vec outlives the thread scope.
+#[allow(unsafe_code)]
 unsafe impl<T> Sync for SendPtr<T> {}
+#[allow(unsafe_code)]
 unsafe impl<T> Send for SendPtr<T> {}
 
 #[cfg(test)]

@@ -1,0 +1,299 @@
+//! Corruption-injection acceptance suite of the `synth::verify`
+//! invariant checker (DESIGN.md §7).
+//!
+//! Two halves:
+//!
+//! * **Clean pins** — the template/arena states the rest of the test
+//!   matrix exercises (`ga_determinism.rs` mutation chains over the
+//!   tiny MLP, `measured_objectives.rs` template instantiation) must
+//!   verify with zero violations, and the evaluator's `--verify
+//!   every-gen` hook must count checks without counting violations.
+//! * **Seeded breaks** — each invariant class is deliberately broken
+//!   (cycle, dangling CSR edge, duplicate hash key, orphaned param
+//!   bit, stale arrival, census drift) through the `#[doc(hidden)]`
+//!   corruption hooks or direct mutation of public fields, and the
+//!   matching check — and *only* it — must fire, naming the corrupted
+//!   nodes.
+//!
+//! The seeds are chosen so each break is invisible to every other
+//! check: gate-list breaks use a small *group-free* template (so the
+//! cone-frontier check is vacuous) and are seeded either before
+//! `Template::new` (cycle — the CSR is then built consistently over
+//! the broken gates) or on operand-free nodes (orphaned param — the
+//! fanout lists don't move); arena breaks use hooks that keep the
+//! arrival/census bookkeeping of everything *else* intact.
+
+use printed_mlp::accum::GenomeMap;
+use printed_mlp::config::builtin;
+use printed_mlp::datasets;
+use printed_mlp::ga::Evaluator;
+use printed_mlp::model::float_mlp::TrainOpts;
+use printed_mlp::model::{FloatMlp, QuantMlp};
+use printed_mlp::netlist::mlp::{build_mlp_template, ArgmaxMode};
+use printed_mlp::netlist::{Gate, Netlist, NodeId, Template};
+use printed_mlp::runtime::evaluator::CircuitEvaluator;
+use printed_mlp::synth::incremental::IncrementalSynth;
+use printed_mlp::synth::verify::{verify_arena, verify_template, VerifyMode, Violation};
+use printed_mlp::util::telemetry::{self, Work};
+use printed_mlp::util::Rng;
+
+fn tiny_setup() -> (QuantMlp, printed_mlp::datasets::QuantDataset, f64) {
+    let cfg = builtin::tiny();
+    let (split, qtrain, _) = datasets::load(&cfg.dataset);
+    let mut mlp = FloatMlp::init(cfg.topology, 1);
+    mlp.train(&split.train, &TrainOpts { epochs: 20, ..Default::default() });
+    let qmlp = QuantMlp::from_float(&mlp, &qtrain);
+    let base = qmlp.accuracy(&qtrain, None);
+    (qmlp, qtrain, base)
+}
+
+/// Node ids of the [`flat_netlist`] fixture, in construction order.
+struct Flat {
+    a: NodeId,
+    b: NodeId,
+    p0: NodeId,
+    t0: NodeId,
+    y: NodeId,
+}
+
+/// A tiny *group-free* template netlist — two inputs, two params,
+/// three cells: `y = (a & p0) | (b ^ p1)`. With no registered cone
+/// groups the cone-frontier check is vacuously clean, so a seeded
+/// gate-list break here can implicate exactly one check.
+fn flat_netlist() -> (Netlist, Flat) {
+    let mut nl = Netlist::new();
+    let a = nl.input();
+    let b = nl.input();
+    let p0 = nl.param(0);
+    let p1 = nl.param(1);
+    let t0 = nl.and(a, p0);
+    let t1 = nl.xor(b, p1);
+    let y = nl.or(t0, t1);
+    nl.output("y", vec![y]);
+    (nl, Flat { a, b, p0, t0, y })
+}
+
+/// The distinct check ids present in a violation list, sorted.
+fn checks_fired(vs: &[Violation]) -> Vec<&'static str> {
+    let mut c: Vec<&'static str> = vs.iter().map(|v| v.check).collect();
+    c.sort_unstable();
+    c.dedup();
+    c
+}
+
+/// The tiny MLP template plus a live incremental arena advanced through
+/// a deterministic mutation chain — the arena states the determinism
+/// and measured-objective suites evaluate, with every intermediate
+/// state verified clean along the way.
+fn mlp_arena(states: usize, share: bool) -> (IncrementalSynth, usize) {
+    let (qmlp, _, _) = tiny_setup();
+    let map = GenomeMap::new(&qmlp);
+    let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+    assert!(verify_template(&tpl, Some(map.len())).is_empty());
+    let mut synth = IncrementalSynth::new(tpl);
+    synth.set_share_cones(share);
+    let mut rng = Rng::new(7);
+    let mut g = map.exact_genome();
+    for s in 0..states {
+        if s > 0 {
+            for _ in 0..3 {
+                g.flip(rng.below(map.len()));
+            }
+        }
+        synth.set_params(&g);
+        let vs = verify_arena(&synth, Some(map.len()));
+        assert!(vs.is_empty(), "state {s} (share={share}): {vs:?}");
+    }
+    (synth, map.len())
+}
+
+// ---------------------------------------------------------------- clean pins
+
+#[test]
+fn clean_template_and_arena_states_verify_zero_violations() {
+    // The hand-built fixture, before and after instantiation plumbing.
+    let (nl, _) = flat_netlist();
+    let tpl = Template::new(nl, 2);
+    assert!(verify_template(&tpl, Some(2)).is_empty());
+
+    // An unready arena runs only the template checks — still clean.
+    let synth = IncrementalSynth::new(tpl);
+    assert!(verify_arena(&synth, Some(2)).is_empty());
+
+    // The real tiny MLP template + mutation-chain arena states used by
+    // ga_determinism.rs / measured_objectives.rs, with and without
+    // cross-chromosome cone sharing. (mlp_arena verifies every state.)
+    let _ = mlp_arena(5, true);
+    let _ = mlp_arena(5, false);
+}
+
+#[test]
+fn every_gen_evaluator_counts_checks_but_no_violations() {
+    // The pipeline hook end-to-end: evaluating the determinism suite's
+    // genome chain under --verify every-gen must run checks on every
+    // chromosome and count zero violations; --verify off (the default)
+    // must not run any.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let ev = CircuitEvaluator::new(&qmlp, &qtrain, base).with_verify(VerifyMode::EveryGen);
+    assert_eq!(ev.verify(), VerifyMode::EveryGen);
+    let mut rng = Rng::new(11);
+    let mut genomes = vec![ev.map.exact_genome()];
+    for _ in 0..5 {
+        let mut g = genomes.last().unwrap().clone();
+        for _ in 0..3 {
+            g.flip(rng.below(ev.map.len()));
+        }
+        genomes.push(g);
+    }
+
+    let before = telemetry::thread_block();
+    let objs = ev.evaluate(&genomes);
+    let d = telemetry::thread_block().delta(&before);
+    assert_eq!(objs.len(), genomes.len());
+    assert!(d.work[Work::VerifyChecksRun as usize] > 0, "every-gen must run checks");
+    assert_eq!(d.work[Work::VerifyViolations as usize], 0, "clean states, no violations");
+
+    let off = CircuitEvaluator::new(&qmlp, &qtrain, base);
+    assert_eq!(off.verify(), VerifyMode::Off);
+    let before = telemetry::thread_block();
+    let _ = off.evaluate(&genomes);
+    let d = telemetry::thread_block().delta(&before);
+    assert_eq!(d.work[Work::VerifyChecksRun as usize], 0, "--verify off is zero-cost");
+}
+
+// ------------------------------------------------------------- seeded breaks
+
+#[test]
+fn seeded_cycle_fires_only_the_acyclic_check() {
+    // Rewrite the AND cell into a self-loop *before* Template::new, so
+    // the CSR is built consistently over the broken gate list and only
+    // topological order is violated.
+    let (mut nl, ids) = flat_netlist();
+    nl.gates[ids.t0 as usize] = Gate::Not(ids.t0);
+    let tpl = Template::new(nl, 2);
+    let vs = verify_template(&tpl, Some(2));
+    assert_eq!(checks_fired(&vs), ["acyclic"], "{vs:?}");
+    assert_eq!(vs.len(), 1);
+    assert!(vs[0].nodes.contains(&ids.t0), "diagnostic must name the looping node: {}", vs[0]);
+}
+
+#[test]
+fn dangling_csr_edge_fires_only_the_csr_fanout_check() {
+    // Redirect the first fanout slot — input `a`'s one consumer edge,
+    // which points at the AND cell — to an unrelated node. The gate
+    // list itself stays intact, so only the adjacency recompute trips.
+    let (nl, ids) = flat_netlist();
+    let mut tpl = Template::new(nl, 2);
+    let old = tpl.corrupt_fanout_slot(0, ids.b);
+    assert_eq!(old, ids.t0, "slot 0 is a's edge to the AND cell");
+    let vs = verify_template(&tpl, Some(2));
+    assert_eq!(checks_fired(&vs), ["csr-fanout"], "{vs:?}");
+    assert_eq!(vs.len(), 1, "one source node's list drifted");
+    assert!(
+        vs[0].nodes.contains(&ids.a) && vs[0].nodes.contains(&ids.t0),
+        "diagnostic must name the source and the lost consumer: {}",
+        vs[0]
+    );
+}
+
+#[test]
+fn duplicate_hash_key_fires_only_the_struct_hash_check() {
+    // Push an unregistered structural copy of a live cell into the
+    // arena. Its arrival is bookkept correctly and it is unreachable
+    // from the outputs, so arrival/census stay clean — but two nodes
+    // now share one structural key and the table count is short by one.
+    let (mut synth, glen) = mlp_arena(2, true);
+    let id = synth
+        .arena()
+        .gates
+        .iter()
+        .position(|g| g.is_cell())
+        .expect("tiny MLP arena has cells") as NodeId;
+    let dup = synth.corrupt_duplicate_node(id);
+    let vs = verify_arena(&synth, Some(glen));
+    assert_eq!(checks_fired(&vs), ["struct-hash"], "{vs:?}");
+    assert!(
+        vs.iter().any(|v| v.nodes.contains(&dup) && v.nodes.contains(&id)),
+        "diagnostic must name both nodes sharing the key: {vs:?}"
+    );
+    assert!(
+        vs.iter().any(|v| v.detail.contains("hash table holds")),
+        "table-count cross-check must also trip: {vs:?}"
+    );
+}
+
+#[test]
+fn orphaned_param_bit_fires_only_the_param_bijection_check() {
+    // Overwrite a registered Param site with a Const *after* the CSR is
+    // built. Both gates are operand-free, so adjacency and topological
+    // order are untouched — but genome bit 0 now binds nothing.
+    let (nl, _) = flat_netlist();
+    let mut tpl = Template::new(nl, 2);
+    let pid = tpl.param_nodes[0];
+    tpl.nl.gates[pid as usize] = Gate::Const(false);
+    let vs = verify_template(&tpl, Some(2));
+    assert_eq!(checks_fired(&vs), ["param-bijection"], "{vs:?}");
+    assert!(
+        vs.iter().any(|v| v.nodes.contains(&pid)),
+        "diagnostic must name the orphaned site: {vs:?}"
+    );
+    assert!(
+        vs.iter().any(|v| v.detail.contains("binds nothing")),
+        "the bit-binds-nothing diagnosis must be spelled out: {vs:?}"
+    );
+}
+
+#[test]
+fn stale_arrival_fires_only_the_arrival_check() {
+    // Zero out one cell's arrival time. Lowering can't break downstream
+    // monotonicity, so exactly the recompute-mismatch family trips —
+    // at the stale node itself (and possibly its direct consumers,
+    // whose recomputed times read the corrupted operand).
+    let (mut synth, glen) = mlp_arena(1, true);
+    let id = synth
+        .arena()
+        .gates
+        .iter()
+        .position(|g| g.is_cell())
+        .expect("tiny MLP arena has cells") as NodeId;
+    let old = synth.corrupt_arrival(id, 0.0);
+    assert!(old > 0.0, "a cell's true arrival includes its own delay");
+    let vs = verify_arena(&synth, Some(glen));
+    assert_eq!(checks_fired(&vs), ["arrival"], "{vs:?}");
+    assert!(
+        vs.iter().any(|v| v.nodes.contains(&id)),
+        "diagnostic must name the stale node: {vs:?}"
+    );
+}
+
+#[test]
+fn census_drift_fires_only_the_census_check() {
+    // Drop one cell from the live list without touching the histogram
+    // or the arena. The reachability walk still finds it (set diff),
+    // and the histogram total no longer matches the list length.
+    let (mut synth, glen) = mlp_arena(1, true);
+    let dropped = synth.corrupt_census_drop_live().expect("live cells present");
+    let vs = verify_arena(&synth, Some(glen));
+    assert_eq!(checks_fired(&vs), ["census"], "{vs:?}");
+    assert_eq!(vs.len(), 2, "set diff + total mismatch");
+    assert!(
+        vs[0].nodes.contains(&dropped),
+        "diagnostic must name the dropped cell: {}",
+        vs[0]
+    );
+}
+
+#[test]
+fn violation_display_is_actionable() {
+    // The rendered diagnostic carries the check id, the node ids and
+    // the explanation — what `pmlp lint` and the boundary checkpoints
+    // print via telemetry.
+    let (mut nl, ids) = flat_netlist();
+    nl.gates[ids.y as usize] = Gate::Or(ids.y, ids.p0);
+    let tpl = Template::new(nl, 2);
+    let vs = verify_template(&tpl, Some(2));
+    assert_eq!(checks_fired(&vs), ["acyclic"]);
+    let msg = vs[0].to_string();
+    assert!(msg.starts_with("[acyclic]"), "{msg}");
+    assert!(msg.contains(&format!("{}", ids.y)), "{msg}");
+}

@@ -14,6 +14,9 @@
 //! * The cause chain is captured eagerly as strings at conversion time —
 //!   enough for `{:#}` formatting, which is all the workspace needs.
 
+// The shim is pure safe code; keep it that way by construction.
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// `Result<T, anyhow::Error>` with an overridable error type, like anyhow.
