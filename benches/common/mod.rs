@@ -35,14 +35,15 @@ pub fn backend() -> EvalBackend {
 /// GA cost objective of the pipeline-driving harnesses
 /// (`PMLP_OBJECTIVE`, default fa). Same loud-error policy as
 /// [`backend`]: `PMLP_OBJECTIVE=pwr` must not silently run the FA
-/// surrogate.
+/// surrogate. The panic message comes from the detailed parser, which
+/// names the offending axis segment and the canonical option list
+/// (`egfet::OBJECTIVE_OPTIONS`) — no hand-kept copy here.
 #[allow(dead_code)]
 pub fn objective() -> CostObjective {
     match std::env::var("PMLP_OBJECTIVE") {
         Err(_) => CostObjective::Fa,
-        Ok(s) => CostObjective::parse(&s).unwrap_or_else(|| {
-            panic!("bad PMLP_OBJECTIVE '{s}' (fa|area|power|delay|area+power|area+power+delay)")
-        }),
+        Ok(s) => CostObjective::parse_detailed(&s)
+            .unwrap_or_else(|e| panic!("bad PMLP_OBJECTIVE: {e}")),
     }
 }
 

@@ -19,23 +19,29 @@
 use crate::accum::GenomeMap;
 use crate::argmax::{build_plan, ArgmaxPlan, ArgmaxSearchOpts};
 use crate::baselines::Int8Mlp;
-use crate::config::RunConfig;
-use crate::datasets;
+use crate::config::{GaSpec, RunConfig};
+use crate::datasets::{self, QuantDataset};
 use crate::egfet::{
     analyze_0p6v_measured, analyze_measured, classify_power_source, CostObjective, HwReport,
     Library, PowerSource,
 };
 use crate::ga::{self, Nsga2};
+use crate::model::QuantMlp;
 use crate::netlist::mlp::{build_mlp_circuit, ArgmaxMode, MlpCircuitOpts};
+use crate::netlist::Template;
 use crate::runtime::evaluator::{CircuitEvaluator, NativeEvaluator};
 use crate::runtime::{PjrtEvaluator, Runtime};
 use crate::sim::wave;
 use crate::synth::verify::VerifyMode;
 use crate::synth::{optimize, SynthMode};
 use crate::train::{self, TrainedModel};
+use crate::util::fxhash::FxHashMap;
 use crate::util::telemetry::{self, Counter, Gauge};
 use crate::util::BitVec;
 use anyhow::Result;
+use std::sync::Arc;
+
+pub mod serve;
 
 /// Which GA evaluator the pipeline uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -90,6 +96,13 @@ pub struct PipelineOpts {
     /// are bit-identical for every value — jobs only sets how wide each
     /// generation evaluates.
     pub jobs: usize,
+    /// Evaluation islands of the GA (`--islands`, default 1): each
+    /// generation's unique genomes are sharded over `K` islands whose
+    /// attribution rotates ring-wise at fixed migration boundaries, and
+    /// the per-island fronts re-merge by Pareto union. Deterministic by
+    /// construction — results and telemetry counter totals are
+    /// bit-identical for every `K` and every `--jobs`.
+    pub islands: usize,
     /// Wave-simulator lane width of the circuit backend
     /// (`--lane-width 64|256`): 256-lane `[u64; 4]` blocks (default) or
     /// the legacy 64-lane single-word engine. Classifications are
@@ -126,6 +139,7 @@ impl Default for PipelineOpts {
             objective: CostObjective::Fa,
             max_delay_ms: None,
             jobs: 0,
+            islands: 1,
             lane_width: wave::LaneWidth::default(),
             share_cones: true,
             verify: VerifyMode::Off,
@@ -171,10 +185,11 @@ fn erase_front<const M: usize>(inds: &[ga::Individual<M>]) -> Vec<FrontPoint> {
 /// fallback carries the active objective's units.
 fn run_circuit_ga<const M: usize>(
     ev: &CircuitEvaluator<M>,
-    spec: crate::config::GaSpec,
+    spec: GaSpec,
     genome_len: usize,
     seeds: Vec<BitVec>,
     jobs: usize,
+    islands: usize,
     max_delay: Option<(usize, f64)>,
     exact: &BitVec,
     log_hist: &dyn Fn(usize, &[(f64, f64)]),
@@ -182,6 +197,7 @@ fn run_circuit_ga<const M: usize>(
     let ga = Nsga2::new(spec, genome_len, ev)
         .with_seeds(seeds)
         .with_jobs(jobs)
+        .with_islands(islands)
         .with_max_delay(max_delay);
     let result = ga.run(|g, snap| log_hist(g, &snap.history));
     let exact_objs = ga::evaluate_parallel(ev, std::slice::from_ref(exact), 1)[0];
@@ -232,6 +248,13 @@ pub struct PipelineResult {
     /// ([`FrontPoint`]), 3-D for the joint `area+power` objective, 4-D
     /// for `area+power+delay`.
     pub front: Vec<FrontPoint>,
+    /// Measured survivor hardware for each front member, aligned with
+    /// `front` and served warm from the circuit evaluator's parked
+    /// `(CellCounts, toggle-sum)` memo state — `(area_cm2, power_mw,
+    /// delay_ms)` per entry, `None` for non-circuit backends or
+    /// from-scratch synthesis (which parks no census). No re-synthesis
+    /// happens to produce these.
+    pub front_hw: Vec<Option<(f64, f64, f64)>>,
     pub designs: Vec<FinalDesign>,
     /// Which evaluator actually ran.
     pub backend_used: &'static str,
@@ -239,7 +262,10 @@ pub struct PipelineResult {
     pub objective: CostObjective,
 }
 
-/// The coordinator.
+/// The coordinator's one-shot face: one config + options, one fresh
+/// [`Study`], one [`DesignRequest`] — exactly the pre-study pipeline,
+/// including its telemetry (a fresh study has empty caches, so every
+/// selected design is synthesized and counted).
 pub struct Pipeline {
     pub cfg: RunConfig,
     pub opts: PipelineOpts,
@@ -252,31 +278,214 @@ impl Pipeline {
 
     /// Run the full framework.
     pub fn run(&self) -> Result<PipelineResult> {
-        let cfg = &self.cfg;
+        validate_opts(&self.opts)?;
+        let _sp_pipeline = crate::span!("pipeline");
+        let mut study = Study::new(self.cfg.clone(), &self.opts)?;
+        study.design(&DesignRequest { ga: self.cfg.ga.clone(), opts: self.opts.clone() })
+    }
+}
+
+/// Bail early on option combinations the pipeline can't honor — shared
+/// by the one-shot CLI path and every serve request.
+fn validate_opts(opts: &PipelineOpts) -> Result<()> {
+    if opts.objective.is_measured() && opts.backend != EvalBackend::Circuit {
+        anyhow::bail!(
+            "--objective {} is measured on the synthesized survivor and requires \
+             --backend circuit",
+            opts.objective.label()
+        );
+    }
+    if opts.max_delay_ms.is_some() && opts.objective.delay_axis().is_none() {
+        anyhow::bail!(
+            "--max-delay constrains the delay axis and requires --objective delay \
+             or area+power+delay (got {})",
+            opts.objective.label()
+        );
+    }
+    Ok(())
+}
+
+/// Cache key of a warm circuit evaluator: every option that changes the
+/// evaluator's identity. Requests agreeing on these share one evaluator
+/// — and with it the cross-generation fitness memo, the parked arena
+/// fleet and the synthesis template.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct EvKey {
+    objective: CostObjective,
+    synth: SynthMode,
+    lane_width: wave::LaneWidth,
+    share_cones: bool,
+    verify: VerifyMode,
+}
+
+/// A cached circuit evaluator with its const-generic objective arity
+/// erased at the study boundary (the GA core underneath stays
+/// `[f64; M]`-typed).
+enum CircuitEv {
+    M2(CircuitEvaluator<2>),
+    M3(CircuitEvaluator<3>),
+    M4(CircuitEvaluator<4>),
+}
+
+impl CircuitEv {
+    fn template_arc(&self) -> Arc<Template> {
+        match self {
+            CircuitEv::M2(ev) => ev.template_arc().clone(),
+            CircuitEv::M3(ev) => ev.template_arc().clone(),
+            CircuitEv::M4(ev) => ev.template_arc().clone(),
+        }
+    }
+
+    fn warm_survivor_hw(&self, genome: &BitVec) -> Option<(f64, f64, f64)> {
+        match self {
+            CircuitEv::M2(ev) => ev.warm_survivor_hw(genome),
+            CircuitEv::M3(ev) => ev.warm_survivor_hw(genome),
+            CircuitEv::M4(ev) => ev.warm_survivor_hw(genome),
+        }
+    }
+}
+
+/// The request-independent part of a [`FinalDesign`]: the argmax plan
+/// and every synthesized/analyzed artifact for one
+/// `(genome, approx-argmax)` pair. The study caches these so a repeated
+/// request reassembles its designs without synthesizing anything —
+/// `coordinator.designs_synthesized` counts only cache misses.
+#[derive(Clone, Debug)]
+struct DesignKernel {
+    acc_test_accum: f64,
+    acc_test_full: f64,
+    argmax_plan: ArgmaxPlan,
+    hw_exact_argmax: HwReport,
+    hw_full: HwReport,
+    hw_0p6v: HwReport,
+    power_source: PowerSource,
+}
+
+/// Stage-5 body for one genome: argmax plan search, accuracy scoring,
+/// gate-level synthesis and EGFET analysis at both voltage corners.
+#[allow(clippy::too_many_arguments)]
+fn build_design_kernel(
+    qmlp: &QuantMlp,
+    qtrain: &QuantDataset,
+    qtest: &QuantDataset,
+    stimulus: &[Vec<bool>],
+    clock_ms: f64,
+    approx_argmax: bool,
+    map: &GenomeMap,
+    genome: &BitVec,
+) -> DesignKernel {
+    let masks = map.to_masks(genome);
+    let acc_test_accum = qmlp.accuracy(qtest, Some(&masks));
+    // Argmax approximation on the *train* outputs of this design
+    // (paper: performed last, depends on the output distribution).
+    let width = qmlp.output_width();
+    let plan = if approx_argmax && qmlp.topo.n_out >= 2 {
+        let preacts = qmlp.output_preacts(qtrain, Some(&masks));
+        build_plan(&preacts, &qtrain.y, width, &ArgmaxSearchOpts::default())
+    } else {
+        ArgmaxPlan::exact(qmlp.topo.n_out, width)
+    };
+    // Test accuracy with the full holistic approximation.
+    let test_preacts = qmlp.output_preacts(qtest, Some(&masks));
+    let acc_test_full = plan.accuracy(&test_preacts, &qtest.y);
+
+    // Hardware: exact-argmax reference and full design.
+    let nl_exact = build_mlp_circuit(
+        qmlp,
+        &MlpCircuitOpts { masks: Some(masks.clone()), argmax: ArgmaxMode::Exact },
+    );
+    let (opt_exact, _) = optimize(&nl_exact);
+    let hw_exact_argmax = analyze_measured(&opt_exact, &Library::egfet_1v(), clock_ms, stimulus);
+    let nl_full = build_mlp_circuit(
+        qmlp,
+        &MlpCircuitOpts { masks: Some(masks), argmax: ArgmaxMode::Plan(plan.clone()) },
+    );
+    let (opt_full, _) = optimize(&nl_full);
+    let hw_full = analyze_measured(&opt_full, &Library::egfet_1v(), clock_ms, stimulus);
+    let hw_0p6v = analyze_0p6v_measured(&opt_full, clock_ms, stimulus);
+    let power_source = classify_power_source(hw_0p6v.power_mw);
+
+    DesignKernel {
+        acc_test_accum,
+        acc_test_full,
+        argmax_plan: plan,
+        hw_exact_argmax,
+        hw_full,
+        hw_0p6v,
+        power_source,
+    }
+}
+
+/// One design request against a (possibly warm) [`Study`]: the GA
+/// budget plus the per-request pipeline options.
+#[derive(Clone, Debug)]
+pub struct DesignRequest {
+    /// This request's GA spec (population, generations, rates,
+    /// accuracy-loss bound, seed) — the budget knob of the service.
+    pub ga: GaSpec,
+    /// Per-request options (objective, constraints, jobs/islands, …).
+    /// `backend` must match the study's.
+    pub opts: PipelineOpts,
+}
+
+/// One warm design study: everything about a `(config, backend)` pair
+/// that is independent of any particular design request — the trained
+/// and quantized model, the shared hardware-analysis stimulus, the
+/// baseline/QAT reference hardware, the GA genome map and truncation
+/// seeds — plus the state that makes repeat requests cheap: the shared
+/// synthesis template, the keyed circuit-evaluator cache (each entry
+/// carrying its cross-generation fitness memo with parked survivor
+/// hardware and its leased arena fleet) and the design-kernel cache.
+///
+/// [`Pipeline::run`] builds a fresh study per call (the one-shot CLI
+/// path); `pmlp serve` keeps studies in a keyed cache and replays
+/// [`DesignRequest`]s against them, so a repeated request runs entirely
+/// from parked state (`coordinator.designs_synthesized == 0`).
+pub struct Study {
+    pub cfg: RunConfig,
+    backend: EvalBackend,
+    runtime: Option<Runtime>,
+    have_artifact: bool,
+    qtrain: QuantDataset,
+    qtest: QuantDataset,
+    pub trained: TrainedModel,
+    /// Shared stimulus for every hardware analysis: a slice of the
+    /// quantized train set in the circuits' common 4-bit input
+    /// encoding. Each netlist is wave-simulated on it so the dynamic
+    /// power estimate uses *measured* toggle activity (the paper's
+    /// VCS-reported switching activity), not a nominal constant.
+    stimulus: Vec<Vec<bool>>,
+    int8: Int8Mlp,
+    pub baseline_acc_test: f64,
+    baseline_hw: Option<HwReport>,
+    qat_hw: HwReport,
+    map: GenomeMap,
+    seeds: Vec<BitVec>,
+    exact: BitVec,
+    exact_fa: f64,
+    /// The one parameterized netlist every circuit evaluator of this
+    /// study shares: harvested from the first evaluator built, injected
+    /// into each later one ([`CircuitEvaluator::with_template`]).
+    template: Option<Arc<Template>>,
+    evaluators: Vec<(EvKey, CircuitEv)>,
+    design_cache: FxHashMap<(BitVec, bool), DesignKernel>,
+}
+
+impl Study {
+    /// Stages 1–3: dataset, training + QAT, reference hardware. The
+    /// result can serve any number of [`DesignRequest`]s whose backend
+    /// matches `opts.backend`.
+    pub fn new(cfg: RunConfig, opts: &PipelineOpts) -> Result<Study> {
+        validate_opts(opts)?;
         let name = cfg.dataset.name.clone();
-        if self.opts.objective.is_measured() && self.opts.backend != EvalBackend::Circuit {
-            anyhow::bail!(
-                "--objective {} is measured on the synthesized survivor and requires \
-                 --backend circuit",
-                self.opts.objective.label()
-            );
-        }
-        if self.opts.max_delay_ms.is_some() && self.opts.objective.delay_axis().is_none() {
-            anyhow::bail!(
-                "--max-delay constrains the delay axis and requires --objective delay \
-                 or area+power+delay (got {})",
-                self.opts.objective.label()
-            );
-        }
         // `verbose` keeps its pre-facade meaning (pipeline progress is
         // opt-in per call site); `PMLP_LOG` gates the whole facade, so
         // default-level output is byte-identical to the old `eprintln!`s.
         let log = |msg: &str| {
-            if self.opts.verbose {
+            if opts.verbose {
                 telemetry::info(&name, msg);
             }
         };
-        let _sp_pipeline = crate::span!("pipeline");
 
         // ---- 1. dataset ------------------------------------------------
         let (split, qtrain, qtest) = {
@@ -292,7 +501,7 @@ impl Pipeline {
         ));
 
         // ---- 2. training + QAT -----------------------------------------
-        let runtime = match self.opts.backend {
+        let runtime = match opts.backend {
             EvalBackend::Native | EvalBackend::Circuit => None,
             _ => Runtime::new(&Runtime::default_dir()).ok(),
         };
@@ -300,7 +509,7 @@ impl Pipeline {
             .as_ref()
             .map(|rt| rt.manifest.entries.contains_key(&cfg.dataset.name))
             .unwrap_or(false);
-        if matches!(self.opts.backend, EvalBackend::Pjrt) && !have_artifact {
+        if matches!(opts.backend, EvalBackend::Pjrt) && !have_artifact {
             anyhow::bail!("PJRT backend requested but artifacts missing (run `make artifacts`)");
         }
 
@@ -312,18 +521,18 @@ impl Pipeline {
             // learning-rate/seed search as one more candidate; the best
             // integer model (train accuracy) wins — on the fragile
             // 2-neuron MLPs the engines land in different basins.
-            let float = train::train_float_search(cfg, &split);
+            let float = train::train_float_search(&cfg, &split);
             let rt = runtime.as_ref().unwrap();
             let pjrt_tm = crate::train::PjrtTrainer::new(rt, &cfg.dataset.name)
-                .train(cfg, &float, &split, &qtrain, &qtest)?;
-            let native_tm = train::train_native(cfg, &split, &qtrain, &qtest);
+                .train(&cfg, &float, &split, &qtrain, &qtest)?;
+            let native_tm = train::train_native(&cfg, &split, &qtrain, &qtest);
             if native_tm.acc_q_train > pjrt_tm.acc_q_train {
                 native_tm
             } else {
                 pjrt_tm
             }
         } else {
-            train::train_native(cfg, &split, &qtrain, &qtest)
+            train::train_native(&cfg, &split, &qtrain, &qtest)
         };
         drop(_sp_train);
         log(&format!(
@@ -332,11 +541,6 @@ impl Pipeline {
         ));
 
         // ---- 3. baseline + QAT-only hardware ----------------------------
-        // Shared stimulus for every hardware analysis: a slice of the
-        // quantized train set in the circuits' common 4-bit input
-        // encoding. Each netlist is wave-simulated on it so the dynamic
-        // power estimate uses *measured* toggle activity (the paper's
-        // VCS-reported switching activity), not a nominal constant.
         let qmlp = &trained.qmlp;
         let stimulus: Vec<Vec<bool>> = qtrain
             .x
@@ -348,7 +552,7 @@ impl Pipeline {
         let baseline_acc_test = int8.accuracy(&qtest);
         let (baseline_hw, qat_hw) = {
             let _sp = crate::span!("baseline_hw");
-            let baseline_hw = if self.opts.synth_baseline {
+            let baseline_hw = if opts.synth_baseline {
                 let nl = int8.build_circuit(ArgmaxMode::Exact);
                 let (opt, _) = optimize(&nl);
                 Some(analyze_measured(&opt, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus))
@@ -368,18 +572,133 @@ impl Pipeline {
             ));
         }
 
-        // ---- 4. genetic accumulation approximation ----------------------
-        let base_acc_train = trained.acc_q_train;
+        // Request-independent GA scaffolding. LSB-truncation seeds:
+        // column depths spanning the QRelu shift for layer 1 and the
+        // low columns of layer 2.
         let map = GenomeMap::new(qmlp);
-        // LSB-truncation seeds: column depths spanning the QRelu shift
-        // for layer 1 and the low columns of layer 2.
         let t = qmlp.act_shift as u8;
         let depths1: Vec<u8> = vec![t / 2, t, t.saturating_add(2), t.saturating_add(4)];
         let depths2: Vec<u8> = vec![0, 2, 4, 6];
         let seeds = crate::accum::truncation_seeds(&map, &depths1, &depths2);
+        let exact = map.exact_genome();
+        let exact_fa = crate::area::AreaModel::new(&map).exact_estimate() as f64;
+
+        Ok(Study {
+            cfg,
+            backend: opts.backend,
+            runtime,
+            have_artifact,
+            qtrain,
+            qtest,
+            trained,
+            stimulus,
+            int8,
+            baseline_acc_test,
+            baseline_hw,
+            qat_hw,
+            map,
+            seeds,
+            exact,
+            exact_fa,
+            template: None,
+            evaluators: Vec::new(),
+            design_cache: FxHashMap::default(),
+        })
+    }
+
+    /// Synthesize the exact bespoke baseline on demand (skipped at
+    /// build time when the building request had `synth_baseline` off; a
+    /// later request that wants it triggers it once).
+    fn ensure_baseline_hw(&mut self) {
+        if self.baseline_hw.is_some() {
+            return;
+        }
+        let _sp = crate::span!("baseline_hw");
+        let nl = self.int8.build_circuit(ArgmaxMode::Exact);
+        let (opt, _) = optimize(&nl);
+        self.baseline_hw = Some(analyze_measured(
+            &opt,
+            &Library::egfet_1v(),
+            self.cfg.hw.clock_ms,
+            &self.stimulus,
+        ));
+    }
+
+    /// Find or build the circuit evaluator for `key` (returns its index
+    /// in the cache). New evaluators get the study's shared template
+    /// injected; the first one built donates its template to the study.
+    fn circuit_evaluator(&mut self, key: EvKey) -> usize {
+        if let Some(i) = self.evaluators.iter().position(|(k, _)| *k == key) {
+            return i;
+        }
+        fn outfit<const M: usize>(
+            ev: CircuitEvaluator<M>,
+            key: &EvKey,
+            tpl: &Option<Arc<Template>>,
+        ) -> CircuitEvaluator<M> {
+            let ev = ev
+                .with_mode(key.synth)
+                .with_lane_width(key.lane_width)
+                .with_cone_sharing(key.share_cones)
+                .with_verify(key.verify);
+            match tpl {
+                Some(t) => ev.with_template(t.clone()),
+                None => ev,
+            }
+        }
+        let qmlp = &self.trained.qmlp;
+        let base = self.trained.acc_q_train;
+        let ev = match key.objective {
+            CostObjective::AreaPowerDelay => CircuitEv::M4(outfit(
+                CircuitEvaluator::new_joint_delay(qmlp, &self.qtrain, base),
+                &key,
+                &self.template,
+            )),
+            CostObjective::AreaPower => CircuitEv::M3(outfit(
+                CircuitEvaluator::new_joint(qmlp, &self.qtrain, base),
+                &key,
+                &self.template,
+            )),
+            _ => CircuitEv::M2(outfit(
+                CircuitEvaluator::new(qmlp, &self.qtrain, base).with_objective(key.objective),
+                &key,
+                &self.template,
+            )),
+        };
+        if self.template.is_none() {
+            self.template = Some(ev.template_arc());
+        }
+        self.evaluators.push((key, ev));
+        self.evaluators.len() - 1
+    }
+
+    /// Stages 4–5 for one request: the NSGA-II accumulation search,
+    /// then argmax planning + synthesis of the selected designs — warm
+    /// wherever the study has parked state, bit-identical to a cold run
+    /// either way.
+    pub fn design(&mut self, req: &DesignRequest) -> Result<PipelineResult> {
+        let opts = &req.opts;
+        validate_opts(opts)?;
+        anyhow::ensure!(
+            opts.backend == self.backend,
+            "study was built for backend {:?} and cannot serve a {:?} request",
+            self.backend,
+            opts.backend
+        );
+        if opts.synth_baseline {
+            self.ensure_baseline_hw();
+        }
+        let name = self.cfg.dataset.name.clone();
+        let log = |msg: &str| {
+            if opts.verbose {
+                telemetry::info(&name, msg);
+            }
+        };
+
+        // ---- 4. genetic accumulation approximation ----------------------
         // One generation logger shared by every arity — the history pair
         // is (best cost@2%, best cost@5%) regardless of M.
-        let verbose = self.opts.verbose;
+        let verbose = opts.verbose;
         let log_hist = |generation: usize, history: &[(f64, f64)]| {
             if verbose {
                 let (b2, b5) = history.last().copied().unwrap_or((0.0, 0.0));
@@ -389,113 +708,114 @@ impl Pipeline {
                 );
             }
         };
-        let jobs = self.opts.jobs;
-        let exact = map.exact_genome();
-        let exact_fa = crate::area::AreaModel::new(&map).exact_estimate() as f64;
-        let use_circuit = self.opts.backend == EvalBackend::Circuit;
+        let jobs = opts.jobs;
+        let use_circuit = opts.backend == EvalBackend::Circuit;
         let _sp_ga = crate::span!("ga");
-        let (front, population, backend_used, exact_objs) = if use_circuit {
+        let (front, population, backend_used, exact_objs, front_hw) = if use_circuit {
             // Circuit-in-the-loop: every chromosome is synthesized and
             // classified at the gate level through the wave engine,
             // incrementally (template cone-patch) or from scratch. The
-            // GA fans each generation across `jobs` workers, each owning
+            // GA fans each generation across `jobs` workers (sharded
+            // over `islands` evaluation islands), each worker owning
             // its own synthesis arena + wave cache — including the
             // measured-objective census/toggle state, so `--objective
-            // area|power|area+power` stays bit-identical across widths.
-            // The joint objectives instantiate the const-generic GA at
-            // arity 3 ([loss, area, power]) or 4 ([loss, area, power,
-            // delay]); everything else at 2. Delay axes ride a hard
-            // timing cap through constrained domination: `--max-delay`
-            // if given, else the dataset's clock budget. The exact
-            // genome is scored through the same evaluator so the
-            // zero-approximation fallback injected below carries the
-            // active objective's units (FA, cm², mW and/or ms) — note
-            // the fallback is injected for accuracy coverage and is
-            // exempt from the cap.
-            let delay_cap = self
-                .opts
+            // area|power|area+power` stays bit-identical across widths,
+            // job counts and island counts. The joint objectives
+            // instantiate the const-generic GA at arity 3 ([loss, area,
+            // power]) or 4 ([loss, area, power, delay]); everything
+            // else at 2. Delay axes ride a hard timing cap through
+            // constrained domination: `--max-delay` if given, else the
+            // dataset's clock budget. The exact genome is scored
+            // through the same evaluator so the zero-approximation
+            // fallback injected below carries the active objective's
+            // units (FA, cm², mW and/or ms) — note the fallback is
+            // injected for accuracy coverage and is exempt from the
+            // cap.
+            let delay_cap = opts
                 .objective
                 .delay_axis()
-                .map(|axis| (axis, self.opts.max_delay_ms.unwrap_or(cfg.hw.clock_ms)));
-            let (front, population, exact_objs) = match self.opts.objective {
-                CostObjective::AreaPowerDelay => {
-                    let ev = CircuitEvaluator::new_joint_delay(qmlp, &qtrain, base_acc_train)
-                        .with_mode(self.opts.synth)
-                        .with_lane_width(self.opts.lane_width)
-                        .with_cone_sharing(self.opts.share_cones)
-                        .with_verify(self.opts.verify);
-                    run_circuit_ga(
-                        &ev,
-                        cfg.ga.clone(),
-                        map.len(),
-                        seeds.clone(),
-                        jobs,
-                        delay_cap,
-                        &exact,
-                        &log_hist,
-                    )
-                }
-                CostObjective::AreaPower => {
-                    let ev = CircuitEvaluator::new_joint(qmlp, &qtrain, base_acc_train)
-                        .with_mode(self.opts.synth)
-                        .with_lane_width(self.opts.lane_width)
-                        .with_cone_sharing(self.opts.share_cones)
-                        .with_verify(self.opts.verify);
-                    run_circuit_ga(
-                        &ev,
-                        cfg.ga.clone(),
-                        map.len(),
-                        seeds.clone(),
-                        jobs,
-                        delay_cap,
-                        &exact,
-                        &log_hist,
-                    )
-                }
-                _ => {
-                    let ev = CircuitEvaluator::new(qmlp, &qtrain, base_acc_train)
-                        .with_mode(self.opts.synth)
-                        .with_objective(self.opts.objective)
-                        .with_lane_width(self.opts.lane_width)
-                        .with_cone_sharing(self.opts.share_cones)
-                        .with_verify(self.opts.verify);
-                    run_circuit_ga(
-                        &ev,
-                        cfg.ga.clone(),
-                        map.len(),
-                        seeds.clone(),
-                        jobs,
-                        delay_cap,
-                        &exact,
-                        &log_hist,
-                    )
-                }
+                .map(|axis| (axis, opts.max_delay_ms.unwrap_or(self.cfg.hw.clock_ms)));
+            let key = EvKey {
+                objective: opts.objective,
+                synth: opts.synth,
+                lane_width: opts.lane_width,
+                share_cones: opts.share_cones,
+                verify: opts.verify,
             };
-            (front, population, "circuit", exact_objs)
-        } else if have_artifact {
-            let rt = runtime.as_ref().unwrap();
-            let ev = PjrtEvaluator::new(rt, &cfg.dataset.name, qmlp, &qtrain, base_acc_train)?;
-            let ga = Nsga2::<2>::new(cfg.ga.clone(), map.len(), &ev)
-                .with_seeds(seeds.clone())
-                .with_jobs(jobs);
+            let i = self.circuit_evaluator(key);
+            let ev = &self.evaluators[i].1;
+            let (front, population, exact_objs) = match ev {
+                CircuitEv::M4(ev) => run_circuit_ga(
+                    ev,
+                    req.ga.clone(),
+                    self.map.len(),
+                    self.seeds.clone(),
+                    jobs,
+                    opts.islands,
+                    delay_cap,
+                    &self.exact,
+                    &log_hist,
+                ),
+                CircuitEv::M3(ev) => run_circuit_ga(
+                    ev,
+                    req.ga.clone(),
+                    self.map.len(),
+                    self.seeds.clone(),
+                    jobs,
+                    opts.islands,
+                    delay_cap,
+                    &self.exact,
+                    &log_hist,
+                ),
+                CircuitEv::M2(ev) => run_circuit_ga(
+                    ev,
+                    req.ga.clone(),
+                    self.map.len(),
+                    self.seeds.clone(),
+                    jobs,
+                    opts.islands,
+                    delay_cap,
+                    &self.exact,
+                    &log_hist,
+                ),
+            };
+            let front_hw = front.iter().map(|p| ev.warm_survivor_hw(&p.genome)).collect();
+            (front, population, "circuit", exact_objs, front_hw)
+        } else if self.have_artifact {
+            let rt = self.runtime.as_ref().unwrap();
+            let ev = PjrtEvaluator::new(
+                rt,
+                &self.cfg.dataset.name,
+                &self.trained.qmlp,
+                &self.qtrain,
+                self.trained.acc_q_train,
+            )?;
+            let ga = Nsga2::<2>::new(req.ga.clone(), self.map.len(), &ev)
+                .with_seeds(self.seeds.clone())
+                .with_jobs(jobs)
+                .with_islands(opts.islands);
             let result = ga.run(|g, snap| log_hist(g, &snap.history));
             (
                 erase_front(&result.front),
                 erase_front(&result.population),
                 "pjrt",
-                vec![0.0, exact_fa],
+                vec![0.0, self.exact_fa],
+                vec![None; result.front.len()],
             )
         } else {
-            let ev = NativeEvaluator::new(qmlp, &qtrain, base_acc_train);
-            let ga = Nsga2::<2>::new(cfg.ga.clone(), map.len(), &ev)
-                .with_seeds(seeds.clone())
-                .with_jobs(jobs);
+            let ev =
+                NativeEvaluator::new(&self.trained.qmlp, &self.qtrain, self.trained.acc_q_train);
+            let ga = Nsga2::<2>::new(req.ga.clone(), self.map.len(), &ev)
+                .with_seeds(self.seeds.clone())
+                .with_jobs(jobs)
+                .with_islands(opts.islands);
             let result = ga.run(|g, snap| log_hist(g, &snap.history));
             (
                 erase_front(&result.front),
                 erase_front(&result.population),
                 "native",
-                vec![0.0, exact_fa],
+                vec![0.0, self.exact_fa],
+                vec![None; result.front.len()],
             )
         };
         drop(_sp_ga);
@@ -507,81 +827,69 @@ impl Pipeline {
         ));
 
         // ---- 5. argmax approximation + synthesis of selected designs ----
-        let mut selected = select_designs(&front, self.opts.max_hw_points);
+        let mut selected = select_designs(&front, opts.max_hw_points);
         // Always include the exact (QAT-only accumulation) genome as a
         // zero-approximation fallback so a <=5%-vs-baseline design exists
         // whenever QAT itself is within budget.
-        if !selected.iter().any(|i| i.genome == exact) {
-            selected.push(FrontPoint { genome: exact, objs: exact_objs });
+        if !selected.iter().any(|i| i.genome == self.exact) {
+            selected.push(FrontPoint { genome: self.exact.clone(), objs: exact_objs });
         }
-        let area_model = crate::area::AreaModel::new(&map);
+        let area_model = crate::area::AreaModel::new(&self.map);
         let mut designs = Vec::new();
+        let mut synthesized = 0u64;
         let _sp_designs = crate::span!("designs");
         for ind in selected {
-            let masks = map.to_masks(&ind.genome);
-            let acc_test_accum = qmlp.accuracy(&qtest, Some(&masks));
-            // Argmax approximation on the *train* outputs of this design
-            // (paper: performed last, depends on the output distribution).
-            let width = qmlp.output_width();
-            let plan = if self.opts.approx_argmax && qmlp.topo.n_out >= 2 {
-                let preacts = qmlp.output_preacts(&qtrain, Some(&masks));
-                build_plan(&preacts, &qtrain.y, width, &ArgmaxSearchOpts::default())
-            } else {
-                ArgmaxPlan::exact(qmlp.topo.n_out, width)
+            let cache_key = (ind.genome.clone(), opts.approx_argmax);
+            let kernel = match self.design_cache.get(&cache_key) {
+                Some(k) => k.clone(),
+                None => {
+                    synthesized += 1;
+                    let k = build_design_kernel(
+                        &self.trained.qmlp,
+                        &self.qtrain,
+                        &self.qtest,
+                        &self.stimulus,
+                        self.cfg.hw.clock_ms,
+                        opts.approx_argmax,
+                        &self.map,
+                        &ind.genome,
+                    );
+                    self.design_cache.insert(cache_key, k.clone());
+                    k
+                }
             };
-            // Test accuracy with the full holistic approximation.
-            let test_preacts = qmlp.output_preacts(&qtest, Some(&masks));
-            let acc_test_full = plan.accuracy(&test_preacts, &qtest.y);
-
-            // Hardware: exact-argmax reference and full design.
-            let nl_exact = build_mlp_circuit(
-                qmlp,
-                &MlpCircuitOpts { masks: Some(masks.clone()), argmax: ArgmaxMode::Exact },
-            );
-            let (opt_exact, _) = optimize(&nl_exact);
-            let hw_exact_argmax =
-                analyze_measured(&opt_exact, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus);
-            let nl_full = build_mlp_circuit(
-                qmlp,
-                &MlpCircuitOpts {
-                    masks: Some(masks.clone()),
-                    argmax: ArgmaxMode::Plan(plan.clone()),
-                },
-            );
-            let (opt_full, _) = optimize(&nl_full);
-            let hw_full =
-                analyze_measured(&opt_full, &Library::egfet_1v(), cfg.hw.clock_ms, &stimulus);
-            let hw_0p6v = analyze_0p6v_measured(&opt_full, cfg.hw.clock_ms, &stimulus);
-            let power_source = classify_power_source(hw_0p6v.power_mw);
-
             designs.push(FinalDesign {
                 genome: ind.genome.clone(),
-                acc_test_accum,
-                acc_test_full,
-                acc_train: base_acc_train - ind.objs[0],
+                acc_test_accum: kernel.acc_test_accum,
+                acc_test_full: kernel.acc_test_full,
+                acc_train: self.trained.acc_q_train - ind.objs[0],
                 area_fa: area_model.estimate(&ind.genome),
                 objs: ind.objs.clone(),
-                argmax_plan: plan,
-                hw_exact_argmax,
-                hw_full,
-                hw_0p6v,
-                power_source,
+                argmax_plan: kernel.argmax_plan,
+                hw_exact_argmax: kernel.hw_exact_argmax,
+                hw_full: kernel.hw_full,
+                hw_0p6v: kernel.hw_0p6v,
+                power_source: kernel.power_source,
             });
         }
         drop(_sp_designs);
-        telemetry::count(Counter::CoordDesignsSynthesized, designs.len() as u64);
-        log(&format!("synthesized {} final designs", designs.len()));
+        telemetry::count(Counter::CoordDesignsSynthesized, synthesized);
+        log(&format!(
+            "synthesized {synthesized} of {} final designs (rest warm from the kernel cache)",
+            designs.len()
+        ));
 
         Ok(PipelineResult {
-            cfg: cfg.clone(),
-            trained,
-            baseline_acc_test,
-            baseline_hw,
-            qat_hw,
+            cfg: self.cfg.clone(),
+            trained: self.trained.clone(),
+            baseline_acc_test: self.baseline_acc_test,
+            baseline_hw: self.baseline_hw.clone(),
+            qat_hw: self.qat_hw.clone(),
             front,
+            front_hw,
             designs,
             backend_used,
-            objective: self.opts.objective,
+            objective: opts.objective,
         })
     }
 }
@@ -647,6 +955,55 @@ mod tests {
             assert!(d.hw_full.meets_timing);
         }
         assert_eq!(result.backend_used, "native");
+    }
+
+    #[test]
+    fn study_repeat_request_is_warm_and_identical() {
+        // The serve-layer contract on one study: a repeated request
+        // reuses the parked evaluator (fitness memo + arena fleet) and
+        // the design-kernel cache — zero new kernels, one evaluator —
+        // and both answers are bit-identical to a cold study's.
+        let mut cfg = builtin::tiny();
+        cfg.ga.population = 16;
+        cfg.ga.generations = 2;
+        let opts = PipelineOpts {
+            backend: EvalBackend::Circuit,
+            synth_baseline: false,
+            max_hw_points: 2,
+            ..Default::default()
+        };
+        let req = DesignRequest { ga: cfg.ga.clone(), opts: opts.clone() };
+        let mut study = Study::new(cfg.clone(), &opts).expect("study");
+        let first = study.design(&req).expect("first request");
+        assert_eq!(study.evaluators.len(), 1);
+        let kernels = study.design_cache.len();
+        assert_eq!(kernels as u64, first.designs.len() as u64, "cold run synthesizes every design");
+        let second = study.design(&req).expect("repeat request");
+        assert_eq!(study.evaluators.len(), 1, "repeat must reuse the warm evaluator");
+        assert_eq!(
+            study.design_cache.len(),
+            kernels,
+            "repeat request must reassemble designs from the kernel cache"
+        );
+        assert_eq!(first.front, second.front);
+        assert_eq!(first.front_hw, second.front_hw);
+        assert!(
+            first.front_hw.iter().all(|hw| hw.is_some()),
+            "incremental circuit runs park survivor hardware for every front member"
+        );
+        assert_eq!(first.designs.len(), second.designs.len());
+        for (a, b) in first.designs.iter().zip(&second.designs) {
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.objs, b.objs);
+            assert_eq!(a.acc_test_full, b.acc_test_full);
+            assert_eq!(a.hw_full.area_cm2, b.hw_full.area_cm2);
+            assert_eq!(a.hw_full.power_mw, b.hw_full.power_mw);
+        }
+        // Warm-vs-cold determinism: a fresh study answers identically.
+        let mut cold = Study::new(cfg, &opts).expect("cold study");
+        let third = cold.design(&req).expect("cold request");
+        assert_eq!(first.front, third.front);
+        assert_eq!(first.front_hw, third.front_hw);
     }
 
     #[test]

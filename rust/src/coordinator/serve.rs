@@ -1,0 +1,403 @@
+//! Design-as-a-service: a resident `pmlp serve` process that accepts
+//! design requests as line-delimited JSON and answers each with the
+//! full Pareto report plus a per-request `pmlp.metrics/1` telemetry
+//! delta — over stdio (default) or a TCP listener, std-only.
+//!
+//! ## Protocol
+//!
+//! One request per line, one response line per request, in order. A
+//! request is a JSON object:
+//!
+//! ```json
+//! {"dataset": "cardio",
+//!  "objective": "area+power+delay", "max_delay_ms": 180.0,
+//!  "ga": {"population": 200, "generations": 12, "seed": 7},
+//!  "jobs": 8, "islands": 4, "max_hw_points": 4, "id": 1}
+//! ```
+//!
+//! - `dataset`: a built-in config name, **or** `config`: a full
+//!   [`RunConfig`] JSON object (same schema as `pmlp gen-data`/`--config`
+//!   files) for bespoke datasets.
+//! - `ga`: overrides applied on top of the config's GA spec — the
+//!   request's search budget.
+//! - `backend` (default `circuit`), `objective`, `synth`, `lane_width`,
+//!   `share_cones`, `verify`, `max_delay_ms`, `jobs`, `islands`,
+//!   `max_hw_points`, `synth_baseline`, `approx_argmax`, `verbose`: the
+//!   per-request [`PipelineOpts`], same names and defaults as the CLI
+//!   (except the backend default — a resident designer is the
+//!   circuit-in-the-loop service).
+//! - `id`: echoed verbatim in the response, for client-side matching.
+//!
+//! The response carries `ok`, the echoed `id`, `warm_study` (whether
+//! the request hit a parked study), `designs_synthesized` (kernel-cache
+//! misses — `0` on a repeated request), `result` (the
+//! [`crate::report::result_to_json`] report, Pareto front + `front_hw`
+//! warm survivor roll-ups included) and `metrics` (the request-scoped
+//! telemetry delta, schema `pmlp.metrics/1`). Errors answer
+//! `{"ok": false, "error": ...}` on their own line; the server keeps
+//! serving.
+//!
+//! ## Warm state
+//!
+//! The server keys [`Study`]s by everything *except* the GA spec (plus
+//! the backend), so requests that agree on dataset, topology, training
+//! and hardware constraints — but explore different objectives, budgets
+//! or constraint vectors — share one study: one trained model, one
+//! synthesis template, per-objective circuit evaluators with their
+//! cross-generation fitness memos and parked arena fleets, and one
+//! design-kernel cache. Every answer is bit-identical to what a fresh
+//! process would produce for the same request — warm state only ever
+//! skips re-computation, never changes results (pinned by
+//! `rust/tests/serve_requests.rs`).
+//!
+//! EOF on the input (stdio) or the peer closing the connection (TCP) is
+//! the clean shutdown path: the loop drains, flushes and returns.
+
+use super::{DesignRequest, EvalBackend, PipelineOpts, Study};
+use crate::config::{builtin, GaSpec, RunConfig};
+use crate::egfet::CostObjective;
+use crate::report;
+use crate::sim::wave;
+use crate::synth::verify::VerifyMode;
+use crate::synth::SynthMode;
+use crate::util::json::Json;
+use crate::util::telemetry;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+/// The resident design server: a keyed cache of warm [`Study`]s plus a
+/// request counter. One server instance serves one stdio session or
+/// every connection of one TCP listener, sequentially — studies stay
+/// warm across connections.
+pub struct Server {
+    studies: Vec<(String, Study)>,
+    served: u64,
+}
+
+impl Default for Server {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Server {
+    pub fn new() -> Server {
+        Server { studies: Vec::new(), served: 0 }
+    }
+
+    /// Handle one request line; never fails — malformed input or a
+    /// pipeline error becomes an `{"ok": false, ...}` response.
+    pub fn handle_line(&mut self, line: &str) -> Json {
+        let parsed = Json::parse(line);
+        let id = parsed
+            .as_ref()
+            .ok()
+            .and_then(|j| j.get("id").cloned())
+            .unwrap_or(Json::Null);
+        let body = match &parsed {
+            Err(e) => Err(format!("bad request JSON: {e}")),
+            Ok(j) => self.handle_request(j),
+        };
+        match body {
+            Ok(mut resp) => {
+                if let Json::Obj(map) = &mut resp {
+                    map.insert("id".to_string(), id);
+                }
+                resp
+            }
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("id", id),
+                ("error", Json::str(&e)),
+            ]),
+        }
+    }
+
+    fn handle_request(&mut self, j: &Json) -> Result<Json, String> {
+        let mut cfg = if let Some(c) = j.get("config") {
+            RunConfig::from_json(c).map_err(|e| e.to_string())?
+        } else {
+            let name = j.get("dataset").and_then(Json::as_str).ok_or_else(|| {
+                "request needs \"dataset\" (a built-in name) or \"config\" (a full run config)"
+                    .to_string()
+            })?;
+            builtin::by_name(name).ok_or_else(|| {
+                format!(
+                    "unknown dataset '{name}' (built-ins: {}, tiny)",
+                    builtin::paper_names().join(", ")
+                )
+            })?
+        };
+        apply_ga_overrides(&mut cfg.ga, j);
+        let opts = parse_opts(j)?;
+        let req = DesignRequest { ga: cfg.ga.clone(), opts };
+
+        let base = telemetry::baseline();
+        let _sp = crate::span!("pipeline");
+        let key = study_key(&cfg, req.opts.backend);
+        let (warm_study, idx) = match self.studies.iter().position(|(k, _)| *k == key) {
+            Some(i) => (true, i),
+            None => {
+                let study = Study::new(cfg, &req.opts).map_err(|e| e.to_string())?;
+                self.studies.push((key, study));
+                (false, self.studies.len() - 1)
+            }
+        };
+        let study = &mut self.studies[idx].1;
+        // Kernel-cache growth is the process-local ground truth for how
+        // many designs this request actually synthesized (the
+        // `coordinator.designs_synthesized` counter says the same, but
+        // the telemetry delta is process-global).
+        let kernels_before = study.design_cache.len();
+        let result = study.design(&req).map_err(|e| e.to_string())?;
+        let synthesized = study.design_cache.len() - kernels_before;
+        drop(_sp);
+        let metrics = telemetry::metrics_json(&telemetry::snapshot_since(&base));
+        self.served += 1;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("request", Json::num(self.served as f64)),
+            ("warm_study", Json::Bool(warm_study)),
+            ("designs_synthesized", Json::num(synthesized as f64)),
+            ("result", report::result_to_json(&result)),
+            ("metrics", metrics),
+        ]))
+    }
+}
+
+/// The study cache key: the run config with its GA spec neutralized
+/// (the GA budget is per-request, not per-study), plus the backend the
+/// study trains for. Deterministic — `RunConfig::to_json` writes
+/// `BTreeMap`-ordered objects.
+fn study_key(cfg: &RunConfig, backend: EvalBackend) -> String {
+    let mut keyed = cfg.clone();
+    keyed.ga = GaSpec {
+        population: 0,
+        generations: 0,
+        mutation_rate: 0.0,
+        crossover_rate: 0.0,
+        acc_loss_bound: 0.0,
+        init_keep_prob: 0.0,
+        seed: 0,
+    };
+    format!("{:?}|{}", backend, keyed.to_json().to_string_compact())
+}
+
+/// Apply a request's `ga` object on top of the config's GA spec.
+fn apply_ga_overrides(ga: &mut GaSpec, j: &Json) {
+    if let Some(g) = j.get("ga") {
+        ga.population = g.usize_or("population", ga.population);
+        ga.generations = g.usize_or("generations", ga.generations);
+        ga.mutation_rate = g.f64_or("mutation_rate", ga.mutation_rate);
+        ga.crossover_rate = g.f64_or("crossover_rate", ga.crossover_rate);
+        ga.acc_loss_bound = g.f64_or("acc_loss_bound", ga.acc_loss_bound);
+        ga.init_keep_prob = g.f64_or("init_keep_prob", ga.init_keep_prob);
+        ga.seed = g.usize_or("seed", ga.seed as usize) as u64;
+    }
+}
+
+/// Parse the request's per-request [`PipelineOpts`] (CLI names and
+/// defaults, except `backend` which defaults to `circuit` here).
+fn parse_opts(j: &Json) -> Result<PipelineOpts, String> {
+    let d = PipelineOpts::default();
+    let backend = match j.get("backend").and_then(Json::as_str) {
+        None => EvalBackend::Circuit,
+        Some(s) => EvalBackend::parse(s)
+            .ok_or_else(|| format!("unknown backend '{s}' (auto|pjrt|native|circuit)"))?,
+    };
+    let objective = match j.get("objective").and_then(Json::as_str) {
+        None => d.objective,
+        Some(s) => CostObjective::parse_detailed(s)?,
+    };
+    let synth = match j.get("synth").and_then(Json::as_str) {
+        None => d.synth,
+        Some(s) => {
+            SynthMode::parse(s).ok_or_else(|| format!("unknown synth mode '{s}' (incr|full)"))?
+        }
+    };
+    let lane_width = match j.get("lane_width").and_then(Json::as_str) {
+        None => d.lane_width,
+        Some(s) => {
+            wave::LaneWidth::parse(s).ok_or_else(|| format!("unknown lane width '{s}' (64|256)"))?
+        }
+    };
+    let verify = match j.get("verify").and_then(Json::as_str) {
+        None => d.verify,
+        Some(s) => VerifyMode::parse(s)
+            .ok_or_else(|| format!("unknown verify mode '{s}' (off|boundaries|every-gen)"))?,
+    };
+    Ok(PipelineOpts {
+        backend,
+        synth,
+        objective,
+        max_delay_ms: j.get("max_delay_ms").and_then(Json::as_f64),
+        jobs: j.usize_or("jobs", d.jobs),
+        islands: j.usize_or("islands", d.islands).max(1),
+        lane_width,
+        share_cones: j.bool_or("share_cones", d.share_cones),
+        verify,
+        max_hw_points: j.usize_or("max_hw_points", d.max_hw_points),
+        synth_baseline: j.bool_or("synth_baseline", d.synth_baseline),
+        approx_argmax: j.bool_or("approx_argmax", d.approx_argmax),
+        verbose: j.bool_or("verbose", false),
+    })
+}
+
+/// Serve requests from `input` until EOF, one response line per request
+/// (flushed after each so pipe-connected clients can stream).
+pub fn serve_lines<R: BufRead, W: Write>(
+    server: &mut Server,
+    input: R,
+    mut output: W,
+) -> io::Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = server.handle_line(&line);
+        writeln!(output, "{}", resp.to_string_compact())?;
+        output.flush()?;
+    }
+    Ok(())
+}
+
+/// `pmlp serve` over stdin/stdout. Returns on EOF — the clean shutdown.
+pub fn serve_stdio() -> io::Result<()> {
+    let stdin = io::stdin();
+    let stdout = io::stdout();
+    let mut server = Server::new();
+    serve_lines(&mut server, stdin.lock(), stdout.lock())
+}
+
+/// `pmlp serve --addr HOST:PORT`: accept connections sequentially on
+/// one listener, sharing the warm study cache across them. A
+/// connection-level I/O error is reported and the listener keeps
+/// accepting; a listener-level error returns.
+pub fn serve_tcp(addr: &str) -> io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    // Announce the bound address (stdout, one JSON line) so callers
+    // binding port 0 can discover the port.
+    println!(
+        "{}",
+        Json::obj(vec![("ok", Json::Bool(true)), ("listening", Json::str(&local.to_string()))])
+            .to_string_compact()
+    );
+    io::stdout().flush()?;
+    serve_listener(listener, &mut Server::new())
+}
+
+/// The accept loop behind [`serve_tcp`], factored out so tests can bind
+/// their own listener.
+pub fn serve_listener(listener: TcpListener, server: &mut Server) -> io::Result<()> {
+    for conn in listener.incoming() {
+        let stream = conn?;
+        let reader = BufReader::new(stream.try_clone()?);
+        if let Err(e) = serve_lines(server, reader, stream) {
+            telemetry::info("serve", &format!("connection error: {e}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Pipeline;
+
+    const REQ: &str = r#"{"dataset":"tiny","backend":"circuit","ga":{"population":16,"generations":2},"max_hw_points":2,"synth_baseline":false,"id":7}"#;
+
+    #[test]
+    fn serve_round_trip_warm_repeat_and_isolation() {
+        let mut server = Server::new();
+        let input = format!("{REQ}\n\n{REQ}\n");
+        let mut out = Vec::new();
+        serve_lines(&mut server, input.as_bytes(), &mut out).expect("serve");
+        let text = String::from_utf8(out).expect("utf8");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one response per request, blank lines skipped");
+        let a = Json::parse(lines[0]).expect("first response");
+        let b = Json::parse(lines[1]).expect("second response");
+
+        for r in [&a, &b] {
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            assert_eq!(r.get("id").and_then(Json::as_f64), Some(7.0), "id echoed");
+            assert_eq!(
+                r.get("metrics").and_then(|m| m.get("schema")).and_then(Json::as_str),
+                Some("pmlp.metrics/1")
+            );
+            assert!(r.get("result").and_then(|x| x.get("front")).is_some());
+        }
+        // Cold request builds the study and synthesizes every design;
+        // the repeat runs entirely from parked state.
+        assert_eq!(a.get("warm_study").and_then(Json::as_bool), Some(false));
+        assert_eq!(b.get("warm_study").and_then(Json::as_bool), Some(true));
+        assert!(a.get("designs_synthesized").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(b.get("designs_synthesized").and_then(Json::as_f64), Some(0.0));
+        // Request isolation: the warm answer is bit-identical to the
+        // cold one (fronts, warm survivor hardware, designs).
+        assert_eq!(a.get("result"), b.get("result"));
+        assert_eq!(server.studies.len(), 1);
+    }
+
+    #[test]
+    fn serve_matches_one_shot_pipeline() {
+        // The serve layer must answer exactly what `Pipeline::run`
+        // reports for the same spec — warm plumbing changes nothing.
+        let mut cfg = builtin::tiny();
+        cfg.ga.population = 16;
+        cfg.ga.generations = 2;
+        let opts = PipelineOpts {
+            backend: EvalBackend::Circuit,
+            max_hw_points: 2,
+            synth_baseline: false,
+            ..Default::default()
+        };
+        let direct = Pipeline::new(cfg, opts).run().expect("pipeline");
+        let direct_json = report::result_to_json(&direct);
+
+        let mut server = Server::new();
+        let resp = server.handle_line(REQ);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("result"), Some(&direct_json));
+    }
+
+    #[test]
+    fn serve_reports_errors_inline_and_keeps_serving() {
+        let mut server = Server::new();
+        let bad = server.handle_line("{nonsense");
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(bad.get("error").and_then(Json::as_str).unwrap().contains("bad request JSON"));
+
+        let unknown = server.handle_line(r#"{"dataset":"nope","id":"x"}"#);
+        assert_eq!(unknown.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(unknown.get("id").and_then(Json::as_str), Some("x"));
+        assert!(unknown.get("error").and_then(Json::as_str).unwrap().contains("unknown dataset"));
+
+        let invalid = server
+            .handle_line(r#"{"dataset":"tiny","backend":"native","objective":"area+power"}"#);
+        assert_eq!(
+            invalid.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "measured objective needs circuit"
+        );
+
+        // Still serves after three errors.
+        let ok = server.handle_line(REQ);
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn study_key_ignores_ga_budget_but_not_backend() {
+        let a = builtin::tiny();
+        let mut b = builtin::tiny();
+        b.ga.population = 999;
+        b.ga.seed = 123;
+        assert_eq!(study_key(&a, EvalBackend::Circuit), study_key(&b, EvalBackend::Circuit));
+        assert_ne!(study_key(&a, EvalBackend::Circuit), study_key(&a, EvalBackend::Native));
+        let mut c = builtin::tiny();
+        c.hw.clock_ms += 1.0;
+        assert_ne!(study_key(&a, EvalBackend::Circuit), study_key(&c, EvalBackend::Circuit));
+    }
+}

@@ -158,23 +158,61 @@ pub enum CostObjective {
     AreaPowerDelay,
 }
 
+/// The canonical `--objective` / `PMLP_OBJECTIVE` option list — the one
+/// source of truth every parse error, panic, and help text derives from
+/// (CLI `--objective`, the bench harnesses' env readers, `pmlp serve`
+/// request validation). Adding a variant means updating
+/// [`CostObjective::parse_detailed`] and this string together; the label
+/// round-trip test pins them against each other.
+pub const OBJECTIVE_OPTIONS: &str = "fa|area|power|delay|area+power|area+power+delay";
+
 impl CostObjective {
     /// Parse an objective name. Compound objectives are order- and
     /// case-insensitive (`power+area`, `AREA+POWER+DELAY`), so env-var
     /// driven harnesses can't silently fall back to the default over a
-    /// spelling that names the right axes.
+    /// spelling that names the right axes. Thin wrapper over
+    /// [`CostObjective::parse_detailed`] for callers that only need the
+    /// yes/no answer.
     pub fn parse(s: &str) -> Option<CostObjective> {
+        CostObjective::parse_detailed(s).ok()
+    }
+
+    /// Parse an objective name with a structured diagnostic: the error
+    /// names the offending `+`-segment — empty (`area++power`), unknown
+    /// (`area+watts`), or duplicated (`area+area`) — or the unsupported
+    /// axis combination, and always carries [`OBJECTIVE_OPTIONS`].
+    pub fn parse_detailed(s: &str) -> Result<CostObjective, String> {
         let lower = s.to_lowercase();
         let mut parts: Vec<&str> = lower.split('+').map(str::trim).collect();
+        for part in &parts {
+            if part.is_empty() {
+                return Err(format!(
+                    "empty axis segment in '{s}' (expected {OBJECTIVE_OPTIONS})"
+                ));
+            }
+            if !matches!(*part, "fa" | "area" | "power" | "delay") {
+                return Err(format!(
+                    "unknown axis '{part}' in '{s}' (expected {OBJECTIVE_OPTIONS})"
+                ));
+            }
+        }
         parts.sort_unstable();
+        if let Some(w) = parts.windows(2).find(|w| w[0] == w[1]) {
+            return Err(format!(
+                "duplicate axis '{}' in '{s}' (expected {OBJECTIVE_OPTIONS})",
+                w[0]
+            ));
+        }
         match parts.as_slice() {
-            ["fa"] => Some(CostObjective::Fa),
-            ["area"] => Some(CostObjective::Area),
-            ["power"] => Some(CostObjective::Power),
-            ["delay"] => Some(CostObjective::Delay),
-            ["area", "power"] => Some(CostObjective::AreaPower),
-            ["area", "delay", "power"] => Some(CostObjective::AreaPowerDelay),
-            _ => None,
+            ["fa"] => Ok(CostObjective::Fa),
+            ["area"] => Ok(CostObjective::Area),
+            ["power"] => Ok(CostObjective::Power),
+            ["delay"] => Ok(CostObjective::Delay),
+            ["area", "power"] => Ok(CostObjective::AreaPower),
+            ["area", "delay", "power"] => Ok(CostObjective::AreaPowerDelay),
+            _ => Err(format!(
+                "unsupported axis combination '{s}' (expected {OBJECTIVE_OPTIONS})"
+            )),
         }
     }
 
@@ -587,7 +625,8 @@ mod tests {
         assert_eq!(CostObjective::Power.label(), "power");
         assert_eq!(CostObjective::AreaPower.label(), "area+power");
         assert_eq!(CostObjective::AreaPowerDelay.label(), "area+power+delay");
-        // Round trip: every label parses back to its own variant.
+        // Round trip: every label parses back to its own variant, and
+        // appears verbatim in the canonical option list.
         for o in [
             CostObjective::Fa,
             CostObjective::Area,
@@ -597,7 +636,41 @@ mod tests {
             CostObjective::AreaPowerDelay,
         ] {
             assert_eq!(CostObjective::parse(o.label()), Some(o), "{o:?}");
+            assert!(
+                OBJECTIVE_OPTIONS.split('|').any(|opt| opt == o.label()),
+                "{o:?} label missing from OBJECTIVE_OPTIONS"
+            );
         }
+    }
+
+    #[test]
+    fn cost_objective_parse_diagnostics() {
+        let err = |s: &str| CostObjective::parse_detailed(s).unwrap_err();
+        // Every diagnostic names the offending segment and the canonical
+        // option list, so no env/CLI consumer ever reports a bare "no".
+        let e = err("area+area");
+        assert!(e.contains("duplicate axis 'area'"), "{e}");
+        let e = err("area++power");
+        assert!(e.contains("empty axis segment"), "{e}");
+        let e = err("");
+        assert!(e.contains("empty axis segment"), "{e}");
+        let e = err("area+watts");
+        assert!(e.contains("unknown axis 'watts'"), "{e}");
+        let e = err("fa+power");
+        assert!(e.contains("unsupported axis combination 'fa+power'"), "{e}");
+        let e = err("area+delay");
+        assert!(e.contains("unsupported axis combination"), "{e}");
+        for s in ["area+area", "area++power", "watts", "fa+power", ""] {
+            assert!(err(s).contains(OBJECTIVE_OPTIONS), "option list missing for '{s}'");
+        }
+        // Case/order insensitivity holds on the detailed surface too.
+        assert_eq!(
+            CostObjective::parse_detailed("Delay+POWER+area"),
+            Ok(CostObjective::AreaPowerDelay)
+        );
+        // Duplicates are reported case-insensitively.
+        let e = err("Area+AREA");
+        assert!(e.contains("duplicate axis 'area'"), "{e}");
     }
 
     #[test]

@@ -139,6 +139,107 @@ pub fn evaluate_parallel<const M: usize, E: Evaluator<M> + ?Sized>(
     which.into_iter().map(|k| uniq_objs[k]).collect()
 }
 
+/// Generations between ring-migration steps of the island model —
+/// how often the shard→island assignment rotates (see
+/// [`evaluate_islands`]). Override with
+/// [`Nsga2::with_migration_interval`].
+pub const DEFAULT_MIGRATION_INTERVAL: usize = 4;
+
+/// Island-sharded population evaluation (`--islands K`).
+///
+/// The batch is globally deduped exactly like [`evaluate_parallel`]
+/// (first-occurrence order), then the unique-genome list is split into
+/// `K` *contiguous shards*, and island `k` evaluates shard
+/// `(k + round) % K` through its own `par_map_with` fan-out — its own
+/// worker states, i.e. its own leased synthesis arenas and wave caches
+/// in the circuit backend. `round` advances at migration boundaries
+/// (every [`Nsga2::migration_interval`] generations), rotating the
+/// shard→island assignment one step around the ring: that is the
+/// deterministic ring migration. Because workers are pure per genome
+/// (the [`EvalWorker`] contract), the rotation changes only *which
+/// island's warm state serves which population slice* — work
+/// attribution — never any score.
+///
+/// Bit-identical to the single-island run at any `K`, any `round`, and
+/// any `jobs` width, by construction:
+///
+/// * the dedup is global, so `ga.genomes_unique` and the memo hit/miss
+///   stream cannot depend on `K`;
+/// * shards are contiguous slices of the unique list and are
+///   reassembled in shard order before the scatter, exactly restoring
+///   [`evaluate_parallel`]'s unique-genome result order;
+/// * every deterministic [`Counter`] fires once per logical item on
+///   the same items (`ga.evaluate_calls` counts the batch, not the
+///   islands), so counter totals match the single-island run too.
+///
+/// Pinned by `rust/tests/island_determinism.rs` across
+/// `--islands {1,2,4}` × `--jobs {1,8}`.
+pub fn evaluate_islands<const M: usize, E: Evaluator<M> + ?Sized>(
+    ev: &E,
+    genomes: &[BitVec],
+    jobs: usize,
+    islands: usize,
+    round: usize,
+) -> Vec<[f64; M]> {
+    let islands = islands.max(1);
+    if islands == 1 {
+        return evaluate_parallel(ev, genomes, jobs);
+    }
+    telemetry::count(Counter::GaEvaluateCalls, 1);
+    telemetry::count(Counter::GaGenomesIn, genomes.len() as u64);
+    if let Some(objs) = ev.evaluate_batch(genomes) {
+        assert_eq!(objs.len(), genomes.len(), "evaluator returned wrong arity");
+        return objs;
+    }
+    // Global dedup in first-occurrence order — identical to
+    // `evaluate_parallel`.
+    let mut uniq: Vec<&BitVec> = Vec::new();
+    let mut slot: HashMap<&BitVec, usize> = HashMap::new();
+    let mut which = Vec::with_capacity(genomes.len());
+    for g in genomes {
+        let k = *slot.entry(g).or_insert_with(|| {
+            uniq.push(g);
+            uniq.len() - 1
+        });
+        which.push(k);
+    }
+    telemetry::count(Counter::GaGenomesUnique, uniq.len() as u64);
+    let _sp = crate::span!("evaluate");
+    // Contiguous shard bounds over the unique list (last shard may be
+    // short or empty when K doesn't divide the batch).
+    let shard_size = uniq.len().div_ceil(islands);
+    let bounds = |c: usize| -> (usize, usize) {
+        let lo = (c * shard_size).min(uniq.len());
+        let hi = ((c + 1) * shard_size).min(uniq.len());
+        (lo, hi)
+    };
+    let inner_jobs = jobs.max(1).div_ceil(islands).max(1);
+    // The islands fan out concurrently, each running its own inner
+    // worker pool; nested `par_map_with` merges each island's telemetry
+    // block into its island thread, and the outer map merges those into
+    // the caller — totals flow up the whole tree as usual.
+    let per_island: Vec<(usize, Vec<[f64; M]>)> = threads::par_map(islands, islands, |k| {
+        let c = (k + round) % islands;
+        let (lo, hi) = bounds(c);
+        let objs = threads::par_map_with(
+            hi - lo,
+            inner_jobs,
+            || ev.worker(),
+            |w, i| w.eval_one(uniq[lo + i]),
+        );
+        (c, objs)
+    });
+    // Reassemble shards in shard order (undoing the ring rotation).
+    let mut uniq_objs: Vec<Option<[f64; M]>> = vec![None; uniq.len()];
+    for (c, objs) in per_island {
+        let (lo, _) = bounds(c);
+        for (i, o) in objs.into_iter().enumerate() {
+            uniq_objs[lo + i] = Some(o);
+        }
+    }
+    which.into_iter().map(|k| uniq_objs[k].expect("shard covered index")).collect()
+}
+
 /// One individual of the population.
 #[derive(Clone, Debug)]
 pub struct Individual<const M: usize = 2> {
@@ -353,6 +454,27 @@ pub fn pareto_front_by<const M: usize>(
     front
 }
 
+/// Deterministic front-union merge: concatenate per-shard fronts *in
+/// shard order* and re-extract the feasible non-dominated front.
+///
+/// When the shards are contiguous slices of one population (the island
+/// model's invariant, [`evaluate_islands`]), this reproduces
+/// `pareto_front_by(whole population)` bit-identically, genome identity
+/// included: a globally non-dominated individual survives its own
+/// shard's front (fewer competitors) and then the merge; a shard-local
+/// survivor dominated by another shard's member dies in the merge; and
+/// because concatenating contiguous shards in shard order restores the
+/// population order, the first-occurrence dedup of identical objective
+/// vectors picks the same representative either way. Pinned by the
+/// island determinism suite.
+pub fn merge_front_union<const M: usize>(
+    shard_fronts: &[Vec<Individual<M>>],
+    constraints: &Constraints,
+) -> Vec<Individual<M>> {
+    let union: Vec<Individual<M>> = shard_fronts.iter().flatten().cloned().collect();
+    pareto_front_by(&union, constraints)
+}
+
 /// The optimizer, const-generic over objective arity `M` (objective 0
 /// is always the constrained accuracy loss).
 pub struct Nsga2<'a, const M: usize = 2> {
@@ -370,11 +492,27 @@ pub struct Nsga2<'a, const M: usize = 2> {
     /// (`--max-delay` on the objective's delay axis) folded into
     /// constrained domination alongside the accuracy bound.
     pub max_delay: Option<(usize, f64)>,
+    /// Island count of the evaluation sharding (`--islands`; `1` =
+    /// classic single-island run). Any value yields bit-identical
+    /// results — see [`evaluate_islands`].
+    pub islands: usize,
+    /// Generations between ring-migration steps (shard→island rotation)
+    /// of the island model; ignored at `islands == 1`.
+    pub migration_interval: usize,
 }
 
 impl<'a, const M: usize> Nsga2<'a, M> {
     pub fn new(spec: GaSpec, genome_len: usize, evaluator: &'a dyn Evaluator<M>) -> Self {
-        Nsga2 { spec, genome_len, evaluator, jobs: 0, seeds: Vec::new(), max_delay: None }
+        Nsga2 {
+            spec,
+            genome_len,
+            evaluator,
+            jobs: 0,
+            seeds: Vec::new(),
+            max_delay: None,
+            islands: 1,
+            migration_interval: DEFAULT_MIGRATION_INTERVAL,
+        }
     }
 
     /// Builder-style seed injection.
@@ -386,6 +524,22 @@ impl<'a, const M: usize> Nsga2<'a, M> {
     /// Builder-style worker count (`0` = auto).
     pub fn with_jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs;
+        self
+    }
+
+    /// Builder-style island count (`0`/`1` = single island). Evaluation
+    /// shards across `islands` sub-fan-outs with deterministic ring
+    /// migration; results are bit-identical at any count.
+    pub fn with_islands(mut self, islands: usize) -> Self {
+        self.islands = islands.max(1);
+        self
+    }
+
+    /// Builder-style migration interval: generations between ring
+    /// rotations of the shard→island assignment (must be >= 1).
+    pub fn with_migration_interval(mut self, interval: usize) -> Self {
+        assert!(interval >= 1, "migration interval must be >= 1");
+        self.migration_interval = interval;
         self
     }
 
@@ -455,7 +609,12 @@ impl<'a, const M: usize> Nsga2<'a, M> {
         }
         let jobs = self.resolved_jobs();
         let constraints = self.constraints();
-        let objs = evaluate_parallel(self.evaluator, &genomes, jobs);
+        // Island model: the initial population evaluates at ring round 0;
+        // each generation's offspring at round `generation /
+        // migration_interval`, so the shard→island assignment rotates at
+        // fixed generation boundaries. Round only steers work placement
+        // (`evaluate_islands`); scores are round-independent.
+        let objs = evaluate_islands(self.evaluator, &genomes, jobs, self.islands, 0);
         self.count_violations(&objs);
         let mut pop: Vec<Individual<M>> = genomes
             .into_iter()
@@ -493,7 +652,9 @@ impl<'a, const M: usize> Nsga2<'a, M> {
             // detlint: allow(wallclock) — debug-level throughput log only,
             // never feeds scores or selection.
             let t0 = std::time::Instant::now();
-            let off_objs = evaluate_parallel(self.evaluator, &offspring_genomes, jobs);
+            let round = generation / self.migration_interval;
+            let off_objs =
+                evaluate_islands(self.evaluator, &offspring_genomes, jobs, self.islands, round);
             self.count_violations(&off_objs);
             if telemetry::log_enabled(telemetry::Level::Debug) {
                 let dt = t0.elapsed().as_secs_f64().max(1e-9);
@@ -969,6 +1130,135 @@ mod tests {
         assert_eq!(serial.len(), genomes.len());
         assert_eq!(serial[0], serial[7]);
         assert_eq!(serial[0], *serial.last().unwrap());
+    }
+
+    #[test]
+    fn evaluate_islands_matches_parallel_any_shape() {
+        // The sharded path must be bit-identical to `evaluate_parallel`
+        // for every island count, ring round, and jobs width — including
+        // K > unique genomes (empty shards) and duplicated inputs.
+        let toy = Toy { len: 32 };
+        let mut rng = Rng::new(91);
+        let mut genomes: Vec<BitVec> = (0..37)
+            .map(|_| {
+                let bools: Vec<bool> = (0..32).map(|_| rng.chance(0.5)).collect();
+                BitVec::from_bools(&bools)
+            })
+            .collect();
+        let dup = genomes[3].clone();
+        genomes.push(dup.clone());
+        genomes.insert(11, dup);
+        let reference = evaluate_parallel(&toy, &genomes, 1);
+        for islands in [1, 2, 4, 7, 64] {
+            for round in [0, 1, 2, 5] {
+                for jobs in [1, 8] {
+                    let got = evaluate_islands(&toy, &genomes, jobs, islands, round);
+                    assert_eq!(
+                        got, reference,
+                        "islands {islands}, round {round}, jobs {jobs}"
+                    );
+                }
+            }
+        }
+        // Empty batch never panics.
+        assert!(evaluate_islands(&toy, &[], 4, 3, 1).is_empty());
+    }
+
+    #[test]
+    fn evaluate_islands_counters_match_single_island() {
+        // The deterministic counter totals are part of the contract: the
+        // island path must count the same events as one island.
+        let toy = Toy { len: 16 };
+        let genomes: Vec<BitVec> = (0..9)
+            .map(|i| {
+                let bools: Vec<bool> = (0..16).map(|b| b <= i).collect();
+                BitVec::from_bools(&bools)
+            })
+            .collect();
+        let counts = |islands: usize| {
+            let before = telemetry::thread_block();
+            let _ = evaluate_islands(&toy, &genomes, 8, islands, 1);
+            telemetry::thread_block().delta(&before).counters
+        };
+        let one = counts(1);
+        for islands in [2, 3, 4] {
+            assert_eq!(counts(islands), one, "islands {islands}");
+        }
+        assert_eq!(one[Counter::GaEvaluateCalls as usize], 1);
+        assert_eq!(one[Counter::GaGenomesIn as usize], 9);
+        assert_eq!(one[Counter::GaGenomesUnique as usize], 9);
+    }
+
+    #[test]
+    fn merge_front_union_matches_global_front() {
+        // Contiguous shards of one population: per-shard fronts merged
+        // by front union must reproduce the global front bit-identically
+        // (genomes included) — the island model's merge argument.
+        let mut rng = Rng::new(57);
+        let c = Constraints { acc_loss_bound: 0.6, max_delay: Some((1, 80.0)) };
+        for trial in 0..20 {
+            let n = 8 + rng.below(40);
+            let pop: Vec<Individual<2>> = (0..n)
+                .map(|i| {
+                    // Coarse grid so identical objective vectors (the
+                    // dedup path) and infeasible points both occur.
+                    let objs =
+                        [(rng.below(8) as f64) * 0.1, (rng.below(10) as f64) * 10.0];
+                    let bools: Vec<bool> = (0..8).map(|b| (i >> b) & 1 == 1).collect();
+                    Individual { genome: BitVec::from_bools(&bools), objs }
+                })
+                .collect();
+            let global = pareto_front_by(&pop, &c);
+            for islands in [1usize, 2, 3, 5] {
+                let shard_size = pop.len().div_ceil(islands);
+                let shard_fronts: Vec<Vec<Individual<2>>> = (0..islands)
+                    .map(|k| {
+                        let lo = (k * shard_size).min(pop.len());
+                        let hi = ((k + 1) * shard_size).min(pop.len());
+                        pareto_front_by(&pop[lo..hi], &c)
+                    })
+                    .collect();
+                let merged = merge_front_union(&shard_fronts, &c);
+                let key = |f: &[Individual<2>]| -> Vec<(Vec<bool>, [f64; 2])> {
+                    f.iter().map(|i| (i.genome.iter().collect(), i.objs)).collect()
+                };
+                assert_eq!(
+                    key(&merged),
+                    key(&global),
+                    "trial {trial}, islands {islands}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn islands_do_not_change_ga_result() {
+        // The island tentpole invariant at GA level: any island count ×
+        // jobs width produces a bit-identical GaResult, including the
+        // per-generation log stream.
+        let toy = Toy { len: 30 };
+        let run = |islands: usize, jobs: usize| {
+            let mut logs = Vec::new();
+            let r = Nsga2::<2>::new(spec(), 30, &toy)
+                .with_jobs(jobs)
+                .with_islands(islands)
+                .with_migration_interval(2)
+                .run(|g, snap| logs.push((g, snap.history.clone())));
+            let fronts: Vec<(Vec<bool>, [f64; 2])> =
+                r.front.iter().map(|i| (i.genome.iter().collect(), i.objs)).collect();
+            let pops: Vec<(Vec<bool>, [f64; 2])> = r
+                .population
+                .iter()
+                .map(|i| (i.genome.iter().collect(), i.objs))
+                .collect();
+            (fronts, pops, r.history, logs)
+        };
+        let reference = run(1, 1);
+        for islands in [2, 4] {
+            for jobs in [1, 8] {
+                assert_eq!(run(islands, jobs), reference, "islands {islands}, jobs {jobs}");
+            }
+        }
     }
 
     #[test]

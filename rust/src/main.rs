@@ -10,6 +10,10 @@
 //!   repro    --exp <id>          regenerate a paper table/figure
 //!                                (table2|table3|table4|table5|fig4|fig5|all)
 //!   ablation --dataset <name>    PJRT-vs-native evaluator throughput
+//!   serve    [--addr HOST:PORT]  resident design service: line-delimited
+//!                                JSON requests over stdio (default) or
+//!                                TCP, warm studies across requests,
+//!                                per-request pmlp.metrics/1 deltas
 //!   lint     --dataset <name>    standalone invariant verification: run
 //!                                every `synth::verify` check over the
 //!                                dataset's template and a deterministic
@@ -23,6 +27,9 @@
 //! chromosome — bit-identical outputs),
 //! --jobs N (GA evaluation worker threads; 0 = auto; any value yields
 //! bit-identical results),
+//! --islands K (deterministic GA evaluation islands with ring migration
+//! at fixed generation boundaries; results and telemetry counters are
+//! bit-identical for every K — default 1),
 //! --lane-width 64|256 (circuit backend: wave-simulator lanes per pass —
 //! 256-lane blocks by default, 64 is the legacy width; bit-identical),
 //! --share-cones on|off (circuit backend: generation-scoped shared-cone
@@ -163,9 +170,10 @@ impl Args {
 
     fn objective(&self) -> Result<CostObjective> {
         let s = self.get("objective").unwrap_or("fa");
-        CostObjective::parse(s).ok_or_else(|| {
-            anyhow!("bad --objective '{s}' (fa|area|power|delay|area+power|area+power+delay)")
-        })
+        // The detailed parser names the offending segment and carries
+        // the canonical option list (egfet::OBJECTIVE_OPTIONS) — one
+        // source of truth, no hand-kept copies of the choices here.
+        CostObjective::parse_detailed(s).map_err(|e| anyhow!("bad --objective: {e}"))
     }
 
     fn max_delay(&self) -> Result<Option<f64>> {
@@ -184,6 +192,14 @@ impl Args {
 
     fn jobs(&self) -> Result<usize> {
         Ok(self.get("jobs").map(|v| v.parse()).transpose()?.unwrap_or(0))
+    }
+
+    fn islands(&self) -> Result<usize> {
+        let k: usize = self.get("islands").map(|v| v.parse()).transpose()?.unwrap_or(1);
+        if k == 0 {
+            bail!("bad --islands '0' (need at least one island)");
+        }
+        Ok(k)
     }
 
     fn lane_width(&self) -> Result<wave::LaneWidth> {
@@ -272,6 +288,7 @@ fn run() -> Result<()> {
                 objective: args.objective()?,
                 max_delay_ms: args.max_delay()?,
                 jobs: args.jobs()?,
+                islands: args.islands()?,
                 lane_width: args.lane_width()?,
                 share_cones: args.share_cones()?,
                 verify: args.verify()?,
@@ -284,6 +301,11 @@ fn run() -> Result<()> {
                 approx_argmax: args.get("no-argmax").is_none(),
                 verbose: true,
             };
+            // Baseline the telemetry store before the pipeline so the
+            // metrics document is scoped to *this* run — in-process
+            // embedders (and `pmlp serve`) get per-run deltas instead of
+            // ever-accumulating process totals.
+            let metrics_base = telemetry::baseline();
             let result = Pipeline::new(cfg, opts).run()?;
             // Human summary.
             let mut rows = Vec::new();
@@ -336,7 +358,7 @@ fn run() -> Result<()> {
                 .or_else(|| std::env::var("PMLP_METRICS_OUT").ok().filter(|s| !s.is_empty()));
             let want_profile = args.get("profile").is_some();
             if metrics_path.is_some() || want_profile {
-                let metrics = telemetry::snapshot();
+                let metrics = telemetry::snapshot_since(&metrics_base);
                 if let Some(path) = &metrics_path {
                     let doc = telemetry::metrics_json(&metrics).to_string_pretty();
                     std::fs::write(path, doc)?;
@@ -421,6 +443,19 @@ fn run() -> Result<()> {
             let name = args.get("dataset").unwrap_or("cardio");
             let n = args.get("n").map(|v| v.parse()).transpose()?.unwrap_or(64);
             args.emit(&bench::ablation_evaluators(name, n))
+        }
+        "serve" => {
+            // Resident design service: line-delimited JSON requests,
+            // one response line each (Pareto report + per-request
+            // pmlp.metrics/1 delta), over stdio by default or a TCP
+            // listener with --addr. Studies (trained model, synthesis
+            // template, evaluator memos, design kernels) stay warm
+            // across requests; EOF / peer close is the clean shutdown.
+            match args.get("addr") {
+                Some(addr) => printed_mlp::coordinator::serve::serve_tcp(addr)?,
+                None => printed_mlp::coordinator::serve::serve_stdio()?,
+            }
+            Ok(())
         }
         "lint" => {
             // Standalone invariant verification: every `synth::verify`
@@ -522,8 +557,23 @@ fn run() -> Result<()> {
                  meets timing [default: the dataset's clock budget];\n                            \
                  --jobs N = GA evaluation worker threads, 0/auto by default —\n                            \
                  each worker owns its own synth arena + wave cache and any\n                            \
-                 width produces bit-identical results)\n  \
+                 width produces bit-identical results;\n                            \
+                 --islands K [default 1] shards each generation's unique\n                            \
+                 genomes over K evaluation islands with deterministic\n                            \
+                 ring migration at fixed generation boundaries and a\n                            \
+                 Pareto-union merge — results and telemetry counters are\n                            \
+                 bit-identical for every K and every --jobs)\n  \
                  train --dataset <name>    training + QAT only\n  \
+                 serve [--addr HOST:PORT]  resident design service: one JSON request per line\n                            \
+                 ({{\"dataset\": ..., \"objective\": ..., \"ga\": {{...}},\n                            \
+                 \"max_delay_ms\": ..., \"jobs\": ..., \"islands\": ...}}), one\n                            \
+                 response line each (Pareto front + designs + per-request\n                            \
+                 pmlp.metrics/1 delta); stdio by default, TCP with --addr\n                            \
+                 (port 0 announces the bound port); studies — trained\n                            \
+                 model, synthesis template, evaluator fitness memos with\n                            \
+                 parked survivor hardware, design kernels — stay warm\n                            \
+                 across requests, so a repeated request reports\n                            \
+                 designs_synthesized = 0; EOF is the clean shutdown\n  \
                  gen-data --dataset <name> dump synthetic dataset CSV [--out f.csv]\n  \
                  repro --exp <id>          regenerate table2|table3|table4|table5|fig4|fig5|all [--scale smoke|small|paper]\n  \
                  ablation --dataset <name> evaluator throughput (native vs PJRT vs circuit) [--n N]\n  \

@@ -127,6 +127,26 @@ pub fn result_to_json(r: &PipelineResult) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "front_hw",
+            // Aligned with `front`: measured survivor hardware rolled up
+            // warm from the circuit evaluator's parked census state
+            // (null per member on non-circuit backends or from-scratch
+            // synthesis — nothing is re-synthesized for this field).
+            Json::arr(
+                r.front_hw
+                    .iter()
+                    .map(|hw| match hw {
+                        Some((area, power, delay)) => Json::obj(vec![
+                            ("area_cm2", Json::num(*area)),
+                            ("power_mw", Json::num(*power)),
+                            ("delay_ms", Json::num(*delay)),
+                        ]),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        ),
     ];
     if let Some(hw) = &r.baseline_hw {
         fields.push((

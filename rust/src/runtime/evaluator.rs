@@ -437,10 +437,17 @@ pub struct CircuitEvaluator<const M: usize = 2> {
     /// [`VerifyMode::Off`] — zero cost on the hot path). Violations are
     /// counted (`verify.violations`) and logged, never panicked on.
     verify: VerifyMode,
-    /// Cross-generation fitness memo (full-genome keys).
-    memo: ShardedMap<BitVec, [f64; M]>,
-    /// The shared parameterized netlist, built on first incremental use.
-    template: OnceLock<Template>,
+    /// Cross-generation fitness memo (full-genome keys). Each entry
+    /// parks the survivor's hardware state next to the objective vector
+    /// ([`MemoEntry`]) so warm consumers — the serve layer's repeated
+    /// requests — can roll hardware reports up from the census without
+    /// re-synthesizing anything.
+    memo: ShardedMap<BitVec, MemoEntry<M>>,
+    /// The shared parameterized netlist, built on first incremental use
+    /// or injected up front by a warm-state owner
+    /// ([`Self::with_template`] — the serve layer shares one template
+    /// across evaluator arities through its keyed cache).
+    template: OnceLock<Arc<Template>>,
     /// Parked per-worker incremental states, reused across generations.
     incr_pool: Mutex<Vec<IncrState>>,
 }
@@ -515,6 +522,34 @@ impl EvalCache {
 struct IncrState {
     synth: IncrementalSynth,
     wave: EvalCache,
+}
+
+/// One survivor's parked hardware state: the cell census, the raw
+/// toggle total over the live cells and their count (the two integers
+/// the activity ratio divides), and the measured critical path — the
+/// emit-time by-products of the incremental pass the chromosome already
+/// paid for. Everything a warm consumer needs to re-derive the measured
+/// axes (`analyze_histogram` plus the activity division, bit-identical
+/// to the evaluation-time roll-up) without leasing a synthesis arena.
+#[derive(Clone, Debug)]
+pub struct HwMemo {
+    pub census: CellCounts,
+    pub toggle_sum: u64,
+    pub live_cells: usize,
+    pub delay_ms: f64,
+}
+
+/// A fitness-memo entry: the objective vector the GA consumes plus the
+/// optionally parked hardware state. `hw` is filled by the incremental
+/// path (whatever the objective — FA runs park it too, so a later
+/// measured query over the same study starts warm) and `None` in full
+/// mode, whose from-scratch survivor is dropped after scoring. Behind
+/// an [`Arc`] because every memo probe clones the entry out of the
+/// shard.
+#[derive(Clone, Debug)]
+struct MemoEntry<const M: usize> {
+    objs: [f64; M],
+    hw: Option<Arc<HwMemo>>,
 }
 
 /// Reset a worker's incremental state when its append-only arena (and
@@ -670,6 +705,24 @@ impl<const M: usize> CircuitEvaluator<M> {
         self
     }
 
+    /// Inject a pre-built shared template instead of building one lazily
+    /// on first incremental use. This is how the serve layer promotes
+    /// the per-evaluator `OnceLock` to a keyed cache: one
+    /// `Arc<Template>` per study, shared across requests and across
+    /// objective arities (a 2-, 3- and 4-objective evaluator over the
+    /// same model instantiate the identical template). The injected
+    /// template must match this evaluator's genome map — same pin the
+    /// lazy build asserts. No-op if the template was already built.
+    pub fn with_template(self, tpl: Arc<Template>) -> CircuitEvaluator<M> {
+        assert_eq!(
+            tpl.n_params,
+            self.map.len(),
+            "injected template param sites must match the genome map"
+        );
+        let _ = self.template.set(tpl);
+        self
+    }
+
     pub fn mode(&self) -> SynthMode {
         self.mode
     }
@@ -699,6 +752,13 @@ impl<const M: usize> CircuitEvaluator<M> {
     /// verification on, the freshly built template is vetted once here —
     /// every later checkpoint re-verifies it alongside a live arena.
     fn template(&self) -> &Template {
+        self.template_arc()
+    }
+
+    /// The template behind its shared handle — what warm-state owners
+    /// clone into their keyed cache so later evaluators (any arity) can
+    /// skip the build via [`Self::with_template`].
+    pub fn template_arc(&self) -> &Arc<Template> {
         self.template.get_or_init(|| {
             let tpl = build_mlp_template(&self.mlp, &ArgmaxMode::Exact);
             assert_eq!(
@@ -709,7 +769,7 @@ impl<const M: usize> CircuitEvaluator<M> {
             if self.verify != VerifyMode::Off {
                 report_violations(&verify::verify_template(&tpl, Some(self.map.len())));
             }
-            tpl
+            Arc::new(tpl)
         })
     }
 
@@ -746,16 +806,48 @@ impl<const M: usize> CircuitEvaluator<M> {
     /// bit-identical to `analyze_histogram` fed by
     /// `egfet::measured_activity` of the materialized survivor.
     fn toggle_ratio(&self, live: &[NodeId], toggles: &[u64]) -> f64 {
+        let total: u64 = live.iter().map(|&i| toggles[i as usize]).sum();
+        self.activity_of(total, live.len())
+    }
+
+    /// The activity division itself, shared by the evaluation-time ratio
+    /// above and the warm roll-up ([`Self::warm_survivor_hw`]) so the
+    /// two can never drift — warm reports must be bit-identical to what
+    /// the evaluation pass computed.
+    fn activity_of(&self, toggle_sum: u64, live_cells: usize) -> f64 {
         let n_vec = self.labels.len();
         if n_vec < 2 {
             egfet::NOMINAL_ACTIVITY
-        } else if live.is_empty() {
+        } else if live_cells == 0 {
             0.0
         } else {
-            let total: u64 = live.iter().map(|&i| toggles[i as usize]).sum();
-            let slots = live.len() as u64 * (n_vec as u64 - 1);
-            total as f64 / slots as f64
+            let slots = live_cells as u64 * (n_vec as u64 - 1);
+            toggle_sum as f64 / slots as f64
         }
+    }
+
+    /// Warm hardware roll-up of a previously evaluated genome:
+    /// `(area_cm2, power_mw, delay_ms)` re-derived from the parked
+    /// census/toggle state — one `analyze_histogram` call, no synthesis,
+    /// no simulation. `None` if the genome was never scored on this
+    /// evaluator or was scored through the full-mode path (which parks
+    /// no arena census). On measured-objective evaluators the returned
+    /// axes are bit-identical to the memoized objectives (pinned by
+    /// tests); on FA evaluators this is the only measured view of a
+    /// survivor and is what the serve layer annotates warm fronts with.
+    pub fn warm_survivor_hw(&self, genome: &BitVec) -> Option<(f64, f64, f64)> {
+        let hw = self.memo.get(genome)?.hw?;
+        let act = self.activity_of(hw.toggle_sum, hw.live_cells);
+        let (area_cm2, power_mw) = egfet::analyze_histogram(&hw.census, &self.lib, act);
+        Some((area_cm2, power_mw, hw.delay_ms))
+    }
+
+    /// Entries in the memo that carry parked hardware state — the warm
+    /// coverage the serve layer reports (`coordinator.designs_synthesized
+    /// == 0` on a repeat request requires the survivors it reuses to be
+    /// parked here or in the study's design cache).
+    pub fn memo_hw_len(&self) -> usize {
+        self.memo.count_values(|e| e.hw.is_some())
     }
 
     /// Roll a census + activity + measured delay up into the objective
@@ -881,9 +973,10 @@ impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
             // totals are a pure function of the genome stream — these
             // stay `Counter`s despite living on worker threads.
             telemetry::count(Counter::MemoHits, 1);
-            return hit;
+            return hit.objs;
         }
         telemetry::count(Counter::MemoMisses, 1);
+        let mut parked_hw = None;
         let objs = match ev.mode {
             SynthMode::Full => ev.score_full(genome),
             SynthMode::Incremental => {
@@ -905,33 +998,43 @@ impl<const M: usize> EvalWorker<M> for CircuitWorker<'_, M> {
                     .1;
                 let preds = wave.classify_bus(arena, bus);
                 let acc = ev.accuracy_of(&preds);
-                if ev.objective.is_measured() {
-                    // The census fell out of `set_params`' survivor walk
-                    // and the toggle totals out of classification — the
-                    // measured axes are a pure roll-up, no extra
-                    // synthesis or simulation (the joint area+power mode
-                    // fills both axes from the same call).
-                    let act = ev.toggle_ratio(synth.live_cell_ids(), wave.node_toggles());
-                    // The delay axis falls out of the arena's arrival
-                    // table — settled at emit time, so reading it here
-                    // is a max over the output bits, nothing more.
+                // Park the survivor's hardware state next to the
+                // objectives whatever the objective mode: the census
+                // fell out of `set_params`' survivor walk, the toggle
+                // totals out of classification and the delay out of the
+                // arena's emit-time arrival table — all by-products of
+                // the pass this chromosome already paid for. Warm
+                // consumers (serve repeats, front annotation) roll
+                // reports up from this without re-synthesis.
+                let live = synth.live_cell_ids();
+                let toggles = wave.node_toggles();
+                let toggle_sum: u64 = live.iter().map(|&i| toggles[i as usize]).sum();
+                let hw = HwMemo {
+                    census: synth.survivor_histogram().clone(),
+                    toggle_sum,
+                    live_cells: live.len(),
+                    delay_ms: synth.output_delay_ms(),
+                };
+                let objs = if ev.objective.is_measured() {
+                    // The measured axes are a pure roll-up of the parked
+                    // state (the joint area+power mode fills both axes
+                    // from the same call); the delay axis reads the
+                    // parked arrival max.
+                    let act = ev.activity_of(hw.toggle_sum, hw.live_cells);
                     let delay_ms = if ev.objective.delay_axis().is_some() {
-                        synth.output_delay_ms()
+                        hw.delay_ms
                     } else {
                         0.0
                     };
-                    ev.measured_objs(
-                        ev.loss_of(acc),
-                        synth.survivor_histogram(),
-                        act,
-                        delay_ms,
-                    )
+                    ev.measured_objs(ev.loss_of(acc), &hw.census, act, delay_ms)
                 } else {
                     ev.objectives(genome, acc)
-                }
+                };
+                parked_hw = Some(Arc::new(hw));
+                objs
             }
         };
-        ev.memo.insert(genome.clone(), objs);
+        ev.memo.insert(genome.clone(), MemoEntry { objs, hw: parked_hw });
         // Memory backstop: drop (and later re-lease) this worker's state
         // if the arena grew far beyond the template.
         let oversized = self.st.as_ref().is_some_and(|st| {
@@ -1398,6 +1501,87 @@ mod tests {
         let (qmlp, qtrain, base) = tiny_setup();
         let _ = CircuitEvaluator::new(&qmlp, &qtrain, base)
             .with_objective(CostObjective::AreaPower);
+    }
+
+    #[test]
+    fn warm_survivor_hw_matches_measured_objectives() {
+        // The parked census/toggle/delay state must reproduce the
+        // measured axes bit-identically — the warm roll-up IS the
+        // evaluation-time roll-up, minus the arena.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(113);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 8);
+        let ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base);
+        let objs = ev.evaluate(&genomes);
+        assert_eq!(
+            ev.memo_hw_len(),
+            ev.memo_len(),
+            "incremental mode parks hw state on every memo entry"
+        );
+        for (g, o) in genomes.iter().zip(&objs) {
+            let (area, power, delay) = ev.warm_survivor_hw(g).expect("parked");
+            assert_eq!(area, o[1], "warm area must be bit-identical");
+            assert_eq!(power, o[2], "warm power must be bit-identical");
+            assert_eq!(delay, o[3], "warm delay must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn warm_survivor_hw_parked_on_fa_runs_and_absent_in_full_mode() {
+        use crate::egfet::{analyze_histogram, measured_activity};
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(127);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 6);
+        // The FA objective still parks survivor state — warm consumers
+        // need measured views of surrogate-scored fronts too...
+        let fa = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        fa.evaluate(&genomes);
+        assert_eq!(fa.memo_hw_len(), fa.memo_len());
+        let warm = fa.warm_survivor_hw(&genomes[0]).expect("parked on FA run");
+        // ...and the roll-up equals a from-scratch analyze of the
+        // template survivor under wave-measured activity.
+        let tpl = build_mlp_template(&qmlp, &ArgmaxMode::Exact);
+        let (surv, _) = optimize(&tpl.instantiate(&genomes[0]));
+        let vectors: Vec<Vec<bool>> = qtrain
+            .x
+            .iter()
+            .map(|row| wave::encode_features(row, qmlp.l1.in_bits))
+            .collect();
+        let act = measured_activity(&surv, &vectors);
+        let (area, power) =
+            analyze_histogram(&surv.cell_histogram(), &Library::egfet_1v(), act);
+        assert_eq!(warm.0, area, "warm FA-run area must match fresh analysis");
+        assert_eq!(warm.1, power, "warm FA-run power must match fresh analysis");
+        // Full mode drops its survivor after scoring: nothing parks.
+        let full = CircuitEvaluator::new(&qmlp, &qtrain, base).with_mode(SynthMode::Full);
+        full.evaluate(&genomes);
+        assert_eq!(full.memo_hw_len(), 0);
+        assert!(full.warm_survivor_hw(&genomes[0]).is_none());
+        // An unseen genome has nothing parked either.
+        assert!(fa.warm_survivor_hw(&map.random_genome(&mut rng, 0.5)).is_none());
+    }
+
+    #[test]
+    fn injected_template_is_shared_and_bit_identical() {
+        // `with_template` short-circuits the lazy build (the serve
+        // layer's keyed template cache): the handle must be shared, the
+        // objectives unchanged.
+        let (qmlp, qtrain, base) = tiny_setup();
+        let mut rng = Rng::new(131);
+        let map = GenomeMap::new(&qmlp);
+        let genomes = mutation_chain(&map, &mut rng, 6);
+        let lazy = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        let want = lazy.evaluate(&genomes);
+        let tpl = lazy.template_arc().clone();
+        let warm = CircuitEvaluator::new(&qmlp, &qtrain, base).with_template(tpl.clone());
+        assert!(
+            Arc::ptr_eq(&tpl, warm.template_arc()),
+            "injected template must be the shared instance, not a rebuild"
+        );
+        let got = warm.evaluate(&genomes);
+        assert_eq!(got, want, "injected template must not change objectives");
     }
 
     #[test]

@@ -89,6 +89,15 @@ impl<K: Eq + Hash, V: Clone> ShardedMap<K, V> {
         self.shards.iter().map(|s| Self::lock_shard(s).len()).sum()
     }
 
+    /// Count entries whose value satisfies `pred` (locks each shard
+    /// once; a diagnostic walk, not a hot-path operation).
+    pub fn count_values(&self, pred: impl Fn(&V) -> bool) -> usize {
+        self.shards
+            .iter()
+            .map(|s| Self::lock_shard(s).values().filter(|v| pred(v)).count())
+            .sum()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -181,6 +190,17 @@ mod tests {
         assert!(m.get(&1).is_some());
         m.insert(2, Fragile(armed.clone()));
         assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn count_values_walks_all_shards() {
+        let m: ShardedMap<u64, u64> = ShardedMap::with_shards(4);
+        for i in 0..100u64 {
+            m.insert(i, i);
+        }
+        assert_eq!(m.count_values(|v| v % 2 == 0), 50);
+        assert_eq!(m.count_values(|_| true), 100);
+        assert_eq!(m.count_values(|_| false), 0);
     }
 
     #[test]

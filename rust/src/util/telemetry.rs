@@ -571,6 +571,82 @@ pub struct Metrics {
     pub timers: Vec<(String, u64, f64)>,
 }
 
+impl Metrics {
+    /// Subtract a `baseline` reading taken earlier in the same process,
+    /// producing a *run-scoped* reading: counters, work stats, the cone
+    /// histogram, and timer roll-ups become elementwise differences,
+    /// while gauges keep their current (last-value) readings. Timer
+    /// paths whose call count did not advance since the baseline are
+    /// dropped, so phases that only ran in an earlier run don't appear.
+    ///
+    /// Both readings must come from [`snapshot`] in this process (the
+    /// counter/work/gauge sections then share one fixed name order).
+    pub fn minus(&self, baseline: &Metrics) -> Metrics {
+        fn sub(
+            cur: &[(&'static str, u64)],
+            base: &[(&'static str, u64)],
+        ) -> Vec<(&'static str, u64)> {
+            cur.iter()
+                .zip(base)
+                .map(|((n, v), (bn, bv))| {
+                    debug_assert_eq!(n, bn, "snapshot sections share one name order");
+                    (*n, v.wrapping_sub(*bv))
+                })
+                .collect()
+        }
+        let cone_hist = self
+            .cone_hist
+            .iter()
+            .zip(&baseline.cone_hist)
+            .map(|(a, b)| a.wrapping_sub(*b))
+            .collect();
+        let timers = self
+            .timers
+            .iter()
+            .filter_map(|(path, calls, ms)| {
+                let (bc, bms) = baseline
+                    .timers
+                    .iter()
+                    .find(|(p, _, _)| p == path)
+                    .map(|(_, c, m)| (*c, *m))
+                    .unwrap_or((0, 0.0));
+                let dcalls = calls.wrapping_sub(bc);
+                if dcalls == 0 {
+                    None
+                } else {
+                    Some((path.clone(), dcalls, (ms - bms).max(0.0)))
+                }
+            })
+            .collect();
+        Metrics {
+            counters: sub(&self.counters, &baseline.counters),
+            work: sub(&self.work, &baseline.work),
+            cone_hist,
+            gauges: self.gauges.clone(),
+            timers,
+        }
+    }
+}
+
+/// Capture the registry as the *baseline* of a run about to start (the
+/// calling thread's block is flushed first, so earlier work on this
+/// thread lands on the baseline side of the split). Pair with
+/// [`snapshot_since`] to report per-run numbers: the global totals are
+/// process-lifetime accumulators, so a second in-process run — a bench
+/// loop, a repeated `run_pipeline`, every `pmlp serve` request — would
+/// otherwise report everything since process start.
+pub fn baseline() -> Metrics {
+    snapshot()
+}
+
+/// [`snapshot`] scoped to the run that started at `baseline`: counters,
+/// work stats, the cone histogram, and timers are since-the-baseline
+/// deltas; gauges are current last-value readings (see
+/// [`Metrics::minus`]).
+pub fn snapshot_since(baseline: &Metrics) -> Metrics {
+    snapshot().minus(baseline)
+}
+
 /// Flush the calling thread's block into the global registry and read
 /// everything back. All fan-out work started (and joined) by this
 /// thread is included — worker blocks merged upward at each
@@ -740,6 +816,68 @@ mod tests {
         assert_eq!(Level::parse("2"), Some(Level::Debug));
         assert_eq!(Level::parse("verbose"), None);
         assert!(Level::Off < Level::Info && Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn metrics_minus_scopes_to_the_run() {
+        let base = Metrics {
+            counters: COUNTER_NAMES.iter().map(|n| (*n, 10u64)).collect(),
+            work: WORK_NAMES.iter().map(|n| (*n, 20u64)).collect(),
+            cone_hist: vec![5; CONE_HIST_BUCKETS],
+            gauges: GAUGE_NAMES.iter().map(|n| (*n, 7u64)).collect(),
+            timers: vec![
+                ("pipeline".to_string(), 1, 100.0),
+                ("old_phase".to_string(), 3, 9.0),
+            ],
+        };
+        let now = Metrics {
+            counters: COUNTER_NAMES.iter().map(|n| (*n, 14u64)).collect(),
+            work: WORK_NAMES.iter().map(|n| (*n, 26u64)).collect(),
+            cone_hist: vec![8; CONE_HIST_BUCKETS],
+            gauges: GAUGE_NAMES.iter().map(|n| (*n, 9u64)).collect(),
+            timers: vec![
+                ("pipeline".to_string(), 2, 150.0),
+                ("new_phase".to_string(), 1, 2.5),
+                // Ran only before the baseline: calls unchanged.
+                ("old_phase".to_string(), 3, 9.0),
+            ],
+        };
+        let d = now.minus(&base);
+        // Counters/work/cone_hist subtract elementwise ...
+        assert!(d.counters.iter().all(|(_, v)| *v == 4));
+        assert!(d.work.iter().all(|(_, v)| *v == 6));
+        assert!(d.cone_hist.iter().all(|&v| v == 3));
+        // ... gauges stay last-value ...
+        assert!(d.gauges.iter().all(|(_, v)| *v == 9));
+        // ... and timers subtract per path, dropping stale phases.
+        assert_eq!(
+            d.timers,
+            vec![("pipeline".to_string(), 1, 50.0), ("new_phase".to_string(), 1, 2.5)]
+        );
+    }
+
+    #[test]
+    fn snapshot_since_reports_per_run_counts() {
+        // Two simulated in-process "runs" on this thread: each must see
+        // only its own counts — the accumulation bug this API fixes.
+        // Only this thread's block is flushed, so concurrent tests in
+        // the binary can't perturb the deltas of counters they don't
+        // flush; we still restrict the assertions to our own increments.
+        let b1 = baseline();
+        count(Counter::CoordDesignsSynthesized, 3);
+        let r1 = snapshot_since(&b1);
+        let b2 = baseline();
+        count(Counter::CoordDesignsSynthesized, 5);
+        let r2 = snapshot_since(&b2);
+        let of = |m: &Metrics| {
+            m.counters
+                .iter()
+                .find(|(n, _)| *n == "coordinator.designs_synthesized")
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        assert_eq!(of(&r1), 3, "first run sees only its own counts");
+        assert_eq!(of(&r2), 5, "second run must not accumulate the first");
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Determinism of the island-model GA (`--islands K`): with the same
+//! seed, every island count must produce a bit-identical `GaResult` —
+//! fronts (genomes + objectives), final population, convergence
+//! history, and the per-generation log stream — at every worker width.
+//! Islands shard *evaluation* of the globally deduped batch with a
+//! deterministic ring rotation of the shard→island assignment at fixed
+//! generation boundaries, then merge by Pareto union; selection still
+//! sees the whole population, so `K` is a pure throughput/attribution
+//! knob, exactly like `--jobs`.
+//!
+//! This is the contract `pmlp serve` leans on: a resident server may
+//! pick any island count per request and still answer bit-identically
+//! to a fresh single-island process.
+
+use printed_mlp::config::builtin;
+use printed_mlp::datasets;
+use printed_mlp::ga::{Evaluator, GaResult, Nsga2, DEFAULT_MIGRATION_INTERVAL};
+use printed_mlp::model::float_mlp::TrainOpts;
+use printed_mlp::model::{FloatMlp, QuantMlp};
+use printed_mlp::runtime::evaluator::{CircuitEvaluator, NativeEvaluator};
+use printed_mlp::util::telemetry;
+use printed_mlp::util::BitVec;
+
+fn tiny_setup() -> (QuantMlp, printed_mlp::datasets::QuantDataset, f64) {
+    let cfg = builtin::tiny();
+    let (split, qtrain, _) = datasets::load(&cfg.dataset);
+    let mut mlp = FloatMlp::init(cfg.topology, 1);
+    mlp.train(&split.train, &TrainOpts { epochs: 20, ..Default::default() });
+    let qmlp = QuantMlp::from_float(&mlp, &qtrain);
+    let base = qmlp.accuracy(&qtrain, None);
+    (qmlp, qtrain, base)
+}
+
+fn ga_spec() -> printed_mlp::config::GaSpec {
+    let mut spec = builtin::tiny().ga;
+    spec.population = 16;
+    // Long enough to cross a migration boundary (interval 4) so the
+    // ring actually rotates mid-run.
+    spec.generations = 5;
+    spec
+}
+
+/// Everything observable about a run, in comparable form — same shape
+/// as `ga_determinism.rs` fingerprints.
+type RunFingerprint<const M: usize> = (
+    Vec<(Vec<bool>, [f64; M])>,
+    Vec<(Vec<bool>, [f64; M])>,
+    Vec<(f64, f64)>,
+    Vec<(usize, Vec<(f64, f64)>)>,
+);
+
+fn fingerprint<const M: usize>(
+    result: &GaResult<M>,
+    log: Vec<(usize, Vec<(f64, f64)>)>,
+) -> RunFingerprint<M> {
+    let pack = |inds: &[printed_mlp::ga::Individual<M>]| -> Vec<(Vec<bool>, [f64; M])> {
+        inds.iter().map(|i| (i.genome.iter().collect(), i.objs)).collect()
+    };
+    (pack(&result.population), pack(&result.front), result.history.clone(), log)
+}
+
+/// Run the GA at a given (islands, jobs) cell and fingerprint the
+/// outcome.
+fn run_at<const M: usize>(
+    ev: &dyn Evaluator<M>,
+    genome_len: usize,
+    seeds: &[BitVec],
+    islands: usize,
+    jobs: usize,
+) -> RunFingerprint<M> {
+    let mut log = Vec::new();
+    let result = Nsga2::new(ga_spec(), genome_len, ev)
+        .with_seeds(seeds.to_vec())
+        .with_jobs(jobs)
+        .with_islands(islands)
+        .run(|generation, snap| log.push((generation, snap.history.clone())));
+    fingerprint(&result, log)
+}
+
+#[test]
+fn native_islands_1_2_4_jobs_1_8_bit_identical() {
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
+    let reference = run_at::<2>(&ev, glen, &[], 1, 1);
+    for islands in [1usize, 2, 4] {
+        for jobs in [1usize, 8] {
+            assert_eq!(
+                run_at::<2>(&ev, glen, &[], islands, jobs),
+                reference,
+                "islands={islands} jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn circuit_incremental_islands_matrix_bit_identical() {
+    // Fresh evaluator per cell: each has its own memo and worker-arena
+    // pool, so agreement cannot come from shared caches — the island
+    // sharding itself must be deterministic.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let reference = {
+        let ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        run_at::<2>(&ev, glen, &[], 1, 1)
+    };
+    for islands in [1usize, 2, 4] {
+        for jobs in [1usize, 8] {
+            let ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+            assert_eq!(
+                run_at::<2>(&ev, glen, &[], islands, jobs),
+                reference,
+                "islands={islands} jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn circuit_joint_delay_islands_bit_identical() {
+    // The hardest determinism surface — 4-D objectives reading the
+    // per-worker arena arrival tables — must also be island-invariant.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let reference = {
+        let ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base);
+        run_at::<4>(&ev, glen, &[], 1, 1)
+    };
+    for islands in [2usize, 4] {
+        let ev = CircuitEvaluator::new_joint_delay(&qmlp, &qtrain, base);
+        assert_eq!(run_at::<4>(&ev, glen, &[], islands, 8), reference, "islands={islands}");
+    }
+}
+
+#[test]
+fn migration_interval_is_observationally_neutral() {
+    // Ring rotation changes which island *evaluates* a genome, never
+    // what the evaluation returns, so the interval is unobservable in
+    // the GaResult (it only redistributes attribution/work).
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
+    let reference = run_at::<2>(&ev, glen, &[], 1, 1);
+    for interval in [1usize, 2, DEFAULT_MIGRATION_INTERVAL, 7] {
+        let mut log = Vec::new();
+        let result = Nsga2::new(ga_spec(), glen, &ev)
+            .with_jobs(8)
+            .with_islands(3)
+            .with_migration_interval(interval)
+            .run(|generation, snap| log.push((generation, snap.history.clone())));
+        assert_eq!(fingerprint(&result, log), reference, "interval={interval}");
+    }
+}
+
+/// Telemetry counters this thread accumulated over one GA run at the
+/// given (islands, jobs) cell — worker blocks merge into the calling
+/// thread's block, so the before/after delta is isolated from
+/// concurrently running tests.
+fn counters_during<const M: usize>(
+    ev: &dyn Evaluator<M>,
+    genome_len: usize,
+    islands: usize,
+    jobs: usize,
+) -> Vec<(&'static str, u64)> {
+    let before = telemetry::thread_block();
+    let _ = run_at::<M>(ev, genome_len, &[], islands, jobs);
+    telemetry::thread_block().delta(&before).counters_named()
+}
+
+#[test]
+fn circuit_counters_island_invariant() {
+    // The deterministic counter stream is part of the contract: islands
+    // shard the already-deduped batch, so `ga.evaluate_calls`,
+    // `ga.genomes_unique`, and the memo hit/miss totals all match the
+    // single-island run exactly. Fresh evaluator per cell.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let reference = {
+        let ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+        counters_during::<2>(&ev, glen, 1, 1)
+    };
+    assert!(!reference.is_empty());
+    for islands in [2usize, 4] {
+        for jobs in [1usize, 8] {
+            let ev = CircuitEvaluator::new(&qmlp, &qtrain, base);
+            assert_eq!(
+                counters_during::<2>(&ev, glen, islands, jobs),
+                reference,
+                "islands={islands} jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn more_islands_than_population_still_bit_identical() {
+    // Degenerate sharding: more islands than unique genomes leaves some
+    // islands empty every round — the merge must cope and the result
+    // must not move.
+    let (qmlp, qtrain, base) = tiny_setup();
+    let glen = printed_mlp::accum::GenomeMap::new(&qmlp).len();
+    let ev = NativeEvaluator::new(&qmlp, &qtrain, base);
+    let reference = run_at::<2>(&ev, glen, &[], 1, 1);
+    assert_eq!(run_at::<2>(&ev, glen, &[], 64, 8), reference);
+}

@@ -1,0 +1,117 @@
+//! Integration pins of the resident `pmlp serve` server: warm state
+//! (parked studies, evaluator memos, design-kernel cache) only ever
+//! skips re-computation — every response is bit-identical to what a
+//! fresh process would answer for the same request — and the island
+//! model rides the same contract over the wire (`"islands": K` changes
+//! nothing but attribution). Also drives the TCP accept loop end to
+//! end on a loopback listener.
+//!
+//! Strict telemetry-counter assertions (e.g. the metrics delta showing
+//! `coordinator.designs_synthesized == 0` on a repeat) live in the CI
+//! serve smoke leg, which runs the binary single-threaded; here tests
+//! share one process-global telemetry registry, so we pin the
+//! process-local `designs_synthesized` response field instead.
+
+use printed_mlp::coordinator::serve::{serve_lines, serve_listener, Server};
+use printed_mlp::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+const REQ: &str = r#"{"dataset":"tiny","ga":{"population":16,"generations":2},"max_hw_points":2,"synth_baseline":false,"id":1}"#;
+
+/// Feed a request stream through a fresh server, collect one parsed
+/// response per line.
+fn responses(input: &str) -> Vec<Json> {
+    let mut server = Server::new();
+    let mut out = Vec::new();
+    serve_lines(&mut server, input.as_bytes(), &mut out).expect("serve");
+    String::from_utf8(out)
+        .expect("utf8")
+        .lines()
+        .map(|l| Json::parse(l).expect("response json"))
+        .collect()
+}
+
+#[test]
+fn warm_repeat_and_islands_request_answer_bit_identically() {
+    // Three requests down one session: the cold build, an exact repeat,
+    // and the same design problem asked with `islands: 4, jobs: 8`. All
+    // three must report the same Pareto result; the two warm ones must
+    // synthesize nothing (every selected genome hits the kernel cache —
+    // the island run selects the same genomes because island evaluation
+    // is bit-identical).
+    let islands_req = r#"{"dataset":"tiny","ga":{"population":16,"generations":2},"max_hw_points":2,"synth_baseline":false,"islands":4,"jobs":8,"id":3}"#;
+    let rs = responses(&format!("{REQ}\n{REQ}\n{islands_req}\n"));
+    assert_eq!(rs.len(), 3);
+    for r in &rs {
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            r.get("metrics").and_then(|m| m.get("schema")).and_then(Json::as_str),
+            Some("pmlp.metrics/1")
+        );
+        let result = r.get("result").expect("result");
+        assert!(result.get("front").is_some());
+        assert!(result.get("front_hw").is_some());
+    }
+    assert_eq!(rs[0].get("warm_study").and_then(Json::as_bool), Some(false));
+    assert_eq!(rs[1].get("warm_study").and_then(Json::as_bool), Some(true));
+    assert_eq!(rs[2].get("warm_study").and_then(Json::as_bool), Some(true));
+    assert!(rs[0].get("designs_synthesized").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(rs[1].get("designs_synthesized").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(rs[2].get("designs_synthesized").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(rs[0].get("result"), rs[1].get("result"));
+    assert_eq!(rs[0].get("result"), rs[2].get("result"));
+    // Ids echo per request even though the study is shared.
+    assert_eq!(rs[0].get("id").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(rs[2].get("id").and_then(Json::as_f64), Some(3.0));
+}
+
+#[test]
+fn later_requests_are_isolated_from_warm_state() {
+    // A different GA budget asked after a warm-up must answer exactly
+    // what a fresh process answers for it alone: parked memos and
+    // kernels may only be consulted, never leak one request's
+    // trajectory into another's.
+    let other = r#"{"dataset":"tiny","ga":{"population":16,"generations":3,"seed":99},"max_hw_points":2,"synth_baseline":false,"id":2}"#;
+    let warm = responses(&format!("{REQ}\n{other}\n"));
+    let cold = responses(&format!("{other}\n"));
+    assert_eq!(warm.len(), 2);
+    assert_eq!(cold.len(), 1);
+    assert_eq!(warm[1].get("ok").and_then(Json::as_bool), Some(true));
+    // Same study (the key ignores the GA budget), fresh trajectory.
+    assert_eq!(warm[1].get("warm_study").and_then(Json::as_bool), Some(true));
+    assert_eq!(warm[1].get("result"), cold[0].get("result"));
+}
+
+#[test]
+fn tcp_connections_share_warm_state() {
+    // End-to-end over loopback: bind port 0, run the accept loop on its
+    // own thread, and ask the same design question on two separate
+    // connections — the second must hit the parked study.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    thread::spawn(move || {
+        let mut server = Server::new();
+        let _ = serve_listener(listener, &mut server);
+    });
+    let ask = |payload: &str| -> Json {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        writeln!(stream, "{payload}").expect("send");
+        stream.flush().expect("flush");
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read response");
+        Json::parse(line.trim_end()).expect("response json")
+        // Dropping the streams closes the connection — the server's
+        // per-connection loop sees EOF and goes back to accepting.
+    };
+    let a = ask(REQ);
+    let b = ask(REQ);
+    assert_eq!(a.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(b.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(a.get("warm_study").and_then(Json::as_bool), Some(false));
+    assert_eq!(b.get("warm_study").and_then(Json::as_bool), Some(true));
+    assert_eq!(b.get("designs_synthesized").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(a.get("result"), b.get("result"));
+}

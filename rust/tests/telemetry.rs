@@ -76,6 +76,42 @@ fn metrics_json_schema_round_trips() {
 }
 
 #[test]
+fn baseline_scopes_a_second_in_process_run() {
+    // The run-scoping bugfix: counters/work/timers are process-lifetime
+    // accumulators, so a second in-process run (a bench loop, every
+    // `pmlp serve` request) must report `snapshot_since(baseline())`
+    // deltas, not everything since process start.
+    let _g = gate();
+    let counter_of = |m: &telemetry::Metrics, name: &str| -> u64 {
+        m.counters.iter().find(|(n, _)| *n == name).unwrap().1
+    };
+    // First "run".
+    let base1 = telemetry::baseline();
+    telemetry::count(Counter::CoordDesignsSynthesized, 4);
+    telemetry::work(Work::SynthRewrites, 10);
+    {
+        let _sp = telemetry::span("it_run_scoped");
+    }
+    let m1 = telemetry::snapshot_since(&base1);
+    assert_eq!(counter_of(&m1, "coordinator.designs_synthesized"), 4);
+    assert!(m1.timers.iter().any(|(p, _, _)| p == "it_run_scoped"));
+
+    // Second "run" in the same process must not inherit the first.
+    let base2 = telemetry::baseline();
+    telemetry::count(Counter::CoordDesignsSynthesized, 1);
+    let m2 = telemetry::snapshot_since(&base2);
+    assert_eq!(counter_of(&m2, "coordinator.designs_synthesized"), 1);
+    let rewrites = m2.work.iter().find(|(n, _)| *n == "synth.rewrites").unwrap().1;
+    assert_eq!(rewrites, 0, "run 1's work must not leak into run 2's report");
+    // Run 1's span doesn't reappear: its call count didn't advance.
+    assert!(m2.timers.iter().all(|(p, _, _)| p != "it_run_scoped"));
+    // The JSON export still writes every key even when deltas are zero.
+    let json = telemetry::metrics_json(&m2);
+    let counters = json.get("counters").and_then(Json::as_obj).expect("counters section");
+    assert!(counters.contains_key("ga.genomes_in"));
+}
+
+#[test]
 fn worker_counter_blocks_merge_width_independent() {
     let _g = gate();
     let run = |threads: usize| {
